@@ -1,0 +1,109 @@
+//! Head-to-head comparison of the three auto-tuners on one kernel:
+//! MLKAPS (global surrogate + decision trees), Optuna-like (independent
+//! per-input TPE+CMA-ES studies) and GPTune-like (multitask Bayesian
+//! optimization + TLA2) — the §5.4 story in one binary.
+//!
+//! Run: `cargo run --release --example compare_autotuners`
+
+use mlkaps::baselines::{GptuneLike, GptuneParams, OptunaLike, OptunaParams};
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::kernels::Kernel;
+use mlkaps::pipeline::evaluate::SpeedupMap;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+use mlkaps::util::telemetry::Stopwatch;
+
+fn main() {
+    let kernel = ToySum::new(99);
+    let budget = 1024; // total kernel evaluations for every tuner
+    let val_grid = 12;
+    println!("== MLKAPS vs Optuna-like vs GPTune-like on `{}` ==", kernel.name());
+    println!("equal budget: {budget} kernel evaluations each\n");
+
+    // --- MLKAPS: one global budget, generalizes to ALL inputs via trees.
+    let sw = Stopwatch::start();
+    let mlkaps = Mlkaps::new(MlkapsConfig {
+        total_samples: budget,
+        batch_size: 128,
+        sampler: SamplerChoice::GaAdaptive,
+        opt_grid: 12,
+        tree_depth: 6,
+        seed: 1,
+        ..Default::default()
+    })
+    .tune(&kernel);
+    let t_mlkaps = sw.secs();
+
+    // --- Optuna-like: the budget must be SPLIT across inputs (no
+    // transfer); tune the same 12x12 grid the validation uses... which is
+    // only 7 trials per input. This is the architectural handicap Fig 11
+    // demonstrates.
+    let inputs = kernel.input_space().grid(val_grid);
+    let sw = Stopwatch::start();
+    let optuna = OptunaLike::new(OptunaParams {
+        trials_per_input: (budget / inputs.len()).max(1),
+        threads: 8,
+        ..Default::default()
+    });
+    let studies = optuna.optimize_grid(&kernel, &inputs);
+    let t_optuna = sw.secs();
+
+    // --- GPTune-like: 8 tasks sampled, TLA2 extrapolates to the rest.
+    let sw = Stopwatch::start();
+    let gptune = GptuneLike::new(GptuneParams {
+        init_per_task: 8,
+        total_budget: budget,
+        ..Default::default()
+    });
+    let tasks: Vec<Vec<f64>> = kernel.input_space().grid(3); // 9 tasks
+    let run = gptune.tune(&kernel, &tasks);
+    let t_gptune = sw.secs();
+
+    // --- Validate all three on the same grid vs the fixed reference.
+    let m_mlkaps = SpeedupMap::build(&kernel, val_grid, &|i| mlkaps.predict(i));
+    let m_optuna = SpeedupMap::build(&kernel, val_grid, &|i| {
+        // Nearest-study lookup (Optuna has no generalization mechanism).
+        let s = studies
+            .iter()
+            .min_by(|a, b| {
+                let d = |s: &&mlkaps::baselines::optuna_like::StudyResult| {
+                    (s.input[0] - i[0]).powi(2) + (s.input[1] - i[1]).powi(2)
+                };
+                d(a).partial_cmp(&d(b)).unwrap()
+            })
+            .unwrap();
+        s.best_design.clone()
+    });
+    let m_gptune = SpeedupMap::build(&kernel, val_grid, &|i| gptune.tla2(&kernel, &run, i));
+
+    let rows = vec![
+        row("MLKAPS", &m_mlkaps, t_mlkaps, mlkaps.stats.model_bytes),
+        row("Optuna-like", &m_optuna, t_optuna, 0),
+        row("GPTune-like", &m_gptune, t_gptune, run.peak_model_bytes),
+    ];
+    println!(
+        "{}",
+        report::table(
+            &["tuner", "geomean", "progressions", "min", "tuning-time", "model-mem"],
+            &rows
+        )
+    );
+    println!("(the paper: MLKAPS geomean x1.36 over Optuna on dgeqrf; GPTune OOMs at scale)");
+}
+
+fn row(
+    name: &str,
+    map: &SpeedupMap,
+    secs: f64,
+    mem: usize,
+) -> Vec<String> {
+    let s = map.summary();
+    vec![
+        name.into(),
+        format!("x{:.3}", s.geomean),
+        format!("{:.0}%", s.frac_progressions * 100.0),
+        format!("x{:.2}", s.min),
+        format!("{secs:.1}s"),
+        report::human_bytes(mem),
+    ]
+}

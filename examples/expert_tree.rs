@@ -1,0 +1,44 @@
+//! Expert-knowledge injection (§5.4.2 / Fig 12): combine a (deliberately
+//! under-sampled) MLKAPS run with the MKL hand-tuning, taking the best of
+//! both per input — all regressions disappear while the speedups remain.
+//!
+//! Run: `cargo run --release --example expert_tree`
+
+use mlkaps::kernels::blas3sim::{Blas3Sim, FactKind};
+use mlkaps::kernels::hardware::HardwareProfile;
+use mlkaps::kernels::Kernel;
+use mlkaps::pipeline::evaluate::SpeedupMap;
+use mlkaps::pipeline::expert::ExpertModel;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+
+fn main() {
+    let kernel = Blas3Sim::new(FactKind::Qr, HardwareProfile::spr(), 11);
+    println!("== expert tree on {} ==", kernel.name());
+
+    // A modest 4k-sample run (the paper used a 15k run for Fig 12).
+    let model = Mlkaps::new(MlkapsConfig {
+        total_samples: 4_000,
+        batch_size: 500,
+        sampler: SamplerChoice::GaAdaptive,
+        opt_grid: 16,
+        tree_depth: 8,
+        seed: 11,
+        ..Default::default()
+    })
+    .tune(&kernel);
+
+    let raw = SpeedupMap::build(&kernel, 24, &|input| model.predict(input));
+    println!("\nMLKAPS alone:  {}", raw.summary());
+
+    let expert = ExpertModel::combine(&kernel, &model, 3, 8);
+    println!(
+        "expert combination: MLKAPS won {:.0}% of grid points",
+        expert.mlkaps_win_rate * 100.0
+    );
+
+    let combined = SpeedupMap::build(&kernel, 24, &|input| expert.predict(input));
+    println!("expert tree:   {}", combined.summary());
+    println!("\n{}", report::heatmap(&combined));
+    println!("(paper Fig 12: all regressions removed, geomean x1.11)");
+}

@@ -1,0 +1,59 @@
+//! Quickstart: tune the illustrative matrix-sum kernel of the paper's
+//! Figs 1-2 — one design parameter (thread count T) against two input
+//! parameters (n, m) — and emit the C decision tree a library would embed.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::kernels::Kernel;
+use mlkaps::pipeline::evaluate::SpeedupMap;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+
+fn main() {
+    let kernel = ToySum::new(42);
+    println!("== MLKAPS quickstart: tuning `{}` ==", kernel.name());
+    println!(
+        "inputs:  {:?}\ndesigns: {:?}",
+        kernel.input_space().names(),
+        kernel.design_space().names()
+    );
+
+    let config = MlkapsConfig {
+        total_samples: 1500,
+        batch_size: 250,
+        sampler: SamplerChoice::GaAdaptive,
+        opt_grid: 12,
+        tree_depth: 6,
+        seed: 42,
+        ..Default::default()
+    };
+    let model = Mlkaps::new(config).tune(&kernel);
+    let st = &model.stats;
+    println!(
+        "\npipeline: {} samples | sampling {:.1}s, modeling {:.1}s, optimizing {:.1}s",
+        st.samples, st.sampling_secs, st.modeling_secs, st.optimizing_secs
+    );
+
+    // What did it learn? Small matrices -> few threads, large -> many.
+    println!("\nlearned thread counts:");
+    for (n, m) in [(64.0, 64.0), (512.0, 512.0), (2048.0, 2048.0), (8192.0, 8192.0)] {
+        let t = model.predict(&[n, m])[0];
+        let t_opt = kernel.optimal_threads(&[n, m]);
+        println!("  {n:>5} x {m:<5} -> T = {t:<3} (analytic optimum {t_opt})");
+    }
+
+    // Validate against the fixed 16-thread reference on a 16x16 grid.
+    let map = SpeedupMap::build(&kernel, 16, &|input| model.predict(input));
+    println!("\n{}", report::heatmap(&map));
+    println!("vs fixed T=16 reference: {}", map.summary());
+
+    // The shippable artifact: C code.
+    let c = model.trees.to_c();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/quickstart_tree.c", &c).expect("write tree");
+    println!(
+        "\nwrote results/quickstart_tree.c ({} lines) — embed and call mlkaps_predict_config()",
+        c.lines().count()
+    );
+}

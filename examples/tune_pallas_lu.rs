@@ -1,0 +1,91 @@
+//! END-TO-END driver: all three layers composed on a real workload.
+//!
+//! L1 (Pallas blocked-LU kernels) -> L2 (JAX blocked-LU graph) -> AOT HLO
+//! text artifacts -> L3 (this Rust coordinator) loads them via PJRT,
+//! MEASURES real wall-clock times, runs the full MLKAPS pipeline on those
+//! measurements, and emits a decision tree mapping matrix size -> best
+//! (block, tile).
+//!
+//! Requires `make artifacts` first. Run:
+//! `cargo run --release --example tune_pallas_lu`
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+
+use mlkaps::kernels::pallas_lu::PallasLu;
+use mlkaps::kernels::Kernel;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::LuRuntime;
+use mlkaps::surrogate::gbdt::GbdtParams;
+
+fn main() {
+    let rt = match LuRuntime::new("artifacts") {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("error: {e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("== e2e: tuning the real Pallas blocked-LU kernel via PJRT ==");
+    println!(
+        "manifest: {} variants over sizes {:?}",
+        rt.manifest.variants.len(),
+        rt.manifest.sizes()
+    );
+
+    // Warm up (compile) every variant so measurements exclude compilation.
+    for v in rt.manifest.variants.clone() {
+        rt.prepare(v.n, v.block, v.tile).expect("compile variant");
+    }
+    println!("all variants compiled on the PJRT CPU client");
+
+    let kernel = PallasLu::new(rt.clone());
+    // The space is tiny (sizes x blocks x tiles), so a small budget of
+    // real measurements suffices; every eval is a genuine execution.
+    let config = MlkapsConfig {
+        total_samples: 120,
+        batch_size: 24,
+        sampler: SamplerChoice::GaAdaptive,
+        gbdt: GbdtParams { n_trees: 60, ..Default::default() },
+        ga: Nsga2Params { pop_size: 12, generations: 10, ..Default::default() },
+        opt_grid: 8,
+        tree_depth: 4,
+        threads: 1, // keep timing measurements interference-free
+        seed: 3,
+    };
+    let model = Mlkaps::new(config).tune(&kernel);
+    println!(
+        "collected {} real measurements in {:.1}s",
+        model.stats.samples, model.stats.sampling_secs
+    );
+
+    // Report the tuned (block, tile) per matrix size vs the naive default,
+    // with REAL measured times.
+    println!("\n  n    | tuned (block,tile) -> time     | default -> time    | speedup");
+    let sizes = rt.manifest.sizes();
+    let mut speedups = Vec::new();
+    for (si, &n) in sizes.iter().enumerate() {
+        let input = [si as f64];
+        let tuned = model.predict(&input);
+        let (tn, tb, tt) = kernel.variant_for(&input, &tuned);
+        let t_tuned = rt.time_lu(tn, tb, tt, 5).expect("time tuned");
+        let dflt = kernel.reference_design(&input).unwrap();
+        let (dn, db, dt) = kernel.variant_for(&input, &dflt);
+        let t_dflt = rt.time_lu(dn, db, dt, 5).expect("time default");
+        let s = t_dflt / t_tuned;
+        speedups.push(s);
+        println!(
+            "  {n:<4} | ({tb:>2},{tt:>2}) -> {:>9.3} ms | ({db:>2},{dt:>2}) -> {:>9.3} ms | x{s:.2}",
+            t_tuned * 1e3,
+            t_dflt * 1e3,
+        );
+    }
+    let geo = mlkaps::util::stats::geomean(&speedups);
+    println!("\ngeomean speedup of tuned tree over mid-table default: x{geo:.3}");
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/pallas_lu_tree.c", model.trees.to_c()).expect("write");
+    println!("wrote results/pallas_lu_tree.c — the shippable runtime selector");
+}

@@ -1,0 +1,102 @@
+"""AOT compiler: lower the L2 blocked-LU model to HLO text artifacts.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (n, block, tile) variant plus a manifest.json the
+Rust runtime uses to discover variants and their static cost estimates
+(flops, VMEM footprint, MXU utilization — DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import lu_pallas
+
+# (n, block, tile) variants. n is the input parameter (matrix edge); block /
+# tile are the design parameters. Small-n artifacts keep `make artifacts`
+# and the e2e example fast while leaving real, measurable perf differences.
+VARIANTS: list[tuple[int, int, int]] = sorted(
+    {
+        (n, b, b)
+        for n in (64, 128, 256)
+        for b in (8, 16, 32, 64)
+        if b <= n
+    }
+    # off-diagonal (block, tile) pairs: 2-D design space for the tuner
+    | {(128, 16, 32), (128, 32, 16), (256, 32, 64), (256, 64, 32)}
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, block: int, tile: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def fn(a):
+        return (model.lu_blocked(a, block=block, tile=tile),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only lower the smallest-n variants (CI smoke path)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    variants = [v for v in VARIANTS if not args.quick or v[0] <= 128]
+    manifest = {"kernel": "lu_blocked", "dtype": "f32", "variants": []}
+    for n, block, tile in variants:
+        name = f"lu_n{n}_b{block}_t{tile}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_variant(n, block, tile)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "path": name,
+            "n": n,
+            "block": block,
+            "tile": tile,
+            # 2/3 n^3 for LU + lower-order terms ignored.
+            "flops": round(2 * n**3 / 3),
+            "vmem_bytes": lu_pallas.vmem_bytes(tile, tile, min(tile, block)),
+            "mxu_utilization": lu_pallas.mxu_utilization(
+                tile, tile, min(tile, block)
+            ),
+        }
+        manifest["variants"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernels: blocked LU factorization building blocks.
+
+Two kernels make up the hot path of the tunable ``dgetrf``-analog:
+
+* :func:`panel_lu` — unpivoted LU factorization of the ``b x b`` diagonal
+  block (the "panel" in right-looking blocked LU).
+* :func:`matmul_update` — the trailing-submatrix update ``C -= A @ B`` as a
+  tiled Pallas matmul. Its tile sizes ``(bm, bn, bk)`` are the design
+  parameters MLKAPS tunes: they select the HBM<->VMEM schedule exactly like
+  cache-blocking parameters select the DRAM<->L2 schedule in the paper's
+  CPU kernels (see DESIGN.md §Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that the
+Rust runtime (xla crate, PJRT CPU client) can compile and run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_lu_kernel(a_ref, out_ref):
+    """In-place unpivoted LU of a single (b, b) block.
+
+    Classic right-looking elimination expressed with masks so every step is
+    a full-block vector operation (TPU-friendly: no scalar gather loops).
+    ``out`` holds L (unit lower, diagonal implicit) and U packed together.
+    """
+    b = a_ref.shape[0]
+    a = a_ref[...]
+
+    def step(k, acc):
+        piv = acc[k, k]
+        col = acc[:, k] / piv
+        # Rows below k get the multiplier; rows <= k are left untouched.
+        row_idx = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
+        below = row_idx > k
+        lcol = jnp.where(below, col, acc[:, k])
+        acc = acc.at[:, k].set(lcol)
+        # Rank-1 update of the trailing submatrix (rows > k, cols > k).
+        col_idx = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
+        right = col_idx > k
+        mask = below[:, None] & right[None, :]
+        update = jnp.outer(lcol, acc[k, :])
+        return jnp.where(mask, acc - update, acc)
+
+    out_ref[...] = jax.lax.fori_loop(0, b - 1, step, a)
+
+
+def panel_lu(block: jax.Array) -> jax.Array:
+    """LU-factorize a square block without pivoting (L unit-diagonal).
+
+    Returns the packed LU matrix: strictly-lower part holds L's
+    multipliers, upper triangle (incl. diagonal) holds U.
+    """
+    b, b2 = block.shape
+    assert b == b2, f"panel_lu wants a square block, got {block.shape}"
+    return pl.pallas_call(
+        _panel_lu_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, b), block.dtype),
+        interpret=True,
+    )(block)
+
+
+def _matmul_update_kernel(c_ref, a_ref, b_ref, out_ref, *, nk: int):
+    """One (bm, bn) output tile of ``out = c - a @ b``.
+
+    The k dimension is walked as the innermost grid axis; the output tile
+    stays resident (VMEM on real TPU) across all nk steps — the
+    double-buffered accumulation schedule the paper's CPU kernels get from
+    cache blocking.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = c_ref[...]
+
+    out_ref[...] -= jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+def matmul_update(
+    c: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 32,
+    bn: int = 32,
+    bk: int = 32,
+) -> jax.Array:
+    """Tiled trailing update ``c - a @ b`` with tunable tile sizes.
+
+    ``(bm, bn, bk)`` are MLKAPS design parameters. Dimensions must divide
+    evenly (the L2 model picks matrix sizes that are multiples of the block
+    size, as blocked BLAS kernels do for their fast path).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c.shape == (m, n), (a.shape, b.shape, c.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles ({bm},{bn},{bk}) must divide ({m},{n},{k})"
+    )
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_update_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one matmul_update grid step.
+
+    Resident tiles: C(bm,bn) out + C(bm,bn) in + A(bm,bk) + B(bk,bn),
+    double-buffered inputs (x2) as Mosaic would schedule them.
+    """
+    out_tile = bm * bn
+    in_tiles = 2 * (bm * bn + bm * bk + bk * bn)
+    return (out_tile + in_tiles) * dtype_bytes
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of the (mxu x mxu) systolic array a tile shape occupies.
+
+    Tiles smaller than the MXU edge waste occupancy — the TPU analog of the
+    paper's cache-line/vector-width cliffs.
+    """
+    eff = lambda d: min(d, mxu) / mxu
+    return eff(bm) * eff(bn) * eff(bk)

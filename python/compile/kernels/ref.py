@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the *specification*: no Pallas, no tiling, just the
+mathematical definition the kernels must reproduce. pytest/hypothesis
+compare kernel outputs against these via assert_allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lu_ref(a: jax.Array) -> jax.Array:
+    """Unpivoted LU of a square matrix, packed (L unit-lower + U) in place.
+
+    Right-looking elimination, one column at a time. This matches LAPACK's
+    dgetrf *without* pivoting (our matrices are made diagonally dominant by
+    the test harness, so pivoting is never required for stability).
+    """
+    n = a.shape[0]
+
+    def step(k, acc):
+        piv = acc[k, k]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+        below = rows > k
+        col = jnp.where(below, acc[:, k] / piv, acc[:, k])
+        acc = acc.at[:, k].set(col)
+        right = rows > k  # reuse iota for columns (square matrix)
+        mask = below[:, None] & right[None, :]
+        return jnp.where(mask, acc - jnp.outer(col, acc[k, :]), acc)
+
+    return jax.lax.fori_loop(0, n - 1, step, a)
+
+
+def matmul_update_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Trailing update ``c - a @ b`` (the matmul_update spec)."""
+    return c - jnp.dot(a, b, preferred_element_type=c.dtype)
+
+
+def unpack_lu(lu: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split a packed LU matrix into (L unit-lower, U upper)."""
+    l = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    u = jnp.triu(lu)
+    return l, u
+
+
+def reconstruct(lu: jax.Array) -> jax.Array:
+    """L @ U from a packed LU matrix — must equal the original input."""
+    l, u = unpack_lu(lu)
+    return l @ u
+
+
+def make_spd_like(key: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """Random diagonally-dominant matrix: LU without pivoting is stable."""
+    a = jax.random.uniform(key, (n, n), dtype=dtype, minval=-1.0, maxval=1.0)
+    return a + n * jnp.eye(n, dtype=dtype)

@@ -1,0 +1,99 @@
+"""Layer-2 JAX model: right-looking blocked LU factorization (dgetrf analog).
+
+The compute graph mirrors LAPACK's blocked dgetrf:
+
+    for each diagonal block k (width b):
+        A[k,k]   <- panel_lu(A[k,k])                 # L1 Pallas kernel
+        A[k,k+:] <- L11^-1 @ A[k,k+:]                # unit-lower trsm
+        A[k+:,k] <- A[k+:,k] @ U11^-1                # upper trsm
+        A[k+:,k+:] -= A[k+:,k] @ A[k,k+:]            # L1 Pallas matmul tiles
+
+The block size ``b`` and the trailing-update tile sizes are the *design
+parameters* MLKAPS tunes; the matrix size ``n`` is the *input parameter*.
+Each (n, b) pair is AOT-lowered by aot.py into one self-contained HLO text
+artifact that the Rust runtime loads, executes and times.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lu_pallas
+
+
+def _solve_lower(l: jax.Array, a: jax.Array, unit: bool) -> jax.Array:
+    """Forward substitution: solve L @ X = A with L lower-triangular.
+
+    Written as a fori_loop of masked vector ops (NOT
+    jax.scipy.linalg.solve_triangular: on CPU that lowers to a LAPACK
+    typed-FFI custom-call which xla_extension 0.5.1 cannot compile —
+    see DESIGN.md §1 / aot interchange notes).
+    """
+    b = l.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
+
+    def step(k, x):
+        lk = jnp.where(rows < k, l[k, :], 0.0)  # strictly-lower row k
+        xk = a[k, :] - lk @ x
+        if not unit:
+            xk = xk / l[k, k]
+        return x.at[k, :].set(xk)
+
+    return jax.lax.fori_loop(0, b, step, jnp.zeros_like(a))
+
+
+def _trsm_unit_lower(l11: jax.Array, a12: jax.Array) -> jax.Array:
+    """Solve L11 @ X = A12 with L11 unit lower-triangular."""
+    return _solve_lower(l11, a12, unit=True)
+
+
+def _trsm_upper_right(u11: jax.Array, a21: jax.Array) -> jax.Array:
+    """Solve X @ U11 = A21 with U11 upper-triangular."""
+    # X U = A  <=>  U^T X^T = A^T with U^T lower-triangular (non-unit).
+    xt = _solve_lower(jnp.triu(u11).T, a21.T, unit=False)
+    return xt.T
+
+
+def lu_blocked(a: jax.Array, *, block: int, tile: int | None = None) -> jax.Array:
+    """Blocked unpivoted LU. Returns the packed LU matrix.
+
+    ``block`` is the panel width b (must divide n); ``tile`` the square
+    trailing-update tile edge (defaults to ``block``). The loop over
+    diagonal blocks is a static Python loop: n and b are compile-time
+    constants per artifact, so each variant unrolls to a fixed HLO.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n), f"square matrices only, got {a.shape}"
+    assert n % block == 0, f"block {block} must divide n {n}"
+    tile = tile or block
+
+    if block >= n:
+        return lu_pallas.panel_lu(a)
+
+    for k in range(0, n, block):
+        kb = k + block
+        panel = lu_pallas.panel_lu(a[k:kb, k:kb])
+        a = a.at[k:kb, k:kb].set(panel)
+        if kb >= n:
+            break
+        a12 = _trsm_unit_lower(panel, a[k:kb, kb:])
+        a21 = _trsm_upper_right(panel, a[kb:, k:kb])
+        a = a.at[k:kb, kb:].set(a12)
+        a = a.at[kb:, k:kb].set(a21)
+        rem = n - kb
+        t = min(tile, rem)
+        while rem % t:  # largest divisor of the remainder <= requested tile
+            t -= 1
+        trail = lu_pallas.matmul_update(
+            a[kb:, kb:], a21, a12, bm=t, bn=t, bk=min(t, block)
+        )
+        a = a.at[kb:, kb:].set(trail)
+    return a
+
+
+def lu_ref_model(a: jax.Array) -> jax.Array:
+    """Unblocked reference graph (for the baseline artifact)."""
+    from .kernels import ref
+
+    return ref.lu_ref(a)

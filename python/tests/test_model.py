@@ -1,0 +1,94 @@
+"""L2 model correctness: blocked LU graph vs the unblocked oracle, and the
+AOT variant grid's static invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("n,block", [(16, 4), (32, 8), (64, 16), (64, 64), (48, 16)])
+def test_lu_blocked_matches_unblocked(n, block):
+    a = ref.make_spd_like(jax.random.PRNGKey(n + block), n)
+    got = model.lu_blocked(a, block=block)
+    want = ref.lu_ref(a)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,block,tile", [(64, 16, 32), (64, 32, 16), (48, 8, 24)])
+def test_lu_blocked_tile_invariance(n, block, tile):
+    """The trailing-update tile size must not change the numerics."""
+    a = ref.make_spd_like(jax.random.PRNGKey(3), n)
+    base = model.lu_blocked(a, block=block)
+    tiled = model.lu_blocked(a, block=block, tile=tile)
+    np.testing.assert_allclose(base, tiled, rtol=1e-5, atol=1e-5)
+
+
+def test_lu_blocked_reconstructs():
+    a = ref.make_spd_like(jax.random.PRNGKey(9), 64)
+    lu = model.lu_blocked(a, block=16)
+    np.testing.assert_allclose(ref.reconstruct(lu), a, rtol=1e-3, atol=1e-3)
+
+
+def test_lu_blocked_rejects_bad_block():
+    a = jnp.eye(10, dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        model.lu_blocked(a, block=3)
+
+
+def test_trsm_unit_lower():
+    l = jnp.tril(ref.make_spd_like(jax.random.PRNGKey(4), 8))
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 12), jnp.float32)
+    lu = jnp.tril(l, -1) + jnp.eye(8, dtype=jnp.float32)
+    sol = model._trsm_unit_lower(l, lu @ x)
+    np.testing.assert_allclose(sol, x, rtol=1e-4, atol=1e-4)
+
+
+def test_trsm_upper_right():
+    u = jnp.triu(ref.make_spd_like(jax.random.PRNGKey(6), 8))
+    x = jax.random.normal(jax.random.PRNGKey(7), (12, 8), jnp.float32)
+    sol = model._trsm_upper_right(u, x @ u)
+    np.testing.assert_allclose(sol, x, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nb=st.sampled_from([(16, 4), (32, 8), (32, 16), (64, 32)]),
+    seed=st.integers(0, 2**16),
+)
+def test_lu_blocked_property(nb, seed):
+    """Property: blocked == unblocked for every dividing (n, block)."""
+    n, block = nb
+    a = ref.make_spd_like(jax.random.PRNGKey(seed), n)
+    np.testing.assert_allclose(
+        model.lu_blocked(a, block=block), ref.lu_ref(a), rtol=1e-3, atol=1e-3
+    )
+
+
+# ------------------------------------------------------------- AOT variants
+
+
+def test_variant_grid_is_valid():
+    assert len(aot.VARIANTS) >= 10
+    for n, b, t in aot.VARIANTS:
+        assert n % b == 0, (n, b)
+        assert t <= n
+        assert b <= n
+
+
+def test_variant_grid_unique():
+    assert len(set(aot.VARIANTS)) == len(aot.VARIANTS)
+
+
+def test_lower_variant_emits_hlo_text():
+    text = aot.lower_variant(64, 32, 32)
+    assert "HloModule" in text
+    assert "parameter(0)" in text
+    # f32[64,64] input parameter must appear in the entry computation.
+    assert "f32[64,64]" in text

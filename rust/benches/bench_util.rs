@@ -1,0 +1,62 @@
+//! Shared helpers for the figure benches (`cargo bench --bench figNN_*`).
+//!
+//! Every bench accepts `--full` (paper-scale budgets; minutes to hours)
+//! and defaults to a scaled-down fast mode that preserves the figure's
+//! qualitative shape. Results are printed AND written to `results/`.
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use mlkaps::report;
+
+/// True when the bench was invoked with `--full` (or BENCH_FULL=1).
+pub fn full_mode() -> bool {
+    std::env::args().any(|a| a == "--full")
+        || std::env::var("BENCH_FULL").map_or(false, |v| v == "1")
+}
+
+/// Scale a paper-sized budget down in fast mode.
+pub fn budget(paper: usize, fast: usize) -> usize {
+    if full_mode() {
+        paper
+    } else {
+        fast
+    }
+}
+
+/// Where CSV/JSON results land.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}
+
+/// Print the standard bench header (incl. the Fig 5 hardware table).
+pub fn header(fig: &str, what: &str) {
+    println!("==============================================================");
+    println!("{fig}: {what}");
+    println!(
+        "mode: {} (pass --full for paper-scale budgets)",
+        if full_mode() { "FULL" } else { "fast" }
+    );
+    println!("==============================================================");
+}
+
+/// Emit a CSV alongside the printed table.
+pub fn save_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) {
+    let path = results_dir().join(name);
+    match report::write_csv(&path, headers, rows) {
+        Ok(()) => println!("[saved {}]", path.display()),
+        Err(e) => eprintln!("[warn: could not save {}: {e}]", path.display()),
+    }
+}
+
+/// Format a float compactly.
+pub fn f(v: f64) -> String {
+    if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig 6: global surrogate accuracy (MAE on random validation samples) by
+//! sampling strategy and sample count, on the dgetrf (LU) simulator / SPR.
+//!
+//! Paper result to reproduce (shape): HVS best, LHS ≈ Random in the
+//! middle, GA-Adaptive worst — it deliberately sacrifices global accuracy.
+//!
+//! Run: `cargo bench --bench fig06_global_accuracy [-- --full]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::*;
+use mlkaps::kernels::blas3sim::{Blas3Sim, FactKind};
+use mlkaps::kernels::hardware::HardwareProfile;
+use mlkaps::kernels::Kernel;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::rng::Rng;
+use mlkaps::util::stats;
+use mlkaps::report;
+
+fn main() {
+    header("Fig 6", "global model accuracy vs sampling strategy (dgetrf-sim/SPR)");
+    let kernel = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 6);
+    let joint = kernel.input_space().concat(kernel.design_space());
+
+    // Validation set: random (input, design) points with TRUE objective.
+    let n_val = budget(30_000, 4_000);
+    let mut rng = Rng::new(999);
+    let val: Vec<(Vec<f64>, f64)> = (0..n_val)
+        .map(|_| {
+            let u: Vec<f64> = (0..joint.dim()).map(|_| rng.f64()).collect();
+            let v = joint.snap(&joint.decode(&u));
+            let y = kernel.eval_true(&v[..2], &v[2..]);
+            (v, y)
+        })
+        .collect();
+
+    let counts: Vec<usize> = if full_mode() {
+        vec![1_000, 2_000, 4_000, 8_000, 15_000]
+    } else {
+        vec![500, 1_000, 2_000]
+    };
+    let samplers = [
+        SamplerChoice::Random,
+        SamplerChoice::Lhs,
+        SamplerChoice::Hvs,
+        SamplerChoice::Hvsr,
+        SamplerChoice::GaAdaptive,
+    ];
+
+    let mut rows = Vec::new();
+    let mut final_mae = Vec::new();
+    for sampler in &samplers {
+        for &n in &counts {
+            let cfg = MlkapsConfig {
+                total_samples: n,
+                batch_size: 250,
+                sampler: sampler.clone(),
+                seed: 6,
+                ..Default::default()
+            };
+            let (_, dataset) = Mlkaps::new(cfg).sample_phase(&kernel);
+            // Same model hyperparameters for every sampler (paper protocol).
+            let mut model =
+                Gbdt::with_mask(GbdtParams::default(), joint.unordered_mask());
+            model.fit(&dataset);
+            let preds: Vec<f64> = val.iter().map(|(x, _)| model.predict(x)).collect();
+            let truth: Vec<f64> = val.iter().map(|(_, y)| *y).collect();
+            let mae = stats::mae(&preds, &truth);
+            let rmse = stats::rmse(&preds, &truth);
+            rows.push(vec![
+                sampler.name().to_string(),
+                n.to_string(),
+                format!("{:.6}", mae),
+                format!("{:.6}", rmse),
+            ]);
+            if n == *counts.last().unwrap() {
+                final_mae.push((sampler.name(), mae));
+            }
+        }
+    }
+    println!(
+        "{}",
+        report::table(&["sampler", "samples", "global MAE", "global RMSE"], &rows)
+    );
+    save_csv("fig06_global_accuracy.csv", &["sampler", "samples", "mae", "rmse"], &rows);
+
+    // Shape check (printed, not asserted): HVS <= Random <= GA-Adaptive.
+    let get = |n: &str| final_mae.iter().find(|(s, _)| *s == n).unwrap().1;
+    println!(
+        "\nshape: HVS {:.5} vs Random {:.5} vs GA-Adaptive {:.5}  (paper: HVS best, GA-Adaptive worst)",
+        get("HVS"),
+        get("Random"),
+        get("GA-Adaptive")
+    );
+}

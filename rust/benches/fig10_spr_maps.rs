@@ -1,0 +1,81 @@
+//! Fig 10 (SPR): speedup maps of the MLKAPS decision tree vs the MKL
+//! reference on dgetrf (LU) for increasing sample budgets (paper: 7k /
+//! 15k / 30k on a 46×46 validation grid).
+//!
+//! Paper result to reproduce (shape): quality improves monotonically with
+//! samples; at the largest budget almost no significant regression
+//! remains, geomean ≈ ×1.3, ~85% progressions (mean ×1.38).
+//!
+//! Run: `cargo bench --bench fig10_spr_maps [-- --full]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::*;
+use mlkaps::kernels::blas3sim::{Blas3Sim, FactKind};
+use mlkaps::kernels::hardware::HardwareProfile;
+use mlkaps::pipeline::evaluate::SpeedupMap;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+
+fn main() {
+    header("Fig 10", "SPR speedup maps vs sample budget (dgetrf-sim/SPR)");
+    let kernel = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 10);
+    let val_grid = budget(46, 16);
+    let counts: Vec<usize> = if full_mode() {
+        vec![7_000, 15_000, 30_000]
+    } else {
+        vec![1_000, 2_500, 5_000]
+    };
+
+    let mut rows = Vec::new();
+    let mut geos = Vec::new();
+    for &n in &counts {
+        let model = Mlkaps::new(MlkapsConfig {
+            total_samples: n,
+            batch_size: 500,
+            sampler: SamplerChoice::GaAdaptive,
+            opt_grid: 16,
+            tree_depth: 8,
+            seed: 10,
+            ..Default::default()
+        })
+        .tune(&kernel);
+        let map = SpeedupMap::build(&kernel, val_grid, &|i| model.predict(i));
+        let s = map.summary();
+        println!("\n== {n} samples ==\n{}", report::heatmap(&map));
+        println!("{s}");
+        geos.push(s.geomean);
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.4}", s.geomean),
+            format!("{:.3}", s.frac_progressions),
+            format!("{:.3}", s.mean_progression),
+            format!("{:.3}", s.mean_regression),
+            format!("{:.3}", s.min),
+        ]);
+        // Per-point CSV for the map itself.
+        let pts: Vec<Vec<String>> = map
+            .points
+            .iter()
+            .map(|p| vec![f(p.input[0]), f(p.input[1]), format!("{:.4}", p.speedup)])
+            .collect();
+        save_csv(&format!("fig10_spr_map_{n}.csv"), &["n", "m", "speedup"], &pts);
+    }
+    println!(
+        "\n{}",
+        report::table(
+            &["samples", "geomean", "frac>1", "mean>1", "mean<=1", "worst"],
+            &rows
+        )
+    );
+    save_csv(
+        "fig10_spr_summary.csv",
+        &["samples", "geomean", "frac_prog", "mean_prog", "mean_reg", "worst"],
+        &rows,
+    );
+    println!(
+        "monotone improvement: {}  (paper: @30k geomean x1.3, 85% progressions x1.38)",
+        geos.windows(2).all(|w| w[1] >= w[0] - 0.02)
+    );
+}

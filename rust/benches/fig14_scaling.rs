@@ -1,0 +1,119 @@
+//! Fig 14: peak model memory and modeling/sampling time vs collected
+//! samples on the dgetrf (LU) experiment — 16 tasks, 7k budget.
+//!
+//! Paper result to reproduce (shape): GPTune's memory grows quadratically
+//! (dense εδ×εδ LMC covariance) and the process is killed when it
+//! exhausts memory (paper: after 2512 samples); its modeling time grows
+//! non-linearly. MLKAPS scales linearly in time and ~constant in model
+//! memory, with most runtime spent collecting samples.
+//!
+//! Run: `cargo bench --bench fig14_scaling [-- --full]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::*;
+use mlkaps::baselines::{GptuneLike, GptuneParams};
+use mlkaps::kernels::blas3sim::{Blas3Sim, FactKind};
+use mlkaps::kernels::hardware::HardwareProfile;
+use mlkaps::kernels::Kernel;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+use mlkaps::util::telemetry::Stopwatch;
+
+fn main() {
+    header("Fig 14", "memory + time scaling: GPTune-like vs MLKAPS (dgetrf-sim/KNM, 16 tasks)");
+    let kernel = Blas3Sim::new(FactKind::Lu, HardwareProfile::knm(), 14);
+    let n_tasks = 16;
+    let tasks = kernel.input_space().grid(4); // 16 tasks
+    assert_eq!(tasks.len(), n_tasks);
+
+    // The "available memory" of the testbed: the GPTune-like run is
+    // killed when its model exceeds this, like the OS OOM killer did in
+    // the paper after 2512 samples.
+    let mem_limit: usize = budget(100 << 20, 16 << 20); // 100 MiB / 16 MiB
+    let gp_budget = budget(7_000, 2_000);
+
+    // --- GPTune-like: one run; its history records bytes per refit.
+    let sw = Stopwatch::start();
+    let gptune = GptuneLike::new(GptuneParams {
+        init_per_task: 8,
+        total_budget: gp_budget,
+        memory_limit_bytes: Some(mem_limit),
+        ..Default::default()
+    });
+    let run = gptune.tune(&kernel, &tasks);
+    let gp_wall = sw.secs();
+    println!(
+        "\nGPTune-like: {} samples collected before {} | peak model {} | modeling {:.1}s sampling {:.1}s",
+        run.samples,
+        if run.oom { "OOM KILL" } else { "budget end" },
+        report::human_bytes(run.peak_model_bytes),
+        run.modeling_secs,
+        run.sampling_secs,
+    );
+    let kill_msg = if run.oom {
+        format!("killed at {} samples (paper: killed at 2512)", run.samples)
+    } else {
+        "completed within memory".into()
+    };
+    println!("{kill_msg}");
+
+    // --- MLKAPS: checkpoints at increasing sample counts.
+    let checkpoints: Vec<usize> = if full_mode() {
+        vec![1_000, 2_000, 4_000, 7_000]
+    } else {
+        vec![500, 1_000, 2_000]
+    };
+    let mut rows = Vec::new();
+    for (n, bytes) in run.history.iter().step_by(run.history.len().div_ceil(12).max(1)) {
+        rows.push(vec![
+            "gptune".into(),
+            n.to_string(),
+            bytes.to_string(),
+            String::new(),
+        ]);
+    }
+    println!("\nMLKAPS checkpoints:");
+    for &n in &checkpoints {
+        let sw = Stopwatch::start();
+        let model = Mlkaps::new(MlkapsConfig {
+            total_samples: n,
+            batch_size: 500,
+            sampler: SamplerChoice::GaAdaptive,
+            opt_grid: 4,
+            tree_depth: 6,
+            seed: 14,
+            ..Default::default()
+        })
+        .tune(&kernel);
+        let wall = sw.secs();
+        println!(
+            "  {n:>6} samples: model {} | total {wall:.1}s (sampling {:.1}s modeling {:.1}s optimizing {:.1}s)",
+            report::human_bytes(model.stats.model_bytes),
+            model.stats.sampling_secs,
+            model.stats.modeling_secs,
+            model.stats.optimizing_secs,
+        );
+        rows.push(vec![
+            "mlkaps".into(),
+            n.to_string(),
+            model.stats.model_bytes.to_string(),
+            format!("{wall:.2}"),
+        ]);
+    }
+    save_csv("fig14_scaling.csv", &["tuner", "samples", "model_bytes", "wall_secs"], &rows);
+
+    // Shape check: GPTune memory growth ratio vs MLKAPS's.
+    if run.history.len() >= 2 {
+        let (n0, b0) = run.history[1];
+        let (n1, b1) = *run.history.last().unwrap();
+        println!(
+            "\nGPTune model bytes grew {:.1}x while samples grew {:.1}x (quadratic: {:.1}x expected)",
+            b1 as f64 / b0 as f64,
+            n1 as f64 / n0 as f64,
+            (n1 as f64 / n0 as f64).powi(2)
+        );
+    }
+    println!("MLKAPS model memory is linear in samples; {gp_wall:.1}s total for the GPTune-like run");
+}

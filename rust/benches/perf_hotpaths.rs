@@ -1,0 +1,121 @@
+//! §Perf micro-benchmarks of the L3 hot paths: GBDT fit/predict, NSGA-II
+//! on a surrogate, HVS partitioning, LHS generation, and the end-to-end
+//! pipeline. These are the numbers tracked in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench perf_hotpaths [-- --full]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::*;
+use mlkaps::data::Dataset;
+use mlkaps::kernels::blas3sim::{Blas3Sim, FactKind};
+use mlkaps::kernels::hardware::HardwareProfile;
+use mlkaps::kernels::Kernel;
+use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::sampling::hvs::Hvs;
+use mlkaps::sampling::lhs::lhs_design;
+use mlkaps::sampling::{SampleCtx, Sampler};
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::rng::Rng;
+
+fn timeit<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    // Warmup once, then median of reps.
+    let _ = f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&r);
+    }
+    let med = mlkaps::util::stats::median(&times);
+    println!("{name:<44} {:>10.3} ms (median of {reps})", med * 1e3);
+    med
+}
+
+fn main() {
+    header("perf", "L3 hot-path micro-benchmarks");
+    let kernel = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 1);
+    let joint = kernel.input_space().concat(kernel.design_space());
+    let n = budget(30_000, 10_000);
+
+    // Dataset of n samples (also benches the simulator eval itself).
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    let mut data = Dataset::with_capacity(n);
+    for _ in 0..n {
+        let u: Vec<f64> = (0..joint.dim()).map(|_| rng.f64()).collect();
+        let v = joint.snap(&joint.decode(&u));
+        let y = kernel.eval(&v[..2], &v[2..]);
+        data.push(v, y);
+    }
+    println!(
+        "{:<44} {:>10.3} ms ({n} evals)",
+        "simulator eval + decode",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // GBDT fit (the modeling hot path: refit per GA-Adaptive iteration).
+    let params = GbdtParams::default();
+    let mut model = Gbdt::with_mask(params.clone(), joint.unordered_mask());
+    timeit(&format!("GBDT fit ({n} x {} feats, 200 trees)", joint.dim()), 3, || {
+        model = Gbdt::with_mask(params.clone(), joint.unordered_mask());
+        model.fit(&data);
+    });
+
+    // GBDT predict (the optimization hot path: millions of calls).
+    let queries: Vec<Vec<f64>> = data.x.iter().take(10_000).cloned().collect();
+    timeit("GBDT predict x10k", 5, || model.predict_batch(&queries));
+
+    // NSGA-II on the surrogate (one grid point of the optimization phase).
+    let ga = Nsga2::new(Nsga2Params { pop_size: 32, generations: 30, ..Default::default() });
+    let ds = kernel.design_space().clone();
+    timeit("NSGA-II 32x30 on surrogate (1 grid point)", 5, || {
+        let mut r = Rng::new(2);
+        let f = |du: &[f64]| {
+            let d = ds.snap(&ds.decode(du));
+            let mut x = vec![3000.0, 3000.0];
+            x.extend_from_slice(&d);
+            model.predict(&x)
+        };
+        ga.minimize(ds.dim(), &f, &[], &mut r)
+    });
+
+    // HVS partition + batch (exploration sub-sampler per iteration).
+    let mut hist_unit = Dataset::with_capacity(n);
+    let mut r2 = Rng::new(3);
+    for i in 0..n.min(10_000) {
+        let u: Vec<f64> = (0..joint.dim()).map(|_| r2.f64()).collect();
+        hist_unit.push(u, data.y[i]);
+    }
+    timeit("HVSr partition + 500-point batch (10k hist)", 5, || {
+        let mut h = Hvs::hvsr();
+        let ctx = SampleCtx { space: &joint, n_inputs: 2, history: &hist_unit };
+        let mut r = Rng::new(4);
+        h.next_batch(500, &ctx, &mut r)
+    });
+
+    // LHS design generation.
+    timeit("LHS 30k x 10 dims", 5, || {
+        let mut r = Rng::new(5);
+        lhs_design(30_000, 10, &mut r)
+    });
+
+    // End-to-end small pipeline.
+    timeit("pipeline end-to-end (1k samples, 8x8 grid)", 3, || {
+        Mlkaps::new(MlkapsConfig {
+            total_samples: 1_000,
+            batch_size: 250,
+            sampler: SamplerChoice::GaAdaptive,
+            opt_grid: 8,
+            seed: 6,
+            ..Default::default()
+        })
+        .tune(&kernel)
+    });
+}

@@ -1,0 +1,257 @@
+//! CMA-ES (Hansen): (μ/μ_w, λ) Covariance Matrix Adaptation Evolution
+//! Strategy, the second sampler in Optuna's toolbox (§3.3). Minimal but
+//! faithful implementation: weighted recombination, cumulative step-size
+//! adaptation (CSA), rank-one + rank-μ covariance updates, eigendecomposed
+//! sampling via the in-tree Jacobi solver. Box-constrained to [0,1]^d by
+//! resampling/clipping.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// CMA-ES optimizer state.
+pub struct CmaEs {
+    pub dim: usize,
+    pub lambda: usize,
+    #[allow(dead_code)]
+    mu: usize,
+    weights: Vec<f64>,
+    mueff: f64,
+    cc: f64,
+    cs: f64,
+    c1: f64,
+    cmu: f64,
+    damps: f64,
+    chi_n: f64,
+    mean: Vec<f64>,
+    sigma: f64,
+    cov: Matrix,
+    pc: Vec<f64>,
+    ps: Vec<f64>,
+    gen: usize,
+    // Cached eigendecomposition of cov.
+    eig_vals: Vec<f64>,
+    eig_vecs: Matrix,
+}
+
+impl CmaEs {
+    /// Start at `mean` (unit cube) with step size `sigma`.
+    pub fn new(mean: Vec<f64>, sigma: f64) -> Self {
+        let dim = mean.len();
+        let lambda = 4 + (3.0 * (dim as f64).ln()).floor() as usize;
+        let mu = lambda / 2;
+        let mut weights: Vec<f64> = (0..mu)
+            .map(|i| ((lambda as f64 + 1.0) / 2.0).ln() - ((i + 1) as f64).ln())
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= wsum;
+        }
+        let mueff = 1.0 / weights.iter().map(|w| w * w).sum::<f64>();
+        let n = dim as f64;
+        let cc = (4.0 + mueff / n) / (n + 4.0 + 2.0 * mueff / n);
+        let cs = (mueff + 2.0) / (n + mueff + 5.0);
+        let c1 = 2.0 / ((n + 1.3) * (n + 1.3) + mueff);
+        let cmu = (2.0 * (mueff - 2.0 + 1.0 / mueff) / ((n + 2.0) * (n + 2.0) + mueff))
+            .min(1.0 - c1);
+        let damps = 1.0 + 2.0 * (0.0f64).max(((mueff - 1.0) / (n + 1.0)).sqrt() - 1.0) + cs;
+        let chi_n = n.sqrt() * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n * n));
+        CmaEs {
+            dim,
+            lambda,
+            mu,
+            weights,
+            mueff,
+            cc,
+            cs,
+            c1,
+            cmu,
+            damps,
+            chi_n,
+            mean,
+            sigma,
+            cov: Matrix::eye(dim),
+            pc: vec![0.0; dim],
+            ps: vec![0.0; dim],
+            gen: 0,
+            eig_vals: vec![1.0; dim],
+            eig_vecs: Matrix::eye(dim),
+        }
+    }
+
+    /// Sample one generation of λ candidates (clipped to [0,1]^d).
+    pub fn ask(&mut self, rng: &mut Rng) -> Vec<Vec<f64>> {
+        if self.gen % 5 == 0 {
+            let (vals, vecs) = self.cov.eig_sym();
+            self.eig_vals = vals.iter().map(|v| v.max(1e-14)).collect();
+            self.eig_vecs = vecs;
+        }
+        (0..self.lambda)
+            .map(|_| {
+                // x = mean + sigma * B * D^(1/2) * z
+                let z: Vec<f64> = (0..self.dim)
+                    .map(|i| self.eig_vals[i].sqrt() * rng.normal())
+                    .collect();
+                let mut x = self.mean.clone();
+                for i in 0..self.dim {
+                    let mut s = 0.0;
+                    for j in 0..self.dim {
+                        s += self.eig_vecs[(i, j)] * z[j];
+                    }
+                    x[i] = (x[i] + self.sigma * s).clamp(0.0, 1.0);
+                }
+                x
+            })
+            .collect()
+    }
+
+    /// Update state from the evaluated generation (minimization).
+    pub fn tell(&mut self, mut scored: Vec<(Vec<f64>, f64)>) {
+        assert_eq!(scored.len(), self.lambda, "tell wants a full generation");
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let old_mean = self.mean.clone();
+
+        // Weighted recombination of the μ best.
+        let mut new_mean = vec![0.0; self.dim];
+        for (w, (x, _)) in self.weights.iter().zip(scored.iter()) {
+            for i in 0..self.dim {
+                new_mean[i] += w * x[i];
+            }
+        }
+        self.mean = new_mean;
+
+        // Evolution paths. C^(-1/2) y via the cached eigendecomposition.
+        let y: Vec<f64> = (0..self.dim)
+            .map(|i| (self.mean[i] - old_mean[i]) / self.sigma)
+            .collect();
+        let mut c_inv_sqrt_y = vec![0.0; self.dim];
+        for i in 0..self.dim {
+            let mut s = 0.0;
+            for j in 0..self.dim {
+                // B D^(-1/2) B^T y
+                let mut bt_y = 0.0;
+                for k in 0..self.dim {
+                    bt_y += self.eig_vecs[(k, j)] * y[k];
+                }
+                s += self.eig_vecs[(i, j)] * bt_y / self.eig_vals[j].sqrt();
+            }
+            c_inv_sqrt_y[i] = s;
+        }
+        let cs_f = (self.cs * (2.0 - self.cs) * self.mueff).sqrt();
+        for i in 0..self.dim {
+            self.ps[i] = (1.0 - self.cs) * self.ps[i] + cs_f * c_inv_sqrt_y[i];
+        }
+        let ps_norm = crate::linalg::norm2(&self.ps);
+        let hsig = ps_norm
+            / (1.0 - (1.0 - self.cs).powi(2 * (self.gen as i32 + 1))).sqrt()
+            / self.chi_n
+            < 1.4 + 2.0 / (self.dim as f64 + 1.0);
+        let cc_f = (self.cc * (2.0 - self.cc) * self.mueff).sqrt();
+        for i in 0..self.dim {
+            self.pc[i] =
+                (1.0 - self.cc) * self.pc[i] + if hsig { cc_f * y[i] } else { 0.0 };
+        }
+
+        // Covariance update: rank-one + rank-mu.
+        let mut new_cov = Matrix::zeros(self.dim, self.dim);
+        for i in 0..self.dim {
+            for j in 0..self.dim {
+                let mut rank_mu = 0.0;
+                for (w, (x, _)) in self.weights.iter().zip(scored.iter()) {
+                    let yi = (x[i] - old_mean[i]) / self.sigma;
+                    let yj = (x[j] - old_mean[j]) / self.sigma;
+                    rank_mu += w * yi * yj;
+                }
+                let delta = if hsig { 0.0 } else { self.cc * (2.0 - self.cc) };
+                new_cov[(i, j)] = (1.0 - self.c1 - self.cmu) * self.cov[(i, j)]
+                    + self.c1 * (self.pc[i] * self.pc[j] + delta * self.cov[(i, j)])
+                    + self.cmu * rank_mu;
+            }
+        }
+        self.cov = new_cov;
+
+        // Step-size adaptation.
+        self.sigma *= ((self.cs / self.damps) * (ps_norm / self.chi_n - 1.0)).exp();
+        self.sigma = self.sigma.clamp(1e-8, 1.0);
+        self.gen += 1;
+    }
+
+    pub fn mean(&self) -> &[f64] {
+        &self.mean
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optimize(f: impl Fn(&[f64]) -> f64, dim: usize, gens: usize, seed: u64) -> (Vec<f64>, f64) {
+        let mut es = CmaEs::new(vec![0.5; dim], 0.3);
+        let mut rng = Rng::new(seed);
+        let mut best = (vec![0.5; dim], f64::INFINITY);
+        for _ in 0..gens {
+            let xs = es.ask(&mut rng);
+            let scored: Vec<(Vec<f64>, f64)> =
+                xs.into_iter().map(|x| { let y = f(&x); (x, y) }).collect();
+            for (x, y) in &scored {
+                if *y < best.1 {
+                    best = (x.clone(), *y);
+                }
+            }
+            es.tell(scored);
+        }
+        best
+    }
+
+    #[test]
+    fn converges_on_sphere() {
+        let f = |x: &[f64]| x.iter().map(|v| (v - 0.6) * (v - 0.6)).sum::<f64>();
+        let (x, y) = optimize(f, 4, 60, 1);
+        assert!(y < 1e-6, "y={y}");
+        for v in x {
+            assert!((v - 0.6).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn handles_rotated_ellipsoid() {
+        // Correlated quadratic: covariance adaptation must help.
+        let f = |x: &[f64]| {
+            let a = x[0] - 0.5 + 2.0 * (x[1] - 0.5);
+            let b = x[0] - 0.5 - (x[1] - 0.5);
+            a * a + 25.0 * b * b
+        };
+        let (_, y) = optimize(f, 2, 80, 2);
+        assert!(y < 1e-5, "y={y}");
+    }
+
+    #[test]
+    fn respects_box_constraints() {
+        let mut es = CmaEs::new(vec![0.05; 3], 0.5);
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let xs = es.ask(&mut rng);
+            for x in &xs {
+                assert!(x.iter().all(|v| (0.0..=1.0).contains(v)));
+            }
+            let scored = xs.into_iter().map(|x| { let y = x[0]; (x, y) }).collect();
+            es.tell(scored);
+        }
+    }
+
+    #[test]
+    fn sigma_shrinks_near_optimum() {
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2);
+        let mut es = CmaEs::new(vec![0.5; 1], 0.3);
+        let mut rng = Rng::new(4);
+        for _ in 0..40 {
+            let xs = es.ask(&mut rng);
+            let scored = xs.into_iter().map(|x| { let y = f(&x); (x, y) }).collect();
+            es.tell(scored);
+        }
+        assert!(es.sigma() < 0.05, "sigma={}", es.sigma());
+    }
+}

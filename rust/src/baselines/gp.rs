@@ -1,0 +1,160 @@
+//! Gaussian-process regression substrate for the GPTune-like baseline:
+//! squared-exponential kernels, Cholesky-based posterior, log marginal
+//! likelihood, and expected improvement.
+
+use crate::linalg::Matrix;
+
+/// Squared-exponential (RBF) kernel value between two vectors.
+pub fn rbf(a: &[f64], b: &[f64], lengthscale: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (-d2 / (2.0 * lengthscale * lengthscale)).exp()
+}
+
+/// A fitted GP posterior over arbitrary pre-kerneled points.
+pub struct GpPosterior {
+    /// Cholesky factor of K + noise*I.
+    chol: Matrix,
+    /// alpha = K^-1 y
+    alpha: Vec<f64>,
+    /// Centered target mean (added back at prediction).
+    y_mean: f64,
+    /// Log marginal likelihood of the fit.
+    pub lml: f64,
+}
+
+impl GpPosterior {
+    /// Fit from a dense gram matrix (WITHOUT noise on the diagonal) and
+    /// targets. Returns Err if the (regularized) gram is not SPD.
+    pub fn fit(gram: &Matrix, y: &[f64], noise: f64) -> Result<GpPosterior, String> {
+        let n = y.len();
+        assert_eq!(gram.rows, n);
+        let y_mean = crate::util::stats::mean(y);
+        let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        let mut k = gram.clone();
+        for i in 0..n {
+            k[(i, i)] += noise + 1e-9;
+        }
+        let chol = k.cholesky()?;
+        let alpha = chol.solve_lower_transpose(&chol.solve_lower(&yc));
+        // log p(y) = -1/2 y^T alpha - sum log L_ii - n/2 log 2pi
+        let quad: f64 = yc.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let logdet: f64 = (0..n).map(|i| chol[(i, i)].ln()).sum();
+        let lml = -0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+        Ok(GpPosterior { chol, alpha, y_mean, lml })
+    }
+
+    /// Posterior mean and variance at a point given its cross-covariances
+    /// `k_star` (with all training points) and prior variance `k_ss`.
+    pub fn predict(&self, k_star: &[f64], k_ss: f64) -> (f64, f64) {
+        let mean = self.y_mean
+            + k_star.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        let v = self.chol.solve_lower(k_star);
+        let var = (k_ss - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+
+    /// Heap bytes held by the posterior (the Fig 14 quantity).
+    pub fn mem_bytes(&self) -> usize {
+        self.chol.mem_bytes() + self.alpha.capacity() * 8
+    }
+}
+
+/// Expected improvement (minimization) at predicted (mean, var) given the
+/// incumbent best.
+pub fn expected_improvement(mean: f64, var: f64, best: f64) -> f64 {
+    let s = var.sqrt();
+    if s < 1e-12 {
+        return (best - mean).max(0.0);
+    }
+    let z = (best - mean) / s;
+    (best - mean) * phi_cdf(z) + s * phi_pdf(z)
+}
+
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via the Abramowitz-Stegun erf approximation.
+fn phi_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // Abramowitz & Stegun 7.1.26, |err| < 1.5e-7.
+    let sign = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gram(xs: &[Vec<f64>], ls: f64) -> Matrix {
+        let n = xs.len();
+        Matrix::from_fn(n, n, |i, j| rbf(&xs[i], &xs[j], ls))
+    }
+
+    #[test]
+    fn gp_interpolates_smooth_function() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<Vec<f64>> = (0..40).map(|_| vec![rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (6.0 * x[0]).sin()).collect();
+        let g = gram(&xs, 0.2);
+        let post = GpPosterior::fit(&g, &ys, 1e-6).unwrap();
+        for t in [0.1, 0.37, 0.52, 0.9] {
+            let k_star: Vec<f64> = xs.iter().map(|x| rbf(&[t], x, 0.2)).collect();
+            let (mean, var) = post.predict(&k_star, 1.0);
+            assert!((mean - (6.0 * t).sin()).abs() < 0.05, "t={t} mean={mean}");
+            assert!(var < 0.05);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let xs = vec![vec![0.5]];
+        let g = gram(&xs, 0.1);
+        let post = GpPosterior::fit(&g, &[1.0], 1e-6).unwrap();
+        let near: Vec<f64> = xs.iter().map(|x| rbf(&[0.5], x, 0.1)).collect();
+        let far: Vec<f64> = xs.iter().map(|x| rbf(&[0.0], x, 0.1)).collect();
+        let (_, v_near) = post.predict(&near, 1.0);
+        let (_, v_far) = post.predict(&far, 1.0);
+        assert!(v_far > 10.0 * v_near);
+    }
+
+    #[test]
+    fn lml_prefers_right_lengthscale() {
+        // Data from a smooth function: too-short lengthscales overfit the
+        // noise and score worse marginal likelihood.
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0).collect();
+        let lml_good = GpPosterior::fit(&gram(&xs, 0.5), &ys, 1e-4).unwrap().lml;
+        let lml_bad = GpPosterior::fit(&gram(&xs, 0.01), &ys, 1e-4).unwrap().lml;
+        assert!(lml_good > lml_bad);
+    }
+
+    #[test]
+    fn ei_properties() {
+        // Lower mean -> higher EI; more variance -> higher EI when mean is
+        // at the incumbent.
+        assert!(expected_improvement(0.5, 0.01, 1.0) > expected_improvement(0.9, 0.01, 1.0));
+        assert!(expected_improvement(1.0, 0.09, 1.0) > expected_improvement(1.0, 0.0001, 1.0));
+        // No improvement possible: EI ~ 0.
+        assert!(expected_improvement(2.0, 1e-13, 1.0) == 0.0);
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+    }
+}

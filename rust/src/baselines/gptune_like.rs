@@ -1,0 +1,333 @@
+//! GPTune-like multitask Bayesian optimizer (Liu et al., PPoPP 2021), the
+//! paper's state-of-the-art comparator (§5.4.3).
+//!
+//! Faithful to the *data structure* that drives Fig 13/14:
+//!
+//! * the user picks δ input **tasks** up front; only those are sampled;
+//! * one coregionalized Gaussian process couples all tasks: the gram
+//!   matrix over all (task, design) samples is **dense of size εδ × εδ**
+//!   (ε samples/task) — memory grows quadratically and the Cholesky
+//!   refit cubically with the sample count, which is exactly the
+//!   scalability wall Fig 14 demonstrates (the paper: "GPTune was killed
+//!   by the operating system, having consumed all available memory");
+//! * candidates are scored by expected improvement per task;
+//! * **TLA2** extrapolates configurations to unseen tasks by
+//!   task-kernel-weighted combination of the tuned tasks' best designs.
+//!
+//! The coupling uses an ICM/LMC-style product kernel
+//! `K[(t,x),(t',x')] = k_task(input_t, input_t') * k_design(x, x')`.
+
+use std::time::Instant;
+
+use crate::baselines::gp::{expected_improvement, rbf, GpPosterior};
+use crate::config::space::ParamSpace;
+use crate::kernels::Kernel;
+use crate::linalg::Matrix;
+use crate::sampling::lhs::lhs_design;
+use crate::util::rng::Rng;
+
+/// Tuner configuration.
+#[derive(Clone, Debug)]
+pub struct GptuneParams {
+    /// Samples per task in the LHS initialization phase.
+    pub init_per_task: usize,
+    /// Total kernel-evaluation budget across all tasks.
+    pub total_budget: usize,
+    /// Random EI candidates per task per iteration.
+    pub candidates: usize,
+    /// Abort (like the OS OOM killer) when the model exceeds this many
+    /// bytes. `None` = unlimited.
+    pub memory_limit_bytes: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for GptuneParams {
+    fn default() -> Self {
+        GptuneParams {
+            init_per_task: 8,
+            total_budget: 256,
+            candidates: 64,
+            memory_limit_bytes: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a multitask tuning run.
+#[derive(Clone, Debug)]
+pub struct GptuneRun {
+    /// The δ task input points.
+    pub tasks: Vec<Vec<f64>>,
+    /// Best design found per task (value space).
+    pub best_designs: Vec<Vec<f64>>,
+    /// Best measured objective per task.
+    pub best_objectives: Vec<f64>,
+    /// Total kernel evaluations performed.
+    pub samples: usize,
+    /// Peak bytes held by the GP model (gram + Cholesky + alpha).
+    pub peak_model_bytes: usize,
+    /// Seconds spent refitting/scoring the model.
+    pub modeling_secs: f64,
+    /// Seconds spent evaluating the kernel.
+    pub sampling_secs: f64,
+    /// True if the run aborted on the memory limit (the Fig 14 kill).
+    pub oom: bool,
+    /// Model-size history: (samples, model_bytes) per refit.
+    pub history: Vec<(usize, usize)>,
+}
+
+/// The GPTune-like tuner.
+pub struct GptuneLike {
+    pub params: GptuneParams,
+    /// Task-kernel lengthscale over *normalized* input coordinates.
+    pub task_lengthscale: f64,
+    /// Design-kernel lengthscale over unit design coordinates.
+    pub design_lengthscale: f64,
+    pub noise: f64,
+}
+
+impl GptuneLike {
+    pub fn new(params: GptuneParams) -> Self {
+        GptuneLike {
+            params,
+            task_lengthscale: 0.4,
+            design_lengthscale: 0.3,
+            noise: 1e-4,
+        }
+    }
+
+    /// Tune the given tasks jointly on the kernel.
+    pub fn tune(&self, kernel: &dyn Kernel, tasks: &[Vec<f64>]) -> GptuneRun {
+        let ds: &ParamSpace = kernel.design_space();
+        let is = kernel.input_space();
+        let dim = ds.dim();
+        let delta = tasks.len();
+        let mut rng = Rng::new(self.params.seed);
+
+        // Normalized task features for the task kernel.
+        let task_feats: Vec<Vec<f64>> = tasks.iter().map(|t| is.encode(t)).collect();
+
+        // Storage: per-sample (task index, unit design, normalized y).
+        let mut s_task: Vec<usize> = Vec::new();
+        let mut s_x: Vec<Vec<f64>> = Vec::new();
+        let mut s_y: Vec<f64> = Vec::new();
+        let mut best: Vec<(Vec<f64>, f64)> = vec![(vec![0.5; dim], f64::INFINITY); delta];
+
+        let mut sampling_secs = 0.0;
+        let mut modeling_secs = 0.0;
+        let mut peak_model_bytes = 0usize;
+        let mut history: Vec<(usize, usize)> = Vec::new();
+        let mut oom = false;
+
+        let measure = |t: usize,
+                           u: Vec<f64>,
+                           s_task: &mut Vec<usize>,
+                           s_x: &mut Vec<Vec<f64>>,
+                           s_y: &mut Vec<f64>,
+                           best: &mut Vec<(Vec<f64>, f64)>,
+                           sampling_secs: &mut f64| {
+            let design = ds.snap(&ds.decode(&u));
+            let t0 = Instant::now();
+            let y = kernel.eval(&tasks[t], &design);
+            *sampling_secs += t0.elapsed().as_secs_f64();
+            if y < best[t].1 {
+                best[t] = (u.clone(), y);
+            }
+            s_task.push(t);
+            s_x.push(u);
+            s_y.push(y.ln()); // log-objective stabilizes the GP
+        };
+
+        // Phase 1: LHS initialization per task.
+        for t in 0..delta {
+            for u in lhs_design(self.params.init_per_task, dim, &mut rng) {
+                if s_y.len() >= self.params.total_budget {
+                    break;
+                }
+                measure(t, u, &mut s_task, &mut s_x, &mut s_y, &mut best, &mut sampling_secs);
+            }
+        }
+
+        // Phase 2: EI-driven sampling, one new sample per task per sweep.
+        'outer: while s_y.len() < self.params.total_budget {
+            // Refit the dense multitask GP on ALL samples.
+            let n = s_y.len();
+            let t0 = Instant::now();
+            let gram = self.gram(&s_task, &s_x, &task_feats);
+            let model_bytes = gram.mem_bytes() * 2; // gram + Cholesky
+            peak_model_bytes = peak_model_bytes.max(model_bytes);
+            history.push((n, model_bytes));
+            if let Some(limit) = self.params.memory_limit_bytes {
+                if model_bytes > limit {
+                    oom = true;
+                    modeling_secs += t0.elapsed().as_secs_f64();
+                    break 'outer;
+                }
+            }
+            let Ok(post) = GpPosterior::fit(&gram, &s_y, self.noise) else {
+                break 'outer; // numerically singular: stop like a crash
+            };
+            modeling_secs += t0.elapsed().as_secs_f64();
+
+            for t in 0..delta {
+                if s_y.len() >= self.params.total_budget {
+                    break;
+                }
+                // Score random candidates by EI for this task.
+                let t0m = Instant::now();
+                let incumbent = best[t].1.ln();
+                let mut top: Option<(Vec<f64>, f64)> = None;
+                for _ in 0..self.params.candidates {
+                    let u: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
+                    // Cross-covariances against the n samples the posterior
+                    // was fit on (this sweep may have added more since).
+                    let k_star: Vec<f64> = (0..n)
+                        .map(|j| {
+                            rbf(&task_feats[t], &task_feats[s_task[j]], self.task_lengthscale)
+                                * rbf(&u, &s_x[j], self.design_lengthscale)
+                        })
+                        .collect();
+                    let (mean, var) = post.predict(&k_star, 1.0);
+                    let ei = expected_improvement(mean, var, incumbent);
+                    if top.as_ref().map_or(true, |(_, b)| ei > *b) {
+                        top = Some((u, ei));
+                    }
+                }
+                modeling_secs += t0m.elapsed().as_secs_f64();
+                let (u, _) = top.unwrap();
+                measure(t, u, &mut s_task, &mut s_x, &mut s_y, &mut best, &mut sampling_secs);
+            }
+        }
+
+        GptuneRun {
+            tasks: tasks.to_vec(),
+            best_designs: best.iter().map(|(u, _)| ds.snap(&ds.decode(u))).collect(),
+            best_objectives: best.iter().map(|(_, y)| *y).collect(),
+            samples: s_y.len(),
+            peak_model_bytes,
+            modeling_secs,
+            sampling_secs,
+            oom,
+            history,
+        }
+    }
+
+    /// The dense εδ×εδ multitask gram matrix (the scalability wall).
+    fn gram(&self, s_task: &[usize], s_x: &[Vec<f64>], task_feats: &[Vec<f64>]) -> Matrix {
+        let n = s_x.len();
+        Matrix::from_fn(n, n, |i, j| {
+            rbf(
+                &task_feats[s_task[i]],
+                &task_feats[s_task[j]],
+                self.task_lengthscale,
+            ) * rbf(&s_x[i], &s_x[j], self.design_lengthscale)
+        })
+    }
+
+    /// TLA2: extrapolate a configuration for an unseen task by task-kernel
+    /// weighted combination of tuned tasks' best designs.
+    pub fn tla2(
+        &self,
+        kernel: &dyn Kernel,
+        run: &GptuneRun,
+        new_input: &[f64],
+    ) -> Vec<f64> {
+        let is = kernel.input_space();
+        let ds = kernel.design_space();
+        let feat = is.encode(new_input);
+        let mut wsum = 0.0;
+        let mut acc = vec![0.0; ds.dim()];
+        for (task, design) in run.tasks.iter().zip(&run.best_designs) {
+            let w = rbf(&feat, &is.encode(task), self.task_lengthscale).max(1e-12);
+            wsum += w;
+            for (a, d) in acc.iter_mut().zip(design) {
+                *a += w * d;
+            }
+        }
+        for a in &mut acc {
+            *a /= wsum;
+        }
+        ds.snap(&acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::toy_sum::ToySum;
+
+    fn small_run(budget: usize, limit: Option<usize>) -> (GptuneLike, GptuneRun, ToySum) {
+        let kernel = ToySum::new(5);
+        let tuner = GptuneLike::new(GptuneParams {
+            init_per_task: 6,
+            total_budget: budget,
+            candidates: 32,
+            memory_limit_bytes: limit,
+            seed: 3,
+        });
+        let tasks = vec![
+            vec![256.0, 256.0],
+            vec![2048.0, 2048.0],
+            vec![8192.0, 8192.0],
+        ];
+        let run = tuner.tune(&kernel, &tasks);
+        (tuner, run, kernel)
+    }
+
+    #[test]
+    fn finds_good_configs_per_task() {
+        let (_, run, kernel) = small_run(90, None);
+        assert_eq!(run.samples, 90);
+        for (task, y) in run.tasks.iter().zip(&run.best_objectives) {
+            let opt = kernel.eval_true(task, &[kernel.optimal_threads(task)]);
+            assert!(*y < 1.6 * opt, "task {task:?}: found {y} vs opt {opt}");
+        }
+    }
+
+    #[test]
+    fn memory_grows_quadratically_with_samples() {
+        let (_, run, _) = small_run(120, None);
+        let h = &run.history;
+        assert!(h.len() >= 3);
+        let (n1, b1) = h[1];
+        let (n2, b2) = *h.last().unwrap();
+        assert!(n2 > n1);
+        let growth = b2 as f64 / b1 as f64;
+        let quad = (n2 as f64 / n1 as f64).powi(2);
+        assert!(
+            (growth / quad - 1.0).abs() < 0.35,
+            "memory growth {growth:.2} should track samples^2 {quad:.2}"
+        );
+    }
+
+    #[test]
+    fn oom_kill_fires_at_the_limit() {
+        let (_, run, _) = small_run(400, Some(200_000)); // ~112 samples hits 2*8*n^2
+        assert!(run.oom, "run must abort on the memory limit");
+        assert!(run.samples < 400);
+        assert!(run.peak_model_bytes <= 2 * 200_000); // last refit observed over limit
+    }
+
+    #[test]
+    fn tla2_extrapolates_between_tasks() {
+        let (tuner, run, kernel) = small_run(90, None);
+        // New task interpolating tasks 1 and 2: predicted threads must lie
+        // in the span of its neighbours' tuned threads.
+        let cfg = tuner.tla2(&kernel, &run, &[4096.0, 4096.0]);
+        // The kernel-weighted combination must stay inside the convex hull
+        // of the tuned tasks' best designs...
+        let lo = run.best_designs.iter().map(|d| d[0]).fold(f64::INFINITY, f64::min);
+        let hi = run.best_designs.iter().map(|d| d[0]).fold(0.0, f64::max);
+        assert!((lo - 1e-9..=hi + 1e-9).contains(&cfg[0]), "{} vs [{lo},{hi}]", cfg[0]);
+        // ...and a large new task must not inherit the small task's
+        // thread count outright.
+        assert!(cfg[0] >= run.best_designs[0][0], "{:?}", run.best_designs);
+    }
+
+    #[test]
+    fn modeling_time_is_tracked() {
+        let (_, run, _) = small_run(60, None);
+        assert!(run.modeling_secs > 0.0);
+        assert!(run.sampling_secs > 0.0);
+    }
+}

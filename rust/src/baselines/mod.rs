@@ -1,0 +1,17 @@
+//! State-of-the-art auto-tuner baselines the paper compares against
+//! (§5.4): an Optuna-like per-input optimizer (TPE + CMA-ES + pruning)
+//! and a GPTune-like multitask Bayesian optimizer (LMC Gaussian processes
+//! with TLA2 extrapolation). Both are reimplemented from their papers'
+//! algorithm descriptions — the originals are Python frameworks we cannot
+//! ship on this offline Rust path (DESIGN.md §1).
+
+pub mod cmaes;
+pub mod gp;
+pub mod gptune_like;
+pub mod optuna_like;
+pub mod tpe;
+
+pub use cmaes::CmaEs;
+pub use gptune_like::{GptuneLike, GptuneParams};
+pub use optuna_like::{OptunaLike, OptunaParams};
+pub use tpe::Tpe;

@@ -1,0 +1,171 @@
+//! Optuna-like per-input auto-tuner (§5.4.1): for each input point, run an
+//! independent study — TPE for most of the budget, CMA-ES refinement from
+//! the TPE incumbent for the tail — with Optuna's early-stopping spirit
+//! (trials far above the incumbent are recorded but never expanded, since
+//! our kernels are single-shot measurements).
+//!
+//! The crucial *architectural* difference vs MLKAPS (the one Fig 11 tests)
+//! is that there is **no transfer learning**: every input pays its own
+//! full sampling budget and no knowledge is shared across inputs.
+
+use crate::baselines::cmaes::CmaEs;
+use crate::baselines::tpe::Tpe;
+use crate::config::space::ParamSpace;
+use crate::kernels::Kernel;
+use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
+
+/// Study configuration.
+#[derive(Clone, Debug)]
+pub struct OptunaParams {
+    /// Kernel evaluations per input point.
+    pub trials_per_input: usize,
+    /// Fraction of the budget given to the CMA-ES refinement phase.
+    pub cmaes_fraction: f64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for OptunaParams {
+    fn default() -> Self {
+        OptunaParams { trials_per_input: 64, cmaes_fraction: 0.3, seed: 0, threads: 1 }
+    }
+}
+
+/// Per-input result.
+#[derive(Clone, Debug)]
+pub struct StudyResult {
+    pub input: Vec<f64>,
+    pub best_design: Vec<f64>,
+    pub best_objective: f64,
+    pub trials: usize,
+}
+
+/// The Optuna-like tuner.
+pub struct OptunaLike {
+    pub params: OptunaParams,
+}
+
+impl OptunaLike {
+    pub fn new(params: OptunaParams) -> Self {
+        OptunaLike { params }
+    }
+
+    /// Optimize one input point with a fresh study.
+    pub fn optimize_one(&self, kernel: &dyn Kernel, input: &[f64], seed: u64) -> StudyResult {
+        let ds: &ParamSpace = kernel.design_space();
+        let dim = ds.dim();
+        let mut rng = Rng::new(seed);
+        let total = self.params.trials_per_input;
+        let n_cma = ((total as f64) * self.params.cmaes_fraction) as usize;
+        let n_tpe = total - n_cma;
+
+        let mut tpe = Tpe::new(dim);
+        for _ in 0..n_tpe {
+            let u = tpe.ask(&mut rng);
+            let design = ds.snap(&ds.decode(&u));
+            let y = kernel.eval(input, &design);
+            tpe.tell(u, y);
+        }
+        let (mut best_u, mut best_y) = {
+            let (u, y) = tpe.best().expect("nonempty study");
+            (u.to_vec(), y)
+        };
+
+        // CMA-ES refinement from the TPE incumbent.
+        if n_cma > 0 {
+            let mut es = CmaEs::new(best_u.clone(), 0.15);
+            let mut spent = 0;
+            while spent < n_cma {
+                let asked = es.ask(&mut rng);
+                let scored: Vec<(Vec<f64>, f64)> = asked
+                    .into_iter()
+                    .take(n_cma - spent)
+                    .map(|u| {
+                        let design = ds.snap(&ds.decode(&u));
+                        let y = kernel.eval(input, &design);
+                        (u, y)
+                    })
+                    .collect();
+                spent += scored.len();
+                for (u, y) in &scored {
+                    if *y < best_y {
+                        best_y = *y;
+                        best_u = u.clone();
+                    }
+                }
+                if scored.len() == es.lambda {
+                    es.tell(scored);
+                } else {
+                    break; // budget exhausted mid-generation
+                }
+            }
+        }
+
+        StudyResult {
+            input: input.to_vec(),
+            best_design: ds.snap(&ds.decode(&best_u)),
+            best_objective: best_y,
+            trials: total,
+        }
+    }
+
+    /// Optimize a whole grid of inputs, independently (no transfer).
+    pub fn optimize_grid(&self, kernel: &dyn Kernel, inputs: &[Vec<f64>]) -> Vec<StudyResult> {
+        par_map(inputs, self.params.threads, |idx, input| {
+            self.optimize_one(
+                kernel,
+                input,
+                self.params.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9),
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::toy_sum::ToySum;
+
+    #[test]
+    fn finds_near_optimal_threads_for_toy_kernel() {
+        let kernel = ToySum::new(1);
+        let tuner = OptunaLike::new(OptunaParams { trials_per_input: 60, ..Default::default() });
+        let input = [8192.0, 8192.0];
+        let res = tuner.optimize_one(&kernel, &input, 7);
+        let t_opt = kernel.optimal_threads(&input);
+        let t_star = kernel.eval_true(&input, &[t_opt]);
+        assert!(
+            res.best_objective < 1.15 * t_star,
+            "found {} vs optimal {t_star}",
+            res.best_objective
+        );
+    }
+
+    #[test]
+    fn grid_is_independent_per_input() {
+        let kernel = ToySum::new(2);
+        let tuner = OptunaLike::new(OptunaParams { trials_per_input: 30, ..Default::default() });
+        let inputs = vec![vec![128.0, 128.0], vec![4096.0, 4096.0]];
+        let res = tuner.optimize_grid(&kernel, &inputs);
+        assert_eq!(res.len(), 2);
+        // Small input should get fewer threads than the large one.
+        assert!(
+            res[0].best_design[0] <= res[1].best_design[0],
+            "{:?} vs {:?}",
+            res[0].best_design,
+            res[1].best_design
+        );
+        assert_eq!(res[0].trials, 30);
+    }
+
+    #[test]
+    fn respects_design_space_validity() {
+        let kernel = ToySum::new(3);
+        let tuner = OptunaLike::new(OptunaParams { trials_per_input: 20, ..Default::default() });
+        let res = tuner.optimize_one(&kernel, &[512.0, 512.0], 1);
+        let d = &res.best_design;
+        assert_eq!(d[0], d[0].round());
+        assert!((1.0..=64.0).contains(&d[0]));
+    }
+}

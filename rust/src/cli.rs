@@ -1,0 +1,260 @@
+//! Command-line launcher (hand-rolled arg parsing — clap is unavailable
+//! offline, DESIGN.md §1).
+//!
+//! ```text
+//! mlkaps kernels                         list tunable kernels
+//! mlkaps tune --kernel dgetrf-spr --samples 2000 [--sampler ga-adaptive]
+//!             [--grid 16] [--depth 8] [--seed 0] [--threads N]
+//!             [--validate 16] [--emit-c out.c] [--save-model model.json]
+//!             [--out results/tune.json]
+//! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
+//! ```
+
+use std::collections::HashMap;
+
+use crate::kernels::hardware::HardwareProfile;
+use crate::kernels::{blas3sim, pdgeqrf_sim, toy_sum, Kernel};
+use crate::pipeline::evaluate::SpeedupMap;
+use crate::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use crate::report;
+
+/// Build a kernel by registry name.
+pub fn make_kernel(name: &str, seed: u64) -> Result<Box<dyn Kernel>, String> {
+    let hw = |n: &str| match n {
+        "knm" => HardwareProfile::knm(),
+        "clx" => HardwareProfile::clx(),
+        _ => HardwareProfile::spr(),
+    };
+    match name {
+        "toy" => Ok(Box::new(toy_sum::ToySum::new(seed))),
+        "pdgeqrf" => Ok(Box::new(pdgeqrf_sim::PdgeqrfSim::new(seed))),
+        n if n.starts_with("dgetrf-") => Ok(Box::new(blas3sim::Blas3Sim::new(
+            blas3sim::FactKind::Lu,
+            hw(&n["dgetrf-".len()..]),
+            seed,
+        ))),
+        n if n.starts_with("dgeqrf-") => Ok(Box::new(blas3sim::Blas3Sim::new(
+            blas3sim::FactKind::Qr,
+            hw(&n["dgeqrf-".len()..]),
+            seed,
+        ))),
+        "pallas-lu" => {
+            let rt = crate::runtime::LuRuntime::new("artifacts")
+                .map_err(|e| format!("pallas-lu needs `make artifacts`: {e}"))?;
+            Ok(Box::new(crate::kernels::pallas_lu::PallasLu::new(
+                std::sync::Arc::new(rt),
+            )))
+        }
+        other => Err(format!(
+            "unknown kernel '{other}'; see `mlkaps kernels`"
+        )),
+    }
+}
+
+/// Known kernel names.
+pub const KERNELS: &[&str] = &[
+    "toy",
+    "dgetrf-spr",
+    "dgetrf-knm",
+    "dgetrf-clx",
+    "dgeqrf-spr",
+    "dgeqrf-knm",
+    "pdgeqrf",
+    "pallas-lu",
+];
+
+fn parse_sampler(s: &str) -> Result<SamplerChoice, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "random" => Ok(SamplerChoice::Random),
+        "lhs" => Ok(SamplerChoice::Lhs),
+        "hvs" => Ok(SamplerChoice::Hvs),
+        "hvsr" => Ok(SamplerChoice::Hvsr),
+        "ga-adaptive" | "ga" => Ok(SamplerChoice::GaAdaptive),
+        other => Err(format!("unknown sampler '{other}'")),
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            return Err(format!("expected --flag, got '{k}'"));
+        }
+        let v = args.get(i + 1).ok_or(format!("flag {k} needs a value"))?;
+        map.insert(k[2..].to_string(), v.clone());
+        i += 2;
+    }
+    Ok(map)
+}
+
+fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let kernel_name = get("kernel", "toy");
+    let seed: u64 = get("seed", "0").parse().map_err(|e| format!("seed: {e}"))?;
+    let kernel = make_kernel(&kernel_name, seed)?;
+
+    let cfg = MlkapsConfig {
+        total_samples: get("samples", "1000").parse().map_err(|e| format!("samples: {e}"))?,
+        batch_size: get("batch", "128").parse().map_err(|e| format!("batch: {e}"))?,
+        sampler: parse_sampler(&get("sampler", "ga-adaptive"))?,
+        opt_grid: get("grid", "16").parse().map_err(|e| format!("grid: {e}"))?,
+        tree_depth: get("depth", "8").parse().map_err(|e| format!("depth: {e}"))?,
+        threads: get("threads", "0").parse::<usize>().ok().filter(|&t| t > 0).unwrap_or_else(
+            crate::util::threadpool::default_threads,
+        ),
+        seed,
+        ..Default::default()
+    };
+
+    eprintln!(
+        "mlkaps: tuning {} with {} ({} samples, {}^d grid, depth {})",
+        kernel.name(),
+        cfg.sampler.name(),
+        cfg.total_samples,
+        cfg.opt_grid,
+        cfg.tree_depth
+    );
+    let model = Mlkaps::new(cfg).tune(kernel.as_ref());
+    let st = &model.stats;
+    eprintln!(
+        "phases: sampling {:.1}s | modeling {:.1}s | optimizing {:.1}s | trees {:.2}s | model {}",
+        st.sampling_secs,
+        st.modeling_secs,
+        st.optimizing_secs,
+        st.tree_secs,
+        report::human_bytes(st.model_bytes)
+    );
+
+    if let Some(g) = flags.get("validate") {
+        let g: usize = g.parse().map_err(|e| format!("validate: {e}"))?;
+        if kernel.reference_design(&model.grid.inputs[0]).is_some() {
+            let map = SpeedupMap::build(kernel.as_ref(), g, &|input| model.predict(input));
+            println!("{}", report::heatmap(&map));
+            println!("validation: {}", map.summary());
+        } else {
+            eprintln!("kernel has no reference design; skipping validation");
+        }
+    }
+
+    if let Some(path) = flags.get("emit-c") {
+        std::fs::write(path, model.trees.to_c()).map_err(|e| e.to_string())?;
+        eprintln!("wrote C decision trees to {path}");
+    }
+
+    if let Some(path) = flags.get("save-model") {
+        model.trees.save(path).map_err(|e| e.to_string())?;
+        eprintln!("wrote reloadable tree model to {path}");
+    }
+
+    if let Some(path) = flags.get("out") {
+        let v = crate::util::json::Value::obj(vec![
+            ("kernel", crate::util::json::Value::Str(kernel.name().into())),
+            ("samples", crate::util::json::Value::Num(st.samples as f64)),
+            ("sampling_secs", crate::util::json::Value::Num(st.sampling_secs)),
+            ("modeling_secs", crate::util::json::Value::Num(st.modeling_secs)),
+            ("optimizing_secs", crate::util::json::Value::Num(st.optimizing_secs)),
+            ("model_bytes", crate::util::json::Value::Num(st.model_bytes as f64)),
+            ("tree_nodes", crate::util::json::Value::Num(model.trees.total_nodes() as f64)),
+        ]);
+        report::write_json(std::path::Path::new(path), &v).map_err(|e| e.to_string())?;
+        eprintln!("wrote run record to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(flags: HashMap<String, String>) -> Result<(), String> {
+    let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
+    let manifest = crate::runtime::Manifest::load(std::path::Path::new(&dir))
+        .map_err(|e| e.to_string())?;
+    let rows: Vec<Vec<String>> = manifest
+        .variants
+        .iter()
+        .map(|v| {
+            vec![
+                v.path.clone(),
+                v.n.to_string(),
+                v.block.to_string(),
+                v.tile.to_string(),
+                format!("{:.1e}", v.flops),
+                report::human_bytes(v.vmem_bytes),
+                format!("{:.3}", v.mxu_utilization),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::table(
+            &["artifact", "n", "block", "tile", "flops", "vmem/step", "mxu"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+/// CLI entry point.
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("usage: mlkaps <kernels|tune|artifacts> [--flags]");
+            eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "kernels" => {
+            for k in KERNELS {
+                println!("{k}");
+            }
+            Ok(())
+        }
+        "tune" => parse_flags(&rest).and_then(cmd_tune),
+        "artifacts" => parse_flags(&rest).and_then(cmd_artifacts),
+        other => Err(format!("unknown command '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("mlkaps: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_pairs() {
+        let args: Vec<String> =
+            ["--kernel", "toy", "--samples", "100"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args).unwrap();
+        assert_eq!(f["kernel"], "toy");
+        assert_eq!(f["samples"], "100");
+    }
+
+    #[test]
+    fn parse_flags_rejects_bad_input() {
+        let args: Vec<String> = ["kernel", "toy"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_flags(&args).is_err());
+        let args: Vec<String> = ["--kernel"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn kernel_registry_resolves_all_sim_kernels() {
+        for name in KERNELS.iter().filter(|k| **k != "pallas-lu") {
+            assert!(make_kernel(name, 0).is_ok(), "{name}");
+        }
+        assert!(make_kernel("nope", 0).is_err());
+    }
+
+    #[test]
+    fn sampler_names_parse() {
+        assert_eq!(parse_sampler("GA-Adaptive").unwrap().name(), "GA-Adaptive");
+        assert_eq!(parse_sampler("hvsr").unwrap().name(), "HVSr");
+        assert!(parse_sampler("bogus").is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment configuration: parameter-space descriptions and the
+//! constrained-parameter reformulation (Table 1 of the paper).
+
+pub mod space;
+
+pub use space::{lerp, ParamDef, ParamKind, ParamSpace};

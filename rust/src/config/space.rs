@@ -1,0 +1,433 @@
+//! Parameter-space description.
+//!
+//! Samplers and optimizers operate in the **unit cube** [0,1]^d; the space
+//! maps unit coordinates to **value space** (the numbers the kernel sees):
+//! floats lerp (optionally log-scaled), ints round, categoricals index
+//! their choice list, bools threshold at 0.5. Surrogates and decision
+//! trees consume value-space features directly.
+//!
+//! [`lerp`] is also the paper's Table 1 reformulation primitive: a
+//! constrained parameter `mb ∈ [1, m/8p]` becomes a free α ∈ [0,1] with
+//! `mb = lerp(α, 1, m/8p)` — implemented verbatim by the pdgeqrf kernel.
+
+use crate::util::json::Value;
+
+/// Linear interpolation between `lo` and `hi` with t ∈ [0,1] (clamped).
+pub fn lerp(t: f64, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * t.clamp(0.0, 1.0)
+}
+
+/// The type and domain of a single parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamKind {
+    /// Continuous in [lo, hi]; `log` uses a log-uniform mapping.
+    Float { lo: f64, hi: f64, log: bool },
+    /// Integer in [lo, hi] inclusive.
+    Int { lo: i64, hi: i64 },
+    /// One of a fixed list of choices (encoded by index in value space).
+    Categorical { choices: Vec<String> },
+    /// Boolean (encoded 0.0 / 1.0 in value space).
+    Bool,
+}
+
+/// A named parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub kind: ParamKind,
+}
+
+impl ParamDef {
+    pub fn float(name: &str, lo: f64, hi: f64) -> Self {
+        assert!(lo < hi, "{name}: empty float range");
+        ParamDef { name: name.into(), kind: ParamKind::Float { lo, hi, log: false } }
+    }
+    pub fn log_float(name: &str, lo: f64, hi: f64) -> Self {
+        assert!(0.0 < lo && lo < hi, "{name}: log range needs 0 < lo < hi");
+        ParamDef { name: name.into(), kind: ParamKind::Float { lo, hi, log: true } }
+    }
+    pub fn int(name: &str, lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi, "{name}: empty int range");
+        ParamDef { name: name.into(), kind: ParamKind::Int { lo, hi } }
+    }
+    pub fn categorical(name: &str, choices: &[&str]) -> Self {
+        assert!(!choices.is_empty(), "{name}: no choices");
+        ParamDef {
+            name: name.into(),
+            kind: ParamKind::Categorical {
+                choices: choices.iter().map(|s| s.to_string()).collect(),
+            },
+        }
+    }
+    pub fn boolean(name: &str) -> Self {
+        ParamDef { name: name.into(), kind: ParamKind::Bool }
+    }
+
+    /// Map a unit coordinate to value space.
+    pub fn decode(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        match &self.kind {
+            ParamKind::Float { lo, hi, log: false } => lerp(u, *lo, *hi),
+            ParamKind::Float { lo, hi, log: true } => {
+                (lerp(u, lo.ln(), hi.ln())).exp()
+            }
+            ParamKind::Int { lo, hi } => {
+                let n = (hi - lo + 1) as f64;
+                (*lo + ((u * n).floor() as i64).min(hi - lo)) as f64
+            }
+            ParamKind::Categorical { choices } => {
+                let n = choices.len() as f64;
+                ((u * n).floor()).min(n - 1.0)
+            }
+            ParamKind::Bool => {
+                if u < 0.5 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Map a value back to the center of its unit-space preimage.
+    pub fn encode(&self, v: f64) -> f64 {
+        match &self.kind {
+            ParamKind::Float { lo, hi, log: false } => ((v - lo) / (hi - lo)).clamp(0.0, 1.0),
+            ParamKind::Float { lo, hi, log: true } => {
+                ((v.max(*lo).ln() - lo.ln()) / (hi.ln() - lo.ln())).clamp(0.0, 1.0)
+            }
+            ParamKind::Int { lo, hi } => {
+                let n = (hi - lo + 1) as f64;
+                ((v - *lo as f64 + 0.5) / n).clamp(0.0, 1.0)
+            }
+            ParamKind::Categorical { choices } => {
+                let n = choices.len() as f64;
+                ((v + 0.5) / n).clamp(0.0, 1.0)
+            }
+            ParamKind::Bool => {
+                if v < 0.5 {
+                    0.25
+                } else {
+                    0.75
+                }
+            }
+        }
+    }
+
+    /// Snap an arbitrary value-space number to the nearest valid value.
+    pub fn snap(&self, v: f64) -> f64 {
+        match &self.kind {
+            ParamKind::Float { lo, hi, .. } => v.clamp(*lo, *hi),
+            ParamKind::Int { lo, hi } => (v.round() as i64).clamp(*lo, *hi) as f64,
+            ParamKind::Categorical { choices } => {
+                (v.round() as i64).clamp(0, choices.len() as i64 - 1) as f64
+            }
+            ParamKind::Bool => {
+                if v < 0.5 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Number of distinct values (None = continuous).
+    pub fn cardinality(&self) -> Option<u64> {
+        match &self.kind {
+            ParamKind::Float { .. } => None,
+            ParamKind::Int { lo, hi } => Some((hi - lo + 1) as u64),
+            ParamKind::Categorical { choices } => Some(choices.len() as u64),
+            ParamKind::Bool => Some(2),
+        }
+    }
+
+    /// Is this a categorical/bool feature (unordered) for the surrogate?
+    pub fn is_unordered(&self) -> bool {
+        matches!(self.kind, ParamKind::Categorical { .. } | ParamKind::Bool)
+    }
+
+    /// Value-space bounds (lo, hi) of the encoded representation.
+    pub fn bounds(&self) -> (f64, f64) {
+        match &self.kind {
+            ParamKind::Float { lo, hi, .. } => (*lo, *hi),
+            ParamKind::Int { lo, hi } => (*lo as f64, *hi as f64),
+            ParamKind::Categorical { choices } => (0.0, choices.len() as f64 - 1.0),
+            ParamKind::Bool => (0.0, 1.0),
+        }
+    }
+}
+
+/// An ordered collection of parameters: the input space, the design space,
+/// or their concatenation (the sampling space).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParamSpace {
+    pub params: Vec<ParamDef>,
+}
+
+impl ParamSpace {
+    pub fn new(params: Vec<ParamDef>) -> Self {
+        ParamSpace { params }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.params.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// Concatenate two spaces (input ⊗ design = joint sampling space).
+    pub fn concat(&self, other: &ParamSpace) -> ParamSpace {
+        let mut params = self.params.clone();
+        params.extend(other.params.iter().cloned());
+        ParamSpace { params }
+    }
+
+    /// Decode a unit-cube point to value space.
+    pub fn decode(&self, unit: &[f64]) -> Vec<f64> {
+        assert_eq!(unit.len(), self.dim(), "dim mismatch");
+        self.params.iter().zip(unit).map(|(p, &u)| p.decode(u)).collect()
+    }
+
+    /// Encode a value-space point back into the unit cube.
+    pub fn encode(&self, value: &[f64]) -> Vec<f64> {
+        assert_eq!(value.len(), self.dim(), "dim mismatch");
+        self.params.iter().zip(value).map(|(p, &v)| p.encode(v)).collect()
+    }
+
+    /// Snap a value-space point onto valid values.
+    pub fn snap(&self, value: &[f64]) -> Vec<f64> {
+        assert_eq!(value.len(), self.dim(), "dim mismatch");
+        self.params.iter().zip(value).map(|(p, &v)| p.snap(v)).collect()
+    }
+
+    /// Total number of discrete configurations; `None` if any parameter is
+    /// continuous. The paper quotes 4.6e13 for dgetrf's design space.
+    pub fn cardinality(&self) -> Option<f64> {
+        let mut total = 1.0f64;
+        for p in &self.params {
+            total *= p.cardinality()? as f64;
+        }
+        Some(total)
+    }
+
+    /// Regular grid with `per_dim` points per dimension, in value space.
+    /// (The paper's optimization grid: 16x16 by default; validation 46x46.)
+    pub fn grid(&self, per_dim: usize) -> Vec<Vec<f64>> {
+        assert!(per_dim >= 1);
+        let d = self.dim();
+        let mut out = Vec::with_capacity(per_dim.pow(d as u32));
+        let mut idx = vec![0usize; d];
+        loop {
+            let unit: Vec<f64> = idx
+                .iter()
+                .map(|&i| {
+                    if per_dim == 1 {
+                        0.5
+                    } else {
+                        i as f64 / (per_dim - 1) as f64
+                    }
+                })
+                .collect();
+            out.push(self.decode(&unit));
+            // odometer increment
+            let mut k = 0;
+            loop {
+                idx[k] += 1;
+                if idx[k] < per_dim {
+                    break;
+                }
+                idx[k] = 0;
+                k += 1;
+                if k == d {
+                    return out;
+                }
+            }
+        }
+    }
+
+    /// Flags marking unordered (categorical/bool) dimensions for the GBDT.
+    pub fn unordered_mask(&self) -> Vec<bool> {
+        self.params.iter().map(|p| p.is_unordered()).collect()
+    }
+
+    /// Value-space bounds per dimension.
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        self.params.iter().map(|p| p.bounds()).collect()
+    }
+
+    /// Serialize the space description to JSON (for experiment records).
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.params
+                .iter()
+                .map(|p| {
+                    let (kind, extra) = match &p.kind {
+                        ParamKind::Float { lo, hi, log } => (
+                            "float",
+                            vec![
+                                ("lo", Value::Num(*lo)),
+                                ("hi", Value::Num(*hi)),
+                                ("log", Value::Bool(*log)),
+                            ],
+                        ),
+                        ParamKind::Int { lo, hi } => (
+                            "int",
+                            vec![
+                                ("lo", Value::Num(*lo as f64)),
+                                ("hi", Value::Num(*hi as f64)),
+                            ],
+                        ),
+                        ParamKind::Categorical { choices } => (
+                            "categorical",
+                            vec![(
+                                "choices",
+                                Value::Arr(
+                                    choices.iter().map(|c| Value::Str(c.clone())).collect(),
+                                ),
+                            )],
+                        ),
+                        ParamKind::Bool => ("bool", vec![]),
+                    };
+                    let mut fields = vec![
+                        ("name", Value::Str(p.name.clone())),
+                        ("kind", Value::Str(kind.into())),
+                    ];
+                    fields.extend(extra);
+                    Value::obj(fields)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn space() -> ParamSpace {
+        ParamSpace::new(vec![
+            ParamDef::float("x", -2.0, 2.0),
+            ParamDef::int("threads", 1, 64),
+            ParamDef::categorical("variant", &["a", "b", "c"]),
+            ParamDef::boolean("flag"),
+            ParamDef::log_float("tol", 1e-6, 1.0),
+        ])
+    }
+
+    #[test]
+    fn decode_endpoints() {
+        let s = space();
+        let lo = s.decode(&[0.0, 0.0, 0.0, 0.0, 0.0]);
+        let hi = s.decode(&[1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(&lo[..4], &[-2.0, 1.0, 0.0, 0.0]);
+        assert!((lo[4] - 1e-6).abs() < 1e-12);
+        assert_eq!(hi[0], 2.0);
+        assert_eq!(hi[1], 64.0);
+        assert_eq!(hi[2], 2.0);
+        assert_eq!(hi[3], 1.0);
+        assert!((hi[4] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn int_decode_is_uniform() {
+        let p = ParamDef::int("t", 1, 4);
+        let mut counts = [0; 4];
+        for i in 0..1000 {
+            let u = i as f64 / 1000.0;
+            counts[(p.decode(u) as usize) - 1] += 1;
+        }
+        for c in counts {
+            assert_eq!(c, 250);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_discrete() {
+        let s = space();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let unit: Vec<f64> = (0..s.dim()).map(|_| rng.f64()).collect();
+            let v = s.decode(&unit);
+            let v2 = s.decode(&s.encode(&v));
+            assert_eq!(v, v2, "decode∘encode must be idempotent on values");
+        }
+    }
+
+    #[test]
+    fn snap_clamps_and_rounds() {
+        let s = space();
+        let v = s.snap(&[5.0, 3.7, 9.0, 0.2, 2.0]);
+        assert_eq!(v, vec![2.0, 4.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn log_float_midpoint_is_geometric() {
+        let p = ParamDef::log_float("tol", 1e-4, 1.0);
+        assert!((p.decode(0.5) - 1e-2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cardinality() {
+        let s = ParamSpace::new(vec![
+            ParamDef::int("a", 1, 10),
+            ParamDef::categorical("b", &["x", "y"]),
+            ParamDef::boolean("c"),
+        ]);
+        assert_eq!(s.cardinality(), Some(40.0));
+        assert_eq!(space().cardinality(), None); // has floats
+    }
+
+    #[test]
+    fn grid_shape_and_coverage() {
+        let s = ParamSpace::new(vec![
+            ParamDef::float("x", 0.0, 1.0),
+            ParamDef::float("y", 0.0, 10.0),
+        ]);
+        let g = s.grid(4);
+        assert_eq!(g.len(), 16);
+        assert!(g.contains(&vec![0.0, 0.0]));
+        assert!(g.contains(&vec![1.0, 10.0]));
+        let g1 = s.grid(1);
+        assert_eq!(g1, vec![vec![0.5, 5.0]]);
+    }
+
+    #[test]
+    fn concat_spaces() {
+        let a = ParamSpace::new(vec![ParamDef::float("m", 0.0, 1.0)]);
+        let b = ParamSpace::new(vec![ParamDef::int("t", 1, 2)]);
+        let j = a.concat(&b);
+        assert_eq!(j.dim(), 2);
+        assert_eq!(j.names(), vec!["m", "t"]);
+    }
+
+    #[test]
+    fn unordered_mask() {
+        assert_eq!(
+            space().unordered_mask(),
+            vec![false, false, true, true, false]
+        );
+    }
+
+    #[test]
+    fn lerp_clamps() {
+        assert_eq!(lerp(-1.0, 0.0, 10.0), 0.0);
+        assert_eq!(lerp(2.0, 0.0, 10.0), 10.0);
+        assert_eq!(lerp(0.25, 0.0, 8.0), 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip_structure() {
+        let j = space().to_json();
+        let text = j.to_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 5);
+        assert_eq!(
+            back.idx(0).unwrap().get("name").unwrap().as_str(),
+            Some("x")
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Sample datasets: the (features, objective) pairs flowing from the
+//! sampling phase into surrogate training.
+
+use crate::util::json::Value;
+
+/// A growable dataset of feature vectors with scalar objectives.
+///
+/// Features are value-space points over the joint (input ⊗ design) space;
+/// `y` is the measured objective (execution time — lower is better).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new() -> Self {
+        Dataset { x: Vec::new(), y: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Dataset { x: Vec::with_capacity(n), y: Vec::with_capacity(n) }
+    }
+
+    pub fn push(&mut self, x: Vec<f64>, y: f64) {
+        debug_assert!(
+            self.x.last().map_or(true, |prev| prev.len() == x.len()),
+            "inconsistent feature dimension"
+        );
+        self.x.push(x);
+        self.y.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.first().map_or(0, |r| r.len())
+    }
+
+    /// Append all samples from another dataset.
+    pub fn extend(&mut self, other: &Dataset) {
+        self.x.extend(other.x.iter().cloned());
+        self.y.extend(other.y.iter().cloned());
+    }
+
+    /// Keep only samples whose objective passes `keep`. Returns the number
+    /// of dropped samples. (Used by the HVS objective upper bound.)
+    pub fn retain_by_objective(&mut self, keep: impl Fn(f64) -> bool) -> usize {
+        let before = self.len();
+        let mut xs = Vec::with_capacity(before);
+        let mut ys = Vec::with_capacity(before);
+        for (x, &y) in self.x.iter().zip(&self.y) {
+            if keep(y) {
+                xs.push(x.clone());
+                ys.push(y);
+            }
+        }
+        self.x = xs;
+        self.y = ys;
+        before - self.len()
+    }
+
+    /// Column view of one feature.
+    pub fn column(&self, j: usize) -> Vec<f64> {
+        self.x.iter().map(|r| r[j]).collect()
+    }
+
+    /// Approximate heap footprint (telemetry).
+    pub fn mem_bytes(&self) -> usize {
+        let per_row = self.dim() * std::mem::size_of::<f64>() + std::mem::size_of::<Vec<f64>>();
+        self.x.len() * per_row + self.y.capacity() * std::mem::size_of::<f64>()
+    }
+
+    /// Serialize to JSON (for experiment records / EXPERIMENTS.md data).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "x",
+                Value::Arr(
+                    self.x
+                        .iter()
+                        .map(|r| Value::Arr(r.iter().map(|&v| Value::Num(v)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("y", Value::Arr(self.y.iter().map(|&v| Value::Num(v)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Dataset, String> {
+        let xs = v.get("x").and_then(|a| a.as_arr()).ok_or("missing x")?;
+        let ys = v.get("y").and_then(|a| a.as_arr()).ok_or("missing y")?;
+        let mut d = Dataset::with_capacity(ys.len());
+        for (row, y) in xs.iter().zip(ys) {
+            let r: Option<Vec<f64>> =
+                row.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64()).collect());
+            d.push(r.ok_or("bad row")?, y.as_f64().ok_or("bad y")?);
+        }
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Dataset {
+        let mut d = Dataset::new();
+        d.push(vec![1.0, 2.0], 0.5);
+        d.push(vec![3.0, 4.0], 1.5);
+        d.push(vec![5.0, 6.0], 100.0);
+        d
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let d = sample();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert!(!d.is_empty());
+        assert_eq!(d.column(1), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn retain_by_objective_drops_outliers() {
+        let mut d = sample();
+        let dropped = d.retain_by_objective(|y| y < 10.0);
+        assert_eq!(dropped, 1);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.y, vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn extend_concatenates() {
+        let mut a = sample();
+        let b = sample();
+        a.extend(&b);
+        assert_eq!(a.len(), 6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = sample();
+        let text = d.to_json().to_string();
+        let back = Dataset::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.x, d.x);
+        assert_eq!(back.y, d.y);
+    }
+
+    #[test]
+    fn mem_bytes_grows() {
+        let mut d = Dataset::new();
+        let empty = d.mem_bytes();
+        for i in 0..100 {
+            d.push(vec![i as f64; 8], 0.0);
+        }
+        assert!(d.mem_bytes() > empty);
+    }
+}

@@ -1,0 +1,293 @@
+//! CART decision trees (Breiman et al.): depth-bounded binary trees with
+//! variance-reduction splits (regression) or Gini-impurity splits
+//! (classification). This is the runtime-facing model — the paper uses
+//! scikit-learn's DecisionTreeRegressor/Classifier, depth 8 by default.
+
+/// Regression (continuous design params) or classification (categorical).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Regression,
+    Classification,
+}
+
+/// CART hyperparameters.
+#[derive(Clone, Debug)]
+pub struct CartParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub task: TaskKind,
+}
+
+impl Default for CartParams {
+    fn default() -> Self {
+        CartParams { max_depth: 8, min_samples_leaf: 1, task: TaskKind::Regression }
+    }
+}
+
+/// Tree nodes in an arena. Leaves store the prediction; splits are
+/// `x[feat] <= threshold` (left) else right.
+#[derive(Clone, Debug)]
+pub enum CartNode {
+    Leaf { value: f64 },
+    Split { feat: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// A fitted CART.
+#[derive(Clone, Debug)]
+pub struct Cart {
+    pub params: CartParams,
+    pub nodes: Vec<CartNode>,
+}
+
+impl Cart {
+    pub fn new(params: CartParams) -> Self {
+        Cart { params, nodes: Vec::new() }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Depth of the tree (1 = single leaf).
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[CartNode], i: usize) -> usize {
+            match &nodes[i] {
+                CartNode::Leaf { .. } => 1,
+                CartNode::Split { left, right, .. } => {
+                    1 + walk(nodes, *left).max(walk(nodes, *right))
+                }
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        self.nodes.clear();
+        let idx: Vec<usize> = (0..x.len()).collect();
+        self.build(x, y, idx, 0);
+    }
+
+    fn leaf_value(&self, y: &[f64], idx: &[usize]) -> f64 {
+        match self.params.task {
+            TaskKind::Regression => {
+                idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64
+            }
+            TaskKind::Classification => {
+                // Majority vote over exact class values.
+                let mut counts: std::collections::BTreeMap<u64, usize> =
+                    std::collections::BTreeMap::new();
+                for &i in idx {
+                    *counts.entry(y[i].to_bits()).or_default() += 1;
+                }
+                let best = counts.iter().max_by_key(|(_, &c)| c).unwrap();
+                f64::from_bits(*best.0)
+            }
+        }
+    }
+
+    /// Impurity of a subset: variance (regression) or Gini (classification).
+    fn impurity(&self, y: &[f64], idx: &[usize]) -> f64 {
+        match self.params.task {
+            TaskKind::Regression => {
+                let n = idx.len() as f64;
+                let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / n;
+                idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum::<f64>() / n
+            }
+            TaskKind::Classification => {
+                let mut counts: std::collections::BTreeMap<u64, usize> =
+                    std::collections::BTreeMap::new();
+                for &i in idx {
+                    *counts.entry(y[i].to_bits()).or_default() += 1;
+                }
+                let n = idx.len() as f64;
+                1.0 - counts.values().map(|&c| (c as f64 / n).powi(2)).sum::<f64>()
+            }
+        }
+    }
+
+    fn build(&mut self, x: &[Vec<f64>], y: &[f64], idx: Vec<usize>, depth: usize) -> usize {
+        let node_id = self.nodes.len();
+        let parent_imp = self.impurity(y, &idx);
+        if depth >= self.params.max_depth
+            || idx.len() < 2 * self.params.min_samples_leaf
+            || parent_imp < 1e-15
+        {
+            let value = self.leaf_value(y, &idx);
+            self.nodes.push(CartNode::Leaf { value });
+            return node_id;
+        }
+
+        // Exhaustive best split over (feature, midpoint-threshold).
+        let d = x[0].len();
+        let n = idx.len() as f64;
+        let mut best: Option<(f64, usize, f64)> = None; // (score, feat, thr)
+        for feat in 0..d {
+            let mut order = idx.clone();
+            order.sort_by(|&a, &b| x[a][feat].partial_cmp(&x[b][feat]).unwrap());
+            for w in self.params.min_samples_leaf..=order.len() - self.params.min_samples_leaf
+            {
+                if w == 0 || w == order.len() {
+                    continue;
+                }
+                let lo = x[order[w - 1]][feat];
+                let hi = x[order[w]][feat];
+                if hi - lo < 1e-300 {
+                    continue;
+                }
+                let thr = 0.5 * (lo + hi);
+                let (lidx, ridx) = (&order[..w], &order[w..]);
+                let score = (lidx.len() as f64 / n) * self.impurity(y, lidx)
+                    + (ridx.len() as f64 / n) * self.impurity(y, ridx);
+                if best.map_or(true, |(s, _, _)| score < s) {
+                    best = Some((score, feat, thr));
+                }
+            }
+        }
+
+        match best {
+            Some((score, feat, thr)) if score < parent_imp - 1e-15 => {
+                let (lidx, ridx): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| x[i][feat] <= thr);
+                // Reserve the split slot, then build children.
+                self.nodes.push(CartNode::Leaf { value: 0.0 });
+                let left = self.build(x, y, lidx, depth + 1);
+                let right = self.build(x, y, ridx, depth + 1);
+                self.nodes[node_id] = CartNode::Split { feat, threshold: thr, left, right };
+                node_id
+            }
+            _ => {
+                let value = self.leaf_value(y, &idx);
+                self.nodes.push(CartNode::Leaf { value });
+                node_id
+            }
+        }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                CartNode::Leaf { value } => return *value,
+                CartNode::Split { feat, threshold, left, right } => {
+                    i = if x[*feat] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn regression_step_function_exact() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 9.0 }).collect();
+        let mut t = Cart::new(CartParams::default());
+        t.fit(&x, &y);
+        assert_eq!(t.predict(&[10.0]), 1.0);
+        assert_eq!(t.predict(&[80.0]), 9.0);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn classification_majority_and_gini() {
+        // Class depends on x[1] only.
+        let mut rng = Rng::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..200 {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push(vec![a, b]);
+            y.push(if b > 0.6 { 2.0 } else { 0.0 });
+        }
+        let mut t = Cart::new(CartParams {
+            task: TaskKind::Classification,
+            ..Default::default()
+        });
+        t.fit(&x, &y);
+        assert_eq!(t.predict(&[0.5, 0.9]), 2.0);
+        assert_eq!(t.predict(&[0.5, 0.1]), 0.0);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let mut rng = Rng::new(2);
+        let x: Vec<Vec<f64>> = (0..500).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|p| (p[0] * 10.0).sin() + p[1]).collect();
+        for max_depth in [1, 2, 4, 8] {
+            let mut t = Cart::new(CartParams { max_depth, ..Default::default() });
+            t.fit(&x, &y);
+            assert!(t.depth() <= max_depth + 1, "depth {} > {}", t.depth(), max_depth);
+        }
+    }
+
+    #[test]
+    fn deeper_trees_fit_better() {
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> = (0..400).map(|_| vec![rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|p| (p[0] * 20.0).floor()).collect();
+        let mut errs = Vec::new();
+        for max_depth in [1, 3, 6] {
+            let mut t = Cart::new(CartParams { max_depth, ..Default::default() });
+            t.fit(&x, &y);
+            let preds: Vec<f64> = x.iter().map(|p| t.predict(p)).collect();
+            errs.push(crate::util::stats::mae(&preds, &y));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn pure_leaf_short_circuits() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![5.0; 10];
+        let mut t = Cart::new(CartParams::default());
+        t.fit(&x, &y);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[3.0]), 5.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut t = Cart::new(CartParams::default());
+        t.fit(&[vec![1.0]], &[2.0]);
+        assert_eq!(t.predict(&[99.0]), 2.0);
+    }
+
+    #[test]
+    fn grid_pattern_partitions_like_paper_fig10() {
+        // The "blocked pattern" in the paper's speedup maps comes from the
+        // tree partitioning the 2-D input space into rectangles: check the
+        // tree reproduces a quadrant structure exactly.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let a = i as f64 / 19.0;
+                let b = j as f64 / 19.0;
+                x.push(vec![a, b]);
+                y.push(match (a < 0.5, b < 0.5) {
+                    (true, true) => 1.0,
+                    (true, false) => 2.0,
+                    (false, true) => 3.0,
+                    (false, false) => 4.0,
+                });
+            }
+        }
+        let mut t = Cart::new(CartParams { max_depth: 3, ..Default::default() });
+        t.fit(&x, &y);
+        assert_eq!(t.predict(&[0.2, 0.2]), 1.0);
+        assert_eq!(t.predict(&[0.2, 0.8]), 2.0);
+        assert_eq!(t.predict(&[0.8, 0.2]), 3.0);
+        assert_eq!(t.predict(&[0.8, 0.8]), 4.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Decision-tree persistence: the paper stores the final trees in a
+//! pickled file alongside the generated C; our analog is a JSON document
+//! that round-trips the full [`DesignTrees`] model (trees + both spaces),
+//! so a tuned model can be saved, shipped and reloaded without retuning.
+
+use crate::config::space::{ParamDef, ParamKind, ParamSpace};
+use crate::dtree::cart::{Cart, CartNode, CartParams, TaskKind};
+use crate::dtree::DesignTrees;
+use crate::util::json::{parse, Value};
+
+fn cart_to_json(t: &Cart) -> Value {
+    let nodes = t
+        .nodes
+        .iter()
+        .map(|n| match n {
+            CartNode::Leaf { value } => Value::obj(vec![("v", Value::Num(*value))]),
+            CartNode::Split { feat, threshold, left, right } => Value::obj(vec![
+                ("f", Value::Num(*feat as f64)),
+                ("t", Value::Num(*threshold)),
+                ("l", Value::Num(*left as f64)),
+                ("r", Value::Num(*right as f64)),
+            ]),
+        })
+        .collect();
+    Value::obj(vec![
+        ("max_depth", Value::Num(t.params.max_depth as f64)),
+        ("min_samples_leaf", Value::Num(t.params.min_samples_leaf as f64)),
+        (
+            "task",
+            Value::Str(
+                match t.params.task {
+                    TaskKind::Regression => "regression",
+                    TaskKind::Classification => "classification",
+                }
+                .into(),
+            ),
+        ),
+        ("nodes", Value::Arr(nodes)),
+    ])
+}
+
+fn cart_from_json(v: &Value) -> Result<Cart, String> {
+    let task = match v.get("task").and_then(|t| t.as_str()) {
+        Some("classification") => TaskKind::Classification,
+        _ => TaskKind::Regression,
+    };
+    let params = CartParams {
+        max_depth: v.get("max_depth").and_then(|x| x.as_usize()).unwrap_or(8),
+        min_samples_leaf: v
+            .get("min_samples_leaf")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(1),
+        task,
+    };
+    let nodes = v
+        .get("nodes")
+        .and_then(|a| a.as_arr())
+        .ok_or("tree missing nodes")?
+        .iter()
+        .map(|n| -> Result<CartNode, String> {
+            if let Some(val) = n.get("v") {
+                Ok(CartNode::Leaf { value: val.as_f64().ok_or("bad leaf")? })
+            } else {
+                Ok(CartNode::Split {
+                    feat: n.get("f").and_then(|x| x.as_usize()).ok_or("bad feat")?,
+                    threshold: n.get("t").and_then(|x| x.as_f64()).ok_or("bad thr")?,
+                    left: n.get("l").and_then(|x| x.as_usize()).ok_or("bad left")?,
+                    right: n.get("r").and_then(|x| x.as_usize()).ok_or("bad right")?,
+                })
+            }
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Cart { params, nodes })
+}
+
+fn space_from_json(v: &Value) -> Result<ParamSpace, String> {
+    let arr = v.as_arr().ok_or("space must be an array")?;
+    let params = arr
+        .iter()
+        .map(|p| -> Result<ParamDef, String> {
+            let name = p.get("name").and_then(|n| n.as_str()).ok_or("no name")?;
+            let kind = match p.get("kind").and_then(|k| k.as_str()) {
+                Some("float") => ParamKind::Float {
+                    lo: p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")?,
+                    hi: p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")?,
+                    log: p.get("log").and_then(|x| x.as_bool()).unwrap_or(false),
+                },
+                Some("int") => ParamKind::Int {
+                    lo: p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")? as i64,
+                    hi: p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")? as i64,
+                },
+                Some("categorical") => ParamKind::Categorical {
+                    choices: p
+                        .get("choices")
+                        .and_then(|c| c.as_arr())
+                        .ok_or("no choices")?
+                        .iter()
+                        .filter_map(|c| c.as_str().map(str::to_string))
+                        .collect(),
+                },
+                Some("bool") => ParamKind::Bool,
+                other => return Err(format!("unknown kind {other:?}")),
+            };
+            Ok(ParamDef { name: name.to_string(), kind })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(ParamSpace::new(params))
+}
+
+impl DesignTrees {
+    /// Serialize the full model (trees + spaces) to JSON.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str("mlkaps-design-trees-v1".into())),
+            ("input_space", self.input_space.to_json()),
+            ("design_space", self.design_space.to_json()),
+            (
+                "trees",
+                Value::Arr(self.trees.iter().map(cart_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Reload a model serialized with [`DesignTrees::to_json`].
+    pub fn from_json(v: &Value) -> Result<DesignTrees, String> {
+        if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-design-trees-v1") {
+            return Err("unknown model format".into());
+        }
+        let input_space = space_from_json(v.get("input_space").ok_or("no input_space")?)?;
+        let design_space =
+            space_from_json(v.get("design_space").ok_or("no design_space")?)?;
+        let trees = v
+            .get("trees")
+            .and_then(|a| a.as_arr())
+            .ok_or("no trees")?
+            .iter()
+            .map(cart_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        if trees.len() != design_space.dim() {
+            return Err("tree count != design dimensions".into());
+        }
+        Ok(DesignTrees { trees, input_space, design_space })
+    }
+
+    /// Save to a file (pretty JSON).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<DesignTrees, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        DesignTrees::from_json(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::ParamDef;
+
+    fn model() -> DesignTrees {
+        let input = ParamSpace::new(vec![
+            ParamDef::float("n", 1000.0, 5000.0),
+            ParamDef::float("m", 1000.0, 5000.0),
+        ]);
+        let design = ParamSpace::new(vec![
+            ParamDef::int("threads", 1, 64),
+            ParamDef::categorical("variant", &["a", "b"]),
+            ParamDef::boolean("flag"),
+            ParamDef::log_float("tol", 1e-6, 1.0),
+        ]);
+        let inputs = input.grid(6);
+        let designs: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|p| {
+                vec![
+                    if p[0] < 3000.0 { 8.0 } else { 32.0 },
+                    if p[1] < 2000.0 { 0.0 } else { 1.0 },
+                    1.0,
+                    1e-3,
+                ]
+            })
+            .collect();
+        DesignTrees::fit(&inputs, &designs, &input, &design, 6)
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let m = model();
+        let text = m.to_json().to_pretty();
+        let back = DesignTrees::from_json(&parse(&text).unwrap()).unwrap();
+        for input in m.input_space.grid(9) {
+            assert_eq!(m.predict(&input), back.predict(&input), "{input:?}");
+        }
+        assert_eq!(back.design_space.names(), vec!["threads", "variant", "flag", "tol"]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = model();
+        let dir = std::env::temp_dir().join("mlkaps_tree_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = DesignTrees::load(&path).unwrap();
+        assert_eq!(m.predict(&[1500.0, 4000.0]), back.predict(&[1500.0, 4000.0]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(DesignTrees::from_json(&parse("{}").unwrap()).is_err());
+        let m = model();
+        let mut doc = m.to_json();
+        if let Value::Obj(map) = &mut doc {
+            map.remove("trees");
+        }
+        assert!(DesignTrees::from_json(&doc).is_err());
+        assert!(DesignTrees::load("/nonexistent/path.json").is_err());
+    }
+}

@@ -1,0 +1,523 @@
+//! Shared analytical performance model for blocked BLAS-3 factorizations
+//! (LU and QR): the substitute for the closed-source Intel MKL prototype
+//! binaries (DESIGN.md §1).
+//!
+//! The model composes a roofline compute term with multiplicative
+//! efficiency factors, each encoding a real phenomenon of blocked
+//! factorizations on many-core CPUs:
+//!
+//! * panel-width (`nb`) cache blocking with vector-width quantization
+//!   cliffs and a too-big-panel cliff;
+//! * inner blocking (`ib`) with an optimum tied to `nb`;
+//! * Amdahl + synchronization thread scaling, SMT diminishing returns and
+//!   a NUMA-boundary cliff that only the 2-D decomposition avoids;
+//! * decomposition/aspect-ratio matching (the paper's blind-spot axis);
+//! * lookahead pipelining, recursion threshold, software prefetch and
+//!   dynamic scheduling second-order terms;
+//! * **ill-configuration ridges** (panel starvation, nb < ib) that produce
+//!   the high-variance outlier regions motivating MLKAPS' objective upper
+//!   bound in HVS (§4.1.2);
+//! * multiplicative log-normal measurement noise.
+//!
+//! The absolute numbers are calibrated to plausible wall-clock times, but
+//! what the experiments rely on is the *shape*: discrete cliffs, a huge
+//! (≈10¹²-configuration) design space, and an expert baseline that is
+//! near-optimal in most regions yet strictly improvable (§5.3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::space::{ParamDef, ParamSpace};
+use crate::kernels::hardware::{HardwareProfile, MemoryKind};
+use crate::kernels::{mkl_ref, Kernel};
+
+/// Which factorization the simulator models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactKind {
+    Lu,
+    Qr,
+}
+
+/// Design-vector indices (value space), shared by simulators and the
+/// expert reference.
+pub mod dix {
+    pub const NB: usize = 0;
+    pub const IB: usize = 1;
+    pub const THREADS: usize = 2;
+    pub const LOOKAHEAD: usize = 3;
+    pub const DECOMP: usize = 4;
+    pub const RTHRESH: usize = 5;
+    pub const PREFETCH: usize = 6;
+    pub const DYN: usize = 7;
+}
+
+/// Decomposition categories.
+pub const DECOMP_COL1D: f64 = 0.0;
+pub const DECOMP_ROW1D: f64 = 1.0;
+pub const DECOMP_BLOCK2D: f64 = 2.0;
+
+/// Analytical simulator of a blocked factorization kernel.
+pub struct Blas3Sim {
+    pub hw: HardwareProfile,
+    pub kind: FactKind,
+    pub noise_sigma: f64,
+    name: String,
+    input_space: ParamSpace,
+    design_space: ParamSpace,
+    counter: AtomicU64,
+    seed: u64,
+}
+
+impl Blas3Sim {
+    pub fn new(kind: FactKind, hw: HardwareProfile, seed: u64) -> Self {
+        let name = format!(
+            "{}-sim({})",
+            match kind {
+                FactKind::Lu => "dgetrf",
+                FactKind::Qr => "dgeqrf",
+            },
+            hw.name
+        );
+        let input_space = ParamSpace::new(vec![
+            ParamDef::int("n", 1000, 5000),
+            ParamDef::int("m", 1000, 5000),
+        ]);
+        let design_space = ParamSpace::new(vec![
+            ParamDef::int("nb", 8, 512),
+            ParamDef::int("ib", 1, 64),
+            ParamDef::int("threads", 1, hw.max_threads() as i64),
+            ParamDef::int("lookahead", 0, 8),
+            ParamDef::categorical("decomp", &["col1d", "row1d", "block2d"]),
+            ParamDef::int("rthresh", 16, 512),
+            ParamDef::categorical("prefetch", &["none", "near", "far"]),
+            ParamDef::boolean("dyn_sched"),
+        ]);
+        Blas3Sim {
+            hw,
+            kind,
+            noise_sigma: 0.02,
+            name,
+            input_space,
+            design_space,
+            counter: AtomicU64::new(0),
+            seed,
+        }
+    }
+
+    /// Flop count of the factorization (LAPACK working notes formulas).
+    pub fn flops(&self, n: f64, m: f64) -> f64 {
+        let k = n.min(m);
+        match self.kind {
+            FactKind::Lu => m * n * k - (m + n) * k * k / 2.0 + k * k * k / 3.0,
+            FactKind::Qr => 2.0 * m * n * k - (m + n) * k * k + 2.0 * k * k * k / 3.0,
+        }
+    }
+
+    /// Noise-free execution-time model (seconds).
+    pub fn time_model(&self, input: &[f64], design: &[f64]) -> f64 {
+        let (n, m) = (input[0], input[1]);
+        let nb = design[dix::NB];
+        let ib = design[dix::IB];
+        let threads = design[dix::THREADS];
+        let lookahead = design[dix::LOOKAHEAD];
+        let decomp = design[dix::DECOMP];
+        let rthresh = design[dix::RTHRESH];
+        let prefetch = design[dix::PREFETCH];
+        let dyn_sched = design[dix::DYN] >= 0.5;
+
+        let hw = &self.hw;
+        let kmin = n.min(m);
+        let panels = (kmin / nb.max(1.0)).max(1.0);
+
+        // --- panel width: log-bell around the cache-derived optimum,
+        //     with vector-quantization and too-big-panel cliffs.
+        let nb_opt = self.nb_opt(n, m);
+        let r = (nb / nb_opt).ln();
+        let mut e_nb = (-r * r / (2.0 * 0.55f64 * 0.55)).exp().max(0.25);
+        if (nb as u64) % 32 != 0 {
+            e_nb *= if (nb as u64) % 8 == 0 { 0.95 } else { 0.90 };
+        }
+        if nb > kmin / 4.0 {
+            e_nb *= 0.55; // panel dominates the matrix: poor BLAS-3 ratio
+        }
+
+        // --- inner blocking: optimum tied to nb.
+        let ib_opt = (nb / 8.0).clamp(2.0, 32.0);
+        let ri = (ib.max(1.0) / ib_opt).ln();
+        let e_ib = (-ri * ri / (2.0 * 0.8f64 * 0.8)).exp().max(0.55);
+
+        // --- QR has a higher BLAS-3 fraction: flatter landscape. Applied
+        //     to the efficiency terms below and to the sync coefficient
+        //     (bigger trailing updates amortize synchronization better).
+        let flatten = match self.kind {
+            FactKind::Lu => 1.0,
+            FactKind::Qr => 0.55,
+        };
+        let soften = |e: f64| 1.0 - (1.0 - e) * flatten;
+
+        // --- thread scaling: Amdahl + sync overhead + SMT + NUMA cliff.
+        let smt_gain = match hw.mem {
+            MemoryKind::Hbm => 0.45, // KNM-style latency hiding pays off
+            MemoryKind::Ddr5 => 0.15,
+            MemoryKind::Ddr4 => 0.10,
+        };
+        let phys = threads.min(hw.cores as f64);
+        let extra = (threads - phys).max(0.0);
+        let tp = phys + smt_gain * extra * (phys / hw.cores as f64);
+        let par = 0.992;
+        let amdahl = 1.0 / ((1.0 - par) + par / tp);
+        // Synchronization at each panel step: worse with many threads and
+        // few panels (small matrices).
+        let sync = 1.0 + 0.015 * flatten * threads * (threads.max(2.0)).ln() / panels;
+        let mut speedup = amdahl / sync;
+        // NUMA: 1-D decompositions suffer past a domain boundary.
+        let domain = hw.cores as f64 / hw.numa_domains as f64;
+        if threads > domain && decomp != DECOMP_BLOCK2D {
+            speedup *= 0.82;
+        }
+
+        // --- decomposition vs aspect ratio (the blind-spot axis).
+        let aspect = n / m;
+        let e_decomp = match decomp {
+            d if d == DECOMP_COL1D => {
+                if aspect >= 1.8 {
+                    1.0
+                } else if aspect >= 0.8 {
+                    0.88
+                } else if aspect >= 0.4 {
+                    0.72
+                } else {
+                    0.30
+                }
+            }
+            d if d == DECOMP_ROW1D => {
+                if aspect <= 0.55 {
+                    1.0
+                } else if aspect <= 1.25 {
+                    0.88
+                } else if aspect <= 2.5 {
+                    0.72
+                } else {
+                    0.20 // severely starved: wrong-axis parallelism
+                }
+            }
+            _ => {
+                // block2d: solid everywhere if enough threads, best square.
+                if threads < 16.0 {
+                    0.75
+                } else if (0.5..=2.0).contains(&aspect) {
+                    0.98
+                } else {
+                    0.90
+                }
+            }
+        };
+
+        // --- lookahead pipelining.
+        let la_opt = (threads / 12.0).clamp(0.0, 8.0).round();
+        let e_la = 0.97f64.powf((lookahead - la_opt).abs());
+
+        // --- recursion threshold: mild bell around 4*ib.
+        let rt_opt = (4.0 * ib).clamp(16.0, 512.0);
+        let rr = (rthresh / rt_opt).ln();
+        let e_rt = (-rr * rr / (2.0 * 1.2f64 * 1.2)).exp().max(0.92);
+
+        // --- software prefetch: memory-technology dependent.
+        let e_pf = match (hw.mem, prefetch as u64) {
+            (MemoryKind::Hbm, 2) => 1.0,
+            (MemoryKind::Hbm, 1) => 0.97,
+            (MemoryKind::Hbm, _) => 0.94,
+            (_, 1) => 1.0,
+            (_, 2) => 0.97,
+            (_, _) => 0.96,
+        };
+
+        // --- dynamic scheduling: pays off at scale, overhead below it.
+        let e_dyn = if dyn_sched {
+            if threads >= 32.0 {
+                1.0
+            } else {
+                0.95
+            }
+        } else if threads >= 32.0 {
+            0.95
+        } else {
+            1.0
+        };
+
+        // --- memory-boundness for small problems: caps efficiency.
+        let mem_cap = match hw.mem {
+            MemoryKind::Hbm => 0.93,
+            MemoryKind::Ddr5 => 0.80,
+            MemoryKind::Ddr4 => 0.70,
+        };
+        let size_blend = ((kmin - 1000.0) / 2500.0).clamp(0.0, 1.0);
+        let e_mem = mem_cap + (1.0 - mem_cap) * size_blend;
+
+        let eff = soften(e_nb)
+            * soften(e_ib)
+            * soften(e_decomp)
+            * soften(e_la)
+            * soften(e_rt)
+            * soften(e_pf)
+            * soften(e_dyn)
+            * e_mem;
+
+        let per_core = hw.freq_ghz * hw.flops_per_cycle * 1e9;
+        let mut time = self.flops(n, m) / (per_core * speedup * eff.max(1e-3));
+
+        // --- ill-configuration ridges (high-variance outlier regions).
+        if nb < ib {
+            time *= 3.0 + 4.0 * self.hash01(input, design); // erratic
+        }
+        if threads > 24.0 * kmin / nb.max(1.0) {
+            time *= 2.5; // grossly more threads than panel work to feed
+        }
+        if lookahead >= panels {
+            time *= 2.0; // lookahead beyond the factorization depth
+        }
+
+        // Fixed dispatch overhead.
+        time + 2e-4
+    }
+
+    /// Cache-derived optimal panel width, weakly input-dependent.
+    pub fn nb_opt(&self, n: f64, m: f64) -> f64 {
+        let base = self.hw.ideal_panel();
+        let kmin = n.min(m);
+        (base * (kmin / 3000.0).powf(0.4)).clamp(16.0, 320.0)
+    }
+
+    /// Deterministic per-point pseudo-random in [0,1) (ill-config jitter).
+    fn hash01(&self, input: &[f64], design: &[f64]) -> f64 {
+        let mut h = self.seed ^ 0x243F_6A88_85A3_08D3;
+        for v in input.iter().chain(design) {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            h ^= h >> 29;
+        }
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+impl Kernel for Blas3Sim {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn input_space(&self) -> &ParamSpace {
+        &self.input_space
+    }
+
+    fn design_space(&self) -> &ParamSpace {
+        &self.design_space
+    }
+
+    fn eval(&self, input: &[f64], design: &[f64]) -> f64 {
+        let t = self.time_model(input, design);
+        // Multiplicative log-normal noise; unique stream per call.
+        let call = self.counter.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.seed ^ call.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        for v in input.iter().chain(design) {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let mut rng = crate::util::rng::Rng::new(h);
+        t * rng.lognormal(self.noise_sigma)
+    }
+
+    fn eval_true(&self, input: &[f64], design: &[f64]) -> f64 {
+        self.time_model(input, design)
+    }
+
+    fn reference_design(&self, input: &[f64]) -> Option<Vec<f64>> {
+        Some(mkl_ref::reference_design(&self.hw, self.kind, input))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn lu_spr() -> Blas3Sim {
+        Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 7)
+    }
+
+    fn sane_design(sim: &Blas3Sim, n: f64, m: f64) -> Vec<f64> {
+        let nb = sim.nb_opt(n, m).round();
+        vec![nb, (nb / 8.0).round(), sim.hw.cores as f64, 2.0, DECOMP_BLOCK2D, 4.0 * (nb / 8.0).round(), 1.0, 1.0]
+    }
+
+    #[test]
+    fn design_space_is_huge() {
+        let sim = lu_spr();
+        let card = sim.design_space().cardinality().unwrap();
+        assert!(card > 1e10, "cardinality {card:.2e} should rival the paper's 4.6e13");
+    }
+
+    #[test]
+    fn time_positive_and_scales_with_size() {
+        let sim = lu_spr();
+        let d = sane_design(&sim, 2000.0, 2000.0);
+        let t_small = sim.eval_true(&[1000.0, 1000.0], &d);
+        let t_big = sim.eval_true(&[5000.0, 5000.0], &d);
+        assert!(t_small > 0.0);
+        assert!(t_big > 8.0 * t_small, "cubic flops must dominate");
+    }
+
+    #[test]
+    fn plausible_absolute_times() {
+        // dgetrf n=m=3000 on SPR at a good config: ~5-100 ms.
+        let sim = lu_spr();
+        let d = sane_design(&sim, 3000.0, 3000.0);
+        let t = sim.eval_true(&[3000.0, 3000.0], &d);
+        assert!((0.002..0.2).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn thread_scaling_has_interior_optimum_for_small_matrices() {
+        let sim = lu_spr();
+        let input = [1000.0, 1000.0];
+        let t_at = |threads: f64| {
+            let mut d = sane_design(&sim, 1000.0, 1000.0);
+            d[dix::THREADS] = threads;
+            sim.eval_true(&input, &d)
+        };
+        // Sync overhead must make max threads worse than a medium count.
+        let medium = t_at(24.0);
+        let maxed = t_at(128.0);
+        assert!(medium < maxed, "medium={medium} maxed={maxed}");
+        assert!(t_at(1.0) > medium, "serial must be slowest");
+    }
+
+    #[test]
+    fn panel_width_cliffs_exist() {
+        let sim = lu_spr();
+        let input = [4000.0, 4000.0];
+        let mut d = sane_design(&sim, 4000.0, 4000.0);
+        let nb_opt = sim.nb_opt(4000.0, 4000.0);
+        d[dix::NB] = (nb_opt / 32.0).round() * 32.0;
+        let good = sim.eval_true(&input, &d);
+        d[dix::NB] = 8.0;
+        let tiny = sim.eval_true(&input, &d);
+        d[dix::NB] = 512.0;
+        let huge = sim.eval_true(&input, &d);
+        assert!(tiny > 1.3 * good, "tiny nb must be slow");
+        assert!(huge > 1.2 * good, "huge nb must be slow");
+        // Vector quantization cliff: nb=96 vs nb=97.
+        d[dix::NB] = 96.0;
+        let aligned = sim.eval_true(&input, &d);
+        d[dix::NB] = 97.0;
+        let misaligned = sim.eval_true(&input, &d);
+        assert!(misaligned > aligned * 1.05);
+    }
+
+    #[test]
+    fn decomposition_matches_aspect_ratio() {
+        let sim = lu_spr();
+        let tall = [5000.0, 1200.0]; // n >> m
+        let mut d = sane_design(&sim, 5000.0, 1200.0);
+        d[dix::DECOMP] = DECOMP_COL1D;
+        let col = sim.eval_true(&tall, &d);
+        d[dix::DECOMP] = DECOMP_ROW1D;
+        let row = sim.eval_true(&tall, &d);
+        assert!(row > 2.0 * col, "wrong-axis 1d must be catastrophic: {row} vs {col}");
+    }
+
+    #[test]
+    fn ill_configs_are_penalized() {
+        let sim = lu_spr();
+        let input = [3000.0, 3000.0];
+        let mut d = sane_design(&sim, 3000.0, 3000.0);
+        let base = sim.eval_true(&input, &d);
+        // nb < ib
+        d[dix::NB] = 8.0;
+        d[dix::IB] = 64.0;
+        assert!(sim.eval_true(&input, &d) > 3.0 * base);
+        // lookahead beyond panel count
+        let mut d2 = sane_design(&sim, 3000.0, 3000.0);
+        d2[dix::NB] = 512.0;
+        d2[dix::LOOKAHEAD] = 8.0;
+        let deep = sim.eval_true(&input, &d2);
+        d2[dix::LOOKAHEAD] = 2.0;
+        assert!(deep > 1.5 * sim.eval_true(&input, &d2));
+    }
+
+    #[test]
+    fn noise_is_small_and_multiplicative() {
+        let sim = lu_spr();
+        let d = sane_design(&sim, 2000.0, 2000.0);
+        let input = [2000.0, 2000.0];
+        let truth = sim.eval_true(&input, &d);
+        let samples: Vec<f64> = (0..200).map(|_| sim.eval(&input, &d)).collect();
+        let mean = crate::util::stats::mean(&samples);
+        assert!((mean / truth - 1.0).abs() < 0.02, "mean {mean} vs {truth}");
+        let cv = crate::util::stats::coeff_variation(&samples);
+        assert!((0.005..0.06).contains(&cv), "cv={cv}");
+    }
+
+    /// Greedy coordinate descent on the noise-free model — a cheap stand-in
+    /// for what the GA+surrogate pipeline achieves (test calibration only).
+    pub(crate) fn greedy_opt(sim: &Blas3Sim, input: &[f64], start: &[f64]) -> (Vec<f64>, f64) {
+        let ds = sim.design_space().clone();
+        let mut cur = start.to_vec();
+        let mut best = sim.eval_true(input, &cur);
+        for _sweep in 0..4 {
+            for j in 0..ds.dim() {
+                let (lo, hi) = ds.params[j].bounds();
+                let candidates: Vec<f64> = (0..24)
+                    .map(|k| ds.params[j].snap(lo + (hi - lo) * k as f64 / 23.0))
+                    .collect();
+                for c in candidates {
+                    let mut d = cur.clone();
+                    d[j] = c;
+                    let t = sim.eval_true(input, &d);
+                    if t < best {
+                        best = t;
+                        cur = d;
+                    }
+                }
+            }
+        }
+        (cur, best)
+    }
+
+    #[test]
+    fn landscape_has_tuning_headroom_over_reference() {
+        // A competent optimizer must beat the expert reference (that is
+        // what Figs 8/10 show), but the reference must remain decent
+        // (< 2x off) outside the planted blind spot.
+        let sim = lu_spr();
+        let mut ratios = Vec::new();
+        for &(n, m) in &[(1500.0, 1500.0), (3000.0, 2000.0), (4500.0, 4500.0)] {
+            let input = [n, m];
+            let ref_d = sim.reference_design(&input).unwrap();
+            let t_ref = sim.eval_true(&input, &ref_d);
+            let (_, best) = greedy_opt(&sim, &input, &ref_d);
+            let ratio = t_ref / best;
+            ratios.push(ratio);
+            assert!(ratio < 2.0, "reference too weak at ({n},{m}): {ratio}");
+            assert!(ratio >= 1.0);
+        }
+        let g = crate::util::stats::geomean(&ratios);
+        assert!(
+            (1.08..1.8).contains(&g),
+            "LU tuning headroom geomean {g} outside the paper-like regime"
+        );
+        let _ = Rng::new(0); // keep the import used
+    }
+
+    #[test]
+    fn qr_landscape_is_flatter_than_lu() {
+        let lu = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 7);
+        let qr = Blas3Sim::new(FactKind::Qr, HardwareProfile::spr(), 7);
+        let input = [3000.0, 3000.0];
+        let good = sane_design(&lu, 3000.0, 3000.0);
+        let mut bad = good.clone();
+        bad[dix::NB] = 16.0;
+        bad[dix::DECOMP] = DECOMP_ROW1D;
+        let lu_pen = lu.eval_true(&input, &bad) / lu.eval_true(&input, &good);
+        let qr_pen = qr.eval_true(&input, &bad) / qr.eval_true(&input, &good);
+        assert!(qr_pen < lu_pen, "QR must punish bad configs less: {qr_pen} vs {lu_pen}");
+    }
+}

@@ -1,0 +1,44 @@
+//! The Intel MKL `dgetrf` (LU factorization) simulator — the paper's main
+//! evaluation kernel (§5.0.2): inputs n,m ∈ [1000,5000], eight internal
+//! design parameters, single objective (execution time).
+
+use crate::kernels::blas3sim::{Blas3Sim, FactKind};
+use crate::kernels::hardware::HardwareProfile;
+
+/// Build the dgetrf simulator for a hardware profile.
+pub fn dgetrf(hw: HardwareProfile, seed: u64) -> Blas3Sim {
+    Blas3Sim::new(FactKind::Lu, hw, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn spaces_match_paper_spec() {
+        let k = dgetrf(HardwareProfile::spr(), 0);
+        assert_eq!(k.input_space().dim(), 2);
+        assert_eq!(k.design_space().dim(), 8);
+        let names = k.input_space().names().join(",");
+        assert_eq!(names, "n,m");
+        let (lo, hi) = k.input_space().params[0].bounds();
+        assert_eq!((lo, hi), (1000.0, 5000.0));
+    }
+
+    #[test]
+    fn different_architectures_different_landscapes() {
+        // §5.3: "the resulting design configurations and speedup are not
+        // the same for the two architectures".
+        let knm = dgetrf(HardwareProfile::knm(), 0);
+        let spr = dgetrf(HardwareProfile::spr(), 0);
+        let input = [3000.0, 3000.0];
+        let d_knm = knm.reference_design(&input).unwrap();
+        let d_spr = spr.reference_design(&input).unwrap();
+        assert_ne!(d_knm, d_spr);
+        // And the same config performs differently.
+        let t1 = knm.eval_true(&input, &d_spr);
+        let t2 = spr.eval_true(&input, &d_spr);
+        assert!((t1 / t2 - 1.0).abs() > 0.2);
+    }
+}

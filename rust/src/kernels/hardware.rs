@@ -1,0 +1,136 @@
+//! Hardware profiles (paper Fig 5): the two evaluation machines, encoded
+//! as parameters of the analytical simulators. Different profiles produce
+//! different objective landscapes, which is what the paper's
+//! cross-architecture experiments (§5.3) actually exercise.
+
+/// Memory technology (affects bandwidth-bound efficiency terms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryKind {
+    Hbm,
+    Ddr5,
+    Ddr4,
+}
+
+/// One evaluation machine.
+#[derive(Clone, Debug)]
+pub struct HardwareProfile {
+    pub name: &'static str,
+    pub cores: usize,
+    pub smt: usize,
+    pub freq_ghz: f64,
+    pub l1_kb: f64,
+    pub l2_mb: f64,
+    /// None = no L3 (KNM).
+    pub l3_mb: Option<f64>,
+    pub mem: MemoryKind,
+    /// Peak DP flops per cycle per core (vector width × FMA ports).
+    pub flops_per_cycle: f64,
+    /// NUMA domains (thread-scaling cliff position).
+    pub numa_domains: usize,
+}
+
+impl HardwareProfile {
+    /// Intel Knights Mill: 72 cores / 288 threads, 1.5 GHz, 32 KB L1,
+    /// 36 MB L2 (shared tile L2), no L3, 16 GB HBM (Fig 5).
+    pub fn knm() -> Self {
+        HardwareProfile {
+            name: "KNM",
+            cores: 72,
+            smt: 4,
+            freq_ghz: 1.5,
+            l1_kb: 32.0,
+            l2_mb: 36.0,
+            l3_mb: None,
+            mem: MemoryKind::Hbm,
+            flops_per_cycle: 16.0, // AVX-512, dual VPU
+            numa_domains: 4,       // SNC-4 style quadrants
+        }
+    }
+
+    /// Intel Sapphire Rapids (Xeon Gold 6438M): 64 cores / 128 threads,
+    /// 2.2 GHz, 80 KB L1, 2 MB L2/core, 60 MB L3, DDR5 (Fig 5).
+    pub fn spr() -> Self {
+        HardwareProfile {
+            name: "SPR",
+            cores: 64,
+            smt: 2,
+            freq_ghz: 2.2,
+            l1_kb: 80.0,
+            l2_mb: 2.0,
+            l3_mb: Some(60.0),
+            mem: MemoryKind::Ddr5,
+            flops_per_cycle: 32.0, // AVX-512, 2 FMA
+            numa_domains: 2,
+        }
+    }
+
+    /// Cascade Lake (used once in §5.3.1 to confirm the blind spot).
+    pub fn clx() -> Self {
+        HardwareProfile {
+            name: "CLX",
+            cores: 28,
+            smt: 2,
+            freq_ghz: 2.5,
+            l1_kb: 32.0,
+            l2_mb: 1.0,
+            l3_mb: Some(38.5),
+            mem: MemoryKind::Ddr4,
+            flops_per_cycle: 32.0,
+            numa_domains: 2,
+        }
+    }
+
+    /// Max hardware threads.
+    pub fn max_threads(&self) -> usize {
+        self.cores * self.smt
+    }
+
+    /// Peak DP GFLOP/s of the whole socket.
+    pub fn peak_gflops(&self) -> f64 {
+        self.cores as f64 * self.freq_ghz * self.flops_per_cycle
+    }
+
+    /// Cache-derived "ideal" panel width for blocked BLAS-3: the largest
+    /// nb whose working set (~3 panels of nb x nb doubles) fits the
+    /// per-core L2 slice. This is the quantity MKL's hand tuning encodes
+    /// and our expert reference approximates.
+    pub fn ideal_panel(&self) -> f64 {
+        let l2_bytes_per_core = self.l2_mb * 1e6 / if self.l3_mb.is_some() { 1.0 } else { self.cores as f64 / 2.0 };
+        (l2_bytes_per_core / (3.0 * 8.0)).sqrt().clamp(16.0, 320.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_fig5() {
+        let knm = HardwareProfile::knm();
+        assert_eq!(knm.cores, 72);
+        assert_eq!(knm.max_threads(), 288);
+        assert_eq!(knm.l3_mb, None);
+        assert_eq!(knm.mem, MemoryKind::Hbm);
+
+        let spr = HardwareProfile::spr();
+        assert_eq!(spr.cores, 64);
+        assert_eq!(spr.max_threads(), 128);
+        assert_eq!(spr.mem, MemoryKind::Ddr5);
+        assert!((spr.freq_ghz - 2.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peaks_are_plausible() {
+        // SPR socket peak ~4.5 TF DP; KNM ~1.7 TF DP.
+        assert!((4000.0..5000.0).contains(&HardwareProfile::spr().peak_gflops()));
+        assert!((1500.0..2000.0).contains(&HardwareProfile::knm().peak_gflops()));
+    }
+
+    #[test]
+    fn ideal_panels_differ_across_machines() {
+        let a = HardwareProfile::knm().ideal_panel();
+        let b = HardwareProfile::spr().ideal_panel();
+        assert!(a > 0.0 && b > 0.0);
+        assert_ne!(a.round(), b.round(), "profiles must induce different optima");
+    }
+}

@@ -1,0 +1,156 @@
+//! The "expert hand-tuning" reference: what the closed-source MKL decision
+//! logic would pick for a given input (DESIGN.md §1).
+//!
+//! The heuristic is deliberately *good but imperfect*, the way real expert
+//! tuning is:
+//!
+//! * `nb` comes from a small discrete table (experts ship lookup tables,
+//!   not continuous formulas), so it misses the cache-derived optimum by
+//!   up to a table step;
+//! * `threads` is always "all physical cores" — near-optimal for large
+//!   matrices, measurably wasteful for small ones (sync overhead) and
+//!   leaves SMT gains on the table on KNM;
+//! * lookahead is a fixed constant;
+//! * on KNM (and CLX) the decomposition rule uses a **stale absolute
+//!   threshold** (`m <= 2500 -> row-1d`) instead of the aspect ratio —
+//!   the planted blind spot of Fig 9: for m ∈ [1000,2500] with n > 4000
+//!   the aspect ratio exceeds 2.5 and row-1d starves, while SPR got the
+//!   corrected aspect-based rule (the paper observed exactly this: blind
+//!   spot on KNM and CLX, absent on SPR).
+//!
+//! MLKAPS never sees any of this: it is a black box that only returns a
+//! baseline configuration to compare against.
+
+use crate::kernels::blas3sim::{dix, FactKind, DECOMP_BLOCK2D, DECOMP_COL1D, DECOMP_ROW1D};
+use crate::kernels::hardware::HardwareProfile;
+
+/// Discrete panel-width tables, LU coarser than QR (the paper notes the
+/// dgeqrf baseline is better tuned than dgetrf's).
+const NB_TABLE_LU: [f64; 4] = [32.0, 64.0, 128.0, 256.0];
+const NB_TABLE_QR: [f64; 7] = [32.0, 48.0, 64.0, 96.0, 128.0, 192.0, 256.0];
+
+/// The expert reference configuration for an input (value space).
+pub fn reference_design(hw: &HardwareProfile, kind: FactKind, input: &[f64]) -> Vec<f64> {
+    let (n, m) = (input[0], input[1]);
+    let kmin = n.min(m);
+
+    // Cache-informed target, then snapped to the shipped table.
+    let target = hw.ideal_panel() * (kmin / 3000.0).powf(0.25);
+    let table: &[f64] = match kind {
+        FactKind::Lu => &NB_TABLE_LU,
+        FactKind::Qr => &NB_TABLE_QR,
+    };
+    let nb = *table
+        .iter()
+        .min_by(|a, b| {
+            (a.ln() - target.ln())
+                .abs()
+                .partial_cmp(&(b.ln() - target.ln()).abs())
+                .unwrap()
+        })
+        .unwrap();
+
+    let ib = (nb / 8.0).clamp(4.0, 32.0).round();
+    let threads = hw.cores as f64; // always all physical cores
+    let lookahead = 0.0; // lookahead pipelining was never hand-tuned
+
+    // Decomposition rule. SPR ships the corrected aspect-ratio rule; KNM
+    // and CLX ship the stale absolute-threshold rule (the blind spot).
+    let aspect = n / m;
+    let stale_rule = matches!(hw.name, "KNM" | "CLX") && kind == FactKind::Lu;
+    let decomp = if stale_rule {
+        if m <= 2500.0 {
+            DECOMP_ROW1D // stale: "small m" == "small matrix" assumption
+        } else if aspect >= 1.8 {
+            DECOMP_COL1D
+        } else {
+            DECOMP_BLOCK2D
+        }
+    } else if aspect >= 1.8 {
+        DECOMP_COL1D
+    } else if aspect <= 0.55 {
+        DECOMP_ROW1D
+    } else {
+        DECOMP_BLOCK2D
+    };
+
+    let rthresh = 64.0; // one-size-fits-all recursion switch point
+    let prefetch = 1.0; // near-prefetch everywhere (DDR-era default)
+    let dyn_sched = 0.0; // legacy static scheduling
+
+    let mut d = vec![0.0; 8];
+    d[dix::NB] = nb;
+    d[dix::IB] = ib;
+    d[dix::THREADS] = threads;
+    d[dix::LOOKAHEAD] = lookahead;
+    d[dix::DECOMP] = decomp;
+    d[dix::RTHRESH] = rthresh;
+    d[dix::PREFETCH] = prefetch;
+    d[dix::DYN] = dyn_sched;
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::blas3sim::Blas3Sim;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn reference_is_valid_design_point() {
+        let sim = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 1);
+        for input in [[1000.0, 1000.0], [5000.0, 1000.0], [2500.0, 4900.0]] {
+            let d = sim.reference_design(&input).unwrap();
+            let snapped = sim.design_space().snap(&d);
+            assert_eq!(d, snapped, "reference must be in the design space");
+        }
+    }
+
+    #[test]
+    fn blind_spot_on_knm_not_on_spr() {
+        // In the blind-spot region (m <= 2500, n > 4000) the KNM reference
+        // picks row-1d (stale rule) while SPR picks the aspect-correct
+        // col-1d.
+        let input = [4500.0, 1600.0]; // the paper's Fig 9(c) point
+        let knm = reference_design(&HardwareProfile::knm(), FactKind::Lu, &input);
+        let spr = reference_design(&HardwareProfile::spr(), FactKind::Lu, &input);
+        assert_eq!(knm[dix::DECOMP], DECOMP_ROW1D);
+        assert_eq!(spr[dix::DECOMP], DECOMP_COL1D);
+        // CLX replicates the blind spot (paper: "replicated on Cascade Lake").
+        let clx = reference_design(&HardwareProfile::clx(), FactKind::Lu, &input);
+        assert_eq!(clx[dix::DECOMP], DECOMP_ROW1D);
+    }
+
+    #[test]
+    fn blind_spot_costs_a_lot_on_knm() {
+        let sim = Blas3Sim::new(FactKind::Lu, HardwareProfile::knm(), 2);
+        let input = [4500.0, 1600.0];
+        let ref_d = sim.reference_design(&input).unwrap();
+        let t_ref = sim.eval_true(&input, &ref_d);
+        // The aspect-correct configuration:
+        let mut good = ref_d.clone();
+        good[dix::DECOMP] = DECOMP_COL1D;
+        let t_good = sim.eval_true(&input, &good);
+        let ratio = t_ref / t_good;
+        assert!(ratio > 2.5, "blind spot must be expensive: ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn qr_reference_has_no_blind_spot() {
+        let input = [4500.0, 1600.0];
+        let knm = reference_design(&HardwareProfile::knm(), FactKind::Qr, &input);
+        assert_eq!(knm[dix::DECOMP], DECOMP_COL1D);
+    }
+
+    #[test]
+    fn qr_table_is_finer_than_lu() {
+        // Same machine, same input: QR's nb table should land closer to
+        // the cache-derived target (better baseline, per §5.4.1).
+        let hw = HardwareProfile::spr();
+        let input = [3000.0, 3000.0];
+        let target = hw.ideal_panel();
+        let lu = reference_design(&hw, FactKind::Lu, &input)[dix::NB];
+        let qr = reference_design(&hw, FactKind::Qr, &input)[dix::NB];
+        assert!((qr.ln() - target.ln()).abs() <= (lu.ln() - target.ln()).abs());
+    }
+}

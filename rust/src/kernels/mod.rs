@@ -1,0 +1,59 @@
+//! Tunable kernels: the black boxes MLKAPS optimizes.
+//!
+//! The paper evaluates on Intel MKL `dgetrf`/`dgeqrf` prototype binaries
+//! and ScaLAPACK `pdgeqrf` — all gated on hardware/software we do not have
+//! (DESIGN.md §1). The substitutes:
+//!
+//! * [`dgetrf_sim`] / [`dgeqrf_sim`] — analytical performance simulators
+//!   over the same input space (m,n ∈ [1000,5000]) and an 8-parameter
+//!   design space, with cache cliffs, thread-scaling, ill-configuration
+//!   ridges and measurement noise (see [`blas3sim`] for the shared model).
+//! * [`mkl_ref`] — the "hand-tuned expert reference" decision heuristic,
+//!   near-optimal in most regions with a deliberate blind spot on KNM
+//!   (reproducing Fig 9's finding).
+//! * [`pdgeqrf_sim`] — distributed QR cost model for the GPTune
+//!   comparison, using the Table 1 lerp reformulation.
+//! * [`toy_sum`] — the illustrative matrix-sum kernel of Figs 1-2.
+//! * [`pallas_lu`] — the REAL kernel: Pallas blocked LU executed and timed
+//!   through the PJRT runtime (no simulation on this path).
+
+pub mod blas3sim;
+pub mod dgeqrf_sim;
+pub mod dgetrf_sim;
+pub mod hardware;
+pub mod mkl_ref;
+pub mod pallas_lu;
+pub mod pdgeqrf_sim;
+pub mod toy_sum;
+
+use crate::config::space::ParamSpace;
+
+/// A tunable kernel: the black-box MLKAPS samples and optimizes.
+///
+/// All coordinates are **value space**. The objective is execution time in
+/// seconds (lower is better) — the paper's single-objective setting.
+pub trait Kernel: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Task-description parameters (not tunable).
+    fn input_space(&self) -> &ParamSpace;
+
+    /// Tunable design parameters.
+    fn design_space(&self) -> &ParamSpace;
+
+    /// Measure the objective once (includes measurement noise where the
+    /// kernel is stochastic).
+    fn eval(&self, input: &[f64], design: &[f64]) -> f64;
+
+    /// Noise-free objective if the kernel supports it (simulators do);
+    /// used only by validation metrics, never by the tuning pipeline.
+    fn eval_true(&self, input: &[f64], design: &[f64]) -> f64 {
+        self.eval(input, design)
+    }
+
+    /// The expert / hand-tuned reference configuration for an input
+    /// (e.g. what MKL's internal decision logic would pick), if any.
+    fn reference_design(&self, _input: &[f64]) -> Option<Vec<f64>> {
+        None
+    }
+}

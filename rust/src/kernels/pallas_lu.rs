@@ -1,0 +1,160 @@
+//! The REAL tunable kernel: the Pallas blocked-LU factorization compiled
+//! AOT by `python/compile/aot.py` and executed + timed through the PJRT
+//! runtime. Nothing on this path is simulated — `eval` returns genuine
+//! wall-clock medians of the compiled artifact, so MLKAPS tunes a real
+//! kernel end-to-end (DESIGN.md: the e2e validation workload).
+//!
+//! Input parameter: matrix size `n` (one of the AOT-compiled sizes).
+//! Design parameters: panel `block` and trailing-update `tile`, both
+//! categorical over the values present in the artifact manifest. Requested
+//! combinations with no exact artifact snap to the nearest available
+//! variant for that size (documented; blocked BLAS libraries do the same
+//! thing with their internal block tables).
+
+use std::sync::Arc;
+
+use crate::config::space::{ParamDef, ParamSpace};
+use crate::kernels::Kernel;
+use crate::runtime::LuRuntime;
+
+/// MLKAPS view of the Pallas blocked-LU kernel.
+pub struct PallasLu {
+    rt: Arc<LuRuntime>,
+    input_space: ParamSpace,
+    design_space: ParamSpace,
+    sizes: Vec<usize>,
+    blocks: Vec<usize>,
+    tiles: Vec<usize>,
+    /// Wall-clock repetitions per measurement.
+    pub reps: usize,
+}
+
+impl PallasLu {
+    /// Build from a loaded runtime; spaces are derived from the manifest.
+    pub fn new(rt: Arc<LuRuntime>) -> Self {
+        let sizes = rt.manifest.sizes();
+        let mut blocks: Vec<usize> = rt.manifest.variants.iter().map(|v| v.block).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        let mut tiles: Vec<usize> = rt.manifest.variants.iter().map(|v| v.tile).collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+
+        let names = |xs: &[usize]| xs.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        let size_names = names(&sizes);
+        let block_names = names(&blocks);
+        let tile_names = names(&tiles);
+        let input_space = ParamSpace::new(vec![ParamDef::categorical(
+            "n",
+            &size_names.iter().map(String::as_str).collect::<Vec<_>>(),
+        )]);
+        let design_space = ParamSpace::new(vec![
+            ParamDef::categorical(
+                "block",
+                &block_names.iter().map(String::as_str).collect::<Vec<_>>(),
+            ),
+            ParamDef::categorical(
+                "tile",
+                &tile_names.iter().map(String::as_str).collect::<Vec<_>>(),
+            ),
+        ]);
+        PallasLu { rt, input_space, design_space, sizes, blocks, tiles, reps: 3 }
+    }
+
+    /// Decode (input, design) category indices to the nearest available
+    /// artifact variant (n, block, tile).
+    pub fn variant_for(&self, input: &[f64], design: &[f64]) -> (usize, usize, usize) {
+        let n = self.sizes[(input[0] as usize).min(self.sizes.len() - 1)];
+        let want_b = self.blocks[(design[0] as usize).min(self.blocks.len() - 1)];
+        let want_t = self.tiles[(design[1] as usize).min(self.tiles.len() - 1)];
+        // Snap to the nearest (log-distance) available variant for n.
+        let vs = self.rt.manifest.for_size(n);
+        let dist = |v: &crate::runtime::Variant| {
+            let db = (v.block as f64 / want_b as f64).ln().abs();
+            let dt = (v.tile as f64 / want_t as f64).ln().abs();
+            db + dt
+        };
+        let best = vs
+            .iter()
+            .min_by(|a, b| dist(a).partial_cmp(&dist(b)).unwrap())
+            .expect("manifest has variants for every size");
+        (n, best.block, best.tile)
+    }
+}
+
+impl Kernel for PallasLu {
+    fn name(&self) -> &str {
+        "pallas-lu(PJRT)"
+    }
+    fn input_space(&self) -> &ParamSpace {
+        &self.input_space
+    }
+    fn design_space(&self) -> &ParamSpace {
+        &self.design_space
+    }
+
+    /// Real wall-clock measurement (median of `reps` runs).
+    fn eval(&self, input: &[f64], design: &[f64]) -> f64 {
+        let (n, b, t) = self.variant_for(input, design);
+        self.rt
+            .time_lu(n, b, t, self.reps)
+            .unwrap_or(f64::INFINITY) // failed variant = unusable config
+    }
+
+    /// Baseline: the mid-table block (what a library would ship untuned).
+    fn reference_design(&self, _input: &[f64]) -> Option<Vec<f64>> {
+        let bi = self.blocks.len() / 2;
+        let ti = self.tiles.len() / 2;
+        Some(vec![bi as f64, ti as f64])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Arc<LuRuntime>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Arc::new(LuRuntime::new(dir).unwrap()))
+    }
+
+    #[test]
+    fn spaces_derive_from_manifest() {
+        let Some(rt) = runtime() else { return };
+        let k = PallasLu::new(rt);
+        assert_eq!(k.input_space().dim(), 1);
+        assert_eq!(k.design_space().dim(), 2);
+        assert!(k.sizes.contains(&64));
+    }
+
+    #[test]
+    fn variant_snapping_always_resolves() {
+        let Some(rt) = runtime() else { return };
+        let k = PallasLu::new(rt.clone());
+        for si in 0..k.sizes.len() {
+            for bi in 0..k.blocks.len() {
+                for ti in 0..k.tiles.len() {
+                    let (n, b, t) = k.variant_for(&[si as f64], &[bi as f64, ti as f64]);
+                    assert!(
+                        rt.manifest.find(n, b, t).is_some(),
+                        "snapped to missing variant ({n},{b},{t})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn real_measurement_is_positive() {
+        let Some(rt) = runtime() else { return };
+        let mut k = PallasLu::new(rt);
+        k.reps = 1;
+        let t = k.eval(&[0.0], &[0.0, 0.0]); // smallest n, smallest block
+        assert!(t.is_finite() && t > 0.0, "t={t}");
+    }
+}

@@ -1,0 +1,243 @@
+//! ScaLAPACK `pdgeqrf` (distributed QR) simulator — the GPTune comparison
+//! workload (§5.4.3, Fig 13) including the paper's Table 1 reformulation
+//! of the constrained parameters into free [0,1] lerp variables.
+//!
+//! The paper ran this on up to 64 Cori KNM nodes; we model a 32-node KNM
+//! cluster analytically. The paper observes "the objective in this
+//! experiment is almost entirely dominated by the parameter p", which the
+//! cost model reproduces: the p×q process-grid shape drives both load
+//! balance and the panel-broadcast critical path, while mb/nb contribute
+//! second-order block-efficiency terms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::space::{lerp, ParamDef, ParamSpace};
+use crate::kernels::Kernel;
+use crate::util::rng::Rng;
+
+/// Cluster constants (fixed, like the paper's testbed).
+pub const NODES: f64 = 32.0;
+pub const MAX_PER_NODE: f64 = 30.0;
+
+/// The reformulated design vector: [p, alpha(mb), beta(npernode), gamma(nb)].
+pub mod dix {
+    pub const P: usize = 0;
+    pub const ALPHA: usize = 1;
+    pub const BETA: usize = 2;
+    pub const GAMMA: usize = 3;
+}
+
+/// Concrete ScaLAPACK parameters derived from the reformulated vector —
+/// the Table 1 mapping, verbatim.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Concrete {
+    pub p: f64,
+    pub mb: f64,
+    pub npernode: f64,
+    pub nb: f64,
+    /// q = total processes / p (process-grid columns).
+    pub q: f64,
+}
+
+/// Apply the Table 1 reformulation.
+pub fn concretize(input: &[f64], design: &[f64]) -> Concrete {
+    let m = input[0];
+    let p = design[dix::P].max(1.0).round();
+    // mb = lerp(alpha, 1, min(m / 8p, 16))
+    let mb = lerp(design[dix::ALPHA], 1.0, (m / (8.0 * p)).min(16.0)).round().max(1.0);
+    // npernode = p + lerp(beta, 0, 30 - p)
+    let npernode = (p + lerp(design[dix::BETA], 0.0, (MAX_PER_NODE - p).max(0.0)))
+        .round()
+        .clamp(1.0, MAX_PER_NODE);
+    let np = npernode * NODES; // total processes (constant per config)
+    // nb = lerp(gamma, 1, min(np / (8 npernode), 16)) = lerp(gamma, 1, min(nodes/8, 16))
+    let nb = lerp(design[dix::GAMMA], 1.0, (np / (8.0 * npernode)).min(16.0))
+        .round()
+        .max(1.0);
+    let q = (np / p).max(1.0);
+    Concrete { p, mb, npernode, nb, q }
+}
+
+/// The distributed-QR cost model.
+pub struct PdgeqrfSim {
+    input_space: ParamSpace,
+    design_space: ParamSpace,
+    pub noise_sigma: f64,
+    counter: AtomicU64,
+    seed: u64,
+}
+
+impl PdgeqrfSim {
+    pub fn new(seed: u64) -> Self {
+        PdgeqrfSim {
+            input_space: ParamSpace::new(vec![
+                ParamDef::int("m", 3072, 8072),
+                ParamDef::int("n", 3072, 8072),
+            ]),
+            design_space: ParamSpace::new(vec![
+                ParamDef::int("p", 1, 30),
+                ParamDef::float("alpha", 0.0, 1.0),
+                ParamDef::float("beta", 0.0, 1.0),
+                ParamDef::float("gamma", 0.0, 1.0),
+            ]),
+            noise_sigma: 0.03,
+            counter: AtomicU64::new(0),
+            seed,
+        }
+    }
+
+    /// Noise-free cost model (seconds).
+    pub fn time_model(&self, input: &[f64], design: &[f64]) -> f64 {
+        let (m, n) = (input[0], input[1]);
+        let c = concretize(input, design);
+        let nproc = c.npernode * NODES; // total ranks (comm terms)
+
+        // QR flops (m >= n assumed symmetric enough in our range).
+        let k = n.min(m);
+        let flops = 2.0 * m * n * k - (m + n) * k * k + 2.0 * k * k * k / 3.0;
+
+        // Per-node sustained rate saturates with ranks per node (memory
+        // bandwidth contention on KNM): npernode beyond ~8 adds little.
+        // This keeps beta second-order, as the paper observed.
+        let per_proc = 6.5e8; // sustained GF/s per rank at low occupancy
+        let node_rate = per_proc * c.npernode / (1.0 + 0.12 * c.npernode);
+        let cluster_rate = node_rate * NODES;
+
+        // Grid-shape efficiency: dominated by p. Optimal grids for QR are
+        // tall-ish (p <= q); skew in either direction costs load balance
+        // and lengthens the panel critical path.
+        let skew = (c.p / c.q).max(c.q / c.p);
+        let e_grid = 1.0 / (1.0 + 0.45 * (skew - 1.0));
+        // Tall beats wide at same skew (column-panel broadcasts):
+        let e_tall = if c.p <= c.q { 1.0 } else { 0.75 };
+
+        // Block sizes: mild bells (second-order, as the paper observed).
+        let bell = |v: f64, opt: f64, floor: f64| {
+            let r = (v.max(1.0) / opt).ln();
+            (-r * r / (2.0 * 0.9f64 * 0.9)).exp().max(floor)
+        };
+        let e_mb = bell(c.mb, 8.0, 0.85);
+        let e_nb = bell(c.nb, 4.0, 0.90);
+
+        let compute = flops / (cluster_rate * e_grid * e_tall * e_mb * e_nb);
+
+
+        // Communication: panel broadcasts along the critical path.
+        let panels = k / (c.mb * 1.0).max(1.0);
+        let latency = 25e-6; // inter-node MPI latency
+        let comm = panels * (c.p.log2().max(1.0)) * latency * 8.0
+            + (m * n * 8.0) / (nproc.sqrt() * 8e9); // volume / bisection bw
+
+        compute + comm + 0.05 // launch overhead
+    }
+}
+
+impl Kernel for PdgeqrfSim {
+    fn name(&self) -> &str {
+        "pdgeqrf-sim(KNM-cluster)"
+    }
+    fn input_space(&self) -> &ParamSpace {
+        &self.input_space
+    }
+    fn design_space(&self) -> &ParamSpace {
+        &self.design_space
+    }
+    fn eval(&self, input: &[f64], design: &[f64]) -> f64 {
+        let t = self.time_model(input, design);
+        let call = self.counter.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.seed ^ call.wrapping_mul(0xA076_1D64_78BD_642F);
+        for v in input.iter().chain(design) {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        t * Rng::new(h).lognormal(self.noise_sigma)
+    }
+    fn eval_true(&self, input: &[f64], design: &[f64]) -> f64 {
+        self.time_model(input, design)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn reformulation_respects_constraints() {
+        // For any free vector, the concrete parameters satisfy the
+        // original inequalities: 1 <= mb <= m/(8p), p <= npernode <= 30.
+        let sim = PdgeqrfSim::new(0);
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let iu: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+            let du: Vec<f64> = (0..4).map(|_| rng.f64()).collect();
+            let input = sim.input_space().decode(&iu);
+            let design = sim.design_space().decode(&du);
+            let c = concretize(&input, &design);
+            assert!(c.mb >= 1.0);
+            assert!(c.mb <= (input[0] / (8.0 * c.p)).max(1.0) + 0.5, "mb bound: {c:?}");
+            assert!(c.npernode >= c.p, "npernode >= p: {c:?}");
+            assert!(c.npernode <= MAX_PER_NODE);
+            assert!(c.nb >= 1.0 && c.nb <= 16.0);
+        }
+    }
+
+    #[test]
+    fn table1_worked_example() {
+        // alpha = 0 -> mb = 1; alpha = 1 -> mb = min(m/8p, 16).
+        let input = [6400.0, 6400.0];
+        let lo = concretize(&input, &[10.0, 0.0, 0.0, 0.0]);
+        assert_eq!(lo.mb, 1.0);
+        let hi = concretize(&input, &[10.0, 1.0, 0.0, 0.0]);
+        assert_eq!(hi.mb, 16.0); // m/8p = 80 > 16 -> capped at 16
+        // beta = 0 -> npernode = p; beta = 1 -> 30.
+        assert_eq!(lo.npernode, 10.0);
+        let full = concretize(&input, &[10.0, 0.0, 1.0, 0.0]);
+        assert_eq!(full.npernode, 30.0);
+    }
+
+    #[test]
+    fn objective_dominated_by_p() {
+        // Variance of time across p (others fixed) must dwarf the variance
+        // across alpha/beta/gamma (p fixed) — the paper's observation.
+        let sim = PdgeqrfSim::new(0);
+        let input = [5572.0, 5572.0];
+        let across_p: Vec<f64> = (1..=30)
+            .map(|p| sim.time_model(&input, &[p as f64, 0.5, 0.5, 0.5]))
+            .collect();
+        let mut rng = Rng::new(2);
+        let across_rest: Vec<f64> = (0..30)
+            .map(|_| {
+                sim.time_model(&input, &[8.0, rng.f64(), rng.f64(), rng.f64()])
+            })
+            .collect();
+        let cv_p = stats::coeff_variation(&across_p);
+        let cv_rest = stats::coeff_variation(&across_rest);
+        assert!(cv_p > 3.0 * cv_rest, "cv_p={cv_p:.3} cv_rest={cv_rest:.3}");
+    }
+
+    #[test]
+    fn optimum_lands_near_paper_mean() {
+        // Paper: both tools converge to ~2.09 s mean over their task set.
+        // Check the best-found time on a mid-size task is in that regime.
+        let sim = PdgeqrfSim::new(0);
+        let mut rng = Rng::new(3);
+        let ds = sim.design_space().clone();
+        let mut best = f64::INFINITY;
+        for _ in 0..4000 {
+            let u: Vec<f64> = (0..4).map(|_| rng.f64()).collect();
+            best = best.min(sim.time_model(&[5572.0, 5572.0], &ds.decode(&u)));
+        }
+        assert!((0.8..4.0).contains(&best), "optimum {best:.3}s out of regime");
+    }
+
+    #[test]
+    fn noise_and_true_eval_consistent() {
+        let sim = PdgeqrfSim::new(4);
+        let input = [4000.0, 4000.0];
+        let d = [8.0, 0.5, 0.5, 0.5];
+        let truth = sim.eval_true(&input, &d);
+        let mean = stats::mean(&(0..100).map(|_| sim.eval(&input, &d)).collect::<Vec<_>>());
+        assert!((mean / truth - 1.0).abs() < 0.03);
+    }
+}

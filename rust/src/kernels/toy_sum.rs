@@ -1,0 +1,117 @@
+//! The illustrative kernel of Figs 1-2: summing an n×m matrix with an
+//! OpenMP parallel-for whose thread count T is the single design
+//! parameter. Memory-bound: speedup saturates at the bandwidth ceiling,
+//! and thread-spawn overhead makes small matrices prefer few threads —
+//! exactly the input-dependent trade-off the quickstart example tunes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::space::{ParamDef, ParamSpace};
+use crate::kernels::Kernel;
+use crate::util::rng::Rng;
+
+/// The toy matrix-sum kernel.
+pub struct ToySum {
+    input_space: ParamSpace,
+    design_space: ParamSpace,
+    pub noise_sigma: f64,
+    counter: AtomicU64,
+    seed: u64,
+}
+
+impl ToySum {
+    pub fn new(seed: u64) -> Self {
+        ToySum {
+            input_space: ParamSpace::new(vec![
+                ParamDef::int("n", 64, 8192),
+                ParamDef::int("m", 64, 8192),
+            ]),
+            design_space: ParamSpace::new(vec![ParamDef::int("T", 1, 64)]),
+            noise_sigma: 0.03,
+            counter: AtomicU64::new(0),
+            seed,
+        }
+    }
+
+    /// Noise-free model: elems / rate(T) + spawn overhead.
+    pub fn time_model(&self, input: &[f64], design: &[f64]) -> f64 {
+        let elems = input[0] * input[1];
+        let t = design[0].max(1.0);
+        // Single-thread reduction rate and the bandwidth ceiling.
+        let per_thread = 1.5e9; // elems/s
+        let bw_ceiling = 12.0 * per_thread; // ~12 threads saturate memory
+        let rate = (per_thread * t).min(bw_ceiling) / (1.0 + 0.02 * (t - 1.0));
+        let spawn = 4e-6 * t; // omp fork/join cost
+        elems / rate + spawn + 1e-6
+    }
+
+    /// Analytic optimal thread count for an input (for tests/examples).
+    pub fn optimal_threads(&self, input: &[f64]) -> f64 {
+        let mut best = (f64::INFINITY, 1.0);
+        for t in 1..=64 {
+            let v = self.time_model(input, &[t as f64]);
+            if v < best.0 {
+                best = (v, t as f64);
+            }
+        }
+        best.1
+    }
+}
+
+impl Kernel for ToySum {
+    fn name(&self) -> &str {
+        "toy-sum"
+    }
+    fn input_space(&self) -> &ParamSpace {
+        &self.input_space
+    }
+    fn design_space(&self) -> &ParamSpace {
+        &self.design_space
+    }
+    fn eval(&self, input: &[f64], design: &[f64]) -> f64 {
+        let t = self.time_model(input, design);
+        let call = self.counter.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.seed ^ call.wrapping_mul(0x2545_F491_4F6C_DD1D);
+        for v in input.iter().chain(design) {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        t * Rng::new(h).lognormal(self.noise_sigma)
+    }
+    fn eval_true(&self, input: &[f64], design: &[f64]) -> f64 {
+        self.time_model(input, design)
+    }
+    fn reference_design(&self, _input: &[f64]) -> Option<Vec<f64>> {
+        Some(vec![16.0]) // the naive "one size fits all" choice
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_matrices_prefer_few_threads() {
+        let k = ToySum::new(0);
+        assert!(k.optimal_threads(&[64.0, 64.0]) <= 4.0);
+        assert!(k.optimal_threads(&[8192.0, 8192.0]) >= 8.0);
+    }
+
+    #[test]
+    fn optimum_is_monotone_in_size() {
+        let k = ToySum::new(0);
+        let t1 = k.optimal_threads(&[128.0, 128.0]);
+        let t2 = k.optimal_threads(&[2048.0, 2048.0]);
+        let t3 = k.optimal_threads(&[8192.0, 8192.0]);
+        assert!(t1 <= t2 && t2 <= t3);
+    }
+
+    #[test]
+    fn reference_is_suboptimal_somewhere() {
+        let k = ToySum::new(0);
+        let input = [64.0, 64.0];
+        let t_ref = k.eval_true(&input, &k.reference_design(&input).unwrap());
+        let t_opt = k.eval_true(&input, &[k.optimal_threads(&input)]);
+        assert!(t_ref > 1.1 * t_opt, "toy must have tuning headroom");
+    }
+}

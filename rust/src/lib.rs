@@ -1,0 +1,48 @@
+//! # MLKAPS — Machine Learning and Adaptive Sampling for HPC Kernel Auto-tuning
+//!
+//! Reproduction of Jam et al., *MLKAPS: Machine Learning and Adaptive
+//! Sampling for HPC Kernel Auto-tuning* (2025), as a three-layer
+//! Rust + JAX + Pallas stack (AOT via xla/PJRT). See `DESIGN.md` for the
+//! system inventory and the per-experiment index.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — zero-dependency substrates (RNG, JSON, stats, thread pool,
+//!   memory telemetry) built in-tree because the build is fully offline.
+//! * [`linalg`] — dense linear algebra (Cholesky, triangular solves, Jacobi
+//!   eigendecomposition) backing the Gaussian-process and CMA-ES baselines.
+//! * [`config`] — parameter-space description (float/int/categorical/bool)
+//!   plus the constrained-parameter lerp reformulation of Table 1.
+//! * [`data`] — sample datasets exchanged between samplers and models.
+//! * [`surrogate`] — histogram-based gradient-boosted decision trees
+//!   (LightGBM-style), the paper's surrogate model.
+//! * [`sampling`] — Random, LHS, HVS/HVSr and the paper's GA-Adaptive.
+//! * [`optimizer`] — NSGA-II genetic algorithm + the optimization grid.
+//! * [`dtree`] — CART decision trees and C/Rust code generation.
+//! * [`kernels`] — the tunable-kernel abstraction: dgetrf/dgeqrf/pdgeqrf
+//!   analytical simulators (KNM/SPR hardware profiles, planted MKL blind
+//!   spot) and the *real* Pallas blocked-LU kernel timed via PJRT.
+//! * [`baselines`] — Optuna-like (TPE + CMA-ES) and GPTune-like (LMC
+//!   multitask Gaussian processes + TLA2) comparators.
+//! * [`pipeline`] — the MLKAPS workflow: sample → model → optimize → trees,
+//!   plus the expert-knowledge combiner.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`report`] — ASCII tables / CSV emission for the figure benches.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dtree;
+pub mod kernels;
+pub mod linalg;
+pub mod optimizer;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod surrogate;
+pub mod util;
+
+pub use config::space::{ParamDef, ParamKind, ParamSpace};
+pub use data::Dataset;

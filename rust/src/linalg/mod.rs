@@ -1,0 +1,347 @@
+//! Dense linear-algebra substrate: row-major f64 matrices with the factor
+//! and solve routines the Gaussian-process baseline (GPTune-like) and
+//! CMA-ES need — Cholesky, triangular solves, symmetric Jacobi
+//! eigendecomposition, and basic BLAS-1/3 helpers.
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Heap bytes held (for telemetry / Fig 14).
+    pub fn mem_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f64>()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Dense matmul (naive ikj loop with row reuse — fine at GP scales).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (c, &b) in crow.iter_mut().zip(orow) {
+                    *c += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| dot(&self.data[i * self.cols..(i + 1) * self.cols], v))
+            .collect()
+    }
+
+    /// In-place Cholesky factorization A = L L^T (lower). Errors if the
+    /// matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Result<Matrix, String> {
+        assert_eq!(self.rows, self.cols, "cholesky wants square");
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(format!(
+                            "not positive definite at pivot {i} (sum={sum:.3e})"
+                        ));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve L x = b with L lower-triangular.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in 0..n {
+            for j in 0..i {
+                x[i] -= self[(i, j)] * x[j];
+            }
+            x[i] /= self[(i, i)];
+        }
+        x
+    }
+
+    /// Solve L^T x = b with L lower-triangular (i.e. upper solve on L^T).
+    pub fn solve_lower_transpose(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            for j in (i + 1)..n {
+                x[i] -= self[(j, i)] * x[j];
+            }
+            x[i] /= self[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A x = b for symmetric positive definite A via Cholesky.
+    pub fn solve_spd(&self, b: &[f64]) -> Result<Vec<f64>, String> {
+        let l = self.cholesky()?;
+        Ok(l.solve_lower_transpose(&l.solve_lower(b)))
+    }
+
+    /// log-determinant of an SPD matrix from its Cholesky factor.
+    pub fn logdet_spd(&self) -> Result<f64, String> {
+        let l = self.cholesky()?;
+        Ok(2.0 * (0..self.rows).map(|i| l[(i, i)].ln()).sum::<f64>())
+    }
+
+    /// Symmetric Jacobi eigendecomposition: returns (eigenvalues,
+    /// eigenvectors as columns). Cyclic sweeps until off-diagonal norm
+    /// vanishes. O(n^3) per sweep — used by CMA-ES at n = dims (tiny).
+    pub fn eig_sym(&self) -> (Vec<f64>, Matrix) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut v = Matrix::eye(n);
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[(i, j)] * a[(i, j)];
+                }
+            }
+            if off.sqrt() < 1e-12 {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    if a[(p, q)].abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * a[(p, q)]);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[(k, p)];
+                        let vkq = v[(k, q)];
+                        v[(k, p)] = c * vkp - s * vkq;
+                        v[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        ((0..n).map(|i| a[(i, i)]).collect(), v)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.uniform(-1.0, 1.0));
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = random_spd(8, 1);
+        let c = a.matmul(&Matrix::eye(8));
+        for (x, y) in a.data.iter().zip(&c.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = random_spd(12, 2);
+        let l = a.cholesky().unwrap();
+        let llt = l.matmul(&l.transpose());
+        for (x, y) in a.data.iter().zip(&llt.data) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+        // strictly lower beyond diagonal must be zero in upper part
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn spd_solve() {
+        let a = random_spd(10, 3);
+        let mut rng = Rng::new(4);
+        let x_true: Vec<f64> = (0..10).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let b = a.matvec(&x_true);
+        let x = a.solve_spd(&b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let x = l.solve_lower(&[4.0, 11.0]);
+        assert!((x[0] - 2.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+        let y = l.solve_lower_transpose(&[7.0, 3.0]);
+        // L^T = [[2,1],[0,3]]; solve gives y1=1, y0=(7-1)/2=3
+        assert!((y[1] - 1.0).abs() < 1e-12 && (y[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logdet_matches_eigenvalues() {
+        let a = random_spd(6, 5);
+        let (eigs, _) = a.eig_sym();
+        let want: f64 = eigs.iter().map(|e| e.ln()).sum();
+        let got = a.logdet_spd().unwrap();
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn eig_sym_reconstructs() {
+        let a = random_spd(7, 6);
+        let (eigs, v) = a.eig_sym();
+        // A V = V diag(eigs)
+        for j in 0..7 {
+            let col: Vec<f64> = (0..7).map(|i| v[(i, j)]).collect();
+            let av = a.matvec(&col);
+            for i in 0..7 {
+                assert!((av[i] - eigs[j] * col[i]).abs() < 1e-7);
+            }
+        }
+        // eigenvalues of an SPD matrix are positive
+        assert!(eigs.iter().all(|&e| e > 0.0));
+    }
+
+    #[test]
+    fn blas1_helpers() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

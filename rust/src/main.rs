@@ -1,0 +1,4 @@
+//! MLKAPS command-line launcher.
+fn main() {
+    mlkaps::cli::main();
+}

@@ -1,0 +1,13 @@
+//! Optimization phase (§4.2): genetic algorithms over the surrogate.
+//!
+//! MLKAPS runs one GA instance per point of a regular grid over the input
+//! space, rating candidate design configurations on the surrogate model
+//! instead of the real kernel. [`nsga2`] implements the NSGA-II algorithm
+//! (Deb et al. 2002) the paper uses via pymoo; [`grid`] drives the
+//! per-grid-point optimization.
+
+pub mod grid;
+pub mod nsga2;
+
+pub use grid::{optimize_grid, GridOptResult};
+pub use nsga2::{Nsga2, Nsga2Params};

@@ -1,0 +1,381 @@
+//! NSGA-II (Deb, Pratap, Agarwal, Meyarivan 2002): elitist multi-objective
+//! genetic algorithm with fast non-dominated sorting, crowding-distance
+//! diversity preservation, binary tournament selection, SBX crossover and
+//! polynomial mutation.
+//!
+//! Genes live in the **unit cube** [0,1]^d; callers decode to value space
+//! inside their fitness closure. Single-objective problems work unchanged
+//! (every front is a singleton rank ordering), matching the paper's use of
+//! pymoo's NSGA-II for both its sampling and optimization phases.
+
+use crate::util::rng::Rng;
+
+/// GA hyperparameters.
+#[derive(Clone, Debug)]
+pub struct Nsga2Params {
+    pub pop_size: usize,
+    pub generations: usize,
+    /// SBX crossover distribution index (larger = children closer to parents).
+    pub eta_crossover: f64,
+    /// Polynomial mutation distribution index.
+    pub eta_mutation: f64,
+    /// Crossover probability.
+    pub p_crossover: f64,
+    /// Per-gene mutation probability (defaults to 1/d at run time if None).
+    pub p_mutation: Option<f64>,
+}
+
+impl Default for Nsga2Params {
+    fn default() -> Self {
+        Nsga2Params {
+            pop_size: 32,
+            generations: 25,
+            eta_crossover: 15.0,
+            eta_mutation: 20.0,
+            p_crossover: 0.9,
+            p_mutation: None,
+        }
+    }
+}
+
+/// One evaluated individual.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genes: Vec<f64>,
+    pub objectives: Vec<f64>,
+    rank: usize,
+    crowding: f64,
+}
+
+/// The NSGA-II optimizer.
+pub struct Nsga2 {
+    pub params: Nsga2Params,
+}
+
+impl Nsga2 {
+    pub fn new(params: Nsga2Params) -> Self {
+        Nsga2 { params }
+    }
+
+    /// Minimize `f` (vector-valued) over the unit cube of dimension `dim`.
+    /// `seeds` inject known-good starting genes (e.g. the incumbent
+    /// configuration). Returns the final population, best-first.
+    pub fn run(
+        &self,
+        dim: usize,
+        f: &dyn Fn(&[f64]) -> Vec<f64>,
+        seeds: &[Vec<f64>],
+        rng: &mut Rng,
+    ) -> Vec<Individual> {
+        let pop_size = self.params.pop_size.max(4);
+        let pm = self.params.p_mutation.unwrap_or(1.0 / dim.max(1) as f64);
+
+        // Initial population: seeds + uniform random fill.
+        let mut pop: Vec<Individual> = Vec::with_capacity(pop_size);
+        for s in seeds.iter().take(pop_size) {
+            assert_eq!(s.len(), dim, "seed dimension mismatch");
+            pop.push(Self::eval(s.clone(), f));
+        }
+        while pop.len() < pop_size {
+            let genes: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
+            pop.push(Self::eval(genes, f));
+        }
+        Self::assign_rank_crowding(&mut pop);
+
+        for _gen in 0..self.params.generations {
+            // Offspring via tournament + SBX + polynomial mutation.
+            let mut offspring = Vec::with_capacity(pop_size);
+            while offspring.len() < pop_size {
+                let p1 = Self::tournament(&pop, rng);
+                let p2 = Self::tournament(&pop, rng);
+                let (mut c1, mut c2) = self.sbx(&pop[p1].genes, &pop[p2].genes, rng);
+                self.mutate(&mut c1, pm, rng);
+                self.mutate(&mut c2, pm, rng);
+                offspring.push(Self::eval(c1, f));
+                if offspring.len() < pop_size {
+                    offspring.push(Self::eval(c2, f));
+                }
+            }
+            // Elitist environmental selection over parents ∪ offspring.
+            pop.extend(offspring);
+            Self::assign_rank_crowding(&mut pop);
+            pop.sort_by(|a, b| {
+                a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
+            });
+            pop.truncate(pop_size);
+        }
+        Self::assign_rank_crowding(&mut pop);
+        pop.sort_by(|a, b| {
+            a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
+        });
+        pop
+    }
+
+    /// Single-objective convenience: returns (best genes, best objective).
+    pub fn minimize(
+        &self,
+        dim: usize,
+        f: &dyn Fn(&[f64]) -> f64,
+        seeds: &[Vec<f64>],
+        rng: &mut Rng,
+    ) -> (Vec<f64>, f64) {
+        let wrapped = |x: &[f64]| vec![f(x)];
+        let pop = self.run(dim, &wrapped, seeds, rng);
+        let best = pop
+            .iter()
+            .min_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]))
+            .unwrap();
+        (best.genes.clone(), best.objectives[0])
+    }
+
+    fn eval(genes: Vec<f64>, f: &dyn Fn(&[f64]) -> Vec<f64>) -> Individual {
+        let objectives = f(&genes);
+        Individual { genes, objectives, rank: 0, crowding: 0.0 }
+    }
+
+    /// a dominates b iff a is <= everywhere and < somewhere.
+    fn dominates(a: &[f64], b: &[f64]) -> bool {
+        let mut strictly = false;
+        for (x, y) in a.iter().zip(b) {
+            if x > y {
+                return false;
+            }
+            if x < y {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    fn assign_rank_crowding(pop: &mut [Individual]) {
+        let n = pop.len();
+        // Fast non-dominated sort.
+        let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut dom_count = vec![0usize; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if Self::dominates(&pop[i].objectives, &pop[j].objectives) {
+                    dominated_by[i].push(j);
+                    dom_count[j] += 1;
+                } else if Self::dominates(&pop[j].objectives, &pop[i].objectives) {
+                    dominated_by[j].push(i);
+                    dom_count[i] += 1;
+                }
+            }
+        }
+        let mut front: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+        let mut rank = 0;
+        while !front.is_empty() {
+            let mut next = Vec::new();
+            for &i in &front {
+                pop[i].rank = rank;
+            }
+            Self::crowding_for_front(pop, &front);
+            for &i in &front {
+                for &j in &dominated_by[i].clone() {
+                    dom_count[j] -= 1;
+                    if dom_count[j] == 0 {
+                        next.push(j);
+                    }
+                }
+            }
+            front = next;
+            rank += 1;
+        }
+    }
+
+    fn crowding_for_front(pop: &mut [Individual], front: &[usize]) {
+        let m = pop[front[0]].objectives.len();
+        for &i in front {
+            pop[i].crowding = 0.0;
+        }
+        for obj in 0..m {
+            let mut order: Vec<usize> = front.to_vec();
+            order.sort_by(|&a, &b| {
+                pop[a].objectives[obj].total_cmp(&pop[b].objectives[obj])
+            });
+            let lo = pop[order[0]].objectives[obj];
+            let hi = pop[*order.last().unwrap()].objectives[obj];
+            pop[order[0]].crowding = f64::INFINITY;
+            pop[*order.last().unwrap()].crowding = f64::INFINITY;
+            if hi - lo < 1e-300 {
+                continue;
+            }
+            for w in 1..order.len().saturating_sub(1) {
+                let prev = pop[order[w - 1]].objectives[obj];
+                let next = pop[order[w + 1]].objectives[obj];
+                pop[order[w]].crowding += (next - prev) / (hi - lo);
+            }
+        }
+    }
+
+    /// Binary tournament on (rank asc, crowding desc).
+    fn tournament(pop: &[Individual], rng: &mut Rng) -> usize {
+        let a = rng.below(pop.len());
+        let b = rng.below(pop.len());
+        if pop[a].rank != pop[b].rank {
+            if pop[a].rank < pop[b].rank {
+                a
+            } else {
+                b
+            }
+        } else if pop[a].crowding >= pop[b].crowding {
+            a
+        } else {
+            b
+        }
+    }
+
+    /// Simulated binary crossover (SBX), clamped to [0,1].
+    fn sbx(&self, p1: &[f64], p2: &[f64], rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+        let d = p1.len();
+        let mut c1 = p1.to_vec();
+        let mut c2 = p2.to_vec();
+        if !rng.bool(self.params.p_crossover) {
+            return (c1, c2);
+        }
+        let eta = self.params.eta_crossover;
+        for i in 0..d {
+            if !rng.bool(0.5) {
+                continue;
+            }
+            let u = rng.f64();
+            let beta = if u <= 0.5 {
+                (2.0 * u).powf(1.0 / (eta + 1.0))
+            } else {
+                (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+            };
+            let x1 = p1[i];
+            let x2 = p2[i];
+            c1[i] = (0.5 * ((1.0 + beta) * x1 + (1.0 - beta) * x2)).clamp(0.0, 1.0);
+            c2[i] = (0.5 * ((1.0 - beta) * x1 + (1.0 + beta) * x2)).clamp(0.0, 1.0);
+        }
+        (c1, c2)
+    }
+
+    /// Polynomial mutation, clamped to [0,1].
+    fn mutate(&self, genes: &mut [f64], pm: f64, rng: &mut Rng) {
+        let eta = self.params.eta_mutation;
+        for g in genes.iter_mut() {
+            if !rng.bool(pm) {
+                continue;
+            }
+            let u = rng.f64();
+            let delta = if u < 0.5 {
+                (2.0 * u).powf(1.0 / (eta + 1.0)) - 1.0
+            } else {
+                1.0 - (2.0 * (1.0 - u)).powf(1.0 / (eta + 1.0))
+            };
+            *g = (*g + delta).clamp(0.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_sphere() {
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 40,
+            generations: 60,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(1);
+        let f = |x: &[f64]| {
+            x.iter().map(|v| (v - 0.7) * (v - 0.7)).sum::<f64>()
+        };
+        let (best, val) = ga.minimize(4, &f, &[], &mut rng);
+        assert!(val < 1e-3, "val={val}");
+        for g in best {
+            assert!((g - 0.7).abs() < 0.05, "g={g}");
+        }
+    }
+
+    #[test]
+    fn seeds_accelerate_convergence() {
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 8,
+            generations: 2,
+            ..Default::default()
+        });
+        let f = |x: &[f64]| (x[0] - 0.123).abs();
+        let mut rng = Rng::new(2);
+        let (_, unseeded) = ga.minimize(1, &f, &[], &mut rng);
+        let mut rng = Rng::new(2);
+        let (_, seeded) = ga.minimize(1, &f, &[vec![0.123]], &mut rng);
+        assert!(seeded <= unseeded);
+        assert!(seeded < 1e-9, "elitism must retain a perfect seed");
+    }
+
+    #[test]
+    fn finds_narrow_optimum_in_cliffy_function() {
+        // Mimics HPC objective cliffs: a narrow low valley.
+        let f = |x: &[f64]| {
+            if (x[0] - 0.42).abs() < 0.02 {
+                0.0
+            } else {
+                1.0 + x[0]
+            }
+        };
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 64,
+            generations: 80,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(3);
+        let (_, val) = ga.minimize(1, &f, &[], &mut rng);
+        assert_eq!(val, 0.0);
+    }
+
+    #[test]
+    fn multiobjective_front_is_nondominated() {
+        // Schaffer problem: f1 = x², f2 = (x-2)² over x in [0,1] scaled.
+        let f = |x: &[f64]| {
+            let v = x[0] * 2.0;
+            vec![v * v, (v - 2.0) * (v - 2.0)]
+        };
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 32,
+            generations: 40,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(4);
+        let pop = ga.run(1, &f, &[], &mut rng);
+        let front: Vec<_> = pop.iter().filter(|i| i.rank == 0).collect();
+        assert!(front.len() > 5, "front should be diverse");
+        for a in &front {
+            for b in &front {
+                assert!(!Nsga2::dominates(&a.objectives, &b.objectives) || {
+                    // identical points may co-exist
+                    a.objectives == b.objectives
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn genes_stay_in_unit_cube() {
+        let f = |x: &[f64]| vec![x.iter().sum::<f64>()];
+        let ga = Nsga2::new(Nsga2Params::default());
+        let mut rng = Rng::new(5);
+        let pop = ga.run(3, &f, &[], &mut rng);
+        for ind in pop {
+            for g in ind.genes {
+                assert!((0.0..=1.0).contains(&g));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2);
+        let ga = Nsga2::new(Nsga2Params::default());
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let a = ga.minimize(2, &f, &[], &mut r1);
+        let b = ga.minimize(2, &f, &[], &mut r2);
+        assert_eq!(a.0, b.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Validation harness: speedup maps and their summary statistics — the
+//! quantities every figure in §5 reports.
+//!
+//! Speedups are computed on the **noise-free** objective (`eval_true`)
+//! where the kernel provides one, so validation measures the tuner, not
+//! the measurement noise (the paper medians repeated runs for the same
+//! reason).
+
+use crate::kernels::Kernel;
+use crate::util::stats;
+
+/// One validated input point.
+#[derive(Clone, Debug)]
+pub struct MapPoint {
+    pub input: Vec<f64>,
+    /// t_reference / t_tuned (>1 = tuned is faster).
+    pub speedup: f64,
+}
+
+/// A speedup map over a validation grid plus its summary.
+#[derive(Clone, Debug)]
+pub struct SpeedupMap {
+    pub points: Vec<MapPoint>,
+    pub grid_per_dim: usize,
+}
+
+impl SpeedupMap {
+    /// Validate `predict` against the kernel's reference tuning on a
+    /// `grid_per_dim`^d regular grid (the paper's 46×46 by default).
+    pub fn build(
+        kernel: &dyn Kernel,
+        grid_per_dim: usize,
+        predict: &dyn Fn(&[f64]) -> Vec<f64>,
+    ) -> SpeedupMap {
+        let inputs = kernel.input_space().grid(grid_per_dim);
+        let points = inputs
+            .into_iter()
+            .map(|input| {
+                let tuned = predict(&input);
+                let t_tuned = kernel.eval_true(&input, &tuned);
+                let reference = kernel
+                    .reference_design(&input)
+                    .expect("speedup map needs a reference design");
+                let t_ref = kernel.eval_true(&input, &reference);
+                MapPoint { input, speedup: t_ref / t_tuned }
+            })
+            .collect();
+        SpeedupMap { points, grid_per_dim }
+    }
+
+    /// Compare two predictors head-to-head (e.g. MLKAPS vs Optuna,
+    /// Fig 11): speedup = t_b / t_a, so >1 means `a` wins.
+    pub fn versus(
+        kernel: &dyn Kernel,
+        grid_per_dim: usize,
+        a: &dyn Fn(&[f64]) -> Vec<f64>,
+        b: &dyn Fn(&[f64]) -> Vec<f64>,
+    ) -> SpeedupMap {
+        let inputs = kernel.input_space().grid(grid_per_dim);
+        let points = inputs
+            .into_iter()
+            .map(|input| {
+                let t_a = kernel.eval_true(&input, &a(&input));
+                let t_b = kernel.eval_true(&input, &b(&input));
+                MapPoint { input, speedup: t_b / t_a }
+            })
+            .collect();
+        SpeedupMap { points, grid_per_dim }
+    }
+
+    pub fn speedups(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.speedup).collect()
+    }
+
+    pub fn summary(&self) -> MapSummary {
+        let s = self.speedups();
+        let progressions: Vec<f64> = s.iter().copied().filter(|&v| v > 1.0).collect();
+        let regressions: Vec<f64> = s.iter().copied().filter(|&v| v <= 1.0).collect();
+        MapSummary {
+            geomean: stats::geomean(&s),
+            frac_progressions: progressions.len() as f64 / s.len().max(1) as f64,
+            mean_progression: stats::mean(&progressions),
+            mean_regression: stats::mean(&regressions),
+            min: s.iter().copied().fold(f64::INFINITY, f64::min),
+            max: s.iter().copied().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Summary statistics of a speedup map (the numbers quoted in §5).
+#[derive(Clone, Copy, Debug)]
+pub struct MapSummary {
+    pub geomean: f64,
+    /// Fraction of inputs with speedup > 1 ("progressions").
+    pub frac_progressions: f64,
+    pub mean_progression: f64,
+    /// Mean speedup among regressions (<= 1.0); 0 if none.
+    pub mean_regression: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for MapSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "geomean x{:.3} | progressions {:.0}% (mean x{:.2}) | regressions mean x{:.2} | range [{:.2}, {:.2}]",
+            self.geomean,
+            100.0 * self.frac_progressions,
+            self.mean_progression,
+            self.mean_regression,
+            self.min,
+            self.max
+        )
+    }
+}
+
+/// Random-configuration performance histogram at one input (Fig 9 b/c):
+/// distribution of objective over `n` random designs, plus where the
+/// reference and a tuned configuration fall.
+pub fn performance_histogram(
+    kernel: &dyn Kernel,
+    input: &[f64],
+    tuned: &[f64],
+    n: usize,
+    seed: u64,
+) -> Histogram {
+    let ds = kernel.design_space().clone();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let samples: Vec<f64> = (0..n)
+        .map(|_| {
+            let u: Vec<f64> = (0..ds.dim()).map(|_| rng.f64()).collect();
+            kernel.eval_true(input, &ds.snap(&ds.decode(&u)))
+        })
+        .collect();
+    let t_ref = kernel
+        .reference_design(input)
+        .map(|d| kernel.eval_true(input, &d));
+    let t_tuned = kernel.eval_true(input, tuned);
+    Histogram { samples, t_ref, t_tuned }
+}
+
+/// The Fig 9 histogram data.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub samples: Vec<f64>,
+    pub t_ref: Option<f64>,
+    pub t_tuned: f64,
+}
+
+impl Histogram {
+    /// Percentile rank of a time within the random distribution
+    /// (0 = faster than everything, 1 = slower than everything).
+    pub fn rank(&self, t: f64) -> f64 {
+        let below = self.samples.iter().filter(|&&s| s < t).count();
+        below as f64 / self.samples.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::toy_sum::ToySum;
+
+    #[test]
+    fn perfect_predictor_has_geomean_above_one() {
+        let kernel = ToySum::new(20);
+        let map = SpeedupMap::build(&kernel, 5, &|input| {
+            vec![kernel.optimal_threads(input)]
+        });
+        let s = map.summary();
+        assert!(s.geomean >= 1.0, "{s}");
+        assert!(s.frac_progressions > 0.4, "{s}");
+        assert_eq!(map.points.len(), 25);
+    }
+
+    #[test]
+    fn reference_predictor_is_exactly_one() {
+        let kernel = ToySum::new(21);
+        let map = SpeedupMap::build(&kernel, 4, &|input| {
+            kernel.reference_design(input).unwrap()
+        });
+        for p in &map.points {
+            assert!((p.speedup - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn versus_is_antisymmetric() {
+        let kernel = ToySum::new(22);
+        let a = |input: &[f64]| vec![kernel.optimal_threads(input)];
+        let b = |_: &[f64]| vec![16.0];
+        let ab = SpeedupMap::versus(&kernel, 3, &a, &b);
+        let ba = SpeedupMap::versus(&kernel, 3, &b, &a);
+        for (x, y) in ab.points.iter().zip(&ba.points) {
+            assert!((x.speedup * y.speedup - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn histogram_ranks_reference_and_tuned() {
+        let kernel = ToySum::new(23);
+        let input = [64.0, 64.0];
+        let tuned = [kernel.optimal_threads(&input)];
+        let h = performance_histogram(&kernel, &input, &tuned, 300, 3);
+        assert_eq!(h.samples.len(), 300);
+        // The analytic optimum must sit at the fast end of the histogram.
+        assert!(h.rank(h.t_tuned) < 0.1, "rank {}", h.rank(h.t_tuned));
+        // The fixed 16-thread reference is mediocre for a tiny matrix.
+        assert!(h.rank(h.t_ref.unwrap()) > h.rank(h.t_tuned));
+    }
+}

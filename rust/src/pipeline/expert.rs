@@ -1,0 +1,119 @@
+//! Expert-knowledge injection (§5.4.2, Fig 12): combine MLKAPS'
+//! auto-tuned configurations with the vendor's hand tuning by selecting,
+//! per input, whichever is measured faster — then retrain the decision
+//! trees on the combined choices. The result keeps every MLKAPS win and
+//! eliminates every regression ("the best of both worlds").
+
+use crate::dtree::DesignTrees;
+use crate::kernels::Kernel;
+use crate::pipeline::TunedModel;
+use crate::util::threadpool::par_map;
+
+/// An expert tree: MLKAPS ∪ vendor reference, best-of per input.
+pub struct ExpertModel {
+    pub trees: DesignTrees,
+    /// Fraction of grid points where MLKAPS' choice won.
+    pub mlkaps_win_rate: f64,
+}
+
+impl ExpertModel {
+    /// Build from a tuned model by re-measuring both candidates on each
+    /// optimization-grid input (`reps` kernel evaluations each, median).
+    pub fn combine(
+        kernel: &dyn Kernel,
+        model: &TunedModel,
+        reps: usize,
+        threads: usize,
+    ) -> ExpertModel {
+        let inputs = &model.grid.inputs;
+        let choices = par_map(inputs, threads, |_, input| {
+            let mlkaps_design = model.trees.predict(input);
+            let ref_design = kernel
+                .reference_design(input)
+                .expect("expert combination needs a reference");
+            let med = |d: &[f64]| {
+                let ts: Vec<f64> = (0..reps.max(1)).map(|_| kernel.eval(input, d)).collect();
+                crate::util::stats::median(&ts)
+            };
+            if med(&mlkaps_design) <= med(&ref_design) {
+                (mlkaps_design, true)
+            } else {
+                (ref_design, false)
+            }
+        });
+        let wins = choices.iter().filter(|(_, w)| *w).count();
+        let designs: Vec<Vec<f64>> = choices.into_iter().map(|(d, _)| d).collect();
+        let trees = DesignTrees::fit(
+            inputs,
+            &designs,
+            &model.trees.input_space,
+            &model.trees.design_space,
+            model.trees.trees.first().map_or(8, |t| t.params.max_depth),
+        );
+        ExpertModel { trees, mlkaps_win_rate: wins as f64 / inputs.len().max(1) as f64 }
+    }
+
+    pub fn predict(&self, input: &[f64]) -> Vec<f64> {
+        self.trees.predict(input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+    use crate::kernels::toy_sum::ToySum;
+    use crate::pipeline::evaluate::SpeedupMap;
+    use crate::surrogate::gbdt::GbdtParams;
+    use crate::optimizer::nsga2::Nsga2Params;
+
+    #[test]
+    fn expert_tree_eliminates_regressions() {
+        let kernel = ToySum::new(30);
+        // Deliberately under-sampled MLKAPS run -> likely some regressions.
+        let model = Mlkaps::new(MlkapsConfig {
+            total_samples: 120,
+            batch_size: 60,
+            sampler: SamplerChoice::Lhs,
+            gbdt: GbdtParams { n_trees: 40, ..Default::default() },
+            ga: Nsga2Params { pop_size: 12, generations: 8, ..Default::default() },
+            opt_grid: 6,
+            tree_depth: 5,
+            threads: 2,
+            seed: 4,
+        })
+        .tune(&kernel);
+
+        let expert = ExpertModel::combine(&kernel, &model, 5, 2);
+        // Validate on the SAME grid the expert saw: every choice is
+        // best-of-both there, so regressions beyond noise must vanish.
+        let map = SpeedupMap::build(&kernel, 6, &|input| expert.predict(input));
+        let s = map.summary();
+        assert!(
+            s.min > 0.90,
+            "expert tree still regresses badly: {s}"
+        );
+        // And it must be at least as good as the raw MLKAPS tree overall.
+        let raw = SpeedupMap::build(&kernel, 6, &|input| model.predict(input));
+        assert!(s.geomean >= 0.98 * raw.summary().geomean);
+    }
+
+    #[test]
+    fn win_rate_is_a_fraction() {
+        let kernel = ToySum::new(31);
+        let model = Mlkaps::new(MlkapsConfig {
+            total_samples: 100,
+            batch_size: 50,
+            sampler: SamplerChoice::Random,
+            gbdt: GbdtParams { n_trees: 30, ..Default::default() },
+            ga: Nsga2Params { pop_size: 8, generations: 6, ..Default::default() },
+            opt_grid: 4,
+            tree_depth: 4,
+            threads: 1,
+            seed: 5,
+        })
+        .tune(&kernel);
+        let expert = ExpertModel::combine(&kernel, &model, 3, 1);
+        assert!((0.0..=1.0).contains(&expert.mlkaps_win_rate));
+    }
+}

@@ -1,0 +1,332 @@
+//! The MLKAPS pipeline (Fig 3): adaptive sampling → GBDT surrogate →
+//! per-grid-point GA optimization → decision trees.
+//!
+//! [`Mlkaps::tune`] runs the whole workflow against any [`Kernel`] and
+//! returns a [`TunedModel`] whose decision trees predict an optimized
+//! design configuration for any input — the artifact a library would
+//! embed (via [`crate::dtree::DesignTrees::to_c`]) and ship.
+
+pub mod evaluate;
+pub mod expert;
+
+use std::time::Instant;
+
+use crate::config::space::ParamSpace;
+use crate::data::Dataset;
+use crate::dtree::DesignTrees;
+use crate::kernels::Kernel;
+use crate::optimizer::grid::{optimize_grid, GridOptResult};
+use crate::optimizer::nsga2::{Nsga2, Nsga2Params};
+use crate::sampling::ga_adaptive::{GaAdaptive, GaAdaptiveParams};
+use crate::sampling::hvs::Hvs;
+use crate::sampling::lhs::LhsSampler;
+use crate::sampling::random::RandomSampler;
+use crate::sampling::{SampleCtx, Sampler};
+use crate::surrogate::gbdt::{Gbdt, GbdtParams};
+use crate::surrogate::{LogSurrogate, Surrogate};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, par_map};
+
+/// Which adaptive sampling strategy drives the knowledge-acquisition phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SamplerChoice {
+    Random,
+    Lhs,
+    Hvs,
+    Hvsr,
+    GaAdaptive,
+    /// GA-Adaptive without its objective-capped HVSr sub-sampler (ablation).
+    GaAdaptiveNoCap,
+}
+
+impl SamplerChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerChoice::Random => "Random",
+            SamplerChoice::Lhs => "LHS",
+            SamplerChoice::Hvs => "HVS",
+            SamplerChoice::Hvsr => "HVSr",
+            SamplerChoice::GaAdaptive => "GA-Adaptive",
+            SamplerChoice::GaAdaptiveNoCap => "GA-Adaptive(no-cap)",
+        }
+    }
+
+    /// Instantiate the sampler for a given total budget.
+    pub fn build(&self, total_budget: usize, gbdt: &GbdtParams) -> Box<dyn Sampler> {
+        match self {
+            SamplerChoice::Random => Box::new(RandomSampler),
+            SamplerChoice::Lhs => Box::new(LhsSampler),
+            SamplerChoice::Hvs => Box::new(Hvs::hvs()),
+            SamplerChoice::Hvsr => Box::new(Hvs::hvsr()),
+            SamplerChoice::GaAdaptive => Box::new(GaAdaptive::new(GaAdaptiveParams {
+                total_budget,
+                gbdt: GbdtParams { n_trees: 60, ..gbdt.clone() },
+                ..Default::default()
+            })),
+            SamplerChoice::GaAdaptiveNoCap => Box::new(
+                GaAdaptive::new(GaAdaptiveParams {
+                    total_budget,
+                    gbdt: GbdtParams { n_trees: 60, ..gbdt.clone() },
+                    ..Default::default()
+                })
+                .with_sub_sampler(Box::new(Hvs::hvsr().without_cap())),
+            ),
+        }
+    }
+}
+
+/// End-to-end pipeline configuration (defaults follow §5.0.2: 16×16
+/// optimization grid, depth-8 trees).
+#[derive(Clone, Debug)]
+pub struct MlkapsConfig {
+    pub total_samples: usize,
+    /// Samples collected (and evaluated in parallel) per iteration.
+    pub batch_size: usize,
+    pub sampler: SamplerChoice,
+    /// Final surrogate hyperparameters.
+    pub gbdt: GbdtParams,
+    /// Final optimization-phase GA (one instance per grid point).
+    pub ga: Nsga2Params,
+    /// Optimization grid density per input dimension.
+    pub opt_grid: usize,
+    /// Decision-tree depth bound.
+    pub tree_depth: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for MlkapsConfig {
+    fn default() -> Self {
+        MlkapsConfig {
+            total_samples: 1000,
+            batch_size: 128,
+            sampler: SamplerChoice::GaAdaptive,
+            gbdt: GbdtParams::default(),
+            ga: Nsga2Params { pop_size: 32, generations: 30, ..Default::default() },
+            opt_grid: 16,
+            tree_depth: 8,
+            threads: default_threads(),
+            seed: 0,
+        }
+    }
+}
+
+/// Phase timing + resource statistics of one pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub samples: usize,
+    pub sampling_secs: f64,
+    pub modeling_secs: f64,
+    pub optimizing_secs: f64,
+    pub tree_secs: f64,
+    /// Bytes held by the surrogate + dataset (linear in samples — the
+    /// Fig 14 contrast with GPTune's quadratic covariance).
+    pub model_bytes: usize,
+}
+
+/// The tuned artifact: decision trees + everything used to build them.
+pub struct TunedModel {
+    pub trees: DesignTrees,
+    pub grid: GridOptResult,
+    /// All collected samples, in value space.
+    pub dataset: Dataset,
+    /// The final surrogate (GBDT over the log objective — see
+    /// [`LogSurrogate`]).
+    pub surrogate: LogSurrogate<Gbdt>,
+    pub stats: PipelineStats,
+}
+
+impl TunedModel {
+    /// Predict the design configuration for an input (value space).
+    pub fn predict(&self, input: &[f64]) -> Vec<f64> {
+        self.trees.predict(input)
+    }
+}
+
+/// The MLKAPS auto-tuner.
+pub struct Mlkaps {
+    pub config: MlkapsConfig,
+}
+
+impl Mlkaps {
+    pub fn new(config: MlkapsConfig) -> Self {
+        Mlkaps { config }
+    }
+
+    /// Phase 1 only: adaptive sampling. Returns (unit-space history,
+    /// value-space dataset) — exposed for the accuracy benches (Figs 6/7)
+    /// which study samplers in isolation.
+    pub fn sample_phase(&self, kernel: &dyn Kernel) -> (Dataset, Dataset) {
+        let cfg = &self.config;
+        let input_space = kernel.input_space();
+        let joint: ParamSpace = input_space.concat(kernel.design_space());
+        let n_inputs = input_space.dim();
+        let mut rng = Rng::new(cfg.seed);
+        let mut sampler = cfg.sampler.build(cfg.total_samples, &cfg.gbdt);
+
+        let mut history = Dataset::with_capacity(cfg.total_samples); // unit space
+        let mut dataset = Dataset::with_capacity(cfg.total_samples); // value space
+        while history.len() < cfg.total_samples {
+            let want = cfg.batch_size.min(cfg.total_samples - history.len());
+            let batch = {
+                let ctx = SampleCtx { space: &joint, n_inputs, history: &history };
+                sampler.next_batch(want, &ctx, &mut rng)
+            };
+            // Evaluate the batch in parallel on the kernel.
+            let values: Vec<Vec<f64>> =
+                batch.iter().map(|u| joint.snap(&joint.decode(u))).collect();
+            let ys = par_map(&values, cfg.threads, |_, v| {
+                kernel.eval(&v[..n_inputs], &v[n_inputs..])
+            });
+            for ((u, v), y) in batch.into_iter().zip(values).zip(ys) {
+                // Failed/timed-out measurements (NaN/inf) are recorded as
+                // a large finite penalty so the surrogate learns to avoid
+                // the region instead of poisoning the fit.
+                let y = if y.is_finite() { y } else { 1e9 };
+                history.push(u, y);
+                dataset.push(v, y);
+            }
+        }
+        (history, dataset)
+    }
+
+    /// Run the full pipeline against a kernel.
+    pub fn tune(&self, kernel: &dyn Kernel) -> TunedModel {
+        let cfg = &self.config;
+        let input_space = kernel.input_space().clone();
+        let design_space = kernel.design_space().clone();
+        let joint: ParamSpace = input_space.concat(&design_space);
+
+        // ---- Phase 1: adaptive sampling.
+        let t0 = Instant::now();
+        let (_history, dataset) = self.sample_phase(kernel);
+        let sampling_secs = t0.elapsed().as_secs_f64();
+
+        // ---- Phase 2: fit the final surrogate on value-space features.
+        let t1 = Instant::now();
+        let mut surrogate = LogSurrogate::new(Gbdt::with_mask(
+            GbdtParams { seed: cfg.seed ^ 0xABCD, ..cfg.gbdt.clone() },
+            joint.unordered_mask(),
+        ));
+        surrogate.fit(&dataset);
+        let modeling_secs = t1.elapsed().as_secs_f64();
+
+        // ---- Phase 3: GA per optimization-grid point on the surrogate.
+        let t2 = Instant::now();
+        let ga = Nsga2::new(cfg.ga.clone());
+        let grid = optimize_grid(
+            &surrogate,
+            &input_space,
+            &design_space,
+            cfg.opt_grid,
+            &ga,
+            &[],
+            cfg.threads,
+            cfg.seed ^ 0x5EED,
+        );
+        let optimizing_secs = t2.elapsed().as_secs_f64();
+
+        // ---- Phase 4: decision trees, one per design parameter.
+        let t3 = Instant::now();
+        let trees = DesignTrees::fit(
+            &grid.inputs,
+            &grid.designs,
+            &input_space,
+            &design_space,
+            cfg.tree_depth,
+        );
+        let tree_secs = t3.elapsed().as_secs_f64();
+
+        let stats = PipelineStats {
+            samples: dataset.len(),
+            sampling_secs,
+            modeling_secs,
+            optimizing_secs,
+            tree_secs,
+            model_bytes: surrogate.inner.mem_bytes() + dataset.mem_bytes(),
+        };
+        TunedModel { trees, grid, dataset, surrogate, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::toy_sum::ToySum;
+
+    fn quick_config(sampler: SamplerChoice) -> MlkapsConfig {
+        MlkapsConfig {
+            total_samples: 400,
+            batch_size: 100,
+            sampler,
+            gbdt: GbdtParams { n_trees: 80, ..Default::default() },
+            ga: Nsga2Params { pop_size: 16, generations: 12, ..Default::default() },
+            opt_grid: 6,
+            tree_depth: 6,
+            threads: 2,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn tunes_toy_kernel_end_to_end() {
+        let kernel = ToySum::new(9);
+        let model = Mlkaps::new(quick_config(SamplerChoice::GaAdaptive)).tune(&kernel);
+        assert_eq!(model.stats.samples, 400);
+        assert!(model.stats.model_bytes > 0);
+
+        // The tuned tree must track the input-dependent optimum: speedup
+        // over the fixed reference on a small and a large input.
+        let mut wins = 0;
+        for input in [[100.0, 100.0], [8000.0, 8000.0]] {
+            let pred = model.predict(&input);
+            let t_tuned = kernel.eval_true(&input, &pred);
+            let t_ref =
+                kernel.eval_true(&input, &kernel.reference_design(&input).unwrap());
+            if t_tuned <= t_ref * 1.02 {
+                wins += 1;
+            }
+        }
+        assert_eq!(wins, 2, "tuned model must match or beat the reference");
+    }
+
+    #[test]
+    fn all_samplers_run_through_pipeline() {
+        let kernel = ToySum::new(10);
+        for s in [
+            SamplerChoice::Random,
+            SamplerChoice::Lhs,
+            SamplerChoice::Hvs,
+            SamplerChoice::Hvsr,
+        ] {
+            let mut cfg = quick_config(s.clone());
+            cfg.total_samples = 150;
+            let model = Mlkaps::new(cfg).tune(&kernel);
+            assert_eq!(model.stats.samples, 150, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let kernel = ToySum::new(11);
+        let mut cfg = quick_config(SamplerChoice::Lhs);
+        cfg.total_samples = 120;
+        cfg.threads = 1;
+        let a = Mlkaps::new(cfg.clone()).tune(&kernel);
+        let kernel2 = ToySum::new(11);
+        let b = Mlkaps::new(cfg).tune(&kernel2);
+        assert_eq!(a.grid.designs, b.grid.designs);
+    }
+
+    #[test]
+    fn stats_phases_are_populated() {
+        let kernel = ToySum::new(12);
+        let mut cfg = quick_config(SamplerChoice::Lhs);
+        cfg.total_samples = 120;
+        let model = Mlkaps::new(cfg).tune(&kernel);
+        let s = &model.stats;
+        assert!(s.modeling_secs > 0.0);
+        assert!(s.optimizing_secs > 0.0);
+        assert!(s.tree_secs >= 0.0);
+    }
+}

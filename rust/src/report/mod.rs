@@ -1,0 +1,146 @@
+//! Reporting: ASCII tables, ASCII heatmaps (the paper's speedup maps) and
+//! CSV/JSON emission for the figure benches. Everything a bench prints
+//! also lands under `results/` for EXPERIMENTS.md.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::pipeline::evaluate::SpeedupMap;
+use crate::util::json::Value;
+
+/// Render a simple aligned ASCII table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!("{c:<w$} | ", w = w));
+        }
+        line.trim_end().to_string() + "\n"
+    };
+    out.push_str(&fmt_row(headers.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push_str(&format!(
+        "|{}\n",
+        widths.iter().map(|w| "-".repeat(w + 2) + "|").collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+    }
+    out
+}
+
+/// ASCII heatmap of a 2-D speedup map (one char per grid cell).
+/// Legend: '#' ≥2.0, '+' ≥1.1, '=' 0.95..1.1, '-' ≥0.7, '!' <0.7.
+pub fn heatmap(map: &SpeedupMap) -> String {
+    let g = map.grid_per_dim;
+    let mut out = String::new();
+    out.push_str("speedup map (rows = second input asc, cols = first input asc)\n");
+    out.push_str("legend: '#'>=2.0  '+'>=1.1  '='~1.0  '-'<0.95  '!'<0.7\n");
+    for row in (0..g).rev() {
+        for col in 0..g {
+            // Points are emitted by ParamSpace::grid with dim-0 fastest.
+            let p = &map.points[row * g + col];
+            let c = match p.speedup {
+                s if s >= 2.0 => '#',
+                s if s >= 1.1 => '+',
+                s if s >= 0.95 => '=',
+                s if s >= 0.7 => '-',
+                _ => '!',
+            };
+            out.push(c);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows of (name -> value) records as CSV.
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a JSON document.
+pub fn write_json(path: &Path, value: &Value) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, value.to_pretty())
+}
+
+/// Format bytes human-readably.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::evaluate::MapPoint;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["sampler", "geomean"],
+            &[
+                vec!["GA-Adaptive".into(), "1.30".into()],
+                vec!["LHS".into(), "1.1".into()],
+            ],
+        );
+        assert!(t.contains("| GA-Adaptive | 1.30"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn heatmap_shape_and_legend() {
+        let points = (0..9)
+            .map(|i| MapPoint { input: vec![i as f64], speedup: 0.5 + 0.25 * i as f64 })
+            .collect();
+        let map = SpeedupMap { points, grid_per_dim: 3 };
+        let h = heatmap(&map);
+        let grid_lines: Vec<&str> =
+            h.lines().skip(2).filter(|l| !l.is_empty()).collect();
+        assert_eq!(grid_lines.len(), 3);
+        assert!(grid_lines.iter().all(|l| l.len() == 3));
+        assert!(h.contains('!') && h.contains('#'));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("mlkaps_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512.0 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+}

@@ -1,0 +1,289 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the only place Python output crosses into the Rust hot path —
+//! and it crosses as *data* (HLO text), never as a Python runtime
+//! dependency. Interchange is HLO text, not serialized protos (jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json;
+use crate::util::rng::Rng;
+
+/// One AOT-compiled LU variant from the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub path: String,
+    pub n: usize,
+    pub block: usize,
+    pub tile: usize,
+    /// Static flop count (2/3 n³).
+    pub flops: f64,
+    /// Estimated VMEM footprint of one trailing-update grid step (bytes).
+    pub vmem_bytes: usize,
+    /// Estimated MXU systolic-array occupancy of the tile shape.
+    pub mxu_utilization: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub kernel: String,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load and parse the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let kernel = v
+            .get("kernel")
+            .and_then(|k| k.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let variants = v
+            .get("variants")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+            .iter()
+            .map(|e| -> Result<Variant> {
+                Ok(Variant {
+                    path: e
+                        .get("path")
+                        .and_then(|p| p.as_str())
+                        .ok_or_else(|| anyhow!("variant missing path"))?
+                        .to_string(),
+                    n: e.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+                    block: e.get("block").and_then(|x| x.as_usize()).unwrap_or(0),
+                    tile: e.get("tile").and_then(|x| x.as_usize()).unwrap_or(0),
+                    flops: e.get("flops").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    vmem_bytes: e.get("vmem_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
+                    mxu_utilization: e
+                        .get("mxu_utilization")
+                        .and_then(|x| x.as_f64())
+                        .unwrap_or(0.0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { kernel, variants })
+    }
+
+    /// Distinct matrix sizes available.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut ns: Vec<usize> = self.variants.iter().map(|v| v.n).collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    /// Find a variant by exact (n, block, tile).
+    pub fn find(&self, n: usize, block: usize, tile: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.n == n && v.block == block && v.tile == tile)
+    }
+
+    /// Variants available for a matrix size.
+    pub fn for_size(&self, n: usize) -> Vec<&Variant> {
+        self.variants.iter().filter(|v| v.n == n).collect()
+    }
+}
+
+/// The PJRT execution engine: compiles artifacts lazily and caches the
+/// loaded executables.
+pub struct LuRuntime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe (PJRT_Api contract);
+// the CPU client and loaded executables are internally synchronized. The
+// raw pointers inside the xla crate wrappers are what block auto-derive.
+unsafe impl Send for LuRuntime {}
+unsafe impl Sync for LuRuntime {}
+
+impl LuRuntime {
+    /// Create a runtime over an artifacts directory (reads manifest.json,
+    /// starts the PJRT CPU client; compilation happens lazily per variant).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<LuRuntime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        Ok(LuRuntime { dir, manifest, client, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Ensure a variant is compiled; returns its manifest entry.
+    pub fn prepare(&self, n: usize, block: usize, tile: usize) -> Result<Variant> {
+        let v = self
+            .manifest
+            .find(n, block, tile)
+            .ok_or_else(|| anyhow!("no artifact for n={n} b={block} t={tile}"))?
+            .clone();
+        let mut cache = self.compiled.lock().unwrap();
+        if !cache.contains_key(&v.path) {
+            let proto = xla::HloModuleProto::from_text_file(self.dir.join(&v.path))
+                .map_err(|e| anyhow!("hlo parse {}: {e}", v.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e}"))?;
+            cache.insert(v.path.clone(), exe);
+        }
+        Ok(v)
+    }
+
+    /// Execute the LU factorization of `a` (row-major n*n f32) on the
+    /// chosen variant; returns the packed LU matrix.
+    pub fn run_lu(&self, n: usize, block: usize, tile: usize, a: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == n * n, "input must be {n}x{n}");
+        let v = self.prepare(n, block, tile)?;
+        let lit = xla::Literal::vec1(a)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(&v.path).expect("prepared above");
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Median wall-clock execution time (seconds) over `reps` runs of the
+    /// variant on a random diagonally-dominant matrix.
+    pub fn time_lu(&self, n: usize, block: usize, tile: usize, reps: usize) -> Result<f64> {
+        let a = diag_dominant_matrix(n, 0xC0FFEE ^ n as u64);
+        self.prepare(n, block, tile)?; // exclude compile time
+        let mut times = Vec::with_capacity(reps.max(1));
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            let out = self.run_lu(n, block, tile, &a)?;
+            let dt = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(out.len() == n * n, "bad output size");
+            times.push(dt);
+        }
+        Ok(crate::util::stats::median(&times))
+    }
+}
+
+/// Random diagonally-dominant matrix (LU without pivoting is stable).
+pub fn diag_dominant_matrix(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0f32; n * n];
+    for (i, v) in a.iter_mut().enumerate() {
+        *v = rng.uniform(-1.0, 1.0) as f32;
+        if i % (n + 1) == 0 {
+            *v += n as f32;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(!m.variants.is_empty());
+        assert_eq!(m.kernel, "lu_blocked");
+        let sizes = m.sizes();
+        assert!(sizes.contains(&64));
+        for v in &m.variants {
+            assert!(v.block <= v.n);
+            assert!(v.flops > 0.0);
+            assert!(v.vmem_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn lu_executes_and_factorizes_correctly() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = LuRuntime::new(artifacts_dir()).unwrap();
+        let n = 64;
+        let a = diag_dominant_matrix(n, 42);
+        let lu = rt.run_lu(n, 16, 16, &a).unwrap();
+        // Reconstruct L*U and compare to A (the packed-LU invariant).
+        // (L U)[i][j] = sum_{k<=min(i,j)} L[i][k] U[k][j], L unit lower.
+        let mut max_err = 0f32;
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f32;
+                for k in 0..=i.min(j) {
+                    let lv = if k == i { 1.0 } else { lu[i * n + k] };
+                    s += lv * lu[k * n + j];
+                }
+                max_err = max_err.max((s - a[i * n + j]).abs());
+            }
+        }
+        assert!(max_err < 1e-2, "reconstruction error {max_err}");
+    }
+
+    #[test]
+    fn variants_agree_with_each_other() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = LuRuntime::new(artifacts_dir()).unwrap();
+        let n = 64;
+        let a = diag_dominant_matrix(n, 7);
+        let lu1 = rt.run_lu(n, 16, 16, &a).unwrap();
+        let lu2 = rt.run_lu(n, 32, 32, &a).unwrap();
+        let max_diff = lu1
+            .iter()
+            .zip(&lu2)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-2, "block size must not change numerics: {max_diff}");
+    }
+
+    #[test]
+    fn timing_returns_positive_median() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = LuRuntime::new(artifacts_dir()).unwrap();
+        let t = rt.time_lu(64, 16, 16, 3).unwrap();
+        assert!(t > 0.0 && t < 30.0, "t={t}");
+    }
+
+    #[test]
+    fn missing_variant_is_an_error() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = LuRuntime::new(artifacts_dir()).unwrap();
+        assert!(rt.prepare(64, 13, 13).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! GA-Adaptive (§4.1.3, Fig 4): the paper's new optimization-driven
+//! sampler. Rationale: the surrogate does not need to learn the whole
+//! objective space — it should trade generalization for high accuracy in
+//! the regions that contain good configurations.
+//!
+//! Core loop (pseudo-code from Fig 4):
+//!
+//! ```text
+//! Samples <- BootstrapLHS(b * n)
+//! while |Samples| < n:
+//!     p     <- |Samples| / n
+//!     eps   <- i + (f - i) * p                      # epsilon-decreasing
+//!     Model <- GBDT(Samples)
+//!     OptimPoints <- PickRandomInputs(eps * s)
+//!     New_ga  <- GA(OptimPoints, Model)             # exploitation
+//!     New_sub <- SubSampler((1 - eps) * s, Samples) # exploration (HVSr)
+//!     Samples <- Samples ∪ New_sub ∪ New_ga
+//! ```
+
+use crate::optimizer::nsga2::{Nsga2, Nsga2Params};
+use crate::sampling::hvs::Hvs;
+use crate::sampling::lhs::lhs_design;
+use crate::sampling::{SampleCtx, Sampler};
+use crate::surrogate::gbdt::{Gbdt, GbdtParams};
+use crate::surrogate::{LogSurrogate, Surrogate};
+use crate::util::rng::Rng;
+
+/// Configuration of the GA-Adaptive sampler.
+#[derive(Clone, Debug)]
+pub struct GaAdaptiveParams {
+    /// Fraction of the total budget spent on the LHS bootstrap (Fig 4's `b`).
+    pub bootstrap_ratio: f64,
+    /// Initial fraction of each batch taken by GA exploitation (`i`).
+    pub eps_initial: f64,
+    /// Final fraction at budget exhaustion (`f`).
+    pub eps_final: f64,
+    /// Total sampling budget `n` (used to compute completion p).
+    pub total_budget: usize,
+    /// Surrogate hyperparameters (refit every iteration).
+    pub gbdt: GbdtParams,
+    /// Per-point GA settings (small and cheap: runs on the surrogate).
+    pub ga: Nsga2Params,
+}
+
+impl Default for GaAdaptiveParams {
+    fn default() -> Self {
+        GaAdaptiveParams {
+            bootstrap_ratio: 0.1,
+            eps_initial: 0.0,
+            eps_final: 1.0,
+            total_budget: 1000,
+            gbdt: GbdtParams { n_trees: 80, ..Default::default() },
+            ga: Nsga2Params { pop_size: 16, generations: 10, ..Default::default() },
+        }
+    }
+}
+
+/// The GA-Adaptive sampler (exploitation via GA on a GBDT surrogate,
+/// exploration via a sub-sampler — HVSr by default, per §4.1.3).
+pub struct GaAdaptive {
+    pub params: GaAdaptiveParams,
+    sub: Box<dyn Sampler>,
+}
+
+impl GaAdaptive {
+    pub fn new(params: GaAdaptiveParams) -> Self {
+        GaAdaptive { params, sub: Box::new(Hvs::hvsr()) }
+    }
+
+    /// Replace the exploration sub-sampler (ablation studies).
+    pub fn with_sub_sampler(mut self, sub: Box<dyn Sampler>) -> Self {
+        self.sub = sub;
+        self
+    }
+
+    /// Current epsilon given completion ratio p ∈ [0,1].
+    pub fn epsilon(&self, p: f64) -> f64 {
+        let p = p.clamp(0.0, 1.0);
+        self.params.eps_initial + (self.params.eps_final - self.params.eps_initial) * p
+    }
+}
+
+impl Sampler for GaAdaptive {
+    fn name(&self) -> &'static str {
+        "GA-Adaptive"
+    }
+
+    fn next_batch(&mut self, n: usize, ctx: &SampleCtx, rng: &mut Rng) -> Vec<Vec<f64>> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let d = ctx.space.dim();
+        let bootstrap =
+            (self.params.bootstrap_ratio * self.params.total_budget as f64).ceil() as usize;
+        // Line 1: LHS bootstrap until we have enough knowledge for a model.
+        if ctx.history.len() < bootstrap.max(8) {
+            return lhs_design(n, d, rng);
+        }
+
+        // Line 3-4: completion ratio and epsilon.
+        let p = ctx.history.len() as f64 / self.params.total_budget.max(1) as f64;
+        let eps = self.epsilon(p);
+        let n_ga = ((eps * n as f64).round() as usize).min(n);
+        let n_sub = n - n_ga;
+
+        // Line 5: fit the surrogate on everything sampled so far
+        // (log objective: execution times span decades — see LogSurrogate).
+        let mut model = LogSurrogate::new(Gbdt::new(GbdtParams {
+            seed: rng.next_u64(),
+            ..self.params.gbdt.clone()
+        }));
+        model.fit(ctx.history);
+
+        let mut out = Vec::with_capacity(n);
+
+        // Lines 6-7: GA exploitation — pick random inputs, optimize the
+        // design dims on the surrogate for each. The per-input GA runs are
+        // independent, so they fan out across the thread pool (the fitted
+        // model is immutable; each run gets a deterministic forked RNG) —
+        // EXPERIMENTS.md §Perf.
+        let ga = Nsga2::new(self.params.ga.clone());
+        let n_design = d - ctx.n_inputs;
+        let jobs: Vec<(Vec<f64>, Rng)> = (0..n_ga)
+            .map(|_| {
+                let input: Vec<f64> = (0..ctx.n_inputs).map(|_| rng.f64()).collect();
+                (input, rng.fork())
+            })
+            .collect();
+        let points = crate::util::threadpool::par_map(
+            &jobs,
+            crate::util::threadpool::default_threads(),
+            |_, (input, job_rng)| {
+                let f = |design: &[f64]| {
+                    let mut x = input.clone();
+                    x.extend_from_slice(design);
+                    model.predict(&x)
+                };
+                let mut r = job_rng.clone();
+                let (best_design, _) = ga.minimize(n_design, &f, &[], &mut r);
+                let mut point = input.clone();
+                point.extend(best_design);
+                point
+            },
+        );
+        out.extend(points);
+
+        // Line 8: exploration via the sub-sampler.
+        if n_sub > 0 {
+            out.extend(self.sub.next_batch(n_sub, ctx, rng));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::sampling::testutil::*;
+
+    fn params(total: usize) -> GaAdaptiveParams {
+        GaAdaptiveParams {
+            total_budget: total,
+            gbdt: GbdtParams { n_trees: 40, ..Default::default() },
+            ga: Nsga2Params { pop_size: 12, generations: 8, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    /// Objective with the best design at t = 0.8 for every input.
+    fn history_with_optimum(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new();
+        for _ in 0..n {
+            let x = rng.f64();
+            let t = rng.f64();
+            d.push(vec![x, t], (t - 0.8).powi(2) + 0.05 * x);
+        }
+        d
+    }
+
+    #[test]
+    fn epsilon_schedule_is_linear() {
+        let s = GaAdaptive::new(GaAdaptiveParams {
+            eps_initial: 0.0,
+            eps_final: 0.8,
+            ..params(100)
+        });
+        assert_eq!(s.epsilon(0.0), 0.0);
+        assert!((s.epsilon(0.5) - 0.4).abs() < 1e-12, "paper's worked example");
+        assert!((s.epsilon(1.0) - 0.8).abs() < 1e-12);
+        assert_eq!(s.epsilon(2.0), 0.8, "clamped past completion");
+    }
+
+    #[test]
+    fn bootstrap_phase_uses_lhs() {
+        let space = unit_space2();
+        let hist = Dataset::new();
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut rng = Rng::new(20);
+        let mut s = GaAdaptive::new(params(1000));
+        let batch = s.next_batch(64, &ctx, &mut rng);
+        assert_eq!(batch.len(), 64);
+        assert_in_unit_cube(&batch, 2);
+        // LHS property on the first batch: one sample per stratum in dim 0.
+        let mut strata: Vec<usize> =
+            batch.iter().map(|p| (p[0] * 64.0).floor() as usize).collect();
+        strata.sort_unstable();
+        assert_eq!(strata, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn late_batches_concentrate_near_optimal_designs() {
+        let space = unit_space2();
+        let hist = history_with_optimum(600, 21);
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut rng = Rng::new(22);
+        // 90% complete -> eps ~ 0.9: most points from GA exploitation.
+        let mut s = GaAdaptive::new(GaAdaptiveParams {
+            total_budget: 667,
+            ..params(667)
+        });
+        let batch = s.next_batch(100, &ctx, &mut rng);
+        assert_eq!(batch.len(), 100);
+        let near_opt = batch.iter().filter(|p| (p[1] - 0.8).abs() < 0.15).count();
+        assert!(near_opt > 60, "only {near_opt}/100 near the optimal design");
+    }
+
+    #[test]
+    fn early_batches_explore_more_than_late_batches() {
+        // The epsilon schedule must shift mass from the sub-sampler to GA
+        // exploitation as the budget depletes: late batches concentrate
+        // strictly more near the optimal design than early ones.
+        let space = unit_space2();
+        let hist = history_with_optimum(120, 23);
+        let near = |b: &[Vec<f64>]| {
+            b.iter().filter(|p| (p[1] - 0.8).abs() < 0.15).count()
+        };
+        // 12% complete -> eps ~ 0.12.
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut s = GaAdaptive::new(params(1000));
+        let mut rng = Rng::new(24);
+        let early = near(&s.next_batch(100, &ctx, &mut rng));
+        // 96% complete -> eps ~ 0.96 with the same history contents.
+        let mut s = GaAdaptive::new(params(125));
+        let mut rng = Rng::new(24);
+        let late = near(&s.next_batch(100, &ctx, &mut rng));
+        assert!(early < late, "early={early} late={late}");
+        assert!(late > 70, "late batch should be mostly exploitation: {late}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let space = unit_space2();
+        let hist = history_with_optimum(300, 25);
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut s1 = GaAdaptive::new(params(500));
+        let mut s2 = GaAdaptive::new(params(500));
+        let mut r1 = Rng::new(26);
+        let mut r2 = Rng::new(26);
+        assert_eq!(
+            s1.next_batch(20, &ctx, &mut r1),
+            s2.next_batch(20, &ctx, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Adaptive sampling strategies (§4.1): the knowledge-acquisition half of
+//! the MLKAPS pipeline.
+//!
+//! All samplers propose points in the **unit cube** over the joint
+//! (input ⊗ design) space; the pipeline decodes them to value space and
+//! evaluates the kernel. Implemented strategies:
+//!
+//! * [`random::RandomSampler`] — uniform space-filling baseline.
+//! * [`lhs::LhsSampler`] — Latin Hypercube Sampling (McKay et al. 1979).
+//! * [`hvs::Hvs`] — Hierarchical Variance Sampling (de Oliveira Castro
+//!   et al. 2012) and its relative variant HVSr, with MLKAPS' objective
+//!   upper bound to stop outlier configurations from eating the budget.
+//! * [`ga_adaptive::GaAdaptive`] — the paper's new optimization-driven
+//!   sampler (Fig 4): ε-decreasing blend of GA exploitation over a GBDT
+//!   surrogate with a sub-sampler (HVSr) for exploration.
+
+pub mod ga_adaptive;
+pub mod hvs;
+pub mod lhs;
+pub mod random;
+
+use crate::config::space::ParamSpace;
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Context handed to a sampler for each batch.
+pub struct SampleCtx<'a> {
+    /// The joint sampling space (input params first, then design params).
+    pub space: &'a ParamSpace,
+    /// Number of leading dimensions that are input parameters.
+    pub n_inputs: usize,
+    /// All samples collected so far: x in unit space, y = objective.
+    pub history: &'a Dataset,
+}
+
+/// An adaptive sampling strategy.
+pub trait Sampler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Propose `n` new unit-space points, possibly informed by history.
+    fn next_batch(&mut self, n: usize, ctx: &SampleCtx, rng: &mut Rng) -> Vec<Vec<f64>>;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::space::ParamDef;
+
+    /// A 2-D unit space (1 input, 1 design) for sampler tests.
+    pub fn unit_space2() -> ParamSpace {
+        ParamSpace::new(vec![
+            ParamDef::float("x", 0.0, 1.0),
+            ParamDef::float("t", 0.0, 1.0),
+        ])
+    }
+
+    pub fn assert_in_unit_cube(points: &[Vec<f64>], dim: usize) {
+        for p in points {
+            assert_eq!(p.len(), dim);
+            for &v in p {
+                assert!((0.0..=1.0).contains(&v), "{v} out of unit cube");
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! Uniform random sampling — the simplest space-filling strategy and the
+//! baseline every figure compares against.
+
+use crate::sampling::{SampleCtx, Sampler};
+use crate::util::rng::Rng;
+
+/// I.i.d. uniform sampling over the unit cube.
+#[derive(Clone, Debug, Default)]
+pub struct RandomSampler;
+
+impl Sampler for RandomSampler {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn next_batch(&mut self, n: usize, ctx: &SampleCtx, rng: &mut Rng) -> Vec<Vec<f64>> {
+        let d = ctx.space.dim();
+        (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::sampling::testutil::*;
+
+    #[test]
+    fn batch_shape_and_bounds() {
+        let space = unit_space2();
+        let hist = Dataset::new();
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut rng = Rng::new(1);
+        let batch = RandomSampler.next_batch(100, &ctx, &mut rng);
+        assert_eq!(batch.len(), 100);
+        assert_in_unit_cube(&batch, 2);
+    }
+
+    #[test]
+    fn covers_both_halves() {
+        let space = unit_space2();
+        let hist = Dataset::new();
+        let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+        let mut rng = Rng::new(2);
+        let batch = RandomSampler.next_batch(200, &ctx, &mut rng);
+        let lo = batch.iter().filter(|p| p[0] < 0.5).count();
+        assert!((60..140).contains(&lo), "lo={lo}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Model-quality metrics (§4.1.4): MAE (the paper's default), RMSE, MAPE
+//! (better when objectives span decades), and R².
+
+use crate::util::stats;
+
+/// Which metric to report/optimize for the surrogate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Mae,
+    Rmse,
+    Mape,
+    R2,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Mae => "MAE",
+            Metric::Rmse => "RMSE",
+            Metric::Mape => "MAPE",
+            Metric::R2 => "R2",
+        }
+    }
+
+    /// Evaluate the metric; for R² higher is better, others lower.
+    pub fn eval(&self, pred: &[f64], truth: &[f64]) -> f64 {
+        match self {
+            Metric::Mae => stats::mae(pred, truth),
+            Metric::Rmse => stats::rmse(pred, truth),
+            Metric::Mape => stats::mape(pred, truth),
+            Metric::R2 => r2(pred, truth),
+        }
+    }
+}
+
+/// Coefficient of determination.
+pub fn r2(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mean = stats::mean(truth);
+    let ss_res: f64 = pred.iter().zip(truth).map(|(p, t)| (t - p) * (t - p)).sum();
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean) * (t - mean)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(Metric::Mae.eval(&y, &y), 0.0);
+        assert_eq!(Metric::Rmse.eval(&y, &y), 0.0);
+        assert_eq!(Metric::Mape.eval(&y, &y), 0.0);
+        assert_eq!(Metric::R2.eval(&y, &y), 1.0);
+    }
+
+    #[test]
+    fn r2_of_mean_prediction_is_zero() {
+        let truth = [1.0, 2.0, 3.0, 4.0];
+        let pred = [2.5, 2.5, 2.5, 2.5];
+        assert!(r2(&pred, &truth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_names() {
+        assert_eq!(Metric::Mae.name(), "MAE");
+        assert_eq!(Metric::Mape.name(), "MAPE");
+    }
+}

@@ -1,0 +1,9 @@
+//! Zero-dependency substrates: RNG, JSON, statistics, thread pool and
+//! memory telemetry. Built in-tree because the build environment is fully
+//! offline (see DESIGN.md §1, substitution index).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod telemetry;
+pub mod threadpool;

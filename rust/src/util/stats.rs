@@ -1,0 +1,178 @@
+//! Descriptive statistics used across samplers, metrics and reports:
+//! means, variance, quantiles, geometric means, coefficient of variation
+//! and the Student-t critical values HVS uses for its variance upper bound.
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (n-1 denominator); 0.0 when n < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation (sd / |mean|); used by HVS-relative.
+/// Returns 0 when the mean is ~0 to avoid blow-up.
+pub fn coeff_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-300 {
+        return 0.0;
+    }
+    std_dev(xs) / m.abs()
+}
+
+/// Geometric mean of strictly-positive values (the paper's speedup metric).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let logsum: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (logsum / xs.len() as f64).exp()
+}
+
+/// Median (linear-interpolated); 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Quantile q in [0,1] with linear interpolation between order statistics.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Two-sided Student-t critical value at 95% confidence for `df` degrees of
+/// freedom. Table lookup + asymptote, as used by HVS's conservative
+/// variance estimator (de Oliveira Castro et al., Euro-Par 2012).
+pub fn t_crit_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        d if d <= 30 => TABLE[d - 1],
+        d if d <= 60 => 2.02,
+        d if d <= 120 => 1.98,
+        _ => 1.96,
+    }
+}
+
+/// Mean absolute error between predictions and targets.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    mean(&pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t).abs())
+        .collect::<Vec<_>>())
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    mean(&pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .collect::<Vec<_>>())
+    .sqrt()
+}
+
+/// Mean absolute percentage error (targets near zero are floored).
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    mean(&pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| ((p - t) / t.abs().max(1e-12)).abs())
+        .collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        // geomean(2, 0.5) == 1 — the canonical reason the paper uses it.
+        assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((geomean(&[1.3, 1.3, 1.3]) - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_and_quantiles() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(median(&xs), 2.0);
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        assert!((median(&ys) - 2.5).abs() < 1e-12);
+        assert_eq!(quantile(&ys, 0.0), 1.0);
+        assert_eq!(quantile(&ys, 1.0), 4.0);
+    }
+
+    #[test]
+    fn t_table_monotone_decreasing() {
+        assert!(t_crit_95(1) > t_crit_95(2));
+        assert!(t_crit_95(10) > t_crit_95(30));
+        assert!(t_crit_95(30) > t_crit_95(1000));
+        assert!((t_crit_95(1_000_000) - 1.96).abs() < 1e-12);
+        assert!(t_crit_95(0).is_infinite());
+    }
+
+    #[test]
+    fn error_metrics() {
+        let p = [1.0, 2.0, 3.0];
+        let t = [1.0, 1.0, 5.0];
+        assert!((mae(&p, &t) - 1.0).abs() < 1e-12);
+        assert!((rmse(&p, &t) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((mape(&p, &t) - (0.0 + 1.0 + 0.4) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coeff_variation_zero_mean() {
+        assert_eq!(coeff_variation(&[1.0, -1.0]), 0.0);
+        assert!(coeff_variation(&[10.0, 12.0, 8.0]) > 0.0);
+    }
+}

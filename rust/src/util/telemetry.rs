@@ -1,0 +1,102 @@
+//! Memory + time telemetry for the scaling experiment (Fig 14).
+//!
+//! Two complementary views:
+//! * [`ModelFootprint`] — *algorithmic* memory: bytes held by a tuner's
+//!   model state (GBDT trees vs the GP's dense covariance). This is the
+//!   quantity whose growth law Fig 14 demonstrates, and it is
+//!   machine-independent.
+//! * [`rss_bytes`] — real process RSS from /proc/self/status, reported
+//!   alongside for context.
+
+use std::time::Instant;
+
+/// Types that can report the size of their live model state.
+pub trait ModelFootprint {
+    /// Approximate heap bytes held by the model (data structures that grow
+    /// with the number of samples/tasks).
+    fn model_bytes(&self) -> usize;
+}
+
+/// Current resident set size of this process in bytes (Linux), or None.
+pub fn rss_bytes() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: usize = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Tracks the peak of a monotonically sampled quantity plus elapsed time.
+#[derive(Debug)]
+pub struct PeakTracker {
+    start: Instant,
+    peak: usize,
+}
+
+impl PeakTracker {
+    pub fn new() -> Self {
+        PeakTracker { start: Instant::now(), peak: 0 }
+    }
+    /// Record an observation; keeps the max.
+    pub fn observe(&mut self, bytes: usize) {
+        self.peak = self.peak.max(bytes);
+    }
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for PeakTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Simple stopwatch for phase timing (sampling vs modeling vs optimizing).
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        let rss = rss_bytes().expect("linux /proc should exist");
+        assert!(rss > 1 << 20, "rss={rss}"); // > 1 MiB
+    }
+
+    #[test]
+    fn peak_tracker_keeps_max() {
+        let mut t = PeakTracker::new();
+        t.observe(10);
+        t.observe(100);
+        t.observe(50);
+        assert_eq!(t.peak_bytes(), 100);
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.secs() >= 0.004);
+    }
+}

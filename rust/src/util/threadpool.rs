@@ -1,0 +1,92 @@
+//! Parallel map over std::thread::scope — the sampling harness substrate.
+//!
+//! The paper's pipeline spends most wall-clock time collecting kernel
+//! samples; MLKAPS batches each sampling iteration across workers. tokio is
+//! unavailable offline, so the coordinator uses scoped OS threads with a
+//! work-stealing index (atomic cursor), which is ideal for CPU-bound
+//! sample evaluation anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (cores, capped at 16).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every item in parallel, preserving input order.
+///
+/// `threads == 1` runs inline (deterministic debugging path).
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_inline() {
+        let items = vec![1, 2, 3];
+        assert_eq!(par_map(&items, 1, |i, &x| x + i), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<i32> = vec![];
+        assert!(par_map(&items, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = vec![7];
+        assert_eq!(par_map(&items, 64, |_, &x| x), vec![7]);
+    }
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let counter = AtomicU64::new(0);
+        let items: Vec<u64> = (0..500).collect();
+        let out = par_map(&items, 6, |_, &x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+        assert_eq!(out.len(), 500);
+    }
+}

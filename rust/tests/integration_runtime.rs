@@ -1,0 +1,94 @@
+//! Integration tests for the real three-layer path: AOT artifacts →
+//! PJRT runtime → PallasLu kernel → MLKAPS pipeline. Skipped (with a
+//! message) when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mlkaps::kernels::pallas_lu::PallasLu;
+use mlkaps::kernels::Kernel;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::{diag_dominant_matrix, LuRuntime};
+use mlkaps::surrogate::gbdt::GbdtParams;
+
+fn runtime() -> Option<Arc<LuRuntime>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(LuRuntime::new(dir).unwrap()))
+}
+
+#[test]
+fn lu_numerics_match_across_all_n64_variants() {
+    let Some(rt) = runtime() else { return };
+    let n = 64;
+    let a = diag_dominant_matrix(n, 11);
+    let variants: Vec<_> = rt.manifest.for_size(n).into_iter().cloned().collect();
+    assert!(variants.len() >= 3);
+    let base = rt.run_lu(n, variants[0].block, variants[0].tile, &a).unwrap();
+    for v in &variants[1..] {
+        let out = rt.run_lu(n, v.block, v.tile, &a).unwrap();
+        let max_diff = base
+            .iter()
+            .zip(&out)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            max_diff < 5e-2,
+            "variant b={} t={} diverges: {max_diff}",
+            v.block,
+            v.tile
+        );
+    }
+}
+
+#[test]
+fn pipeline_tunes_real_kernel_from_real_measurements() {
+    let Some(rt) = runtime() else { return };
+    let mut kernel = PallasLu::new(rt.clone());
+    kernel.reps = 1;
+    let model = Mlkaps::new(MlkapsConfig {
+        total_samples: 40,
+        batch_size: 10,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 30, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 6, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 3,
+        threads: 1,
+        seed: 1,
+    })
+    .tune(&kernel);
+    assert_eq!(model.stats.samples, 40);
+    // Every prediction must resolve to an existing artifact.
+    for si in 0..rt.manifest.sizes().len() {
+        let d = model.predict(&[si as f64]);
+        let (n, b, t) = kernel.variant_for(&[si as f64], &d);
+        assert!(rt.manifest.find(n, b, t).is_some());
+    }
+}
+
+#[test]
+fn manifest_static_costs_are_consistent() {
+    let Some(rt) = runtime() else { return };
+    for v in &rt.manifest.variants {
+        // flops = 2/3 n^3 (rounded by the Python side).
+        let expect = 2.0 * (v.n as f64).powi(3) / 3.0;
+        assert!((v.flops - expect).abs() / expect < 1e-4, "{:?}", v.path); // Python rounds
+        // MXU utilization grows with tile size.
+        assert!(v.mxu_utilization > 0.0 && v.mxu_utilization <= 1.0);
+    }
+    // Bigger tiles -> bigger VMEM footprint.
+    let f = |b: usize, t: usize| {
+        rt.manifest
+            .find(64, b, t)
+            .map(|v| v.vmem_bytes)
+            .unwrap_or(0)
+    };
+    if f(16, 16) > 0 && f(32, 32) > 0 {
+        assert!(f(32, 32) > f(16, 16));
+    }
+}

@@ -1,0 +1,301 @@
+//! Property-based tests over the core invariants (seeded random-input
+//! sweeps — the in-tree analog of proptest, which is unavailable offline).
+//!
+//! Each property runs against many randomly generated spaces / datasets /
+//! seeds; any failure prints the seed for reproduction.
+
+use mlkaps::config::space::{ParamDef, ParamKind, ParamSpace};
+use mlkaps::data::Dataset;
+use mlkaps::dtree::cart::{Cart, CartParams, TaskKind};
+use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
+use mlkaps::sampling::hvs::Hvs;
+use mlkaps::sampling::lhs::lhs_design;
+use mlkaps::sampling::random::RandomSampler;
+use mlkaps::sampling::{SampleCtx, Sampler};
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::json;
+use mlkaps::util::rng::Rng;
+
+/// Generate a random ParamSpace of 1..=6 mixed-kind dimensions.
+fn random_space(rng: &mut Rng) -> ParamSpace {
+    let d = 1 + rng.below(6);
+    let params = (0..d)
+        .map(|i| {
+            let name = format!("p{i}");
+            match rng.below(4) {
+                0 => {
+                    let lo = rng.uniform(-100.0, 100.0);
+                    ParamDef::float(&name, lo, lo + rng.uniform(0.5, 200.0))
+                }
+                1 => {
+                    let lo = rng.int_range(-50, 50);
+                    ParamDef::int(&name, lo, lo + rng.int_range(1, 100))
+                }
+                2 => {
+                    let k = 2 + rng.below(6);
+                    let choices: Vec<String> =
+                        (0..k).map(|c| format!("c{c}")).collect();
+                    let refs: Vec<&str> = choices.iter().map(String::as_str).collect();
+                    ParamDef::categorical(&name, &refs)
+                }
+                _ => ParamDef::boolean(&name),
+            }
+        })
+        .collect();
+    ParamSpace::new(params)
+}
+
+#[test]
+fn prop_decode_always_lands_on_valid_values() {
+    let mut rng = Rng::new(0xA11CE);
+    for trial in 0..300 {
+        let space = random_space(&mut rng);
+        let unit: Vec<f64> = (0..space.dim()).map(|_| rng.f64()).collect();
+        let v = space.decode(&unit);
+        let snapped = space.snap(&v);
+        assert_eq!(v, snapped, "trial {trial}: decode not snap-stable");
+    }
+}
+
+#[test]
+fn prop_encode_decode_identity_on_decoded_points() {
+    let mut rng = Rng::new(0xB0B);
+    for trial in 0..300 {
+        let space = random_space(&mut rng);
+        let unit: Vec<f64> = (0..space.dim()).map(|_| rng.f64()).collect();
+        let v = space.decode(&unit);
+        let v2 = space.decode(&space.encode(&v));
+        assert_eq!(v, v2, "trial {trial}: decode∘encode not idempotent");
+    }
+}
+
+#[test]
+fn prop_grid_points_are_valid_and_unique_for_discrete_spaces() {
+    let mut rng = Rng::new(0xC0DE);
+    for trial in 0..50 {
+        let space = random_space(&mut rng);
+        let g = space.grid(3);
+        assert_eq!(g.len(), 3usize.pow(space.dim() as u32), "trial {trial}");
+        for p in &g {
+            assert_eq!(*p, space.snap(p), "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn prop_lhs_stratification_all_dims_all_sizes() {
+    let mut rng = Rng::new(0xD1CE);
+    for _ in 0..40 {
+        let n = 2 + rng.below(200);
+        let d = 1 + rng.below(8);
+        let pts = lhs_design(n, d, &mut rng);
+        for dim in 0..d {
+            let mut strata: Vec<usize> =
+                pts.iter().map(|p| ((p[dim] * n as f64) as usize).min(n - 1)).collect();
+            strata.sort_unstable();
+            assert_eq!(strata, (0..n).collect::<Vec<_>>(), "n={n} d={d} dim={dim}");
+        }
+    }
+}
+
+#[test]
+fn prop_samplers_return_exact_count_in_unit_cube() {
+    let mut rng = Rng::new(0xE66);
+    for trial in 0..40 {
+        let space = random_space(&mut rng);
+        // Random history over the space.
+        let mut hist = Dataset::new();
+        for _ in 0..rng.below(300) {
+            let u: Vec<f64> = (0..space.dim()).map(|_| rng.f64()).collect();
+            let y = rng.uniform(0.0, 10.0);
+            hist.push(u, y);
+        }
+        let n_inputs = 1.min(space.dim());
+        let ctx = SampleCtx { space: &space, n_inputs, history: &hist };
+        let want = 1 + rng.below(100);
+        for sampler in [
+            &mut RandomSampler as &mut dyn Sampler,
+            &mut Hvs::hvs(),
+            &mut Hvs::hvsr(),
+        ] {
+            let batch = sampler.next_batch(want, &ctx, &mut rng);
+            assert_eq!(batch.len(), want, "trial {trial} {}", sampler.name());
+            for p in &batch {
+                assert_eq!(p.len(), space.dim());
+                assert!(p.iter().all(|v| (0.0..=1.0).contains(v)),
+                    "trial {trial} {} out of cube", sampler.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gbdt_predictions_always_finite_and_within_target_hull() {
+    let mut rng = Rng::new(0xF00D);
+    for trial in 0..25 {
+        let d = 1 + rng.below(5);
+        let n = 20 + rng.below(400);
+        let mut data = Dataset::new();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..n {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let y = rng.uniform(-3.0, 3.0);
+            lo = lo.min(y);
+            hi = hi.max(y);
+            data.push(x, y);
+        }
+        let mut m = Gbdt::new(GbdtParams { n_trees: 30, ..Default::default() });
+        m.fit(&data);
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let p = m.predict(&x);
+            assert!(p.is_finite(), "trial {trial}");
+            // Gradient boosting with shrinkage stays within a modest
+            // expansion of the target hull.
+            let span = (hi - lo).max(1e-9);
+            assert!(
+                p >= lo - span && p <= hi + span,
+                "trial {trial}: prediction {p} far outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cart_classification_predicts_a_training_class() {
+    let mut rng = Rng::new(0x9A9);
+    for trial in 0..40 {
+        let n = 10 + rng.below(200);
+        let classes: Vec<f64> = (0..1 + rng.below(5)).map(|c| c as f64).collect();
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = (0..n).map(|_| *rng.choice(&classes)).collect();
+        let mut t = Cart::new(CartParams {
+            task: TaskKind::Classification,
+            ..Default::default()
+        });
+        t.fit(&x, &y);
+        for _ in 0..30 {
+            let q = vec![rng.f64(), rng.f64()];
+            let p = t.predict(&q);
+            assert!(classes.contains(&p), "trial {trial}: class {p} not in training set");
+        }
+    }
+}
+
+#[test]
+fn prop_nsga2_never_leaves_unit_cube_and_improves() {
+    let mut rng = Rng::new(0xAB1E);
+    for trial in 0..20 {
+        let d = 1 + rng.below(6);
+        let target: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let t2 = target.clone();
+        let f = move |x: &[f64]| -> f64 {
+            x.iter().zip(&t2).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let ga = Nsga2::new(Nsga2Params { pop_size: 16, generations: 15, ..Default::default() });
+        let fr = &f;
+        let obj = move |x: &[f64]| fr(x);
+        let (best, val) = ga.minimize(d, &obj, &[], &mut rng);
+        assert!(best.iter().all(|v| (0.0..=1.0).contains(v)), "trial {trial}");
+        // Must beat the expected value of a random point (d/6 on average).
+        assert!(val < d as f64 / 6.0, "trial {trial}: val {val} for dim {d}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.bool(0.5)),
+            2 => json::Value::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => json::Value::Str(format!("s{}-\"quote\"\n", rng.below(1000))),
+            4 => json::Value::Arr(
+                (0..rng.below(5)).map(|_| random_value(rng, depth + 1)).collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), random_value(rng, depth + 1));
+                }
+                json::Value::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::new(0x15EA5E);
+    for trial in 0..200 {
+        let v = random_value(&mut rng, 0);
+        let compact = json::parse(&v.to_string());
+        let pretty = json::parse(&v.to_pretty());
+        assert_eq!(compact.as_ref().ok(), Some(&v), "trial {trial} compact");
+        assert_eq!(pretty.as_ref().ok(), Some(&v), "trial {trial} pretty");
+    }
+}
+
+#[test]
+fn prop_hvs_constant_objective_degrades_gracefully() {
+    // All-identical objectives -> zero variance everywhere -> sampler
+    // must still return the requested batch (uniform fallback).
+    let mut rng = Rng::new(0x5A5A);
+    let space = ParamSpace::new(vec![
+        ParamDef::float("a", 0.0, 1.0),
+        ParamDef::float("b", 0.0, 1.0),
+    ]);
+    let mut hist = Dataset::new();
+    for _ in 0..200 {
+        hist.push(vec![rng.f64(), rng.f64()], 1.0);
+    }
+    let ctx = SampleCtx { space: &space, n_inputs: 1, history: &hist };
+    let batch = Hvs::hvs().next_batch(64, &ctx, &mut rng);
+    assert_eq!(batch.len(), 64);
+}
+
+#[test]
+fn prop_pdgeqrf_reformulation_constraints_hold_everywhere() {
+    use mlkaps::kernels::pdgeqrf_sim::{concretize, PdgeqrfSim, MAX_PER_NODE};
+    use mlkaps::kernels::Kernel;
+    let sim = PdgeqrfSim::new(0);
+    let mut rng = Rng::new(0x7777);
+    for _ in 0..2000 {
+        let iu: Vec<f64> = (0..2).map(|_| rng.f64()).collect();
+        let du: Vec<f64> = (0..4).map(|_| rng.f64()).collect();
+        let input = sim.input_space().decode(&iu);
+        let design = sim.design_space().decode(&du);
+        let c = concretize(&input, &design);
+        assert!(c.mb >= 1.0 && c.mb <= (input[0] / (8.0 * c.p)).max(1.0) + 0.5);
+        assert!(c.npernode >= c.p && c.npernode <= MAX_PER_NODE);
+        assert!(c.nb >= 1.0 && c.nb <= 16.0);
+        let t = sim.eval_true(&input, &design);
+        assert!(t.is_finite() && t > 0.0);
+    }
+}
+
+#[test]
+fn prop_kind_cardinality_consistent_with_decode_range() {
+    let mut rng = Rng::new(0x31337);
+    for _ in 0..100 {
+        let space = random_space(&mut rng);
+        for p in &space.params {
+            if let Some(card) = p.cardinality() {
+                // Sample decode outputs; distinct values must not exceed
+                // the declared cardinality.
+                let mut seen = std::collections::BTreeSet::new();
+                for i in 0..200 {
+                    let u = i as f64 / 199.0;
+                    seen.insert(p.decode(u).to_bits());
+                }
+                assert!(seen.len() as u64 <= card, "{:?}", p.kind);
+                if card <= 200 {
+                    assert_eq!(seen.len() as u64, card, "{:?}", p.kind);
+                }
+            }
+            match &p.kind {
+                ParamKind::Float { .. } => {}
+                _ => assert!(p.cardinality().is_some()),
+            }
+        }
+    }
+}
