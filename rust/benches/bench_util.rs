@@ -13,13 +13,34 @@ use mlkaps::report;
 /// True when the bench was invoked with `--full` (or BENCH_FULL=1).
 pub fn full_mode() -> bool {
     std::env::args().any(|a| a == "--full")
-        || std::env::var("BENCH_FULL").map_or(false, |v| v == "1")
+        || std::env::var("BENCH_FULL").is_ok_and(|v| v == "1")
 }
 
-/// Scale a paper-sized budget down in fast mode.
+/// True when invoked with `--smoke` (or BENCH_SMOKE=1): minimal budgets so
+/// CI can exercise the bench end-to-end and archive its CSV in seconds.
+/// Smoke numbers are a regression *trail*, not meaningful measurements.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
+/// Scale a paper-sized budget down in fast mode (and further in smoke).
 pub fn budget(paper: usize, fast: usize) -> usize {
     if full_mode() {
         paper
+    } else if smoke_mode() {
+        (fast / 8).max(2)
+    } else {
+        fast
+    }
+}
+
+/// Pick one of the three mode budgets explicitly.
+pub fn budget3(paper: usize, fast: usize, smoke: usize) -> usize {
+    if full_mode() {
+        paper
+    } else if smoke_mode() {
+        smoke
     } else {
         fast
     }
@@ -35,8 +56,14 @@ pub fn header(fig: &str, what: &str) {
     println!("==============================================================");
     println!("{fig}: {what}");
     println!(
-        "mode: {} (pass --full for paper-scale budgets)",
-        if full_mode() { "FULL" } else { "fast" }
+        "mode: {} (pass --full for paper-scale budgets, --smoke for CI)",
+        if full_mode() {
+            "FULL"
+        } else if smoke_mode() {
+            "smoke"
+        } else {
+            "fast"
+        }
     );
     println!("==============================================================");
 }

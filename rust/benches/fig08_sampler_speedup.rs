@@ -6,7 +6,8 @@
 //! strategy at every budget and reaches ×~1.3 at 30k; HVS is WORSE than
 //! plain random for tuning despite its better global accuracy (Fig 6).
 //!
-//! Run: `cargo bench --bench fig08_sampler_speedup [-- --full]`
+//! Run: `cargo bench --bench fig08_sampler_speedup [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -21,12 +22,15 @@ use mlkaps::report;
 fn main() {
     header("Fig 8", "sampler x sample-count tuning speedup vs MKL (dgetrf-sim/SPR)");
     let kernel = Blas3Sim::new(FactKind::Lu, HardwareProfile::spr(), 8);
-    let val_grid = budget(46, 16);
+    let val_grid = budget3(46, 16, 6);
     let counts: Vec<usize> = if full_mode() {
         vec![7_000, 15_000, 30_000]
+    } else if smoke_mode() {
+        vec![150, 300]
     } else {
         vec![1_000, 2_000, 4_000]
     };
+    let opt_grid = budget3(16, 16, 6);
     let samplers = [
         SamplerChoice::Random,
         SamplerChoice::Lhs,
@@ -42,7 +46,7 @@ fn main() {
                 total_samples: n,
                 batch_size: 500,
                 sampler: sampler.clone(),
-                opt_grid: 16,
+                opt_grid,
                 tree_depth: 8,
                 seed: 8,
                 ..Default::default()

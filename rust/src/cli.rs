@@ -5,15 +5,22 @@
 //! mlkaps kernels                         list tunable kernels
 //! mlkaps tune --kernel dgetrf-spr --samples 2000 [--sampler ga-adaptive]
 //!             [--grid 16] [--depth 8] [--seed 0] [--threads N]
+//!             [--checkpoint-dir DIR | --resume DIR]
 //!             [--validate 16] [--emit-c out.c] [--save-model model.json]
 //!             [--out results/tune.json]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
+//!
+//! `--checkpoint-dir DIR` makes the run resumable: every pipeline stage
+//! writes a versioned artifact into DIR and a rerun (or `--resume DIR`,
+//! an alias) skips any stage whose checkpoint is valid for the same
+//! config + kernel. See [`crate::pipeline::checkpoint`].
 
 use std::collections::HashMap;
 
 use crate::kernels::hardware::HardwareProfile;
 use crate::kernels::{blas3sim, pdgeqrf_sim, toy_sum, Kernel};
+use crate::pipeline::checkpoint::PipelineRun;
 use crate::pipeline::evaluate::SpeedupMap;
 use crate::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
 use crate::report;
@@ -117,7 +124,23 @@ fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
         cfg.opt_grid,
         cfg.tree_depth
     );
-    let model = Mlkaps::new(cfg).tune(kernel.as_ref());
+    let ckpt_dir = flags.get("checkpoint-dir").or_else(|| flags.get("resume")).cloned();
+    let ckpt_run = ckpt_dir.map(|dir| PipelineRun::new(cfg.clone(), dir));
+    let model = match &ckpt_run {
+        Some(run) => {
+            let out = run.run(kernel.as_ref())?;
+            for status in &out.stages {
+                let how = if status.loaded {
+                    "resumed from checkpoint"
+                } else {
+                    "computed + saved"
+                };
+                eprintln!("stage {:<13} {how} in {:.2}s", status.stage.name(), status.secs);
+            }
+            out.model
+        }
+        None => Mlkaps::new(cfg).tune(kernel.as_ref()),
+    };
     let st = &model.stats;
     eprintln!(
         "phases: sampling {:.1}s | modeling {:.1}s | optimizing {:.1}s | trees {:.2}s | model {}",
@@ -134,6 +157,10 @@ fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
             let map = SpeedupMap::build(kernel.as_ref(), g, &|input| model.predict(input));
             println!("{}", report::heatmap(&map));
             println!("validation: {}", map.summary());
+            if let Some(run) = &ckpt_run {
+                run.write_artifact("validation.json", &map.to_json())?;
+                eprintln!("wrote validation map to {}", run.dir.join("validation.json").display());
+            }
         } else {
             eprintln!("kernel has no reference design; skipping validation");
         }

@@ -258,6 +258,58 @@ impl ParamSpace {
         self.params.iter().map(|p| p.bounds()).collect()
     }
 
+    /// Parse a space serialized with [`ParamSpace::to_json`]. Malformed
+    /// documents return `Err` (never panic) so checkpoint loaders can fall
+    /// back to recomputation.
+    pub fn from_json(v: &Value) -> Result<ParamSpace, String> {
+        let arr = v.as_arr().ok_or("space must be an array")?;
+        let params = arr
+            .iter()
+            .map(|p| -> Result<ParamDef, String> {
+                let name = p.get("name").and_then(|n| n.as_str()).ok_or("no name")?;
+                let kind = match p.get("kind").and_then(|k| k.as_str()) {
+                    Some("float") => {
+                        let lo = p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")?;
+                        let hi = p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")?;
+                        if lo.is_nan() || hi.is_nan() || lo >= hi {
+                            return Err(format!("{name}: empty float range"));
+                        }
+                        let log = p.get("log").and_then(|x| x.as_bool()).unwrap_or(false);
+                        if log && lo <= 0.0 {
+                            return Err(format!("{name}: log range needs lo > 0"));
+                        }
+                        ParamKind::Float { lo, hi, log }
+                    }
+                    Some("int") => {
+                        let lo = p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")? as i64;
+                        let hi = p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")? as i64;
+                        if lo > hi {
+                            return Err(format!("{name}: empty int range"));
+                        }
+                        ParamKind::Int { lo, hi }
+                    }
+                    Some("categorical") => {
+                        let choices: Vec<String> = p
+                            .get("choices")
+                            .and_then(|c| c.as_arr())
+                            .ok_or("no choices")?
+                            .iter()
+                            .map(|c| c.as_str().map(str::to_string).ok_or("bad choice"))
+                            .collect::<Result<_, _>>()?;
+                        if choices.is_empty() {
+                            return Err(format!("{name}: no choices"));
+                        }
+                        ParamKind::Categorical { choices }
+                    }
+                    Some("bool") => ParamKind::Bool,
+                    other => return Err(format!("unknown kind {other:?}")),
+                };
+                Ok(ParamDef { name: name.to_string(), kind })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ParamSpace::new(params))
+    }
+
     /// Serialize the space description to JSON (for experiment records).
     pub fn to_json(&self) -> Value {
         Value::Arr(
@@ -429,5 +481,29 @@ mod tests {
             back.idx(0).unwrap().get("name").unwrap().as_str(),
             Some("x")
         );
+    }
+
+    #[test]
+    fn json_roundtrip_full_space() {
+        let s = space();
+        let back = ParamSpace::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert!(ParamSpace::from_json(&Value::Null).is_err());
+        assert!(ParamSpace::from_json(&Value::Arr(vec![Value::obj(vec![(
+            "name",
+            Value::Str("p".into()),
+        )])]))
+        .is_err());
+        // Constructor invariants hold through deserialization too: empty
+        // ranges/choice lists must be rejected, not loaded as panic bombs.
+        for bad in [
+            r#"[{"name":"c","kind":"categorical","choices":[]}]"#,
+            r#"[{"name":"f","kind":"float","lo":2.0,"hi":1.0}]"#,
+            r#"[{"name":"i","kind":"int","lo":5,"hi":1}]"#,
+            r#"[{"name":"l","kind":"float","lo":-1.0,"hi":1.0,"log":true}]"#,
+        ] {
+            let doc = crate::util::json::parse(bad).unwrap();
+            assert!(ParamSpace::from_json(&doc).is_err(), "{bad}");
+        }
     }
 }

@@ -3,7 +3,7 @@
 //! that round-trips the full [`DesignTrees`] model (trees + both spaces),
 //! so a tuned model can be saved, shipped and reloaded without retuning.
 
-use crate::config::space::{ParamDef, ParamKind, ParamSpace};
+use crate::config::space::ParamSpace;
 use crate::dtree::cart::{Cart, CartNode, CartParams, TaskKind};
 use crate::dtree::DesignTrees;
 use crate::util::json::{parse, Value};
@@ -73,40 +73,6 @@ fn cart_from_json(v: &Value) -> Result<Cart, String> {
     Ok(Cart { params, nodes })
 }
 
-fn space_from_json(v: &Value) -> Result<ParamSpace, String> {
-    let arr = v.as_arr().ok_or("space must be an array")?;
-    let params = arr
-        .iter()
-        .map(|p| -> Result<ParamDef, String> {
-            let name = p.get("name").and_then(|n| n.as_str()).ok_or("no name")?;
-            let kind = match p.get("kind").and_then(|k| k.as_str()) {
-                Some("float") => ParamKind::Float {
-                    lo: p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")?,
-                    hi: p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")?,
-                    log: p.get("log").and_then(|x| x.as_bool()).unwrap_or(false),
-                },
-                Some("int") => ParamKind::Int {
-                    lo: p.get("lo").and_then(|x| x.as_f64()).ok_or("no lo")? as i64,
-                    hi: p.get("hi").and_then(|x| x.as_f64()).ok_or("no hi")? as i64,
-                },
-                Some("categorical") => ParamKind::Categorical {
-                    choices: p
-                        .get("choices")
-                        .and_then(|c| c.as_arr())
-                        .ok_or("no choices")?
-                        .iter()
-                        .filter_map(|c| c.as_str().map(str::to_string))
-                        .collect(),
-                },
-                Some("bool") => ParamKind::Bool,
-                other => return Err(format!("unknown kind {other:?}")),
-            };
-            Ok(ParamDef { name: name.to_string(), kind })
-        })
-        .collect::<Result<Vec<_>, _>>()?;
-    Ok(ParamSpace::new(params))
-}
-
 impl DesignTrees {
     /// Serialize the full model (trees + spaces) to JSON.
     pub fn to_json(&self) -> Value {
@@ -126,9 +92,10 @@ impl DesignTrees {
         if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-design-trees-v1") {
             return Err("unknown model format".into());
         }
-        let input_space = space_from_json(v.get("input_space").ok_or("no input_space")?)?;
+        let input_space =
+            ParamSpace::from_json(v.get("input_space").ok_or("no input_space")?)?;
         let design_space =
-            space_from_json(v.get("design_space").ok_or("no design_space")?)?;
+            ParamSpace::from_json(v.get("design_space").ok_or("no design_space")?)?;
         let trees = v
             .get("trees")
             .and_then(|a| a.as_arr())

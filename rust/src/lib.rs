@@ -24,9 +24,15 @@
 //!   spot) and the *real* Pallas blocked-LU kernel timed via PJRT.
 //! * [`baselines`] — Optuna-like (TPE + CMA-ES) and GPTune-like (LMC
 //!   multitask Gaussian processes + TLA2) comparators.
-//! * [`pipeline`] — the MLKAPS workflow: sample → model → optimize → trees,
-//!   plus the expert-knowledge combiner.
-//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`pipeline`] — the MLKAPS workflow as four standalone stages
+//!   (sample → surrogate → grid-optimize → trees), the expert-knowledge
+//!   combiner, and [`pipeline::checkpoint`]: a resumable executor that
+//!   stores every stage as a versioned JSON artifact, shards the
+//!   grid-optimization stage with deterministic per-point seeding, and
+//!   skips any stage whose checkpoint matches the run fingerprint
+//!   (`mlkaps tune --checkpoint-dir DIR`).
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
+//!   (stubbed unless built with the `pjrt` feature).
 //! * [`report`] — ASCII tables / CSV emission for the figure benches.
 
 pub mod baselines;

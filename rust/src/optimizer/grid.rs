@@ -6,6 +6,7 @@
 use crate::config::space::ParamSpace;
 use crate::optimizer::nsga2::Nsga2;
 use crate::surrogate::Surrogate;
+use crate::util::json::Value;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 
@@ -20,26 +21,92 @@ pub struct GridOptResult {
     pub predicted: Vec<f64>,
 }
 
-/// Run the GA on every grid point (parallel across points).
-///
-/// `seeds` optionally injects known designs (expert knowledge / incumbent
-/// configurations) into each GA's initial population, in value space.
-pub fn optimize_grid(
+/// Serialize an array of f64 rows (shared with the checkpoint shard writer).
+pub(crate) fn rows_to_json(rows: &[Vec<f64>]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| Value::Arr(r.iter().map(|&v| Value::Num(v)).collect()))
+            .collect(),
+    )
+}
+
+/// Parse an array of f64 rows (shared with the checkpoint shard loader).
+pub(crate) fn rows_from_json(v: &Value) -> Result<Vec<Vec<f64>>, String> {
+    v.as_arr()
+        .ok_or("expected an array of rows")?
+        .iter()
+        .map(|row| -> Result<Vec<f64>, String> {
+            row.as_arr()
+                .ok_or_else(|| "bad row".to_string())?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| "bad number".to_string()))
+                .collect()
+        })
+        .collect()
+}
+
+/// Parse an array of f64 scalars (shared with the checkpoint shard loader).
+pub(crate) fn scalars_from_json(v: &Value) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or("expected an array of numbers")?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| "bad number".to_string()))
+        .collect()
+}
+
+impl GridOptResult {
+    /// Serialize the grid result to a versioned JSON checkpoint.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str("mlkaps-grid-v1".into())),
+            ("inputs", rows_to_json(&self.inputs)),
+            ("designs", rows_to_json(&self.designs)),
+            (
+                "predicted",
+                Value::Arr(self.predicted.iter().map(|&v| Value::Num(v)).collect()),
+            ),
+        ])
+    }
+
+    /// Reload a grid result serialized with [`GridOptResult::to_json`].
+    pub fn from_json(v: &Value) -> Result<GridOptResult, String> {
+        if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-grid-v1") {
+            return Err("unknown grid format".into());
+        }
+        let inputs = rows_from_json(v.get("inputs").ok_or("grid missing inputs")?)?;
+        let designs = rows_from_json(v.get("designs").ok_or("grid missing designs")?)?;
+        let predicted =
+            scalars_from_json(v.get("predicted").ok_or("grid missing predicted")?)?;
+        let n = inputs.len();
+        if inputs.is_empty() || designs.len() != n || predicted.len() != n {
+            return Err("grid arrays are empty or inconsistent".into());
+        }
+        Ok(GridOptResult { inputs, designs, predicted })
+    }
+}
+
+/// Run the GA on a contiguous shard of grid points (parallel across the
+/// shard's points). `base_idx` is the global grid index of `inputs[0]`:
+/// each point's RNG stream is seeded from its **global** index, so shard
+/// boundaries and thread counts never change the result — a sharded or
+/// resumed run is bit-identical to a single-shot one.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_grid_shard(
     surrogate: &(dyn Surrogate + Sync),
-    input_space: &ParamSpace,
     design_space: &ParamSpace,
-    grid_per_dim: usize,
+    inputs: &[Vec<f64>],
+    base_idx: usize,
     ga: &Nsga2,
     seeds: &[Vec<f64>],
     threads: usize,
     seed: u64,
-) -> GridOptResult {
-    let inputs = input_space.grid(grid_per_dim);
+) -> (Vec<Vec<f64>>, Vec<f64>) {
     let unit_seeds: Vec<Vec<f64>> =
         seeds.iter().map(|s| design_space.encode(s)).collect();
 
-    let results = par_map(&inputs, threads, |idx, input| {
-        let mut rng = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9E37_79B9));
+    let results = par_map(inputs, threads, |idx, input| {
+        let gidx = (base_idx + idx) as u64;
+        let mut rng = Rng::new(seed ^ gidx.wrapping_mul(0x9E37_79B9));
         let f = |design_unit: &[f64]| {
             let design = design_space.snap(&design_space.decode(design_unit));
             let mut x = input.clone();
@@ -51,7 +118,27 @@ pub fn optimize_grid(
         (design, best_val)
     });
 
-    let (designs, predicted): (Vec<_>, Vec<_>) = results.into_iter().unzip();
+    results.into_iter().unzip()
+}
+
+/// Run the GA on every grid point (parallel across points).
+///
+/// `seeds` optionally injects known designs (expert knowledge / incumbent
+/// configurations) into each GA's initial population, in value space.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_grid(
+    surrogate: &(dyn Surrogate + Sync),
+    input_space: &ParamSpace,
+    design_space: &ParamSpace,
+    grid_per_dim: usize,
+    ga: &Nsga2,
+    seeds: &[Vec<f64>],
+    threads: usize,
+    seed: u64,
+) -> GridOptResult {
+    let inputs = input_space.grid(grid_per_dim);
+    let (designs, predicted) =
+        optimize_grid_shard(surrogate, design_space, &inputs, 0, ga, seeds, threads, seed);
     GridOptResult { inputs, designs, predicted }
 }
 
@@ -109,6 +196,55 @@ mod tests {
             assert_eq!(d[0], d[0].round(), "int design must be integral");
             assert_eq!(d[0], 5.0);
         }
+    }
+
+    #[test]
+    fn sharding_and_thread_count_do_not_change_results() {
+        let input = ParamSpace::new(vec![ParamDef::float("x", 0.0, 1.0)]);
+        let design = ParamSpace::new(vec![ParamDef::float("t", 0.0, 1.0)]);
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 12,
+            generations: 8,
+            ..Default::default()
+        });
+        let full = optimize_grid(&Analytic, &input, &design, 9, &ga, &[], 1, 33);
+
+        // Same grid split into unequal shards, with a different thread
+        // count: per-point global-index seeding must make it identical.
+        let inputs = input.grid(9);
+        let mut designs = Vec::new();
+        let mut predicted = Vec::new();
+        for (base, end) in [(0usize, 4usize), (4, 7), (7, 9)] {
+            let (d, p) = optimize_grid_shard(
+                &Analytic,
+                &design,
+                &inputs[base..end],
+                base,
+                &ga,
+                &[],
+                4,
+                33,
+            );
+            designs.extend(d);
+            predicted.extend(p);
+        }
+        assert_eq!(designs, full.designs);
+        assert_eq!(predicted, full.predicted);
+    }
+
+    #[test]
+    fn grid_result_json_roundtrip() {
+        let input = ParamSpace::new(vec![ParamDef::float("x", 0.0, 1.0)]);
+        let design = ParamSpace::new(vec![ParamDef::int("t", 1, 8)]);
+        let ga = Nsga2::new(Nsga2Params::default());
+        let res = optimize_grid(&Analytic, &input, &design, 4, &ga, &[], 1, 5);
+        let text = res.to_json().to_string();
+        let back =
+            GridOptResult::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.inputs, res.inputs);
+        assert_eq!(back.designs, res.designs);
+        assert_eq!(back.predicted, res.predicted);
+        assert!(GridOptResult::from_json(&crate::util::json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

@@ -1,0 +1,686 @@
+//! Checkpointed, resumable pipeline execution.
+//!
+//! The paper designs each pipeline module as "a standalone unit, whose
+//! results can be stored and quick-loaded for restarting the pipeline at a
+//! given step". [`PipelineRun`] implements exactly that: every stage emits
+//! a versioned JSON artifact (via [`crate::util::json`]) into a checkpoint
+//! directory, and a later run with the same fingerprint (config + kernel
+//! identity) loads whatever is already on disk instead of recomputing it —
+//! a crash or a config-compatible restart only re-pays the unfinished
+//! stages.
+//!
+//! Checkpoint directory layout:
+//!
+//! ```text
+//! <dir>/checkpoint.json         run fingerprint + format version
+//! <dir>/stage1_dataset.json     sampled history (unit) + dataset (value)
+//! <dir>/stage2_surrogate.json   fitted GBDT ensemble (log objective)
+//! <dir>/stage3_shard_NNNN.json  per-shard GA results (grid optimization)
+//! <dir>/stage3_grid.json        assembled optimization-grid result
+//! <dir>/stage4_trees.json       final decision trees
+//! ```
+//!
+//! Consistency: stages 2-4 are stored in an envelope carrying a hash of
+//! the upstream artifact's bytes, so a lost or recomputed upstream stage
+//! transitively invalidates everything fit on it — a checkpoint directory
+//! can never assemble a [`TunedModel`] whose parts disagree.
+//!
+//! Determinism: the grid-optimization stage shards the grid into
+//! fixed-size chunks and seeds every grid point's GA from its **global**
+//! index ([`crate::optimizer::grid::optimize_grid_shard`]), so a resumed
+//! run — even with a different `--threads` — produces a bit-identical
+//! [`TunedModel`] to an uninterrupted one. Freshly computed stages are
+//! written and immediately reloaded, so a run's downstream stages always
+//! consume the checkpointed representation: resumed and uninterrupted runs
+//! see byte-identical inputs by construction.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::config::space::ParamSpace;
+use crate::data::Dataset;
+use crate::dtree::DesignTrees;
+use crate::kernels::Kernel;
+use crate::optimizer::grid::{
+    optimize_grid_shard, rows_from_json, rows_to_json, scalars_from_json, GridOptResult,
+};
+use crate::optimizer::nsga2::Nsga2;
+use crate::pipeline::{GRID_SEED_SALT, Mlkaps, MlkapsConfig, PipelineStats, TunedModel};
+use crate::surrogate::gbdt::Gbdt;
+use crate::surrogate::LogSurrogate;
+use crate::util::json::{parse, Value};
+
+/// Checkpoint format version (bump on any incompatible layout change).
+pub const FORMAT: &str = "mlkaps-checkpoint-v1";
+
+/// Stage-envelope format: wraps stage 2-4 payloads with the hash of the
+/// upstream artifact they were computed from.
+const STAGE_FORMAT: &str = "mlkaps-stage-envelope-v1";
+
+/// Default grid points per optimization shard (checkpoint granularity).
+pub const SHARD_SIZE: usize = 64;
+
+const META_FILE: &str = "checkpoint.json";
+const STAGE1_FILE: &str = "stage1_dataset.json";
+const STAGE2_FILE: &str = "stage2_surrogate.json";
+const STAGE3_FILE: &str = "stage3_grid.json";
+const STAGE4_FILE: &str = "stage4_trees.json";
+const VALIDATION_FILE: &str = "validation.json";
+
+/// The four pipeline stages, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    Sample,
+    Surrogate,
+    GridOptimize,
+    Trees,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] =
+        [Stage::Sample, Stage::Surrogate, Stage::GridOptimize, Stage::Trees];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Sample => "sample",
+            Stage::Surrogate => "surrogate",
+            Stage::GridOptimize => "grid-optimize",
+            Stage::Trees => "trees",
+        }
+    }
+}
+
+/// How one stage was satisfied during a checkpointed run.
+#[derive(Clone, Debug)]
+pub struct StageStatus {
+    pub stage: Stage,
+    /// True when the stage was loaded from a valid checkpoint instead of
+    /// being computed.
+    pub loaded: bool,
+    /// Wall-clock seconds spent on the stage (loading or computing).
+    pub secs: f64,
+}
+
+/// Outcome of a checkpointed run: the tuned model plus the per-stage
+/// load/compute record.
+pub struct CheckpointedRun {
+    pub model: TunedModel,
+    pub stages: Vec<StageStatus>,
+}
+
+/// FNV-1a 64-bit hash — stable across platforms and processes (unlike
+/// `DefaultHasher`), which checkpoint fingerprints require.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of everything that determines the pipeline result: the
+/// config (minus the thread count, which never changes results) and the
+/// kernel identity (name + both parameter spaces). Checkpoints from a
+/// different fingerprint are stale and get recomputed.
+pub fn fingerprint(config: &MlkapsConfig, kernel: &dyn Kernel) -> String {
+    let canon = format!(
+        "v1|samples={}|batch={}|sampler={}|gbdt={:?}|ga={:?}|grid={}|depth={}|seed={}|kernel={}|in={}|design={}",
+        config.total_samples,
+        config.batch_size,
+        config.sampler.name(),
+        config.gbdt,
+        config.ga,
+        config.opt_grid,
+        config.tree_depth,
+        config.seed,
+        kernel.name(),
+        kernel.input_space().to_json().to_string(),
+        kernel.design_space().to_json().to_string(),
+    );
+    format!("{:016x}", fnv1a(canon.as_bytes()))
+}
+
+fn shard_file(shard: usize) -> String {
+    format!("stage3_shard_{shard:04}.json")
+}
+
+/// Wrap a stage payload with its upstream-artifact hash.
+fn envelope(stage: Stage, upstream: &str, payload: Value) -> Value {
+    Value::obj(vec![
+        ("format", Value::Str(STAGE_FORMAT.into())),
+        ("stage", Value::Str(stage.name().into())),
+        ("upstream", Value::Str(upstream.into())),
+        ("payload", payload),
+    ])
+}
+
+/// Unwrap a stage envelope, validating stage identity and the upstream
+/// hash. `None` means "not a valid checkpoint for this chain state".
+fn open_envelope<'a>(v: &'a Value, stage: Stage, upstream: &str) -> Option<&'a Value> {
+    if v.get("format").and_then(|f| f.as_str()) != Some(STAGE_FORMAT) {
+        return None;
+    }
+    if v.get("stage").and_then(|s| s.as_str()) != Some(stage.name()) {
+        return None;
+    }
+    if v.get("upstream").and_then(|u| u.as_str()) != Some(upstream) {
+        return None;
+    }
+    v.get("payload")
+}
+
+fn shard_to_json(base: usize, designs: &[Vec<f64>], predicted: &[f64]) -> Value {
+    Value::obj(vec![
+        ("format", Value::Str("mlkaps-stage3-shard-v1".into())),
+        ("base", Value::Num(base as f64)),
+        ("designs", rows_to_json(designs)),
+        (
+            "predicted",
+            Value::Arr(predicted.iter().map(|&v| Value::Num(v)).collect()),
+        ),
+    ])
+}
+
+fn load_shard(v: &Value, base: usize, count: usize) -> Result<(Vec<Vec<f64>>, Vec<f64>), String> {
+    if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-stage3-shard-v1") {
+        return Err("unknown shard format".into());
+    }
+    if v.get("base").and_then(|b| b.as_usize()) != Some(base) {
+        return Err("shard base mismatch".into());
+    }
+    let designs = rows_from_json(v.get("designs").ok_or("shard missing designs")?)?;
+    let predicted = scalars_from_json(v.get("predicted").ok_or("shard missing predicted")?)?;
+    if designs.len() != count || predicted.len() != count {
+        return Err(format!("shard holds {} points, expected {count}", designs.len()));
+    }
+    Ok((designs, predicted))
+}
+
+fn load_stage1(v: &Value, want_samples: usize) -> Result<Dataset, String> {
+    if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-stage1-v1") {
+        return Err("unknown stage1 format".into());
+    }
+    let d = Dataset::from_json(v.get("dataset").ok_or("stage1 missing dataset")?)?;
+    if d.len() != want_samples {
+        return Err(format!("stage1 has {} samples, config wants {want_samples}", d.len()));
+    }
+    Ok(d)
+}
+
+/// Checkpoint-aware pipeline driver: [`Mlkaps`] plus a checkpoint
+/// directory. Construction is cheap; all I/O happens in [`PipelineRun::run`].
+pub struct PipelineRun {
+    pub pipeline: Mlkaps,
+    pub dir: PathBuf,
+    /// Grid points per stage-3 shard checkpoint. Any value produces
+    /// identical results; smaller shards checkpoint more often.
+    pub shard_size: usize,
+}
+
+impl PipelineRun {
+    pub fn new(config: MlkapsConfig, dir: impl Into<PathBuf>) -> PipelineRun {
+        PipelineRun { pipeline: Mlkaps::new(config), dir: dir.into(), shard_size: SHARD_SIZE }
+    }
+
+    fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    fn read_stage(&self, file: &str) -> Option<Value> {
+        let text = std::fs::read_to_string(self.path(file)).ok()?;
+        parse(&text).ok()
+    }
+
+    /// FNV-1a hash (hex) of a stage file's bytes on disk — the upstream
+    /// link of the consistency chain. `None` when the file is unreadable.
+    fn file_hash(&self, file: &str) -> Option<String> {
+        let bytes = std::fs::read(self.path(file)).ok()?;
+        Some(format!("{:016x}", fnv1a(&bytes)))
+    }
+
+    /// Write an artifact into the checkpoint directory atomically
+    /// (write-then-rename), so a kill mid-write never leaves a truncated
+    /// file that happens to parse as valid JSON.
+    pub fn write_artifact(&self, file: &str, v: &Value) -> Result<(), String> {
+        let tmp = self.path(&format!("{file}.tmp"));
+        std::fs::write(&tmp, v.to_string()).map_err(|e| format!("write {file}: {e}"))?;
+        std::fs::rename(&tmp, self.path(file)).map_err(|e| format!("commit {file}: {e}"))
+    }
+
+    /// Create/validate the checkpoint directory for this config + kernel.
+    /// A fingerprint mismatch wipes stale stage files before proceeding.
+    fn ensure_dir(&self, kernel: &dyn Kernel) -> Result<(), String> {
+        std::fs::create_dir_all(&self.dir).map_err(|e| format!("checkpoint dir: {e}"))?;
+        let fp = fingerprint(&self.pipeline.config, kernel);
+        let current = self.read_stage(META_FILE).and_then(|v| {
+            if v.get("format").and_then(|f| f.as_str()) != Some(FORMAT) {
+                return None;
+            }
+            v.get("fingerprint").and_then(|f| f.as_str()).map(str::to_string)
+        });
+        if current.as_deref() != Some(fp.as_str()) {
+            self.clear_stage_files()?;
+            let meta = Value::obj(vec![
+                ("format", Value::Str(FORMAT.into())),
+                ("fingerprint", Value::Str(fp)),
+                ("kernel", Value::Str(kernel.name().into())),
+            ]);
+            self.write_artifact(META_FILE, &meta)?;
+        }
+        Ok(())
+    }
+
+    fn clear_stage_files(&self) -> Result<(), String> {
+        let entries = std::fs::read_dir(&self.dir).map_err(|e| e.to_string())?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let is_stage = name.starts_with("stage") && name.ends_with(".json");
+            if is_stage || name == VALIDATION_FILE {
+                std::fs::remove_file(entry.path()).map_err(|e| e.to_string())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage 1: adaptive sampling (checkpointed as one atomic unit; its
+    /// upstream is the run fingerprint, guarded by [`Self::ensure_dir`]).
+    fn stage_sample(&self, kernel: &dyn Kernel) -> Result<(Dataset, StageStatus), String> {
+        let t0 = Instant::now();
+        let want = self.pipeline.config.total_samples;
+        if let Some(v) = self.read_stage(STAGE1_FILE) {
+            if let Ok(d) = load_stage1(&v, want) {
+                let secs = t0.elapsed().as_secs_f64();
+                return Ok((d, StageStatus { stage: Stage::Sample, loaded: true, secs }));
+            }
+        }
+        let (history, dataset) = self.pipeline.sample_phase(kernel);
+        let v = Value::obj(vec![
+            ("format", Value::Str("mlkaps-stage1-v1".into())),
+            ("history", history.to_json()),
+            ("dataset", dataset.to_json()),
+        ]);
+        self.write_artifact(STAGE1_FILE, &v)?;
+        let v = self.read_stage(STAGE1_FILE).ok_or("reload stage1 checkpoint")?;
+        let dataset = load_stage1(&v, want)?;
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((dataset, StageStatus { stage: Stage::Sample, loaded: false, secs }))
+    }
+
+    /// Stage 2: final surrogate fit (upstream: the stage-1 artifact).
+    fn stage_surrogate(
+        &self,
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+        dataset: &Dataset,
+    ) -> Result<(LogSurrogate<Gbdt>, StageStatus), String> {
+        let t0 = Instant::now();
+        let up = self.file_hash(STAGE1_FILE).ok_or("stage1 checkpoint missing")?;
+        if let Some(v) = self.read_stage(STAGE2_FILE) {
+            if let Some(g) =
+                open_envelope(&v, Stage::Surrogate, &up).and_then(|p| Gbdt::from_json(p).ok())
+            {
+                let secs = t0.elapsed().as_secs_f64();
+                return Ok((
+                    LogSurrogate::new(g),
+                    StageStatus { stage: Stage::Surrogate, loaded: true, secs },
+                ));
+            }
+        }
+        let surrogate = self.pipeline.surrogate_phase(input_space, design_space, dataset);
+        let v = envelope(Stage::Surrogate, &up, surrogate.inner.to_json());
+        self.write_artifact(STAGE2_FILE, &v)?;
+        let v = self.read_stage(STAGE2_FILE).ok_or("reload stage2 checkpoint")?;
+        let payload = open_envelope(&v, Stage::Surrogate, &up).ok_or("stage2 envelope")?;
+        let surrogate = LogSurrogate::new(Gbdt::from_json(payload)?);
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((surrogate, StageStatus { stage: Stage::Surrogate, loaded: false, secs }))
+    }
+
+    /// Stage 3: sharded grid optimization (upstream: the stage-2
+    /// artifact). Each shard checkpoints on completion, so a kill
+    /// mid-stage only re-pays the unfinished shards.
+    fn stage_grid(
+        &self,
+        surrogate: &LogSurrogate<Gbdt>,
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+    ) -> Result<(GridOptResult, StageStatus), String> {
+        let t0 = Instant::now();
+        let up = self.file_hash(STAGE2_FILE).ok_or("stage2 checkpoint missing")?;
+        if let Some(v) = self.read_stage(STAGE3_FILE) {
+            if let Some(g) = open_envelope(&v, Stage::GridOptimize, &up)
+                .and_then(|p| GridOptResult::from_json(p).ok())
+            {
+                let secs = t0.elapsed().as_secs_f64();
+                return Ok((g, StageStatus { stage: Stage::GridOptimize, loaded: true, secs }));
+            }
+        }
+        let cfg = &self.pipeline.config;
+        let inputs = input_space.grid(cfg.opt_grid);
+        let ga = Nsga2::new(cfg.ga.clone());
+        let shard_size = self.shard_size.max(1);
+        let mut designs = Vec::with_capacity(inputs.len());
+        let mut predicted = Vec::with_capacity(inputs.len());
+        let mut all_loaded = true;
+        let mut base = 0usize;
+        let mut shard_idx = 0usize;
+        while base < inputs.len() {
+            let end = (base + shard_size).min(inputs.len());
+            let file = shard_file(shard_idx);
+            let mut shard = self.read_stage(&file).and_then(|v| {
+                let p = open_envelope(&v, Stage::GridOptimize, &up)?;
+                load_shard(p, base, end - base).ok()
+            });
+            if shard.is_none() {
+                all_loaded = false;
+                let (d, p) = optimize_grid_shard(
+                    surrogate,
+                    design_space,
+                    &inputs[base..end],
+                    base,
+                    &ga,
+                    &[],
+                    cfg.threads,
+                    cfg.seed ^ GRID_SEED_SALT,
+                );
+                let v = envelope(Stage::GridOptimize, &up, shard_to_json(base, &d, &p));
+                self.write_artifact(&file, &v)?;
+                let v = self.read_stage(&file).ok_or("reload shard checkpoint")?;
+                let payload =
+                    open_envelope(&v, Stage::GridOptimize, &up).ok_or("shard envelope")?;
+                shard = Some(load_shard(payload, base, end - base)?);
+            }
+            let (d, p) = shard.expect("shard computed or loaded above");
+            designs.extend(d);
+            predicted.extend(p);
+            base = end;
+            shard_idx += 1;
+        }
+        let grid = GridOptResult { inputs, designs, predicted };
+        let v = envelope(Stage::GridOptimize, &up, grid.to_json());
+        self.write_artifact(STAGE3_FILE, &v)?;
+        let v = self.read_stage(STAGE3_FILE).ok_or("reload stage3 checkpoint")?;
+        let payload = open_envelope(&v, Stage::GridOptimize, &up).ok_or("stage3 envelope")?;
+        let grid = GridOptResult::from_json(payload)?;
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((grid, StageStatus { stage: Stage::GridOptimize, loaded: all_loaded, secs }))
+    }
+
+    /// Stage 4: decision trees (upstream: the stage-3 artifact).
+    fn stage_trees(
+        &self,
+        grid: &GridOptResult,
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+    ) -> Result<(DesignTrees, StageStatus), String> {
+        let t0 = Instant::now();
+        let up = self.file_hash(STAGE3_FILE).ok_or("stage3 checkpoint missing")?;
+        if let Some(v) = self.read_stage(STAGE4_FILE) {
+            if let Some(t) = open_envelope(&v, Stage::Trees, &up)
+                .and_then(|p| DesignTrees::from_json(p).ok())
+            {
+                let secs = t0.elapsed().as_secs_f64();
+                return Ok((t, StageStatus { stage: Stage::Trees, loaded: true, secs }));
+            }
+        }
+        let trees = self.pipeline.tree_phase(grid, input_space, design_space);
+        let v = envelope(Stage::Trees, &up, trees.to_json());
+        self.write_artifact(STAGE4_FILE, &v)?;
+        let v = self.read_stage(STAGE4_FILE).ok_or("reload stage4 checkpoint")?;
+        let payload = open_envelope(&v, Stage::Trees, &up).ok_or("stage4 envelope")?;
+        let trees = DesignTrees::from_json(payload)?;
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((trees, StageStatus { stage: Stage::Trees, loaded: false, secs }))
+    }
+
+    /// Run stages up to and including `last`, loading valid checkpoints
+    /// and computing (then checkpointing) the rest. This is the partial-run
+    /// primitive behind [`PipelineRun::run`], exposed so a run can be
+    /// staged across machines (sample on the cluster, optimize elsewhere)
+    /// and so tests can simulate a kill between stages.
+    pub fn run_prefix(
+        &self,
+        kernel: &dyn Kernel,
+        last: Stage,
+    ) -> Result<Vec<StageStatus>, String> {
+        Ok(self.run_impl(kernel, last)?.1)
+    }
+
+    /// Run the full pipeline, resuming from whatever checkpoints are
+    /// valid. Returns the tuned model plus the per-stage record.
+    pub fn run(&self, kernel: &dyn Kernel) -> Result<CheckpointedRun, String> {
+        let (model, stages) = self.run_impl(kernel, Stage::Trees)?;
+        let model = model.expect("full run always assembles a model");
+        Ok(CheckpointedRun { model, stages })
+    }
+
+    /// Shared driver: the model is assembled from the in-memory stage
+    /// artifacts (each already the checkpointed representation — stages
+    /// reload what they write), so nothing is re-parsed afterwards.
+    fn run_impl(
+        &self,
+        kernel: &dyn Kernel,
+        last: Stage,
+    ) -> Result<(Option<TunedModel>, Vec<StageStatus>), String> {
+        self.ensure_dir(kernel)?;
+        let input_space = kernel.input_space().clone();
+        let design_space = kernel.design_space().clone();
+        let mut stages = Vec::new();
+
+        let (dataset, status) = self.stage_sample(kernel)?;
+        stages.push(status);
+        if last == Stage::Sample {
+            return Ok((None, stages));
+        }
+
+        let (surrogate, status) = self.stage_surrogate(&input_space, &design_space, &dataset)?;
+        stages.push(status);
+        if last == Stage::Surrogate {
+            return Ok((None, stages));
+        }
+
+        let (grid, status) = self.stage_grid(&surrogate, &input_space, &design_space)?;
+        stages.push(status);
+        if last == Stage::GridOptimize {
+            return Ok((None, stages));
+        }
+
+        let (trees, status) = self.stage_trees(&grid, &input_space, &design_space)?;
+        stages.push(status);
+
+        let stats = PipelineStats {
+            samples: dataset.len(),
+            sampling_secs: stages[0].secs,
+            modeling_secs: stages[1].secs,
+            optimizing_secs: stages[2].secs,
+            tree_secs: stages[3].secs,
+            model_bytes: surrogate.inner.mem_bytes() + dataset.mem_bytes(),
+        };
+        Ok((Some(TunedModel { trees, grid, dataset, surrogate, stats }), stages))
+    }
+
+    /// Assemble a [`TunedModel`] purely from the checkpoint directory.
+    /// All four stage artifacts must be present, valid, and mutually
+    /// consistent (the upstream-hash chain is enforced) — e.g. after
+    /// [`PipelineRun::run`], or to ship a previously tuned model without
+    /// touching the kernel at all.
+    pub fn load_model(&self) -> Result<TunedModel, String> {
+        let v = self.read_stage(STAGE1_FILE).ok_or("missing stage1 checkpoint")?;
+        let dataset = load_stage1(&v, self.pipeline.config.total_samples)?;
+        let up = self.file_hash(STAGE1_FILE).ok_or("missing stage1 checkpoint")?;
+
+        let v = self.read_stage(STAGE2_FILE).ok_or("missing stage2 checkpoint")?;
+        let payload =
+            open_envelope(&v, Stage::Surrogate, &up).ok_or("stage2 inconsistent with stage1")?;
+        let surrogate = LogSurrogate::new(Gbdt::from_json(payload)?);
+        let up = self.file_hash(STAGE2_FILE).ok_or("missing stage2 checkpoint")?;
+
+        let v = self.read_stage(STAGE3_FILE).ok_or("missing stage3 checkpoint")?;
+        let payload = open_envelope(&v, Stage::GridOptimize, &up)
+            .ok_or("stage3 inconsistent with stage2")?;
+        let grid = GridOptResult::from_json(payload)?;
+        let up = self.file_hash(STAGE3_FILE).ok_or("missing stage3 checkpoint")?;
+
+        let v = self.read_stage(STAGE4_FILE).ok_or("missing stage4 checkpoint")?;
+        let payload =
+            open_envelope(&v, Stage::Trees, &up).ok_or("stage4 inconsistent with stage3")?;
+        let trees = DesignTrees::from_json(payload)?;
+
+        let stats = PipelineStats {
+            samples: dataset.len(),
+            model_bytes: surrogate.inner.mem_bytes() + dataset.mem_bytes(),
+            ..Default::default()
+        };
+        Ok(TunedModel { trees, grid, dataset, surrogate, stats })
+    }
+
+    /// True when every stage artifact for this run is present on disk.
+    pub fn is_complete(&self) -> bool {
+        [STAGE1_FILE, STAGE2_FILE, STAGE3_FILE, STAGE4_FILE]
+            .iter()
+            .all(|f| self.path(f).exists())
+    }
+}
+
+/// Copy every checkpoint file from one directory to another (helper for
+/// staged deployments and the resume tests).
+pub fn copy_checkpoints(from: &Path, to: &Path) -> Result<(), String> {
+    std::fs::create_dir_all(to).map_err(|e| e.to_string())?;
+    let entries = std::fs::read_dir(from).map_err(|e| e.to_string())?;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        if name.to_string_lossy().ends_with(".json") {
+            std::fs::copy(entry.path(), to.join(&name)).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::toy_sum::ToySum;
+    use crate::optimizer::nsga2::Nsga2Params;
+    use crate::pipeline::SamplerChoice;
+    use crate::surrogate::gbdt::GbdtParams;
+
+    fn tiny_config(seed: u64) -> MlkapsConfig {
+        MlkapsConfig {
+            total_samples: 120,
+            batch_size: 60,
+            sampler: SamplerChoice::Lhs,
+            gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+            ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+            opt_grid: 4,
+            tree_depth: 4,
+            threads: 1,
+            seed,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mlkaps_ckpt_unit_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn fingerprint_ignores_threads_but_not_seed() {
+        let kernel = ToySum::new(1);
+        let mut a = tiny_config(7);
+        let mut b = tiny_config(7);
+        a.threads = 1;
+        b.threads = 8;
+        assert_eq!(fingerprint(&a, &kernel), fingerprint(&b, &kernel));
+        b.seed = 8;
+        assert_ne!(fingerprint(&a, &kernel), fingerprint(&b, &kernel));
+    }
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names, dedup);
+        assert!(Stage::Sample < Stage::Trees);
+    }
+
+    #[test]
+    fn fresh_run_checkpoints_then_second_run_loads() {
+        let dir = tmp("fresh");
+        let kernel = ToySum::new(40);
+        let run = PipelineRun::new(tiny_config(40), dir.clone());
+        let first = run.run(&kernel).unwrap();
+        assert!(first.stages.iter().all(|s| !s.loaded), "first run must compute");
+        assert!(run.is_complete());
+
+        let kernel2 = ToySum::new(40);
+        let second = run.run(&kernel2).unwrap();
+        assert!(second.stages.iter().all(|s| s.loaded), "second run must load");
+        assert_eq!(second.model.grid.designs, first.model.grid.designs);
+        assert_eq!(
+            second.model.trees.to_json().to_string(),
+            first.model.trees.to_json().to_string()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_change_invalidates_checkpoints() {
+        let dir = tmp("invalidate");
+        let kernel = ToySum::new(41);
+        PipelineRun::new(tiny_config(41), dir.clone()).run(&kernel).unwrap();
+
+        let kernel2 = ToySum::new(41);
+        let changed = PipelineRun::new(tiny_config(42), dir.clone());
+        let out = changed.run(&kernel2).unwrap();
+        assert!(
+            out.stages.iter().all(|s| !s.loaded),
+            "stale checkpoints must not be loaded"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn changed_upstream_artifact_invalidates_downstream_chain() {
+        // Tamper with the sampled dataset (keeping it structurally
+        // valid): stages 2-4 were fit on the original bytes, so the
+        // upstream-hash chain must force them to recompute.
+        let dir = tmp("chain");
+        let kernel = ToySum::new(43);
+        let run = PipelineRun::new(tiny_config(43), dir.clone());
+        run.run(&kernel).unwrap();
+
+        let path = dir.join("stage1_dataset.json");
+        let mut v = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Value::Obj(m) = &mut v {
+            if let Some(Value::Obj(ds)) = m.get_mut("dataset") {
+                if let Some(Value::Arr(ys)) = ds.get_mut("y") {
+                    ys[0] = Value::Num(123.456);
+                }
+            }
+        }
+        std::fs::write(&path, v.to_string()).unwrap();
+
+        let kernel2 = ToySum::new(43);
+        let out = run.run(&kernel2).unwrap();
+        assert!(out.stages[0].loaded, "tampered stage1 still parses and loads");
+        assert!(
+            out.stages.iter().skip(1).all(|s| !s.loaded),
+            "stages fit on the old dataset must be recomputed"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_model_errors_on_missing_stages() {
+        let dir = tmp("missing");
+        let run = PipelineRun::new(tiny_config(1), dir.clone());
+        assert!(run.load_model().is_err());
+        assert!(!run.is_complete());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

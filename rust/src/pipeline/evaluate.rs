@@ -7,6 +7,7 @@
 //! reason).
 
 use crate::kernels::Kernel;
+use crate::util::json::Value;
 use crate::util::stats;
 
 /// One validated input point.
@@ -70,6 +71,46 @@ impl SpeedupMap {
 
     pub fn speedups(&self) -> Vec<f64> {
         self.points.iter().map(|p| p.speedup).collect()
+    }
+
+    /// Serialize the map (points + summary) for artifact emission — e.g.
+    /// `tune --validate N --checkpoint-dir DIR` stores the validation map
+    /// next to the pipeline checkpoints.
+    pub fn to_json(&self) -> Value {
+        let s = self.summary();
+        Value::obj(vec![
+            ("grid_per_dim", Value::Num(self.grid_per_dim as f64)),
+            (
+                "points",
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                (
+                                    "input",
+                                    Value::Arr(
+                                        p.input.iter().map(|&v| Value::Num(v)).collect(),
+                                    ),
+                                ),
+                                ("speedup", Value::Num(p.speedup)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "summary",
+                Value::obj(vec![
+                    ("geomean", Value::Num(s.geomean)),
+                    ("frac_progressions", Value::Num(s.frac_progressions)),
+                    ("mean_progression", Value::Num(s.mean_progression)),
+                    ("mean_regression", Value::Num(s.mean_regression)),
+                    ("min", Value::Num(s.min)),
+                    ("max", Value::Num(s.max)),
+                ]),
+            ),
+        ])
     }
 
     pub fn summary(&self) -> MapSummary {
@@ -195,6 +236,19 @@ mod tests {
         for (x, y) in ab.points.iter().zip(&ba.points) {
             assert!((x.speedup * y.speedup - 1.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn map_json_is_parseable_and_complete() {
+        let kernel = ToySum::new(24);
+        let map = SpeedupMap::build(&kernel, 3, &|input| {
+            kernel.reference_design(input).unwrap()
+        });
+        let text = map.to_json().to_pretty();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("grid_per_dim").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("points").unwrap().as_arr().unwrap().len(), 9);
+        assert!(v.get("summary").unwrap().get("geomean").unwrap().as_f64().is_some());
     }
 
     #[test]

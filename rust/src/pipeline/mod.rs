@@ -5,7 +5,15 @@
 //! returns a [`TunedModel`] whose decision trees predict an optimized
 //! design configuration for any input — the artifact a library would
 //! embed (via [`crate::dtree::DesignTrees::to_c`]) and ship.
+//!
+//! Each stage is also exposed on its own ([`Mlkaps::sample_phase`],
+//! [`Mlkaps::surrogate_phase`], [`Mlkaps::optimize_phase`],
+//! [`Mlkaps::tree_phase`]) so the [`checkpoint`] executor can run the
+//! pipeline as four standalone, restartable units — the paper's "results
+//! can be stored and quick-loaded for restarting the pipeline at a given
+//! step".
 
+pub mod checkpoint;
 pub mod evaluate;
 pub mod expert;
 
@@ -143,6 +151,11 @@ impl TunedModel {
     }
 }
 
+/// Seed salt for the final-surrogate fit (stage 2).
+pub(crate) const SURROGATE_SEED_SALT: u64 = 0xABCD;
+/// Seed salt for the grid-optimization GAs (stage 3).
+pub(crate) const GRID_SEED_SALT: u64 = 0x5EED;
+
 /// The MLKAPS auto-tuner.
 pub struct Mlkaps {
     pub config: MlkapsConfig,
@@ -190,51 +203,84 @@ impl Mlkaps {
         (history, dataset)
     }
 
-    /// Run the full pipeline against a kernel.
-    pub fn tune(&self, kernel: &dyn Kernel) -> TunedModel {
+    /// Phase 2 (modeling): fit the final log-objective GBDT surrogate on
+    /// the value-space dataset collected by [`Mlkaps::sample_phase`].
+    pub fn surrogate_phase(
+        &self,
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+        dataset: &Dataset,
+    ) -> LogSurrogate<Gbdt> {
         let cfg = &self.config;
-        let input_space = kernel.input_space().clone();
-        let design_space = kernel.design_space().clone();
-        let joint: ParamSpace = input_space.concat(&design_space);
-
-        // ---- Phase 1: adaptive sampling.
-        let t0 = Instant::now();
-        let (_history, dataset) = self.sample_phase(kernel);
-        let sampling_secs = t0.elapsed().as_secs_f64();
-
-        // ---- Phase 2: fit the final surrogate on value-space features.
-        let t1 = Instant::now();
+        let joint = input_space.concat(design_space);
         let mut surrogate = LogSurrogate::new(Gbdt::with_mask(
-            GbdtParams { seed: cfg.seed ^ 0xABCD, ..cfg.gbdt.clone() },
+            GbdtParams { seed: cfg.seed ^ SURROGATE_SEED_SALT, ..cfg.gbdt.clone() },
             joint.unordered_mask(),
         ));
-        surrogate.fit(&dataset);
-        let modeling_secs = t1.elapsed().as_secs_f64();
+        surrogate.fit(dataset);
+        surrogate
+    }
 
-        // ---- Phase 3: GA per optimization-grid point on the surrogate.
-        let t2 = Instant::now();
+    /// Phase 3 (optimization): one GA per optimization-grid point over the
+    /// surrogate. Deterministic for a given seed regardless of `threads`.
+    pub fn optimize_phase(
+        &self,
+        surrogate: &(dyn Surrogate + Sync),
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+    ) -> GridOptResult {
+        let cfg = &self.config;
         let ga = Nsga2::new(cfg.ga.clone());
-        let grid = optimize_grid(
-            &surrogate,
-            &input_space,
-            &design_space,
+        optimize_grid(
+            surrogate,
+            input_space,
+            design_space,
             cfg.opt_grid,
             &ga,
             &[],
             cfg.threads,
-            cfg.seed ^ 0x5EED,
-        );
-        let optimizing_secs = t2.elapsed().as_secs_f64();
+            cfg.seed ^ GRID_SEED_SALT,
+        )
+    }
 
-        // ---- Phase 4: decision trees, one per design parameter.
-        let t3 = Instant::now();
-        let trees = DesignTrees::fit(
+    /// Phase 4 (trees): fit one depth-bounded CART per design parameter on
+    /// the grid-optimization results.
+    pub fn tree_phase(
+        &self,
+        grid: &GridOptResult,
+        input_space: &ParamSpace,
+        design_space: &ParamSpace,
+    ) -> DesignTrees {
+        DesignTrees::fit(
             &grid.inputs,
             &grid.designs,
-            &input_space,
-            &design_space,
-            cfg.tree_depth,
-        );
+            input_space,
+            design_space,
+            self.config.tree_depth,
+        )
+    }
+
+    /// Run the full pipeline against a kernel — the four stages back to
+    /// back, in memory. See [`checkpoint::PipelineRun`] for the resumable,
+    /// checkpointed equivalent.
+    pub fn tune(&self, kernel: &dyn Kernel) -> TunedModel {
+        let input_space = kernel.input_space().clone();
+        let design_space = kernel.design_space().clone();
+
+        let t0 = Instant::now();
+        let (_history, dataset) = self.sample_phase(kernel);
+        let sampling_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let surrogate = self.surrogate_phase(&input_space, &design_space, &dataset);
+        let modeling_secs = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let grid = self.optimize_phase(&surrogate, &input_space, &design_space);
+        let optimizing_secs = t2.elapsed().as_secs_f64();
+
+        let t3 = Instant::now();
+        let trees = self.tree_phase(&grid, &input_space, &design_space);
         let tree_secs = t3.elapsed().as_secs_f64();
 
         let stats = PipelineStats {

@@ -17,6 +17,7 @@
 
 use crate::data::Dataset;
 use crate::surrogate::Surrogate;
+use crate::util::json::Value;
 use crate::util::rng::Rng;
 
 /// Loss driving the gradient computation.
@@ -27,6 +28,25 @@ pub enum Loss {
     /// Absolute error: grad = sign(pred − y), hess = 1 (LightGBM-style
     /// smoothed L1; leaf values then approximate per-leaf medians).
     L1,
+}
+
+impl Loss {
+    /// Stable serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::L2 => "l2",
+            Loss::L1 => "l1",
+        }
+    }
+
+    /// Inverse of [`Loss::name`].
+    pub fn from_name(s: &str) -> Result<Loss, String> {
+        match s {
+            "l2" => Ok(Loss::L2),
+            "l1" => Ok(Loss::L1),
+            other => Err(format!("unknown loss '{other}'")),
+        }
+    }
 }
 
 /// Training hyperparameters (defaults follow the hand-tuned settings the
@@ -229,6 +249,149 @@ impl Gbdt {
     /// Approximate heap bytes of the trained ensemble (telemetry/Fig 14).
     pub fn mem_bytes(&self) -> usize {
         self.trees.iter().map(Tree::mem_bytes).sum()
+    }
+
+    /// Serialize the fitted ensemble to a versioned JSON checkpoint.
+    ///
+    /// Node values round-trip exactly: the JSON writer prints finite f64s
+    /// with Rust's shortest-round-trip formatting, so `from_json` restores
+    /// a model whose predictions are identical to the original's.
+    pub fn to_json(&self) -> Value {
+        let p = &self.params;
+        let params = Value::obj(vec![
+            ("n_trees", Value::Num(p.n_trees as f64)),
+            ("learning_rate", Value::Num(p.learning_rate)),
+            ("max_leaves", Value::Num(p.max_leaves as f64)),
+            ("min_samples_leaf", Value::Num(p.min_samples_leaf as f64)),
+            ("lambda_l2", Value::Num(p.lambda_l2)),
+            ("max_bins", Value::Num(p.max_bins as f64)),
+            ("feature_fraction", Value::Num(p.feature_fraction)),
+            ("bagging_fraction", Value::Num(p.bagging_fraction)),
+            ("min_gain", Value::Num(p.min_gain)),
+            ("loss", Value::Str(p.loss.name().into())),
+            // u64 seeds may exceed f64's exact-integer range; keep as text.
+            ("seed", Value::Str(p.seed.to_string())),
+        ]);
+        let trees: Vec<Value> = self
+            .trees
+            .iter()
+            .map(|t| {
+                Value::Arr(
+                    t.nodes
+                        .iter()
+                        .map(|n| {
+                            Value::Arr(vec![
+                                Value::Num(n.feat as f64),
+                                Value::Num(n.flags as f64),
+                                Value::Num(n.value),
+                                Value::Num(n.left as f64),
+                                Value::Num(n.right as f64),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Value::obj(vec![
+            ("format", Value::Str("mlkaps-gbdt-v1".into())),
+            ("params", params),
+            ("base_score", Value::Num(self.base_score)),
+            (
+                "categorical",
+                Value::Arr(self.categorical.iter().map(|&b| Value::Bool(b)).collect()),
+            ),
+            ("trees", Value::Arr(trees)),
+        ])
+    }
+
+    /// Reload an ensemble serialized with [`Gbdt::to_json`].
+    pub fn from_json(v: &Value) -> Result<Gbdt, String> {
+        if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-gbdt-v1") {
+            return Err("unknown GBDT format".into());
+        }
+        let p = v.get("params").ok_or("gbdt missing params")?;
+        let num = |k: &str| -> Result<f64, String> {
+            p.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("gbdt param '{k}' missing"))
+        };
+        let loss = Loss::from_name(
+            p.get("loss").and_then(|l| l.as_str()).ok_or("gbdt param 'loss' missing")?,
+        )?;
+        let seed: u64 = p
+            .get("seed")
+            .and_then(|s| s.as_str())
+            .and_then(|s| s.parse().ok())
+            .ok_or("gbdt param 'seed' missing")?;
+        let params = GbdtParams {
+            n_trees: num("n_trees")? as usize,
+            learning_rate: num("learning_rate")?,
+            max_leaves: num("max_leaves")? as usize,
+            min_samples_leaf: num("min_samples_leaf")? as usize,
+            lambda_l2: num("lambda_l2")?,
+            max_bins: num("max_bins")? as usize,
+            feature_fraction: num("feature_fraction")?,
+            bagging_fraction: num("bagging_fraction")?,
+            min_gain: num("min_gain")?,
+            loss,
+            seed,
+        };
+        let base_score = v
+            .get("base_score")
+            .and_then(|x| x.as_f64())
+            .ok_or("gbdt missing base_score")?;
+        let categorical = v
+            .get("categorical")
+            .and_then(|a| a.as_arr())
+            .ok_or("gbdt missing categorical")?
+            .iter()
+            .map(|b| b.as_bool().ok_or_else(|| "bad categorical flag".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let trees = v
+            .get("trees")
+            .and_then(|a| a.as_arr())
+            .ok_or("gbdt missing trees")?
+            .iter()
+            .map(|t| -> Result<Tree, String> {
+                let nodes = t
+                    .as_arr()
+                    .ok_or("tree must be an array")?
+                    .iter()
+                    .map(|n| -> Result<Node, String> {
+                        let field = |i: usize| {
+                            n.idx(i)
+                                .and_then(|x| x.as_f64())
+                                .ok_or_else(|| "bad node field".to_string())
+                        };
+                        Ok(Node {
+                            feat: field(0)? as u32,
+                            flags: field(1)? as u8,
+                            value: field(2)?,
+                            left: field(3)? as u32,
+                            right: field(4)? as u32,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                if nodes.is_empty() {
+                    return Err("empty tree".into());
+                }
+                let len = nodes.len() as u32;
+                let n_feats = categorical.len() as u32;
+                for nd in &nodes {
+                    if nd.feat == LEAF {
+                        continue;
+                    }
+                    if nd.left >= len || nd.right >= len {
+                        return Err("tree node index out of range".into());
+                    }
+                    if nd.feat >= n_feats {
+                        return Err("tree split feature out of range".into());
+                    }
+                }
+                Ok(Tree { nodes })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Gbdt { params, base_score, trees, categorical })
     }
 
     fn grad(&self, pred: f64, y: f64) -> f64 {
@@ -635,6 +798,45 @@ mod tests {
         let mut m = Gbdt::new(GbdtParams::default());
         m.fit(&d);
         assert!((m.predict(&[1.0, 2.0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions_exactly() {
+        let train = make_data(800, 21, |x| (x[0] * 3.0).sin() + x[1]);
+        let mut m = Gbdt::with_mask(
+            GbdtParams {
+                n_trees: 60,
+                bagging_fraction: 0.9,
+                feature_fraction: 0.8,
+                loss: Loss::L1,
+                seed: 77,
+                ..Default::default()
+            },
+            vec![false, false],
+        );
+        m.fit(&train);
+        let text = m.to_json().to_string();
+        let back = Gbdt::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_trees(), m.n_trees());
+        assert_eq!(back.params.seed, m.params.seed);
+        assert_eq!(back.params.loss, m.params.loss);
+        assert_eq!(back.categorical, m.categorical);
+        for x in &train.x {
+            assert_eq!(m.predict(x), back.predict(x), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        assert!(Gbdt::from_json(&crate::util::json::parse("{}").unwrap()).is_err());
+        let train = make_data(100, 22, |x| x[0]);
+        let mut m = Gbdt::new(GbdtParams { n_trees: 3, ..Default::default() });
+        m.fit(&train);
+        let mut doc = m.to_json();
+        if let Value::Obj(map) = &mut doc {
+            map.remove("trees");
+        }
+        assert!(Gbdt::from_json(&doc).is_err());
     }
 
     #[test]

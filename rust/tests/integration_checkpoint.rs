@@ -1,0 +1,246 @@
+//! Integration tests for the checkpointed pipeline executor: serialization
+//! round-trips for the stage artifacts, kill-and-resume fidelity, and
+//! determinism of the sharded grid-optimization stage across thread
+//! counts.
+//!
+//! Sampling uses `threads: 1` where runs must be comparable: simulator
+//! measurement noise is drawn from a shared call counter, so parallel
+//! evaluation order (legitimately) perturbs fresh sample values. Stages
+//! 2-4 are deterministic for a fixed stage-1 checkpoint regardless of the
+//! thread count — exactly what the cross-thread tests pin down.
+
+use std::path::PathBuf;
+
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::data::Dataset;
+use mlkaps::dtree::DesignTrees;
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{copy_checkpoints, PipelineRun, Stage};
+use mlkaps::pipeline::{Mlkaps, MlkapsConfig, SamplerChoice};
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams, Loss};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::json::parse;
+use mlkaps::util::rng::Rng;
+
+fn config(seed: u64, threads: usize) -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 200,
+        batch_size: 100,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 40, ..Default::default() },
+        ga: Nsga2Params { pop_size: 12, generations: 8, ..Default::default() },
+        opt_grid: 5,
+        tree_depth: 4,
+        threads,
+        seed,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mlkaps_ckpt_it_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Assert two tuned models are bit-identical in every checkpointed part.
+fn assert_models_identical(
+    a: &mlkaps::pipeline::TunedModel,
+    b: &mlkaps::pipeline::TunedModel,
+) {
+    assert_eq!(a.dataset.x, b.dataset.x, "datasets diverge");
+    assert_eq!(a.dataset.y, b.dataset.y, "objectives diverge");
+    assert_eq!(a.grid.inputs, b.grid.inputs, "grid inputs diverge");
+    assert_eq!(a.grid.designs, b.grid.designs, "grid designs diverge");
+    assert_eq!(a.grid.predicted, b.grid.predicted, "grid predictions diverge");
+    assert_eq!(
+        a.trees.to_json().to_string(),
+        b.trees.to_json().to_string(),
+        "serialized trees diverge"
+    );
+    let mut rng = Rng::new(99);
+    for _ in 0..50 {
+        let input: Vec<f64> = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+        assert_eq!(a.predict(&input), b.predict(&input), "{input:?}");
+        let mut x = input.clone();
+        x.push(rng.uniform(1.0, 64.0));
+        assert_eq!(a.surrogate.predict(&x), b.surrogate.predict(&x), "{x:?}");
+    }
+}
+
+#[test]
+fn run_killed_after_surrogate_stage_resumes_bit_identical() {
+    let kernel = ToySum::new(50);
+    let dir_full = tmp_dir("full");
+    let dir_killed = tmp_dir("killed");
+
+    // Uninterrupted run.
+    let full = PipelineRun::new(config(50, 1), dir_full.clone());
+    let uninterrupted = full.run(&kernel).unwrap();
+
+    // "Killed" run: the process dies right after the surrogate stage...
+    let kernel2 = ToySum::new(50);
+    let killed = PipelineRun::new(config(50, 1), dir_killed.clone());
+    let partial = killed.run_prefix(&kernel2, Stage::Surrogate).unwrap();
+    assert_eq!(partial.len(), 2, "only the first two stages ran");
+    assert!(killed.load_model().is_err(), "model must not exist yet");
+
+    // ...and a fresh process resumes it to completion.
+    let kernel3 = ToySum::new(50);
+    let resumed = killed.run(&kernel3).unwrap();
+    assert!(resumed.stages[0].loaded, "sampling must be resumed, not re-run");
+    assert!(resumed.stages[1].loaded, "surrogate must be resumed, not re-fit");
+    assert!(!resumed.stages[2].loaded, "grid opt was never computed");
+    assert!(!resumed.stages[3].loaded, "trees were never computed");
+
+    assert_models_identical(&uninterrupted.model, &resumed.model);
+
+    std::fs::remove_dir_all(&dir_full).ok();
+    std::fs::remove_dir_all(&dir_killed).ok();
+}
+
+#[test]
+fn sharded_grid_stage_is_deterministic_across_thread_counts() {
+    let kernel = ToySum::new(51);
+    let dir_a = tmp_dir("threads_a");
+    let dir_b = tmp_dir("threads_b");
+
+    // Sample + fit once (single-threaded), then share the checkpoints so
+    // both runs optimize the identical surrogate.
+    let seeded = PipelineRun::new(config(51, 1), dir_a.clone());
+    seeded.run_prefix(&kernel, Stage::Surrogate).unwrap();
+    copy_checkpoints(&dir_a, &dir_b).unwrap();
+
+    // Resume A with 1 thread and default shards; resume B with 4 threads
+    // and deliberately tiny shards (5^2 = 25 grid points -> 4 shards).
+    let kernel_a = ToySum::new(51);
+    let run_a = PipelineRun::new(config(51, 1), dir_a.clone());
+    let out_a = run_a.run(&kernel_a).unwrap();
+
+    let kernel_b = ToySum::new(51);
+    let mut run_b = PipelineRun::new(config(51, 4), dir_b.clone());
+    run_b.shard_size = 7;
+    let out_b = run_b.run(&kernel_b).unwrap();
+    assert!(out_b.stages[0].loaded && out_b.stages[1].loaded);
+
+    assert_models_identical(&out_a.model, &out_b.model);
+
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+#[test]
+fn checkpointed_run_matches_plain_tune() {
+    // The checkpointed executor is a refactoring of Mlkaps::tune, not a
+    // different algorithm: same config + seed must give the same designs.
+    let kernel = ToySum::new(52);
+    let dir = tmp_dir("plain");
+    let plain = Mlkaps::new(config(52, 1)).tune(&kernel);
+
+    let kernel2 = ToySum::new(52);
+    let ckpt = PipelineRun::new(config(52, 1), dir.clone()).run(&kernel2).unwrap();
+
+    assert_eq!(plain.dataset.y, ckpt.model.dataset.y);
+    assert_eq!(plain.grid.designs, ckpt.model.grid.designs);
+    assert_eq!(
+        plain.trees.to_json().to_string(),
+        ckpt.model.trees.to_json().to_string()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interrupted_grid_stage_reuses_completed_shards() {
+    let kernel = ToySum::new(53);
+    let dir = tmp_dir("shards");
+
+    let mut run = PipelineRun::new(config(53, 1), dir.clone());
+    run.shard_size = 7;
+    run.run_prefix(&kernel, Stage::GridOptimize).unwrap();
+
+    // Simulate a crash that lost the assembled grid and the last shard but
+    // kept the earlier shard checkpoints.
+    std::fs::remove_file(dir.join("stage3_grid.json")).unwrap();
+    std::fs::remove_file(dir.join("stage3_shard_0003.json")).unwrap();
+    assert!(dir.join("stage3_shard_0000.json").exists());
+
+    let kernel2 = ToySum::new(53);
+    let resumed = run.run(&kernel2).unwrap();
+    // The stage counts as computed (one shard was missing), yet completed
+    // shards were reused and the result is complete and well-formed.
+    assert!(!resumed.stages[2].loaded);
+    assert_eq!(resumed.model.grid.designs.len(), 25);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_gbdt_checkpoint_roundtrip_predicts_identically() {
+    let mut rng = Rng::new(0xC0C0);
+    for trial in 0..20 {
+        let d = 1 + rng.below(4);
+        let n = 30 + rng.below(300);
+        let mut data = Dataset::new();
+        for _ in 0..n {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let y = x.iter().sum::<f64>() + rng.normal();
+            data.push(x, y);
+        }
+        let params = GbdtParams {
+            n_trees: 5 + rng.below(40),
+            max_leaves: 4 + rng.below(28),
+            bagging_fraction: if rng.bool(0.5) { 0.8 } else { 1.0 },
+            feature_fraction: if rng.bool(0.5) { 0.7 } else { 1.0 },
+            loss: if rng.bool(0.5) { Loss::L1 } else { Loss::L2 },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let mut cat = vec![false; d];
+        if rng.bool(0.3) {
+            cat[0] = true;
+        }
+        let mut m = Gbdt::with_mask(params, cat);
+        m.fit(&data);
+        let text = m.to_json().to_string();
+        let back = Gbdt::from_json(&parse(&text).unwrap()).unwrap();
+        for _ in 0..30 {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-6.0, 6.0)).collect();
+            assert_eq!(m.predict(&x), back.predict(&x), "trial {trial}: {x:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_design_trees_checkpoint_roundtrip_predicts_identically() {
+    let mut rng = Rng::new(0xDEED);
+    for trial in 0..20 {
+        let input = ParamSpace::new(vec![
+            ParamDef::float("n", 100.0, 5000.0),
+            ParamDef::float("m", 100.0, 5000.0),
+        ]);
+        let design = ParamSpace::new(vec![
+            ParamDef::int("threads", 1, 64),
+            ParamDef::categorical("variant", &["a", "b", "c"]),
+            ParamDef::boolean("flag"),
+        ]);
+        let inputs = input.grid(2 + rng.below(6));
+        let designs: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|_| {
+                vec![
+                    rng.int_range(1, 64) as f64,
+                    rng.below(3) as f64,
+                    rng.below(2) as f64,
+                ]
+            })
+            .collect();
+        let depth = 2 + rng.below(6);
+        let model = DesignTrees::fit(&inputs, &designs, &input, &design, depth);
+        let text = model.to_json().to_string();
+        let back = DesignTrees::from_json(&parse(&text).unwrap()).unwrap();
+        for _ in 0..40 {
+            let q = vec![rng.uniform(100.0, 5000.0), rng.uniform(100.0, 5000.0)];
+            assert_eq!(model.predict(&q), back.predict(&q), "trial {trial}: {q:?}");
+        }
+    }
+}
