@@ -1,0 +1,133 @@
+//! Surrogate throughput: GBDT fit time plus batched-vs-scalar inference
+//! rows/sec on a synthetic tuning-shaped dataset. This is the perf
+//! datapoint for the compiled-forest engine (README §Performance): the
+//! grid-optimize stage pushes millions of query rows through the
+//! surrogate, so batch throughput bounds the tunable input-space size.
+//!
+//! Run: `cargo bench --bench gbdt_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::*;
+use mlkaps::data::Dataset;
+use mlkaps::report;
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::rng::Rng;
+
+/// Median-of-reps wall time of `f`.
+fn med_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let _ = f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&r);
+    }
+    mlkaps::util::stats::median(&times)
+}
+
+fn main() {
+    header("gbdt_throughput", "surrogate fit + batch-vs-scalar inference rows/sec");
+    // Tuning-shaped data: 2 input dims, 4 design dims (1 categorical).
+    let d = 6;
+    let n_fit = budget3(60_000, 20_000, 1_500);
+    let n_query = budget3(200_000, 50_000, 4_000);
+    let n_trees = budget3(200, 200, 40);
+
+    let mut rng = Rng::new(42);
+    let mut data = Dataset::with_capacity(n_fit);
+    for _ in 0..n_fit {
+        let mut x: Vec<f64> = (0..d - 1).map(|_| rng.uniform(0.0, 1.0)).collect();
+        x.push(rng.below(8) as f64); // categorical design dim
+        let y = (x[0] * 6.0).sin() + x[1] * x[2] + if x[5] == 3.0 { 2.0 } else { 0.0 };
+        data.push(x, y + rng.uniform(-0.05, 0.05));
+    }
+    let queries: Vec<Vec<f64>> = (0..n_query)
+        .map(|_| {
+            let mut x: Vec<f64> = (0..d - 1).map(|_| rng.uniform(0.0, 1.0)).collect();
+            x.push(rng.below(8) as f64);
+            x
+        })
+        .collect();
+
+    let params = GbdtParams { n_trees, seed: 7, ..Default::default() };
+    let mut cat = vec![false; d];
+    cat[d - 1] = true;
+
+    let mut model = Gbdt::with_mask(params.clone(), cat.clone());
+    let fit_secs = med_secs(3, || {
+        model = Gbdt::with_mask(params.clone(), cat.clone());
+        model.fit(&data);
+    });
+
+    let scalar_secs = med_secs(3, || {
+        let mut acc = 0.0;
+        for q in &queries {
+            acc += model.predict(q);
+        }
+        acc
+    });
+    let batch1_secs = med_secs(3, || model.predict_batch_threads(&queries, 1));
+    let batch_secs = med_secs(3, || model.predict_batch_threads(&queries, 0));
+
+    let rps = |secs: f64, rows: usize| rows as f64 / secs.max(1e-12);
+    let speedup_1t = scalar_secs / batch1_secs.max(1e-12);
+    let speedup = scalar_secs / batch_secs.max(1e-12);
+
+    let rows = vec![
+        vec![
+            "fit".to_string(),
+            n_fit.to_string(),
+            format!("{fit_secs:.4}"),
+            format!("{:.0}", rps(fit_secs, n_fit)),
+            String::from("1.00"),
+        ],
+        vec![
+            "predict_scalar".to_string(),
+            n_query.to_string(),
+            format!("{scalar_secs:.4}"),
+            format!("{:.0}", rps(scalar_secs, n_query)),
+            String::from("1.00"),
+        ],
+        vec![
+            "predict_batch_1t".to_string(),
+            n_query.to_string(),
+            format!("{batch1_secs:.4}"),
+            format!("{:.0}", rps(batch1_secs, n_query)),
+            format!("{speedup_1t:.2}"),
+        ],
+        vec![
+            "predict_batch".to_string(),
+            n_query.to_string(),
+            format!("{batch_secs:.4}"),
+            format!("{:.0}", rps(batch_secs, n_query)),
+            format!("{speedup:.2}"),
+        ],
+    ];
+    println!(
+        "{}",
+        report::table(&["phase", "rows", "secs", "rows_per_sec", "speedup_vs_scalar"], &rows)
+    );
+    save_csv(
+        "gbdt_throughput.csv",
+        &["phase", "rows", "secs", "rows_per_sec", "speedup_vs_scalar"],
+        &rows,
+    );
+
+    // Sanity: the two paths must agree bit for bit on a sample.
+    let probe: Vec<Vec<f64>> = queries.iter().take(256).cloned().collect();
+    let a = model.predict_batch(&probe);
+    for (q, &b) in probe.iter().zip(&a) {
+        assert_eq!(model.predict(q).to_bits(), b.to_bits(), "batch/scalar drift");
+    }
+    println!(
+        "(target: batched inference >= 5x scalar on the non-smoke configuration; \
+         single-thread batch x{speedup_1t:.2}, threaded x{speedup:.2})"
+    );
+}

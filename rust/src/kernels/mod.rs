@@ -56,4 +56,14 @@ pub trait Kernel: Send + Sync {
     fn reference_design(&self, _input: &[f64]) -> Option<Vec<f64>> {
         None
     }
+
+    /// Whether concurrent `eval`/`eval_true` calls return trustworthy
+    /// numbers. Analytic simulators are; kernels that *time real
+    /// execution* (pallas-lu) are not — parallel runs contend for cores
+    /// and corrupt the measurement, so harnesses like
+    /// [`crate::pipeline::evaluate::SpeedupMap`] must evaluate them
+    /// sequentially.
+    fn parallel_safe(&self) -> bool {
+        true
+    }
 }

@@ -107,6 +107,12 @@ impl Kernel for PallasLu {
         let ti = self.tiles.len() / 2;
         Some(vec![bi as f64, ti as f64])
     }
+
+    /// Wall-clock timings through one PJRT runtime: concurrent runs
+    /// contend for cores and corrupt the measurement.
+    fn parallel_safe(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

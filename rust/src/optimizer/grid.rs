@@ -107,13 +107,24 @@ pub fn optimize_grid_shard(
     let results = par_map(inputs, threads, |idx, input| {
         let gidx = (base_idx + idx) as u64;
         let mut rng = Rng::new(seed ^ gidx.wrapping_mul(0x9E37_79B9));
-        let f = |design_unit: &[f64]| {
-            let design = design_space.snap(&design_space.decode(design_unit));
-            let mut x = input.clone();
-            x.extend_from_slice(&design);
-            surrogate.predict(&x)
+        // Whole GA generations are scored through one predict_batch call
+        // (the compiled-forest fast path) instead of one scalar predict
+        // per individual; values are bit-identical, so per-point results
+        // (and checkpoint resumes) are unchanged.
+        let f = |population: &[Vec<f64>]| -> Vec<f64> {
+            let xs: Vec<Vec<f64>> = population
+                .iter()
+                .map(|design_unit| {
+                    let design = design_space.snap(&design_space.decode(design_unit));
+                    let mut x = input.clone();
+                    x.extend_from_slice(&design);
+                    x
+                })
+                .collect();
+            surrogate.predict_batch(&xs)
         };
-        let (best_unit, best_val) = ga.minimize(design_space.dim(), &f, &unit_seeds, &mut rng);
+        let (best_unit, best_val) =
+            ga.minimize_batch(design_space.dim(), &f, &unit_seeds, &mut rng);
         let design = design_space.snap(&design_space.decode(&best_unit));
         (design, best_val)
     });

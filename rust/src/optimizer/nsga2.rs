@@ -60,6 +60,10 @@ impl Nsga2 {
     /// Minimize `f` (vector-valued) over the unit cube of dimension `dim`.
     /// `seeds` inject known-good starting genes (e.g. the incumbent
     /// configuration). Returns the final population, best-first.
+    ///
+    /// Thin per-row adapter over [`Nsga2::run_batch`]; results are
+    /// identical (evaluation never consumes the RNG, so batching whole
+    /// generations does not perturb the stochastic stream).
     pub fn run(
         &self,
         dim: usize,
@@ -67,37 +71,57 @@ impl Nsga2 {
         seeds: &[Vec<f64>],
         rng: &mut Rng,
     ) -> Vec<Individual> {
+        let batch = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> {
+            xs.iter().map(|x| f(x)).collect()
+        };
+        self.run_batch(dim, &batch, seeds, rng)
+    }
+
+    /// Batched core: `f` scores a whole generation per call — one initial
+    /// population and one offspring block per generation — so surrogate
+    /// callers route entire populations through
+    /// [`crate::surrogate::Surrogate::predict_batch`] instead of one
+    /// `predict` per individual (the stage-3 hot path: grid points ×
+    /// generations × pop_size rows).
+    pub fn run_batch(
+        &self,
+        dim: usize,
+        f: &dyn Fn(&[Vec<f64>]) -> Vec<Vec<f64>>,
+        seeds: &[Vec<f64>],
+        rng: &mut Rng,
+    ) -> Vec<Individual> {
         let pop_size = self.params.pop_size.max(4);
         let pm = self.params.p_mutation.unwrap_or(1.0 / dim.max(1) as f64);
 
         // Initial population: seeds + uniform random fill.
-        let mut pop: Vec<Individual> = Vec::with_capacity(pop_size);
+        let mut genes: Vec<Vec<f64>> = Vec::with_capacity(pop_size);
         for s in seeds.iter().take(pop_size) {
             assert_eq!(s.len(), dim, "seed dimension mismatch");
-            pop.push(Self::eval(s.clone(), f));
+            genes.push(s.clone());
         }
-        while pop.len() < pop_size {
-            let genes: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
-            pop.push(Self::eval(genes, f));
+        while genes.len() < pop_size {
+            genes.push((0..dim).map(|_| rng.f64()).collect());
         }
+        let mut pop = Self::eval_batch(genes, f);
         Self::assign_rank_crowding(&mut pop);
 
         for _gen in 0..self.params.generations {
-            // Offspring via tournament + SBX + polynomial mutation.
-            let mut offspring = Vec::with_capacity(pop_size);
-            while offspring.len() < pop_size {
+            // Offspring genes via tournament + SBX + polynomial mutation;
+            // evaluated as one block once the generation is assembled.
+            let mut off_genes = Vec::with_capacity(pop_size);
+            while off_genes.len() < pop_size {
                 let p1 = Self::tournament(&pop, rng);
                 let p2 = Self::tournament(&pop, rng);
                 let (mut c1, mut c2) = self.sbx(&pop[p1].genes, &pop[p2].genes, rng);
                 self.mutate(&mut c1, pm, rng);
                 self.mutate(&mut c2, pm, rng);
-                offspring.push(Self::eval(c1, f));
-                if offspring.len() < pop_size {
-                    offspring.push(Self::eval(c2, f));
+                off_genes.push(c1);
+                if off_genes.len() < pop_size {
+                    off_genes.push(c2);
                 }
             }
             // Elitist environmental selection over parents ∪ offspring.
-            pop.extend(offspring);
+            pop.extend(Self::eval_batch(off_genes, f));
             Self::assign_rank_crowding(&mut pop);
             pop.sort_by(|a, b| {
                 a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
@@ -119,8 +143,23 @@ impl Nsga2 {
         seeds: &[Vec<f64>],
         rng: &mut Rng,
     ) -> (Vec<f64>, f64) {
-        let wrapped = |x: &[f64]| vec![f(x)];
-        let pop = self.run(dim, &wrapped, seeds, rng);
+        let wrapped = |xs: &[Vec<f64>]| -> Vec<f64> { xs.iter().map(|x| f(x)).collect() };
+        self.minimize_batch(dim, &wrapped, seeds, rng)
+    }
+
+    /// Single-objective batched convenience: `f` maps a block of genomes
+    /// to one scalar objective each.
+    pub fn minimize_batch(
+        &self,
+        dim: usize,
+        f: &dyn Fn(&[Vec<f64>]) -> Vec<f64>,
+        seeds: &[Vec<f64>],
+        rng: &mut Rng,
+    ) -> (Vec<f64>, f64) {
+        let wrapped = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> {
+            f(xs).into_iter().map(|v| vec![v]).collect()
+        };
+        let pop = self.run_batch(dim, &wrapped, seeds, rng);
         let best = pop
             .iter()
             .min_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]))
@@ -128,9 +167,17 @@ impl Nsga2 {
         (best.genes.clone(), best.objectives[0])
     }
 
-    fn eval(genes: Vec<f64>, f: &dyn Fn(&[f64]) -> Vec<f64>) -> Individual {
+    fn eval_batch(
+        genes: Vec<Vec<f64>>,
+        f: &dyn Fn(&[Vec<f64>]) -> Vec<Vec<f64>>,
+    ) -> Vec<Individual> {
         let objectives = f(&genes);
-        Individual { genes, objectives, rank: 0, crowding: 0.0 }
+        assert_eq!(objectives.len(), genes.len(), "batch objective count mismatch");
+        genes
+            .into_iter()
+            .zip(objectives)
+            .map(|(genes, objectives)| Individual { genes, objectives, rank: 0, crowding: 0.0 })
+            .collect()
     }
 
     /// a dominates b iff a is <= everywhere and < somewhere.
@@ -377,5 +424,22 @@ mod tests {
         let a = ga.minimize(2, &f, &[], &mut r1);
         let b = ga.minimize(2, &f, &[], &mut r2);
         assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn batched_and_scalar_paths_are_identical() {
+        // Batch evaluation must not perturb the RNG stream: the same seed
+        // must produce bit-identical populations through both entry points.
+        let scalar = |x: &[f64]| (x[0] - 0.3).powi(2) + x[1];
+        let batch = |xs: &[Vec<f64>]| -> Vec<f64> {
+            xs.iter().map(|x| (x[0] - 0.3).powi(2) + x[1]).collect()
+        };
+        let ga = Nsga2::new(Nsga2Params { pop_size: 20, generations: 12, ..Default::default() });
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let a = ga.minimize(2, &scalar, &[vec![0.3, 0.0]], &mut r1);
+        let b = ga.minimize_batch(2, &batch, &[vec![0.3, 0.0]], &mut r2);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
     }
 }

@@ -9,6 +9,7 @@
 use crate::kernels::Kernel;
 use crate::util::json::Value;
 use crate::util::stats;
+use crate::util::threadpool::{default_threads, par_map};
 
 /// One validated input point.
 #[derive(Clone, Debug)]
@@ -28,24 +29,28 @@ pub struct SpeedupMap {
 impl SpeedupMap {
     /// Validate `predict` against the kernel's reference tuning on a
     /// `grid_per_dim`^d regular grid (the paper's 46×46 by default).
+    ///
+    /// Grid points are independent, so the map fans out across the thread
+    /// pool (predictor + two noise-free kernel evaluations per point —
+    /// 46×46 grids were a serial multi-second tail on every bench run).
+    /// Kernels that time real execution ([`Kernel::parallel_safe`] false,
+    /// e.g. pallas-lu) are evaluated sequentially so concurrent runs
+    /// cannot contend and corrupt the measured speedups.
     pub fn build(
         kernel: &dyn Kernel,
         grid_per_dim: usize,
-        predict: &dyn Fn(&[f64]) -> Vec<f64>,
+        predict: &(dyn Fn(&[f64]) -> Vec<f64> + Sync),
     ) -> SpeedupMap {
         let inputs = kernel.input_space().grid(grid_per_dim);
-        let points = inputs
-            .into_iter()
-            .map(|input| {
-                let tuned = predict(&input);
-                let t_tuned = kernel.eval_true(&input, &tuned);
-                let reference = kernel
-                    .reference_design(&input)
-                    .expect("speedup map needs a reference design");
-                let t_ref = kernel.eval_true(&input, &reference);
-                MapPoint { input, speedup: t_ref / t_tuned }
-            })
-            .collect();
+        let points = par_map(&inputs, map_threads(kernel), |_, input| {
+            let tuned = predict(input);
+            let t_tuned = kernel.eval_true(input, &tuned);
+            let reference = kernel
+                .reference_design(input)
+                .expect("speedup map needs a reference design");
+            let t_ref = kernel.eval_true(input, &reference);
+            MapPoint { input: input.clone(), speedup: t_ref / t_tuned }
+        });
         SpeedupMap { points, grid_per_dim }
     }
 
@@ -54,18 +59,15 @@ impl SpeedupMap {
     pub fn versus(
         kernel: &dyn Kernel,
         grid_per_dim: usize,
-        a: &dyn Fn(&[f64]) -> Vec<f64>,
-        b: &dyn Fn(&[f64]) -> Vec<f64>,
+        a: &(dyn Fn(&[f64]) -> Vec<f64> + Sync),
+        b: &(dyn Fn(&[f64]) -> Vec<f64> + Sync),
     ) -> SpeedupMap {
         let inputs = kernel.input_space().grid(grid_per_dim);
-        let points = inputs
-            .into_iter()
-            .map(|input| {
-                let t_a = kernel.eval_true(&input, &a(&input));
-                let t_b = kernel.eval_true(&input, &b(&input));
-                MapPoint { input, speedup: t_b / t_a }
-            })
-            .collect();
+        let points = par_map(&inputs, map_threads(kernel), |_, input| {
+            let t_a = kernel.eval_true(input, &a(input));
+            let t_b = kernel.eval_true(input, &b(input));
+            MapPoint { input: input.clone(), speedup: t_b / t_a }
+        });
         SpeedupMap { points, grid_per_dim }
     }
 
@@ -125,6 +127,16 @@ impl SpeedupMap {
             min: s.iter().copied().fold(f64::INFINITY, f64::min),
             max: s.iter().copied().fold(0.0, f64::max),
         }
+    }
+}
+
+/// Worker count for a validation map over this kernel: full pool for
+/// analytic simulators, sequential for real timed execution.
+fn map_threads(kernel: &dyn Kernel) -> usize {
+    if kernel.parallel_safe() {
+        default_threads()
+    } else {
+        1
     }
 }
 

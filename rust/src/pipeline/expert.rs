@@ -26,6 +26,9 @@ impl ExpertModel {
         threads: usize,
     ) -> ExpertModel {
         let inputs = &model.grid.inputs;
+        // Real-timed kernels must measure sequentially: concurrent runs
+        // contend for cores and the best-of comparison decides on noise.
+        let threads = if kernel.parallel_safe() { threads } else { 1 };
         let choices = par_map(inputs, threads, |_, input| {
             let mlkaps_design = model.trees.predict(input);
             let ref_design = kernel

@@ -185,10 +185,13 @@ impl Mlkaps {
                 let ctx = SampleCtx { space: &joint, n_inputs, history: &history };
                 sampler.next_batch(want, &ctx, &mut rng)
             };
-            // Evaluate the batch in parallel on the kernel.
+            // Evaluate the batch in parallel on the kernel (sequentially
+            // for real-timed kernels, whose concurrent measurements would
+            // contend and feed the surrogate corrupted timings).
             let values: Vec<Vec<f64>> =
                 batch.iter().map(|u| joint.snap(&joint.decode(u))).collect();
-            let ys = par_map(&values, cfg.threads, |_, v| {
+            let eval_threads = if kernel.parallel_safe() { cfg.threads } else { 1 };
+            let ys = par_map(&values, eval_threads, |_, v| {
                 kernel.eval(&v[..n_inputs], &v[n_inputs..])
             });
             for ((u, v), y) in batch.into_iter().zip(values).zip(ys) {

@@ -130,13 +130,21 @@ impl Sampler for GaAdaptive {
             &jobs,
             crate::util::threadpool::default_threads(),
             |_, (input, job_rng)| {
-                let f = |design: &[f64]| {
-                    let mut x = input.clone();
-                    x.extend_from_slice(design);
-                    model.predict(&x)
+                // One predict_batch per GA generation (compiled-forest
+                // path) instead of one scalar predict per individual.
+                let f = |population: &[Vec<f64>]| -> Vec<f64> {
+                    let xs: Vec<Vec<f64>> = population
+                        .iter()
+                        .map(|design| {
+                            let mut x = input.clone();
+                            x.extend_from_slice(design);
+                            x
+                        })
+                        .collect();
+                    model.predict_batch(&xs)
                 };
                 let mut r = job_rng.clone();
-                let (best_design, _) = ga.minimize(n_design, &f, &[], &mut r);
+                let (best_design, _) = ga.minimize_batch(n_design, &f, &[], &mut r);
                 let mut point = input.clone();
                 point.extend(best_design);
                 point

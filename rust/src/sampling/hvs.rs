@@ -105,12 +105,15 @@ impl Hvs {
                 if thr <= bx.lo[feat] || thr >= bx.hi[feat] {
                     continue;
                 }
-                let (l, r): (Vec<usize>, Vec<usize>) =
-                    idxs.iter().partition(|&&i| history.x[i][feat] <= thr);
-                if l.len() < self.min_leaf || r.len() < self.min_leaf {
+                // Score both sides in two fused streaming sweeps — the
+                // old per-feature partition + per-side collect made
+                // candidate scoring the sampler's allocation hot spot.
+                let Some((ss_l, ss_r)) = split_ss(&y_eff, idxs, self.min_leaf, |i| {
+                    history.x[i][feat] <= thr
+                }) else {
                     continue;
-                }
-                let gain = parent - self.ss(&y_eff, &l) - self.ss(&y_eff, &r);
+                };
+                let gain = parent - ss_l - ss_r;
                 if gain > 0.0 && best.map_or(true, |(_, _, g)| gain > g) {
                     best = Some((feat, thr, gain));
                 }
@@ -152,8 +155,8 @@ impl Hvs {
 
     /// Sum of squared deviations (impurity) of a subset.
     fn ss(&self, y: &[f64], idx: &[usize]) -> f64 {
-        let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-        stats::variance(&ys) * (ys.len().max(1) as f64)
+        let (n, _, var) = subset_stats(y, idx);
+        var * (n.max(1) as f64)
     }
 
     /// Conservative (Student-t inflated) dispersion estimate of a subset.
@@ -167,14 +170,86 @@ impl Hvs {
             }
             .max(1e-12);
         }
-        let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-        let n = ys.len();
+        let (n, m, var) = subset_stats(y, idx);
         let infl = 1.0 + stats::t_crit_95(n - 1) / (n as f64).sqrt();
         match self.dispersion {
-            Dispersion::Variance => stats::variance(&ys) * infl,
-            Dispersion::Relative => (stats::coeff_variation(&ys) * infl).powi(2),
+            Dispersion::Variance => var * infl,
+            Dispersion::Relative => {
+                let cv = if m.abs() < 1e-300 { 0.0 } else { var.sqrt() / m.abs() };
+                (cv * infl).powi(2)
+            }
         }
     }
+}
+
+/// Streaming two-pass `(count, mean, unbiased variance)` of
+/// `{y[i] : i ∈ idxs}`.
+///
+/// Replicates the summation order of `stats::mean`/`stats::variance` over
+/// the collected subset (values stream in `idxs` order in both passes),
+/// so partition scores are bit-identical to the collect-then-call code
+/// this replaces — minus the Vec allocation per call.
+fn subset_stats(y: &[f64], idxs: &[usize]) -> (usize, f64, f64) {
+    let n = idxs.len();
+    if n == 0 {
+        return (0, 0.0, 0.0);
+    }
+    let mut sum = 0.0;
+    for &i in idxs {
+        sum += y[i];
+    }
+    let m = sum / n as f64;
+    if n < 2 {
+        return (n, m, 0.0);
+    }
+    let mut ssd = 0.0;
+    for &i in idxs {
+        ssd += (y[i] - m) * (y[i] - m);
+    }
+    (n, m, ssd / (n - 1) as f64)
+}
+
+/// Both sides of a candidate split scored in two fused sweeps: one pass
+/// accumulating each side's count and sum, one pass accumulating each
+/// side's squared deviations. Returns `None` (skipping the second sweep)
+/// when either side is below `min_leaf`. Per side the additions happen in
+/// `idxs` order — exactly the order [`subset_stats`] (and the
+/// partition+collect code before it) would produce — so the returned
+/// `(ss_left, ss_right)` are bit-identical, with one predicate evaluation
+/// per element per pass instead of five sweeps.
+fn split_ss(
+    y: &[f64],
+    idxs: &[usize],
+    min_leaf: usize,
+    left: impl Fn(usize) -> bool,
+) -> Option<(f64, f64)> {
+    let (mut nl, mut nr) = (0usize, 0usize);
+    let (mut sum_l, mut sum_r) = (0.0, 0.0);
+    for &i in idxs {
+        if left(i) {
+            nl += 1;
+            sum_l += y[i];
+        } else {
+            nr += 1;
+            sum_r += y[i];
+        }
+    }
+    if nl < min_leaf || nr < min_leaf {
+        return None;
+    }
+    let ml = if nl > 0 { sum_l / nl as f64 } else { 0.0 };
+    let mr = if nr > 0 { sum_r / nr as f64 } else { 0.0 };
+    let (mut ssd_l, mut ssd_r) = (0.0, 0.0);
+    for &i in idxs {
+        if left(i) {
+            ssd_l += (y[i] - ml) * (y[i] - ml);
+        } else {
+            ssd_r += (y[i] - mr) * (y[i] - mr);
+        }
+    }
+    let var_l = if nl < 2 { 0.0 } else { ssd_l / (nl - 1) as f64 };
+    let var_r = if nr < 2 { 0.0 } else { ssd_r / (nr - 1) as f64 };
+    Some((var_l * (nl.max(1) as f64), var_r * (nr.max(1) as f64)))
 }
 
 impl Sampler for Hvs {

@@ -15,10 +15,14 @@
 //! Row bagging and per-tree feature subsampling mirror LightGBM's
 //! `bagging_fraction` / `feature_fraction`.
 
+use std::collections::BinaryHeap;
+
 use crate::data::Dataset;
+use crate::surrogate::forest::{CompiledForest, RawNode};
 use crate::surrogate::Surrogate;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, par_map};
 
 /// Loss driving the gradient computation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,23 +156,33 @@ struct Binner {
 impl Binner {
     fn fit(data: &Dataset, categorical: &[bool], max_bins: usize) -> Binner {
         let d = data.dim();
+        // Any feature with ≥2 distinct finite values must get ≥2 bins: a
+        // 0/1-bin table makes the feature silently unsplittable (the split
+        // scan skips nb < 2), which turned `max_bins ∈ {0, 1}` configs and
+        // degenerate quantile tables into constant models.
+        let eff_bins = max_bins.max(2);
         let mut edges = Vec::with_capacity(d);
         for j in 0..d {
             let mut col = data.column(j);
             col.retain(|v| !v.is_nan());
             col.sort_by(|a, b| a.partial_cmp(b).unwrap());
             col.dedup();
-            if categorical[j] || col.len() <= max_bins {
+            if categorical[j] || col.len() <= eff_bins {
                 // One bin per distinct value.
                 edges.push(col);
             } else {
                 // Quantile edges over distinct values.
-                let mut e = Vec::with_capacity(max_bins);
-                for b in 1..=max_bins {
-                    let idx = (b * col.len()) / max_bins - 1;
+                let mut e = Vec::with_capacity(eff_bins);
+                for b in 1..=eff_bins {
+                    let idx = (b * col.len()) / eff_bins - 1;
                     e.push(col[idx]);
                 }
                 e.dedup();
+                // Belt for collapsed edge sets (heavily skewed columns):
+                // the table must at least separate min from max.
+                if e.len() < 2 {
+                    e = vec![col[0], col[col.len() - 1]];
+                }
                 edges.push(e);
             }
         }
@@ -212,6 +226,105 @@ struct HistCell {
     count: u32,
 }
 
+/// Rows below this count keep the histogram scan sequential: the fit
+/// parallelism pays for its scoped-thread spawns only on big leaves (the
+/// root and the first few levels of each tree on large datasets).
+const PAR_SPLIT_MIN_ROWS: usize = 8192;
+
+/// Reusable fit-time buffers, hoisted out of the tree loop: one histogram
+/// preallocated to the *global* max bin count (sliced per feature and
+/// `fill`-reset instead of `clear`+`resize`, so the sequential scan never
+/// reallocates).
+struct SplitScratch {
+    hist: Vec<HistCell>,
+}
+
+/// Histogram-scan one feature for the best split of `rows`.
+///
+/// Returns `(best gain, best bin)` with gain `NEG_INFINITY` when the
+/// feature is unsplittable. Kept a free function so the parallel
+/// (per-feature) and sequential (shared-scratch) paths share it; the
+/// in-feature tie rule (first bin to strictly exceed) plus the caller's
+/// in-order fold across features reproduce the old flat scan's selection
+/// bit for bit, so the fitted model does not depend on the thread count.
+#[allow(clippy::too_many_arguments)]
+fn scan_feature(
+    j: usize,
+    rows: &[u32],
+    codes: &[Vec<u16>],
+    grads: &[f64],
+    binner: &Binner,
+    total_g: f64,
+    total_n: u32,
+    parent_score: f64,
+    lambda: f64,
+    min_leaf: u32,
+    hist: &mut [HistCell],
+) -> (f64, u16) {
+    let nb = binner.n_bins(j);
+    if nb < 2 {
+        return (f64::NEG_INFINITY, 0);
+    }
+    let hist = &mut hist[..nb];
+    hist.fill(HistCell::default());
+    let col = &codes[j];
+    // SAFETY: `r < n` for every row index by construction (rows come from
+    // 0..n or sample_indices(n, k)), `col.len() == n`, and every bin code
+    // is < nb == hist.len() (Binner::bin clamps to the edge table).
+    // Eliding the three bounds checks speeds histogram construction — the
+    // fit hot loop — measurably (EXPERIMENTS.md §Perf).
+    for &r in rows {
+        unsafe {
+            let bin = *col.get_unchecked(r as usize) as usize;
+            let c = hist.get_unchecked_mut(bin);
+            c.grad += *grads.get_unchecked(r as usize);
+            c.count += 1;
+        }
+    }
+    let mut best_gain = f64::NEG_INFINITY;
+    let mut best_bin = 0u16;
+    if binner.categorical[j] {
+        // One-vs-rest: category bin c goes left.
+        for (b, cell) in hist.iter().enumerate() {
+            let nl = cell.count;
+            let nr = total_n - nl;
+            if nl < min_leaf || nr < min_leaf {
+                continue;
+            }
+            let gl = cell.grad;
+            let gr = total_g - gl;
+            let gain = gl * gl / (nl as f64 + lambda)
+                + gr * gr / (nr as f64 + lambda)
+                - parent_score;
+            if gain > best_gain {
+                best_gain = gain;
+                best_bin = b as u16;
+            }
+        }
+    } else {
+        // Ordered scan over bin prefix sums.
+        let mut gl = 0.0;
+        let mut nl = 0u32;
+        for (b, cell) in hist.iter().enumerate().take(nb - 1) {
+            gl += cell.grad;
+            nl += cell.count;
+            let nr = total_n - nl;
+            if nl < min_leaf || nr < min_leaf {
+                continue;
+            }
+            let gr = total_g - gl;
+            let gain = gl * gl / (nl as f64 + lambda)
+                + gr * gr / (nr as f64 + lambda)
+                - parent_score;
+            if gain > best_gain {
+                best_gain = gain;
+                best_bin = b as u16;
+            }
+        }
+    }
+    (best_gain, best_bin)
+}
+
 /// A leaf pending expansion during leaf-wise growth.
 struct Candidate {
     node: usize,
@@ -223,6 +336,38 @@ struct Candidate {
     grad_sum: f64,
 }
 
+/// Max-heap entry: candidates pop by gain (desc), then insertion order
+/// (later wins ties) — a real heap instead of the old O(leaves²)
+/// linear-scan pop over a Vec.
+struct HeapCand {
+    seq: u32,
+    cand: Candidate,
+}
+
+impl Ord for HeapCand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.cand.gain.total_cmp(&other.cand.gain).then(self.seq.cmp(&other.seq))
+    }
+}
+impl PartialOrd for HeapCand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for HeapCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for HeapCand {}
+
+/// One fitted tree plus its leaf membership (row indices + leaf value),
+/// used to update the boosting predictions without re-traversing.
+struct TreeFit {
+    tree: Tree,
+    leaves: Vec<(Vec<u32>, f64)>,
+}
+
 /// The boosted ensemble.
 pub struct Gbdt {
     pub params: GbdtParams,
@@ -230,25 +375,77 @@ pub struct Gbdt {
     trees: Vec<Tree>,
     /// Which features are categorical (set at fit time from the space).
     pub categorical: Vec<bool>,
+    /// SoA + pre-binned inference engine, rebuilt after every fit or
+    /// deserialize (None only before the first fit).
+    compiled: Option<CompiledForest>,
 }
 
 impl Gbdt {
     pub fn new(params: GbdtParams) -> Self {
-        Gbdt { params, base_score: 0.0, trees: Vec::new(), categorical: Vec::new() }
+        Gbdt {
+            params,
+            base_score: 0.0,
+            trees: Vec::new(),
+            categorical: Vec::new(),
+            compiled: None,
+        }
     }
 
     /// Convenience: default params with a seed and categorical mask.
     pub fn with_mask(params: GbdtParams, categorical: Vec<bool>) -> Self {
-        Gbdt { params, base_score: 0.0, trees: Vec::new(), categorical }
+        Gbdt { params, base_score: 0.0, trees: Vec::new(), categorical, compiled: None }
     }
 
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }
 
-    /// Approximate heap bytes of the trained ensemble (telemetry/Fig 14).
+    /// Approximate heap bytes of the trained ensemble (telemetry/Fig 14),
+    /// including the compiled inference arrays.
     pub fn mem_bytes(&self) -> usize {
-        self.trees.iter().map(Tree::mem_bytes).sum()
+        self.trees.iter().map(Tree::mem_bytes).sum::<usize>()
+            + self.compiled.as_ref().map_or(0, CompiledForest::mem_bytes)
+    }
+
+    /// The compiled inference engine (None before the first fit).
+    pub fn compiled(&self) -> Option<&CompiledForest> {
+        self.compiled.as_ref()
+    }
+
+    /// Batched prediction with an explicit worker count (0 = adaptive).
+    /// Bit-identical to per-row [`Surrogate::predict`] at any count —
+    /// exercised by `tests/forest_equivalence.rs`.
+    pub fn predict_batch_threads(&self, xs: &[Vec<f64>], threads: usize) -> Vec<f64> {
+        match &self.compiled {
+            Some(cf) => cf.predict_batch(xs, threads),
+            None => xs.iter().map(|x| self.predict(x)).collect(),
+        }
+    }
+
+    /// Rebuild the compiled SoA forest from the tree arenas.
+    fn compile(&mut self) {
+        let raw: Vec<Vec<RawNode>> = self
+            .trees
+            .iter()
+            .map(|t| {
+                t.nodes
+                    .iter()
+                    .map(|n| RawNode {
+                        feat: n.feat,
+                        flags: n.flags,
+                        value: n.value,
+                        left: n.left,
+                        right: n.right,
+                    })
+                    .collect()
+            })
+            .collect();
+        self.compiled = Some(CompiledForest::compile(
+            &raw,
+            self.categorical.len(),
+            self.base_score,
+            self.params.learning_rate,
+        ));
     }
 
     /// Serialize the fitted ensemble to a versioned JSON checkpoint.
@@ -391,7 +588,11 @@ impl Gbdt {
                 Ok(Tree { nodes })
             })
             .collect::<Result<Vec<_>, _>>()?;
-        Ok(Gbdt { params, base_score, trees, categorical })
+        let mut g = Gbdt { params, base_score, trees, categorical, compiled: None };
+        // Rebuild the inference engine so a deserialized model serves
+        // batched queries exactly like the freshly fitted one.
+        g.compile();
+        Ok(g)
     }
 
     fn grad(&self, pred: f64, y: f64) -> f64 {
@@ -402,16 +603,21 @@ impl Gbdt {
     }
 
     /// Find the best split of `rows` and return a Candidate.
+    ///
+    /// Big leaves fan the per-feature histogram scans across the thread
+    /// pool; the fold over per-feature results runs in `feats` order with
+    /// the same strict-greater rule as the old flat scan, so the chosen
+    /// split — and therefore the fitted model — is identical at every
+    /// thread count.
     fn best_split(
         &self,
         node: usize,
         rows: Vec<u32>,
         codes: &[Vec<u16>],
-        raw: &[Vec<f64>],
         grads: &[f64],
         binner: &Binner,
         feats: &[usize],
-        hist: &mut Vec<HistCell>,
+        scratch: &mut SplitScratch,
     ) -> Candidate {
         let lambda = self.params.lambda_l2;
         let min_leaf = self.params.min_samples_leaf as u32;
@@ -419,76 +625,39 @@ impl Gbdt {
         let total_n = rows.len() as u32;
         let parent_score = total_g * total_g / (total_n as f64 + lambda);
 
+        let per_feat: Vec<(f64, u16)> =
+            if rows.len() >= PAR_SPLIT_MIN_ROWS && feats.len() >= 2 {
+                let rows_ref: &[u32] = &rows;
+                par_map(feats, default_threads(), |_, &j| {
+                    let mut hist =
+                        vec![HistCell::default(); binner.n_bins(j).max(1)];
+                    scan_feature(
+                        j, rows_ref, codes, grads, binner, total_g, total_n,
+                        parent_score, lambda, min_leaf, &mut hist,
+                    )
+                })
+            } else {
+                feats
+                    .iter()
+                    .map(|&j| {
+                        scan_feature(
+                            j, &rows, codes, grads, binner, total_g, total_n,
+                            parent_score, lambda, min_leaf, &mut scratch.hist,
+                        )
+                    })
+                    .collect()
+            };
+
         let mut best_gain = f64::NEG_INFINITY;
         let mut best_feat = 0usize;
         let mut best_bin = 0u16;
-        for &j in feats {
-            let nb = binner.n_bins(j);
-            if nb < 2 {
-                continue;
-            }
-            hist.clear();
-            hist.resize(nb, HistCell::default());
-            let col = &codes[j];
-            // SAFETY: `r < n` for every row index by construction (rows
-            // come from 0..n or sample_indices(n, k)), `col.len() == n`,
-            // and every bin code is < nb == hist.len() (Binner::bin clamps
-            // to the edge table). Eliding the three bounds checks speeds
-            // histogram construction — the fit hot loop — measurably
-            // (EXPERIMENTS.md §Perf).
-            for &r in &rows {
-                unsafe {
-                    let bin = *col.get_unchecked(r as usize) as usize;
-                    let c = hist.get_unchecked_mut(bin);
-                    c.grad += *grads.get_unchecked(r as usize);
-                    c.count += 1;
-                }
-            }
-            if binner.categorical[j] {
-                // One-vs-rest: category bin c goes left.
-                for (b, cell) in hist.iter().enumerate() {
-                    let nl = cell.count;
-                    let nr = total_n - nl;
-                    if nl < min_leaf || nr < min_leaf {
-                        continue;
-                    }
-                    let gl = cell.grad;
-                    let gr = total_g - gl;
-                    let gain = gl * gl / (nl as f64 + lambda)
-                        + gr * gr / (nr as f64 + lambda)
-                        - parent_score;
-                    if gain > best_gain {
-                        best_gain = gain;
-                        best_feat = j;
-                        best_bin = b as u16;
-                    }
-                }
-            } else {
-                // Ordered scan over bin prefix sums.
-                let mut gl = 0.0;
-                let mut nl = 0u32;
-                for b in 0..nb - 1 {
-                    gl += hist[b].grad;
-                    nl += hist[b].count;
-                    let nr = total_n - nl;
-                    if nl < min_leaf || nr < min_leaf {
-                        continue;
-                    }
-                    let gr = total_g - gl;
-                    let gain = gl * gl / (nl as f64 + lambda)
-                        + gr * gr / (nr as f64 + lambda)
-                        - parent_score;
-                    if gain > best_gain {
-                        best_gain = gain;
-                        best_feat = j;
-                        best_bin = b as u16;
-                    }
-                }
+        for (&j, &(gain, bin)) in feats.iter().zip(&per_feat) {
+            if gain > best_gain {
+                best_gain = gain;
+                best_feat = j;
+                best_bin = bin;
             }
         }
-        // Keep raw borrow alive only for signature symmetry (values are
-        // resolved at split-apply time).
-        let _ = raw;
         Candidate {
             node,
             rows,
@@ -499,17 +668,18 @@ impl Gbdt {
         }
     }
 
-    /// Fit one tree on the (bagged) rows; returns it and updates preds.
-    #[allow(clippy::too_many_arguments)]
+    /// Fit one tree on the (bagged) rows. Returns the tree plus its leaf
+    /// membership so the caller can update boosting predictions for
+    /// in-bag rows with one add per row instead of a full traversal.
     fn fit_tree(
         &self,
         codes: &[Vec<u16>],
-        raw: &[Vec<f64>],
         grads: &[f64],
         binner: &Binner,
         rows: Vec<u32>,
         rng: &mut Rng,
-    ) -> Tree {
+        scratch: &mut SplitScratch,
+    ) -> TreeFit {
         let d = codes.len();
         let mut feats: Vec<usize> = (0..d).collect();
         if self.params.feature_fraction < 1.0 {
@@ -518,25 +688,29 @@ impl Gbdt {
         }
 
         let mut tree = Tree { nodes: vec![Node::leaf(0.0)] };
-        let mut hist: Vec<HistCell> = Vec::new();
-        let root =
-            self.best_split(0, rows, codes, raw, grads, binner, &feats, &mut hist);
-        let mut heap: Vec<Candidate> = vec![root];
-        let mut n_leaves = 1usize;
+        let root = self.best_split(0, rows, codes, grads, binner, &feats, scratch);
+        let root_g = root.grad_sum;
+        let root_n = root.rows.len();
         let lambda = self.params.lambda_l2;
+        let min_gain = self.params.min_gain;
+
+        // Candidates pop by max gain from a real heap (the old Vec +
+        // linear-scan pop was O(leaves²) per tree). Candidates that do not
+        // clear min_gain are final leaves and never enter the heap.
+        let mut heap: BinaryHeap<HeapCand> = BinaryHeap::new();
+        let mut seq = 0u32;
+        // (node index, member rows) of finalized leaves.
+        let mut done: Vec<(usize, Vec<u32>)> = Vec::new();
+        if self.params.max_leaves > 1 && root.gain > min_gain {
+            heap.push(HeapCand { seq, cand: root });
+            seq += 1;
+        } else {
+            done.push((0, root.rows));
+        }
+        let mut n_leaves = 1usize;
 
         while n_leaves < self.params.max_leaves {
-            // Pop the candidate with max gain.
-            let (best_idx, _) = match heap
-                .iter()
-                .enumerate()
-                .filter(|(_, c)| c.gain > self.params.min_gain)
-                .max_by(|a, b| a.1.gain.partial_cmp(&b.1.gain).unwrap())
-            {
-                Some((i, c)) => (i, c.gain),
-                None => break,
-            };
-            let cand = heap.swap_remove(best_idx);
+            let Some(HeapCand { cand, .. }) = heap.pop() else { break };
 
             // Partition rows.
             let col = &codes[cand.feat];
@@ -578,22 +752,31 @@ impl Gbdt {
                 let value = -g / (rws.len() as f64 + lambda);
                 tree.nodes[node] = Node::leaf(value);
                 if rws.len() >= 2 * self.params.min_samples_leaf {
-                    let c = self.best_split(
-                        node, rws, codes, raw, grads, binner, &feats, &mut hist,
-                    );
-                    heap.push(c);
+                    let c = self.best_split(node, rws, codes, grads, binner, &feats, scratch);
+                    if c.gain > min_gain {
+                        heap.push(HeapCand { seq, cand: c });
+                        seq += 1;
+                    } else {
+                        done.push((node, c.rows));
+                    }
+                } else {
+                    done.push((node, rws));
                 }
             }
         }
 
         // Root never split: emit the constant-fit leaf.
         if tree.nodes.len() == 1 {
-            if let Some(c) = heap.first() {
-                let value = -c.grad_sum / (c.rows.len() as f64 + lambda);
-                tree.nodes[0] = Node::leaf(value);
-            }
+            tree.nodes[0] = Node::leaf(-root_g / (root_n as f64 + lambda));
         }
-        tree
+
+        // Unexpanded heap candidates are leaves too (max_leaves reached).
+        done.extend(heap.into_iter().map(|hc| (hc.cand.node, hc.cand.rows)));
+        let leaves = done
+            .into_iter()
+            .map(|(node, rws)| (rws, tree.nodes[node].value))
+            .collect();
+        TreeFit { tree, leaves }
     }
 }
 
@@ -618,24 +801,65 @@ impl Surrogate for Gbdt {
         let mut grads = vec![0.0f64; n];
         let mut rng = Rng::new(self.params.seed);
 
+        // Buffers hoisted out of the tree loop: the split histogram is
+        // preallocated once to the global max bin count, the unbagged row
+        // list is a memcpy of a cached identity, and the in-bag mask is
+        // reused across trees.
+        let max_nb = (0..d).map(|j| binner.n_bins(j)).max().unwrap_or(1);
+        let mut scratch = SplitScratch { hist: vec![HistCell::default(); max_nb] };
+        let identity: Vec<u32> = (0..n as u32).collect();
+        let bagging = self.params.bagging_fraction < 1.0;
+        let mut in_bag = vec![false; n];
+        // Leaf-membership pred updates follow the *bin-code* routing; a
+        // NaN feature value is code-routed right but may traverse left via
+        // the default-left flag, so NaN-bearing datasets keep the
+        // traversal-based update (residuals must track what the served
+        // model actually outputs).
+        let has_nan = data.x.iter().any(|row| row.iter().any(|v| v.is_nan()));
+
+        let lr = self.params.learning_rate;
         for _t in 0..self.params.n_trees {
             for i in 0..n {
                 grads[i] = self.grad(preds[i], data.y[i]);
             }
-            let rows: Vec<u32> = if self.params.bagging_fraction < 1.0 {
+            let rows: Vec<u32> = if bagging {
                 let k = ((n as f64 * self.params.bagging_fraction).ceil() as usize)
                     .clamp(1, n);
                 rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect()
             } else {
-                (0..n as u32).collect()
+                identity.clone()
             };
-            let tree = self.fit_tree(&codes, &data.x, &grads, &binner, rows, &mut rng);
-            let lr = self.params.learning_rate;
-            for (i, row) in data.x.iter().enumerate() {
-                preds[i] += lr * tree.predict(row);
+            if bagging {
+                in_bag.fill(false);
+                for &r in &rows {
+                    in_bag[r as usize] = true;
+                }
             }
-            self.trees.push(tree);
+            let fit = self.fit_tree(&codes, &grads, &binner, rows, &mut rng, &mut scratch);
+            if has_nan {
+                for (i, row) in data.x.iter().enumerate() {
+                    preds[i] += lr * fit.tree.predict(row);
+                }
+            } else {
+                // In-bag predictions update straight from leaf membership
+                // (one add per row, bit-identical to traversal for NaN-free
+                // rows); only out-of-bag rows need a tree traversal.
+                for (rws, value) in &fit.leaves {
+                    for &r in rws {
+                        preds[r as usize] += lr * value;
+                    }
+                }
+                if bagging {
+                    for (i, row) in data.x.iter().enumerate() {
+                        if !in_bag[i] {
+                            preds[i] += lr * fit.tree.predict(row);
+                        }
+                    }
+                }
+            }
+            self.trees.push(fit.tree);
         }
+        self.compile();
     }
 
     fn predict(&self, x: &[f64]) -> f64 {
@@ -645,6 +869,13 @@ impl Surrogate for Gbdt {
             p += lr * t.predict(x);
         }
         p
+    }
+
+    /// Batched prediction through the compiled SoA forest (pre-binned
+    /// integer-compare traversal, parallel over row blocks for large
+    /// batches). Bit-identical to per-row [`Surrogate::predict`].
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        self.predict_batch_threads(xs, 0)
     }
 }
 
@@ -837,6 +1068,63 @@ mod tests {
             map.remove("trees");
         }
         assert!(Gbdt::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn tiny_max_bins_still_splits() {
+        // Regression: max_bins <= 1 used to yield 0/1-bin tables for
+        // high-cardinality features, silently making every feature
+        // unsplittable and the model constant.
+        let f = |x: &[f64]| if x[0] > 0.0 { 10.0 } else { 1.0 };
+        let train = make_data(800, 31, f);
+        let test = make_data(200, 32, f);
+        for max_bins in [0, 1, 2] {
+            let mae = fit_and_eval(
+                &train,
+                &test,
+                GbdtParams { max_bins, ..Default::default() },
+                vec![],
+            );
+            assert!(mae < 2.0, "max_bins={max_bins} mae={mae} (constant model?)");
+        }
+    }
+
+    #[test]
+    fn skewed_column_remains_splittable() {
+        // Heavily skewed feature: 95% of rows share one value, the rest
+        // spread over many distinct values. The bin table must still
+        // separate the bulk from the tail.
+        let mut rng = Rng::new(33);
+        let mut train = Dataset::new();
+        for i in 0..1000 {
+            let x = if i % 20 == 0 { rng.uniform(1.0, 100.0) } else { 0.0 };
+            let y = if x > 0.5 { 50.0 } else { 1.0 };
+            train.push(vec![x], y);
+        }
+        let mut m = Gbdt::new(GbdtParams { n_trees: 50, ..Default::default() });
+        m.fit(&train);
+        assert!((m.predict(&[0.0]) - 1.0).abs() < 2.0);
+        assert!(m.predict(&[50.0]) > 25.0, "tail region not learned");
+    }
+
+    #[test]
+    fn compiled_engine_matches_scalar_after_fit_and_roundtrip() {
+        let train = make_data(600, 34, |x| (x[0] * 2.0).sin() - x[1]);
+        let mut m = Gbdt::with_mask(
+            GbdtParams { n_trees: 40, bagging_fraction: 0.8, seed: 5, ..Default::default() },
+            vec![false, false],
+        );
+        m.fit(&train);
+        assert!(m.compiled().is_some());
+        assert!(m.compiled().unwrap().is_prebinned());
+        let queries = make_data(300, 35, |_| 0.0).x;
+        let batch = m.predict_batch(&queries);
+        for (q, &b) in queries.iter().zip(&batch) {
+            assert_eq!(m.predict(q), b, "{q:?}");
+        }
+        let back = Gbdt::from_json(&crate::util::json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.predict_batch(&queries), batch);
     }
 
     #[test]

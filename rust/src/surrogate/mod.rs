@@ -6,6 +6,7 @@
 //! quantile-binned features, leaf-wise tree growth with L2-regularized
 //! gain, bagging and feature subsampling, and native categorical handling.
 
+pub mod forest;
 pub mod gbdt;
 pub mod metrics;
 
@@ -16,10 +17,19 @@ pub trait Surrogate: Send + Sync {
     /// Fit (or refit) the model on the dataset.
     fn fit(&mut self, data: &Dataset);
 
-    /// Predict the objective at one point (value space).
+    /// Predict the objective at one point (value space). This is the
+    /// *reference* semantics: batch implementations must return exactly
+    /// these values.
     fn predict(&self, x: &[f64]) -> f64;
 
-    /// Predict many points.
+    /// Predict many points at once.
+    ///
+    /// This is the hot entry point: the optimizer scores whole GA
+    /// populations and the samplers score whole candidate sets through it,
+    /// so models with a vectorized path (see
+    /// [`forest::CompiledForest`]) override it. The default falls back to
+    /// one [`Surrogate::predict`] call per row. Overrides must stay
+    /// bit-identical to that fallback.
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict(x)).collect()
     }
@@ -57,5 +67,15 @@ impl<S: Surrogate> Surrogate for LogSurrogate<S> {
 
     fn predict(&self, x: &[f64]) -> f64 {
         self.inner.predict(x).exp()
+    }
+
+    /// Batched path: one inner batch call, then the elementwise `exp`
+    /// (identical to per-row `predict` since `exp` is applied per value).
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = self.inner.predict_batch(xs);
+        for v in &mut out {
+            *v = v.exp();
+        }
+        out
     }
 }

@@ -15,9 +15,22 @@ pub fn default_threads() -> usize {
         .unwrap_or(4)
 }
 
+/// Output slot vector shared across workers by raw pointer.
+///
+/// Soundness contract: the atomic work-stealing cursor hands every index
+/// to exactly one worker, so all writes hit disjoint slots, and the
+/// `thread::scope` join supplies the happens-before edge for the final
+/// read. This replaces the old per-slot `Mutex`, whose lock/unlock pair
+/// on every result made the inner loop a serialization point for cheap
+/// work items.
+struct Slots<R>(*mut Option<R>);
+unsafe impl<R: Send> Sync for Slots<R> {}
+
 /// Apply `f` to every item in parallel, preserving input order.
 ///
-/// `threads == 1` runs inline (deterministic debugging path).
+/// `threads == 1` runs inline (deterministic debugging path). The inner
+/// loop is lock-free: workers claim indices from an atomic cursor and
+/// write results through disjoint slots.
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -31,8 +44,7 @@ where
     let cursor = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
     out.resize_with(items.len(), || None);
-    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
+    let slots = Slots(out.as_mut_ptr());
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -41,7 +53,10 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                **slots[i].lock().unwrap() = Some(r);
+                // SAFETY: `i` was claimed by exactly one fetch_add winner
+                // and is in-bounds; no other thread touches slot `i`. The
+                // scope join orders these writes before `out` is read.
+                unsafe { *slots.0.add(i) = Some(r) };
             });
         }
     });
@@ -75,6 +90,17 @@ mod tests {
     fn more_threads_than_items() {
         let items = vec![7];
         assert_eq!(par_map(&items, 64, |_, &x| x), vec![7]);
+    }
+
+    #[test]
+    fn heap_allocated_results_preserve_order() {
+        // Non-Copy results through the raw slot writes: ordering, content
+        // and drops must all be correct.
+        let items: Vec<usize> = (0..300).collect();
+        let out = par_map(&items, 7, |i, &x| vec![format!("{i}:{x}")]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v, &vec![format!("{i}:{i}")]);
+        }
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Property suite: `CompiledForest` batch prediction must be
+//! **bit-identical** to the scalar tree-arena `predict` — across random
+//! forests covering categorical one-vs-rest splits, NaN default-left
+//! routing, unseen categories, 1-node constant trees, tiny bin tables and
+//! L1/L2 losses, at several thread counts, and after a JSON round-trip.
+//!
+//! Exactness (assert_eq on f64 bits, no epsilon) is what lets the grid
+//! optimizer, GA-Adaptive and the checkpoint resume path switch to
+//! `predict_batch` without perturbing any seeded result.
+
+use mlkaps::data::Dataset;
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams, Loss};
+use mlkaps::surrogate::Surrogate;
+use mlkaps::util::rng::Rng;
+
+/// Distinct categories per categorical feature.
+const N_CATS: usize = 6;
+
+/// Build a random fitting problem: mixed numeric/categorical features,
+/// a lumpy objective, and random GBDT hyperparameters.
+fn random_case(rng: &mut Rng) -> (Gbdt, Dataset) {
+    let d = 1 + rng.below(5);
+    let n = 30 + rng.below(370);
+    let categorical: Vec<bool> = (0..d).map(|_| rng.bool(0.3)).collect();
+    let mut data = Dataset::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = categorical
+            .iter()
+            .map(|&c| {
+                if c {
+                    rng.below(N_CATS) as f64
+                } else {
+                    rng.uniform(-3.0, 3.0)
+                }
+            })
+            .collect();
+        let y = x
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| if j % 2 == 0 { (v * 1.3).sin() } else { v * v * 0.2 })
+            .sum::<f64>()
+            + rng.uniform(-0.1, 0.1);
+        data.push(x, y);
+    }
+    let params = GbdtParams {
+        n_trees: 1 + rng.below(50),
+        max_leaves: 2 + rng.below(30),
+        min_samples_leaf: 1 + rng.below(8),
+        bagging_fraction: rng.uniform(0.5, 1.0),
+        feature_fraction: rng.uniform(0.5, 1.0),
+        // Occasionally degenerate bin budgets (regression: used to make
+        // every feature unsplittable).
+        max_bins: if rng.bool(0.2) { rng.below(3) } else { 32 + rng.below(200) },
+        loss: if rng.bool(0.5) { Loss::L1 } else { Loss::L2 },
+        seed: rng.next_u64(),
+        ..Default::default()
+    };
+    let mut m = Gbdt::with_mask(params, categorical);
+    m.fit(&data);
+    (m, data)
+}
+
+/// Random query block: training rows, fresh in-range points, out-of-range
+/// numerics, unseen categories, and NaN injections.
+fn random_queries(rng: &mut Rng, model: &Gbdt, data: &Dataset, n_q: usize) -> Vec<Vec<f64>> {
+    let d = data.dim();
+    (0..n_q)
+        .map(|_| {
+            let mut q: Vec<f64> = if rng.bool(0.3) {
+                data.x[rng.below(data.len())].clone()
+            } else {
+                (0..d)
+                    .map(|j| {
+                        if model.categorical[j] {
+                            // Sometimes a category never seen in training.
+                            if rng.bool(0.2) {
+                                (N_CATS + 2 + rng.below(4)) as f64
+                            } else {
+                                rng.below(N_CATS) as f64
+                            }
+                        } else {
+                            rng.uniform(-6.0, 6.0) // beyond the training hull
+                        }
+                    })
+                    .collect()
+            };
+            if rng.bool(0.25) {
+                let j = rng.below(d);
+                q[j] = f64::NAN;
+            }
+            q
+        })
+        .collect()
+}
+
+#[test]
+fn prop_batch_is_bit_identical_to_scalar_predict() {
+    let mut rng = Rng::new(0xF0_4E57);
+    for trial in 0..30 {
+        let (model, data) = random_case(&mut rng);
+        assert!(
+            model.compiled().is_some(),
+            "trial {trial}: forest must compile after fit"
+        );
+        let queries = random_queries(&mut rng, &model, &data, 200);
+        let scalar: Vec<f64> = queries.iter().map(|q| model.predict(q)).collect();
+        for threads in [1usize, 2, 5, 0] {
+            let batch = model.predict_batch_threads(&queries, threads);
+            for (i, (s, b)) in scalar.iter().zip(&batch).enumerate() {
+                assert!(
+                    s.to_bits() == b.to_bits(),
+                    "trial {trial} threads {threads} query {i} ({:?}): \
+                     scalar {s} != batch {b}",
+                    queries[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_deserialized_forest_matches_original_batch() {
+    let mut rng = Rng::new(0xDE_5E71);
+    for trial in 0..10 {
+        let (model, data) = random_case(&mut rng);
+        let queries = random_queries(&mut rng, &model, &data, 120);
+        let doc = model.to_json().to_string();
+        let back = Gbdt::from_json(&mlkaps::util::json::parse(&doc).unwrap()).unwrap();
+        assert!(back.compiled().is_some(), "trial {trial}: compile after from_json");
+        let a = model.predict_batch(&queries);
+        let b = back.predict_batch(&queries);
+        let s: Vec<f64> = queries.iter().map(|q| back.predict(q)).collect();
+        assert_eq!(a, b, "trial {trial}: batch changed across JSON round-trip");
+        assert_eq!(b, s, "trial {trial}: deserialized batch != deserialized scalar");
+    }
+}
+
+#[test]
+fn one_node_constant_trees_are_exact() {
+    // Constant target -> every tree is a single constant-fit leaf; the
+    // compiled forest must reproduce the exact telescoped sum.
+    let mut data = Dataset::new();
+    for i in 0..80 {
+        data.push(vec![i as f64, (i % 7) as f64], 42.5);
+    }
+    let mut m = Gbdt::with_mask(
+        GbdtParams { n_trees: 25, ..Default::default() },
+        vec![false, true],
+    );
+    m.fit(&data);
+    let queries: Vec<Vec<f64>> =
+        vec![vec![3.0, 2.0], vec![-100.0, 99.0], vec![f64::NAN, f64::NAN]];
+    for threads in [1usize, 3] {
+        let batch = m.predict_batch_threads(&queries, threads);
+        for (q, &b) in queries.iter().zip(&batch) {
+            assert_eq!(m.predict(q).to_bits(), b.to_bits(), "{q:?}");
+        }
+        assert!((batch[0] - 42.5).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn large_batch_parallel_path_is_exact() {
+    // Force the parallel row-block path (>= several blocks per worker)
+    // and compare against scalar bit for bit.
+    let mut rng = Rng::new(0xB16_B10C);
+    let (model, data) = random_case(&mut rng);
+    let queries = random_queries(&mut rng, &model, &data, 6000);
+    let scalar: Vec<f64> = queries.iter().map(|q| model.predict(q)).collect();
+    let batch = model.predict_batch(&queries); // adaptive -> parallel
+    assert_eq!(scalar.len(), batch.len());
+    for (s, b) in scalar.iter().zip(&batch) {
+        assert_eq!(s.to_bits(), b.to_bits());
+    }
+}
