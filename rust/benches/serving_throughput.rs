@@ -1,0 +1,204 @@
+//! Serving throughput: decisions/sec of the deployed decision-tree
+//! runtime — pointer-walk `DesignTrees::predict` baseline vs the
+//! flattened-arena scalar `decide`, the memoized hot path, and blocked
+//! `decide_batch` at 1 thread and adaptive threads. This is the perf
+//! datapoint for the serving layer (README §Serving): the selector must
+//! cost nothing next to the kernel it configures.
+//!
+//! Run: `cargo bench --bench serving_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+//! CI asserts batched dispatch ≥ the scalar baseline in decisions/sec.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::*;
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::dtree::DesignTrees;
+use mlkaps::report;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::util::rng::Rng;
+
+/// Median-of-reps wall time of `f`. Five reps (vs the usual three)
+/// because the CI gate below compares phases measured in milliseconds on
+/// shared runners; the median of five rides out a scheduling hiccup.
+fn med_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let _ = f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&r);
+    }
+    mlkaps::util::stats::median(&times)
+}
+
+fn main() {
+    header(
+        "serving_throughput",
+        "decision-tree serving: scalar vs memoized vs batched decisions/sec",
+    );
+    let per_dim = budget3(64, 48, 16);
+    let n_query = budget3(2_000_000, 300_000, 50_000);
+
+    // A tuning-shaped bundle: 2 input dims, 3 design params, depth-8 trees
+    // fit on a synthetic (but input-dependent) optimal-design rule.
+    let input = ParamSpace::new(vec![
+        ParamDef::float("n", 64.0, 8192.0),
+        ParamDef::float("m", 64.0, 8192.0),
+    ]);
+    let design = ParamSpace::new(vec![
+        ParamDef::int("threads", 1, 64),
+        ParamDef::categorical("variant", &["row", "col", "tile"]),
+        ParamDef::boolean("prefetch"),
+    ]);
+    let grid = input.grid(per_dim);
+    let designs: Vec<Vec<f64>> = grid
+        .iter()
+        .map(|p| {
+            let size = p[0] * p[1];
+            vec![
+                (size.sqrt() / 128.0).round().clamp(1.0, 64.0),
+                if p[1] > 2.0 * p[0] {
+                    2.0
+                } else if p[0] > p[1] {
+                    0.0
+                } else {
+                    1.0
+                },
+                if size > 1e6 { 1.0 } else { 0.0 },
+            ]
+        })
+        .collect();
+    let trees = DesignTrees::fit(&grid, &designs, &input, &design, 8);
+    let bundle = TreeBundle::from_trees(trees.clone()).unwrap();
+    println!(
+        "bundle: {} trees, {} nodes, {} arena bytes",
+        trees.trees.len(),
+        trees.total_nodes(),
+        bundle.mem_bytes()
+    );
+
+    let mut rng = Rng::new(4242);
+    let queries: Vec<Vec<f64>> = (0..n_query)
+        .map(|_| vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)])
+        .collect();
+
+    // Pointer-walk baseline: the pre-serving per-call path.
+    let walk_secs = med_secs(5, || {
+        let mut acc = 0.0;
+        for q in &queries {
+            acc += trees.predict(q)[0];
+        }
+        acc
+    });
+    // Flattened scalar serving endpoint on distinct inputs (memo misses).
+    let scalar_secs = med_secs(5, || {
+        let mut acc = 0.0;
+        for q in &queries {
+            acc += bundle.decide(q)[0];
+        }
+        acc
+    });
+    // Memoized hot path: production kernels repeat a handful of shapes.
+    let hot: Vec<Vec<f64>> = queries.iter().take(64).cloned().collect();
+    let cached_secs = med_secs(5, || {
+        let mut acc = 0.0;
+        for i in 0..n_query {
+            acc += bundle.decide(&hot[i % hot.len()])[0];
+        }
+        acc
+    });
+    let batch1_secs = med_secs(5, || bundle.decide_batch(&queries, 1));
+    let batch_secs = med_secs(5, || bundle.decide_batch(&queries, 0));
+
+    let dps = |secs: f64| n_query as f64 / secs.max(1e-12);
+    let speedup = |secs: f64| walk_secs / secs.max(1e-12);
+    let rows = vec![
+        vec![
+            "predict_walk".to_string(),
+            n_query.to_string(),
+            format!("{walk_secs:.4}"),
+            format!("{:.0}", dps(walk_secs)),
+            String::from("1.00"),
+        ],
+        vec![
+            "decide_scalar".to_string(),
+            n_query.to_string(),
+            format!("{scalar_secs:.4}"),
+            format!("{:.0}", dps(scalar_secs)),
+            format!("{:.2}", speedup(scalar_secs)),
+        ],
+        vec![
+            "decide_memoized".to_string(),
+            n_query.to_string(),
+            format!("{cached_secs:.4}"),
+            format!("{:.0}", dps(cached_secs)),
+            format!("{:.2}", speedup(cached_secs)),
+        ],
+        vec![
+            "decide_batch_1t".to_string(),
+            n_query.to_string(),
+            format!("{batch1_secs:.4}"),
+            format!("{:.0}", dps(batch1_secs)),
+            format!("{:.2}", speedup(batch1_secs)),
+        ],
+        vec![
+            "decide_batch".to_string(),
+            n_query.to_string(),
+            format!("{batch_secs:.4}"),
+            format!("{:.0}", dps(batch_secs)),
+            format!("{:.2}", speedup(batch_secs)),
+        ],
+    ];
+    println!(
+        "{}",
+        report::table(&["phase", "rows", "secs", "decisions_per_sec", "speedup_vs_walk"], &rows)
+    );
+    save_csv(
+        "serving_throughput.csv",
+        &["phase", "rows", "secs", "decisions_per_sec", "speedup_vs_walk"],
+        &rows,
+    );
+    let c = bundle.cache_counters();
+    println!(
+        "memo cache across phases: {} hits / {} misses ({:.1}% hit rate)",
+        c.hits(),
+        c.misses(),
+        100.0 * c.hit_rate()
+    );
+
+    // Correctness trail: batched dispatch must be bit-identical to the
+    // model walk on a probe sample, at 1 and several threads.
+    let probe: Vec<Vec<f64>> = queries.iter().take(512).cloned().collect();
+    let want: Vec<Vec<f64>> = probe.iter().map(|q| trees.predict(q)).collect();
+    for threads in [1usize, 4] {
+        assert_eq!(
+            bundle.decide_batch(&probe, threads),
+            want,
+            "batch/scalar drift at threads={threads}"
+        );
+    }
+    // The acceptance gate: batched dispatch must not lose to the scalar
+    // paths in decisions/sec.
+    assert!(
+        dps(batch_secs) >= dps(walk_secs),
+        "batched serving slower than the pointer walk: {:.0} < {:.0} dec/s",
+        dps(batch_secs),
+        dps(walk_secs)
+    );
+    assert!(
+        dps(batch_secs) >= dps(scalar_secs),
+        "batched serving slower than scalar decide: {:.0} < {:.0} dec/s",
+        dps(batch_secs),
+        dps(scalar_secs)
+    );
+    println!(
+        "(gate: batch x{:.2} vs walk, x{:.2} vs scalar decide — both must be >= 1)",
+        dps(batch_secs) / dps(walk_secs),
+        dps(batch_secs) / dps(scalar_secs)
+    );
+}

@@ -8,6 +8,10 @@
 //!             [--checkpoint-dir DIR | --resume DIR]
 //!             [--validate 16] [--emit-c out.c] [--save-model model.json]
 //!             [--out results/tune.json]
+//! mlkaps serve --dir runs/spr[,runs/knm] [--name spr,knm]
+//!              [--model model.json [--model-name x]] [--kernel NAME]
+//!              [--threads N]
+//!              --input "4500,1600" | --inputs-file inputs.csv
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -15,6 +19,13 @@
 //! writes a versioned artifact into DIR and a rerun (or `--resume DIR`,
 //! an alias) skips any stage whose checkpoint is valid for the same
 //! config + kernel. See [`crate::pipeline::checkpoint`].
+//!
+//! `serve` loads tuned tree bundles (checkpoint dirs and/or bare model
+//! files) into a [`crate::runtime::serving::KernelRegistry`] and answers
+//! decision queries: `--input` decides one point (memoized, JSON to
+//! stdout), `--inputs-file` batch-decides a CSV of inputs (one
+//! comma-separated input per line, `#` comments) and emits a CSV of
+//! input + chosen-config columns.
 
 use std::collections::HashMap;
 
@@ -192,6 +203,136 @@ fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse one comma-separated input row ("4500, 1600" -> [4500.0, 1600.0]).
+fn parse_row(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .map(|t| {
+            let t = t.trim();
+            t.parse::<f64>().map_err(|e| format!("bad number '{t}': {e}"))
+        })
+        .collect()
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::serving::{KernelRegistry, TreeBundle};
+    use crate::util::json::Value;
+
+    let mut reg = KernelRegistry::new();
+    let names: Vec<String> = flags
+        .get("name")
+        .map(|n| n.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
+    if let Some(dirs) = flags.get("dir") {
+        for (i, dir) in dirs.split(',').enumerate() {
+            let dir = dir.trim();
+            let registered = reg.load_dir(dir, names.get(i).map(String::as_str))?;
+            let fp = reg
+                .get(&registered)
+                .and_then(|b| b.fingerprint())
+                .unwrap_or("-")
+                .to_string();
+            eprintln!("serve: registered '{registered}' from {dir} (run {fp})");
+        }
+    }
+    if let Some(path) = flags.get("model") {
+        // Bare model files get their own name flag so they can never
+        // silently replace a fingerprint-verified checkpoint bundle.
+        let name = flags.get("model-name").cloned().unwrap_or_else(|| "model".into());
+        if reg.get(&name).is_some() {
+            return Err(format!(
+                "name '{name}' is already registered; pick another with --model-name"
+            ));
+        }
+        reg.insert(name.clone(), TreeBundle::load_model_file(path)?);
+        eprintln!("serve: registered '{name}' from {path}");
+    }
+    if reg.is_empty() {
+        return Err("serve needs --dir CKPT_DIR[,...] and/or --model FILE".into());
+    }
+
+    let kernel = match flags.get("kernel") {
+        Some(k) => k.clone(),
+        None if reg.len() == 1 => reg.names()[0].to_string(),
+        None => {
+            return Err(format!(
+                "multiple bundles loaded; pick one with --kernel ({})",
+                reg.names().join(", ")
+            ))
+        }
+    };
+    let threads: usize = flags
+        .get("threads")
+        .map(|t| t.parse().map_err(|e| format!("threads: {e}")))
+        .transpose()?
+        .unwrap_or(0);
+    let bundle = reg
+        .get(&kernel)
+        .ok_or_else(|| format!("no bundle for kernel '{kernel}'"))?;
+
+    if flags.get("input").is_none() && flags.get("inputs-file").is_none() {
+        return Err("serve needs --input \"a,b\" and/or --inputs-file FILE".into());
+    }
+
+    let check_dim = |row: &[f64], what: &str| -> Result<(), String> {
+        if row.len() != bundle.n_inputs() {
+            return Err(format!(
+                "{what} has {} values but kernel '{kernel}' takes {} inputs ({})",
+                row.len(),
+                bundle.n_inputs(),
+                bundle.input_space().names().join(", ")
+            ));
+        }
+        Ok(())
+    };
+
+    if let Some(input) = flags.get("input") {
+        let row = parse_row(input)?;
+        check_dim(&row, "--input")?;
+        let cfg = bundle.decide(&row);
+        let obj: std::collections::BTreeMap<String, Value> = bundle
+            .design_space()
+            .params
+            .iter()
+            .zip(&cfg)
+            .map(|(p, &v)| (p.name.clone(), Value::Num(v)))
+            .collect();
+        println!("{}", Value::Obj(obj).to_pretty());
+    }
+
+    if let Some(path) = flags.get("inputs-file") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut rows = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let row = parse_row(line).map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
+            check_dim(&row, &format!("{path}:{}", lineno + 1))?;
+            rows.push(row);
+        }
+        let configs = bundle.decide_batch(&rows, threads);
+        let mut header: Vec<&str> = bundle.input_space().names();
+        header.extend(bundle.design_space().names());
+        println!("{}", header.join(","));
+        for (row, cfg) in rows.iter().zip(&configs) {
+            let cells: Vec<String> =
+                row.iter().chain(cfg.iter()).map(|v| v.to_string()).collect();
+            println!("{}", cells.join(","));
+        }
+        eprintln!("serve: decided {} inputs (threads={threads})", rows.len());
+    }
+
+    let c = bundle.cache_counters();
+    eprintln!(
+        "serve: memo cache {} hits / {} misses ({:.0}% hit rate)",
+        c.hits(),
+        c.misses(),
+        100.0 * c.hit_rate()
+    );
+    Ok(())
+}
+
 fn cmd_artifacts(flags: HashMap<String, String>) -> Result<(), String> {
     let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
     let manifest = crate::runtime::Manifest::load(std::path::Path::new(&dir))
@@ -227,7 +368,7 @@ pub fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: mlkaps <kernels|tune|artifacts> [--flags]");
+            eprintln!("usage: mlkaps <kernels|tune|serve|artifacts> [--flags]");
             eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
             std::process::exit(2);
         }
@@ -240,6 +381,7 @@ pub fn main() {
             Ok(())
         }
         "tune" => parse_flags(&rest).and_then(cmd_tune),
+        "serve" => parse_flags(&rest).and_then(cmd_serve),
         "artifacts" => parse_flags(&rest).and_then(cmd_artifacts),
         other => Err(format!("unknown command '{other}'")),
     };
@@ -276,6 +418,22 @@ mod tests {
             assert!(make_kernel(name, 0).is_ok(), "{name}");
         }
         assert!(make_kernel("nope", 0).is_err());
+    }
+
+    #[test]
+    fn parse_row_accepts_spaces_and_rejects_garbage() {
+        assert_eq!(parse_row("4500, 1600").unwrap(), vec![4500.0, 1600.0]);
+        assert_eq!(parse_row("1").unwrap(), vec![1.0]);
+        assert!(parse_row("4500,abc").is_err());
+        assert!(parse_row("").is_err());
+    }
+
+    #[test]
+    fn serve_requires_a_bundle_source() {
+        assert!(cmd_serve(HashMap::new()).is_err());
+        let mut flags = HashMap::new();
+        flags.insert("dir".to_string(), "/nonexistent/ckpt".to_string());
+        assert!(cmd_serve(flags).is_err());
     }
 
     #[test]

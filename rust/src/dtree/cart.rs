@@ -180,6 +180,36 @@ impl Cart {
             }
         }
     }
+
+    /// Structural validation for arenas that did not come from [`Cart::fit`]
+    /// (deserialized or hand-built trees). Guarantees that [`Cart::predict`]
+    /// — and the flattened serving walk built on the same arena — can
+    /// neither panic nor loop: the arena is non-empty, every split feature
+    /// is `< n_features`, and both children of node `i` have index `> i`
+    /// and in-bounds (the builder emits children strictly after their
+    /// parent, so any conforming walk makes strict forward progress).
+    pub fn validate(&self, n_features: usize) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("tree has no nodes".into());
+        }
+        let len = self.nodes.len();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let CartNode::Split { feat, left, right, .. } = n {
+                if *feat >= n_features {
+                    return Err(format!(
+                        "node {i}: split feature {feat} out of range (dim {n_features})"
+                    ));
+                }
+                if *left <= i || *right <= i || *left >= len || *right >= len {
+                    return Err(format!(
+                        "node {i}: children ({left}, {right}) must follow their \
+                         parent and stay within the {len}-node arena"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +284,26 @@ mod tests {
         t.fit(&x, &y);
         assert_eq!(t.n_nodes(), 1);
         assert_eq!(t.predict(&[3.0]), 5.0);
+    }
+
+    #[test]
+    fn validate_accepts_fitted_and_rejects_malformed_arenas() {
+        let x: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64, (i % 7) as f64]).collect();
+        let y: Vec<f64> = (0..50).map(|i| (i / 10) as f64).collect();
+        let mut t = Cart::new(CartParams::default());
+        t.fit(&x, &y);
+        assert!(t.validate(2).is_ok());
+
+        let empty = Cart::new(CartParams::default());
+        assert!(empty.validate(2).is_err());
+
+        let mut bad_feat = t.clone();
+        bad_feat.nodes[0] = CartNode::Split { feat: 9, threshold: 0.0, left: 1, right: 2 };
+        assert!(bad_feat.validate(2).is_err());
+
+        let mut cycle = Cart::new(CartParams::default());
+        cycle.nodes = vec![CartNode::Split { feat: 0, threshold: 0.5, left: 0, right: 0 }];
+        assert!(cycle.validate(1).is_err(), "self-loop must be rejected");
     }
 
     #[test]

@@ -80,10 +80,26 @@ fn sanitize(name: &str) -> String {
     s
 }
 
-/// Interpret generated code semantics directly from the tree (used by
-/// tests to verify codegen fidelity without a C compiler).
+/// Interpret the *generated code's* semantics: recurse through the same
+/// nested `if (arg <= threshold) … else …` structure `emit_c`/`emit_rust`
+/// produce, rather than delegating to the iterative arena walk. Tests use
+/// this as an independent oracle to verify codegen fidelity (and the
+/// flattened serving arena) without a C compiler.
 pub fn eval_like_generated(tree: &Cart, x: &[f64]) -> f64 {
-    tree.predict(x)
+    fn branch(tree: &Cart, node: usize, x: &[f64]) -> f64 {
+        match &tree.nodes[node] {
+            CartNode::Leaf { value } => *value,
+            CartNode::Split { feat, threshold, left, right } => {
+                // Exactly the comparison the generated source performs.
+                if x[*feat] <= *threshold {
+                    branch(tree, *left, x)
+                } else {
+                    branch(tree, *right, x)
+                }
+            }
+        }
+    }
+    branch(tree, 0, x)
 }
 
 #[cfg(test)]

@@ -106,6 +106,13 @@ impl DesignTrees {
         if trees.len() != design_space.dim() {
             return Err("tree count != design dimensions".into());
         }
+        // Reject structurally corrupt arenas here, where loaders can fall
+        // back, instead of panicking (or looping) inside a later predict:
+        // deployed bundles go through this path on every service start.
+        for (j, t) in trees.iter().enumerate() {
+            t.validate(input_space.dim())
+                .map_err(|e| format!("tree {j}: {e}"))?;
+        }
         Ok(DesignTrees { trees, input_space, design_space })
     }
 
@@ -185,5 +192,29 @@ mod tests {
         }
         assert!(DesignTrees::from_json(&doc).is_err());
         assert!(DesignTrees::load("/nonexistent/path.json").is_err());
+    }
+
+    #[test]
+    fn rejects_structurally_corrupt_trees() {
+        // A backward child edge would make predict loop forever; the
+        // loader must refuse it instead of shipping a hung service.
+        let m = model();
+        let mut doc = m.to_json();
+        if let Value::Obj(map) = &mut doc {
+            if let Some(Value::Arr(trees)) = map.get_mut("trees") {
+                if let Some(Value::Obj(t0)) = trees.get_mut(0) {
+                    if let Some(Value::Arr(nodes)) = t0.get_mut("nodes") {
+                        nodes[0] = Value::obj(vec![
+                            ("f", Value::Num(0.0)),
+                            ("t", Value::Num(1.0)),
+                            ("l", Value::Num(0.0)),
+                            ("r", Value::Num(0.0)),
+                        ]);
+                    }
+                }
+            }
+        }
+        let err = DesignTrees::from_json(&doc).unwrap_err();
+        assert!(err.contains("tree 0"), "{err}");
     }
 }

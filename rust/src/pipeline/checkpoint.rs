@@ -48,6 +48,7 @@ use crate::optimizer::nsga2::Nsga2;
 use crate::pipeline::{GRID_SEED_SALT, Mlkaps, MlkapsConfig, PipelineStats, TunedModel};
 use crate::surrogate::gbdt::Gbdt;
 use crate::surrogate::LogSurrogate;
+use crate::util::hash::fnv1a;
 use crate::util::json::{parse, Value};
 
 /// Checkpoint format version (bump on any incompatible layout change).
@@ -106,17 +107,6 @@ pub struct StageStatus {
 pub struct CheckpointedRun {
     pub model: TunedModel,
     pub stages: Vec<StageStatus>,
-}
-
-/// FNV-1a 64-bit hash — stable across platforms and processes (unlike
-/// `DefaultHasher`), which checkpoint fingerprints require.
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 /// Fingerprint of everything that determines the pipeline result: the
@@ -298,6 +288,10 @@ impl PipelineRun {
         let (history, dataset) = self.pipeline.sample_phase(kernel);
         let v = Value::obj(vec![
             ("format", Value::Str("mlkaps-stage1-v1".into())),
+            // Anchors the stage chain to the run identity: downstream
+            // stages hash this file, so the fingerprint is transitively
+            // baked into every envelope (serving verifies it).
+            ("fingerprint", Value::Str(fingerprint(&self.pipeline.config, kernel))),
             ("history", history.to_json()),
             ("dataset", dataset.to_json()),
         ]);
@@ -544,6 +538,104 @@ impl PipelineRun {
     }
 }
 
+/// A deployable tree bundle read back out of a checkpoint directory:
+/// the stage-4 decision trees plus the identity needed to trust them.
+pub struct TreeArtifact {
+    pub trees: DesignTrees,
+    /// The run fingerprint from `checkpoint.json` (config + kernel hash
+    /// of the producing run). Verified, not just recorded: stage 1
+    /// carries the same fingerprint and every later stage hashes its
+    /// upstream file, so the loader only returns trees whose whole chain
+    /// belongs to this fingerprint.
+    pub fingerprint: String,
+    /// Kernel name recorded when the checkpoint directory was created
+    /// (None for a hand-assembled meta that omits it).
+    pub kernel: Option<String>,
+}
+
+/// Load and validate the stage-4 tree artifact of a checkpoint directory
+/// — the entry point the serving runtime uses to ingest a tuned bundle
+/// without constructing a pipeline. Validation is strict: the directory
+/// meta must carry the current [`FORMAT`], the stage-4 file must be a
+/// `trees` envelope, and the **entire** upstream-hash chain
+/// (stage1 → stage2 → stage3 → stage4) must be present and link up —
+/// trees fit on a different run's grid, or a bundle spliced together
+/// from two runs' files, are a corrupt deployment, not a servable
+/// model. Every pipeline run writes all four stage artifacts and
+/// `copy_checkpoints` ships them, so a deployed directory always has
+/// the chain.
+pub fn load_tree_artifact(dir: &Path) -> Result<TreeArtifact, String> {
+    let read = |file: &str| -> Result<Value, String> {
+        let text = std::fs::read_to_string(dir.join(file))
+            .map_err(|e| format!("{file}: {e}"))?;
+        parse(&text).map_err(|e| format!("{file}: {e}"))
+    };
+    let meta = read(META_FILE)?;
+    if meta.get("format").and_then(|f| f.as_str()) != Some(FORMAT) {
+        return Err(format!("{META_FILE}: not a {FORMAT} checkpoint"));
+    }
+    let fingerprint = meta
+        .get("fingerprint")
+        .and_then(|f| f.as_str())
+        .ok_or_else(|| format!("{META_FILE}: missing fingerprint"))?
+        .to_string();
+    let kernel = meta.get("kernel").and_then(|k| k.as_str()).map(str::to_string);
+
+    let v = read(STAGE4_FILE)?;
+    if v.get("format").and_then(|f| f.as_str()) != Some(STAGE_FORMAT)
+        || v.get("stage").and_then(|s| s.as_str()) != Some(Stage::Trees.name())
+    {
+        return Err(format!("{STAGE4_FILE}: not a stage-4 tree envelope"));
+    }
+    let upstream = v
+        .get("upstream")
+        .and_then(|u| u.as_str())
+        .ok_or_else(|| format!("{STAGE4_FILE}: missing upstream hash"))?;
+
+    // Walk the whole chain, not just the last link: every stage file is
+    // required (none may be "conveniently missing"), each envelope's
+    // upstream hash must match the previous file's bytes, and stage 1
+    // must carry the meta fingerprint — so a directory spliced together
+    // from different runs fails here, at load, even when the foreign
+    // pieces are mutually consistent. Each file is read once; the hash
+    // and the parsed document come from the same buffer.
+    let load_stage = |file: &str| -> Result<(Value, String), String> {
+        let bytes = std::fs::read(dir.join(file))
+            .map_err(|e| format!("{file} (chain verification needs every stage): {e}"))?;
+        let text = std::str::from_utf8(&bytes).map_err(|e| format!("{file}: {e}"))?;
+        let v = parse(text).map_err(|e| format!("{file}: {e}"))?;
+        Ok((v, format!("{:016x}", fnv1a(&bytes))))
+    };
+    let (v1, h1) = load_stage(STAGE1_FILE)?;
+    if v1.get("fingerprint").and_then(|f| f.as_str()) != Some(fingerprint.as_str()) {
+        return Err(format!(
+            "{STAGE1_FILE}: fingerprint does not match {META_FILE} (stage \
+             files belong to a different run)"
+        ));
+    }
+    let (v2, h2) = load_stage(STAGE2_FILE)?;
+    let (v3, h3) = load_stage(STAGE3_FILE)?;
+    for (file, v, stage, up) in [
+        (STAGE2_FILE, &v2, Stage::Surrogate, &h1),
+        (STAGE3_FILE, &v3, Stage::GridOptimize, &h2),
+    ] {
+        if open_envelope(v, stage, up).is_none() {
+            return Err(format!(
+                "{file}: not consistent with its upstream stage (artifacts \
+                 from different runs mixed into one directory?)"
+            ));
+        }
+    }
+    if h3 != upstream {
+        return Err(format!(
+            "{STAGE4_FILE}: trees were fit on a different optimization grid \
+             (upstream {upstream}, found {h3})"
+        ));
+    }
+    let trees = DesignTrees::from_json(v.get("payload").ok_or("stage4 missing payload")?)?;
+    Ok(TreeArtifact { trees, fingerprint, kernel })
+}
+
 /// Copy every checkpoint file from one directory to another (helper for
 /// staged deployments and the resume tests).
 pub fn copy_checkpoints(from: &Path, to: &Path) -> Result<(), String> {
@@ -673,6 +765,74 @@ mod tests {
             "stages fit on the old dataset must be recomputed"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tree_artifact_loads_and_rejects_grid_mismatch() {
+        let dir = tmp("artifact");
+        let kernel = ToySum::new(44);
+        let run = PipelineRun::new(tiny_config(44), dir.clone());
+        let out = run.run(&kernel).unwrap();
+
+        let art = load_tree_artifact(&dir).unwrap();
+        assert_eq!(art.kernel.as_deref(), Some("toy-sum"));
+        assert_eq!(art.fingerprint, fingerprint(&run.pipeline.config, &kernel));
+        let q = [1234.0, 4321.0];
+        assert_eq!(art.trees.predict(&q), out.model.trees.predict(&q));
+
+        // Tamper with the stage-3 grid: the hash chain must refuse a
+        // bundle whose trees were fit on different grid bytes.
+        let path = dir.join("stage3_grid.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("{text} ")).unwrap();
+        let err = load_tree_artifact(&dir).unwrap_err();
+        assert!(err.contains("different optimization grid"), "{err}");
+
+        // Deleting the grid must not dodge verification.
+        std::fs::remove_file(&path).unwrap();
+        let err = load_tree_artifact(&dir).unwrap_err();
+        assert!(err.contains("stage3_grid.json"), "{err}");
+
+        assert!(load_tree_artifact(Path::new("/nonexistent/ckpt")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tree_artifact_rejects_foreign_meta_fingerprint() {
+        // Wholesale-replacing every stage file with another run's
+        // internally consistent chain still fails: stage 1 carries the
+        // producing run's fingerprint, which must match the meta.
+        let dir = tmp("meta_swap");
+        PipelineRun::new(tiny_config(47), dir.clone()).run(&ToySum::new(47)).unwrap();
+        let meta = Value::obj(vec![
+            ("format", Value::Str(FORMAT.into())),
+            ("fingerprint", Value::Str("0123456789abcdef".into())),
+            ("kernel", Value::Str("toy-sum".into())),
+        ]);
+        std::fs::write(dir.join("checkpoint.json"), meta.to_string()).unwrap();
+        let err = load_tree_artifact(&dir).unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tree_artifact_rejects_mixed_run_directories() {
+        let dir_a = tmp("mix_a");
+        let dir_b = tmp("mix_b");
+        PipelineRun::new(tiny_config(45), dir_a.clone()).run(&ToySum::new(45)).unwrap();
+        PipelineRun::new(tiny_config(46), dir_b.clone()).run(&ToySum::new(46)).unwrap();
+
+        // Splice B's *mutually consistent* grid + trees pair into A: the
+        // last link (trees ↔ grid) matches, so only the full-chain walk
+        // back through A's surrogate can catch the mix-up.
+        for f in ["stage3_grid.json", "stage4_trees.json"] {
+            std::fs::copy(dir_b.join(f), dir_a.join(f)).unwrap();
+        }
+        let err = load_tree_artifact(&dir_a).unwrap_err();
+        assert!(err.contains("different runs"), "{err}");
+
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
     }
 
     #[test]

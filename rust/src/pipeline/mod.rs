@@ -149,6 +149,13 @@ impl TunedModel {
     pub fn predict(&self, input: &[f64]) -> Vec<f64> {
         self.trees.predict(input)
     }
+
+    /// Package the decision trees as a serving bundle (flattened SoA
+    /// arena + memo cache) — the artifact a deployment keeps after the
+    /// tuner itself is thrown away. See [`crate::runtime::serving`].
+    pub fn serving_bundle(&self) -> Result<crate::runtime::serving::TreeBundle, String> {
+        crate::runtime::serving::TreeBundle::from_trees(self.trees.clone())
+    }
 }
 
 /// Seed salt for the final-surrogate fit (stage 2).

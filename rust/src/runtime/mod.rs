@@ -1,4 +1,8 @@
-//! PJRT runtime: load the AOT-compiled HLO text artifacts produced by
+//! Runtime layer: the PJRT kernel executor (below) and the decision-tree
+//! serving runtime ([`serving`]) that answers "which config for this
+//! input?" from tuned tree bundles at memory speed.
+//!
+//! PJRT side: load the AOT-compiled HLO text artifacts produced by
 //! `python/compile/aot.py` and execute them on the CPU PJRT client.
 //!
 //! This is the only place Python output crosses into the Rust hot path —
@@ -12,6 +16,8 @@
 //! constructor returns an error, so every pallas-lu code path (CLI, tests,
 //! examples) degrades to a clear "rebuild with --features pjrt" message
 //! instead of a link failure. [`Manifest`] parsing works in both builds.
+
+pub mod serving;
 
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;

@@ -1,0 +1,544 @@
+//! Production decision-tree serving runtime.
+//!
+//! MLKAPS's deployed artifact is the set of per-parameter CART trees that
+//! pick kernel hyperparameters at runtime (paper §4.2, §4.5): the tuner
+//! runs once, the trees answer "which config for this input?" on every
+//! kernel invocation. That selector must cost essentially nothing next to
+//! the kernel it configures, so this module serves the stage-4 tree
+//! bundles the way [`crate::surrogate::forest::CompiledForest`] serves
+//! the surrogate:
+//!
+//! * **SoA node arena** — every per-parameter [`Cart`] is flattened into
+//!   contiguous parallel arrays (`feat`/`value`/`left`/`right`) with one
+//!   root offset per design parameter and absolute child indices; a
+//!   decision is a few cache-resident array walks, not a pointer chase
+//!   through per-tree `Vec<CartNode>` enums.
+//! * **Batched dispatch** — [`TreeBundle::decide_batch`] blocks rows and
+//!   fans the blocks across [`par_map`] once a batch is large enough to
+//!   pay for it. Rows are independent pure functions of the input, so
+//!   the batch output is **bit-identical** to scalar [`TreeBundle::decide`]
+//!   at any thread count (pinned by `tests/integration_serving.rs`).
+//! * **Input memo cache** — kernels are typically re-invoked with the
+//!   same shapes; a small fixed-size exact-match (bit-pattern) cache
+//!   short-circuits repeated `decide` calls, with hit/miss counters via
+//!   [`crate::util::telemetry::HitCounters`].
+//! * **[`KernelRegistry`]** — one serving endpoint for many kernels: maps
+//!   kernel name → loaded bundle, ingesting checkpoint directories
+//!   through [`checkpoint::load_tree_artifact`], which verifies the
+//!   whole stage1→…→4 upstream-hash chain so a mixed-up deployment
+//!   fails at load, not in production.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::config::space::ParamSpace;
+use crate::dtree::{Cart, CartNode, DesignTrees};
+use crate::pipeline::checkpoint;
+use crate::util::hash::fnv1a_u64s;
+use crate::util::telemetry::HitCounters;
+use crate::util::threadpool::{default_threads, par_map};
+
+/// A served design configuration, in value space (one entry per design
+/// parameter, already snapped to valid values).
+pub type Config = Vec<f64>;
+
+/// Sentinel feature id marking a leaf in the flattened arena.
+const LEAF: u32 = u32::MAX;
+
+/// Rows per dispatch block: small enough that a block's outputs stay
+/// cache-resident, large enough to amortize the per-block scheduling.
+const ROW_BLOCK: usize = 256;
+
+/// Batches below this row count stay single-threaded: spawning scoped
+/// workers costs more than walking a few depth-8 trees.
+const PAR_MIN_ROWS: usize = 2048;
+
+/// Default memo-cache capacity (direct-mapped slots).
+pub const DEFAULT_CACHE_SLOTS: usize = 512;
+
+/// The per-parameter CART trees of one bundle, flattened into a single
+/// contiguous structure-of-arrays (same layout discipline as
+/// `CompiledForest`): `feat[i] == LEAF` marks a leaf whose output is
+/// `value[i]`; otherwise `value[i]` is the split threshold and
+/// `left`/`right` hold absolute child indices.
+#[derive(Clone, Debug)]
+struct CompiledTrees {
+    feat: Vec<u32>,
+    value: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Root offset of each design parameter's tree.
+    roots: Vec<u32>,
+}
+
+impl CompiledTrees {
+    fn compile(trees: &[Cart]) -> CompiledTrees {
+        let total: usize = trees.iter().map(Cart::n_nodes).sum();
+        let mut feat = Vec::with_capacity(total);
+        let mut value = Vec::with_capacity(total);
+        let mut left = Vec::with_capacity(total);
+        let mut right = Vec::with_capacity(total);
+        let mut roots = Vec::with_capacity(trees.len());
+        for tree in trees {
+            let base = feat.len() as u32;
+            roots.push(base);
+            for node in &tree.nodes {
+                match node {
+                    CartNode::Leaf { value: v } => {
+                        feat.push(LEAF);
+                        value.push(*v);
+                        left.push(0);
+                        right.push(0);
+                    }
+                    CartNode::Split { feat: f, threshold, left: l, right: r } => {
+                        feat.push(*f as u32);
+                        value.push(*threshold);
+                        left.push(base + *l as u32);
+                        right.push(base + *r as u32);
+                    }
+                }
+            }
+        }
+        CompiledTrees { feat, value, left, right, roots }
+    }
+
+    /// Walk one tree. The comparison is exactly [`Cart::predict`]'s
+    /// `x[feat] <= threshold` (NaN compares false and routes right), so
+    /// the flattened walk is bit-identical to the arena walk.
+    #[inline]
+    fn predict_tree(&self, root: u32, x: &[f64]) -> f64 {
+        let mut i = root as usize;
+        loop {
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.value[i];
+            }
+            i = if x[f as usize] <= self.value[i] { self.left[i] } else { self.right[i] }
+                as usize;
+        }
+    }
+
+    /// Raw (unsnapped) per-parameter outputs.
+    fn decide_raw(&self, x: &[f64]) -> Vec<f64> {
+        self.roots.iter().map(|&r| self.predict_tree(r, x)).collect()
+    }
+
+    /// Approximate heap bytes of the flattened arrays (telemetry).
+    fn mem_bytes(&self) -> usize {
+        self.feat.capacity() * 4
+            + self.value.capacity() * 8
+            + self.left.capacity() * 4
+            + self.right.capacity() * 4
+            + self.roots.capacity() * 4
+    }
+}
+
+/// Fixed-size direct-mapped exact-match cache: input bit patterns → the
+/// configs previously decided for them. Exact bit matching makes NaN
+/// inputs cacheable too, and guarantees a hit can only ever return what
+/// the uncached path would have computed (decisions are pure).
+/// One cache slot: (input bit patterns, decided config).
+type Slot = Option<(Box<[u64]>, Config)>;
+
+struct MemoCache {
+    slots: Vec<Mutex<Slot>>,
+    counters: HitCounters,
+}
+
+impl MemoCache {
+    fn new(n_slots: usize) -> MemoCache {
+        MemoCache {
+            slots: (0..n_slots.max(1)).map(|_| Mutex::new(None)).collect(),
+            counters: HitCounters::new(),
+        }
+    }
+
+    /// FNV-1a over the input's f64 bit patterns → slot index.
+    fn slot_of(&self, bits: &[u64]) -> usize {
+        (fnv1a_u64s(bits) % self.slots.len() as u64) as usize
+    }
+
+    fn lookup(&self, bits: &[u64]) -> Option<Config> {
+        let slot = self.slots[self.slot_of(bits)].lock().unwrap();
+        if let Some((key, cfg)) = slot.as_ref() {
+            if key.as_ref() == bits {
+                self.counters.hit();
+                return Some(cfg.clone());
+            }
+        }
+        self.counters.miss();
+        None
+    }
+
+    fn store(&self, bits: Vec<u64>, cfg: Config) {
+        let mut slot = self.slots[self.slot_of(&bits)].lock().unwrap();
+        *slot = Some((bits.into_boxed_slice(), cfg));
+    }
+}
+
+/// One loaded, servable tree bundle: the flattened arena, the spaces
+/// needed to snap outputs, provenance (run fingerprint + kernel name when
+/// loaded from a checkpoint directory), and the input memo cache.
+pub struct TreeBundle {
+    trees: DesignTrees,
+    compiled: CompiledTrees,
+    cache: MemoCache,
+    fingerprint: Option<String>,
+    kernel: Option<String>,
+}
+
+impl TreeBundle {
+    /// Build a bundle from an in-memory model (e.g. straight out of
+    /// [`crate::pipeline::TunedModel`]). Trees are structurally validated
+    /// so a malformed arena is rejected here, not mid-request.
+    pub fn from_trees(trees: DesignTrees) -> Result<TreeBundle, String> {
+        let dim = trees.input_space.dim();
+        for (j, t) in trees.trees.iter().enumerate() {
+            t.validate(dim).map_err(|e| format!("tree {j}: {e}"))?;
+        }
+        let compiled = CompiledTrees::compile(&trees.trees);
+        Ok(TreeBundle {
+            trees,
+            compiled,
+            cache: MemoCache::new(DEFAULT_CACHE_SLOTS),
+            fingerprint: None,
+            kernel: None,
+        })
+    }
+
+    /// Load a bundle from a pipeline checkpoint directory, validating
+    /// the stage-4 artifact and the full upstream-hash chain via
+    /// [`checkpoint::load_tree_artifact`].
+    pub fn load_checkpoint_dir(dir: impl AsRef<Path>) -> Result<TreeBundle, String> {
+        let art = checkpoint::load_tree_artifact(dir.as_ref())?;
+        let mut bundle = TreeBundle::from_trees(art.trees)?;
+        bundle.fingerprint = Some(art.fingerprint);
+        bundle.kernel = art.kernel;
+        Ok(bundle)
+    }
+
+    /// Load a bundle from a bare model file written by
+    /// [`DesignTrees::save`] (`mlkaps tune --save-model`).
+    pub fn load_model_file(path: impl AsRef<Path>) -> Result<TreeBundle, String> {
+        TreeBundle::from_trees(DesignTrees::load(path)?)
+    }
+
+    /// Resize the memo cache (clears it). 0 keeps one slot.
+    pub fn with_cache_slots(mut self, n_slots: usize) -> TreeBundle {
+        self.cache = MemoCache::new(n_slots);
+        self
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.trees.input_space.dim()
+    }
+
+    pub fn input_space(&self) -> &ParamSpace {
+        &self.trees.input_space
+    }
+
+    pub fn design_space(&self) -> &ParamSpace {
+        &self.trees.design_space
+    }
+
+    /// The underlying model (for codegen, inspection, re-serialization).
+    pub fn trees(&self) -> &DesignTrees {
+        &self.trees
+    }
+
+    /// Run fingerprint of the producing pipeline (None for in-memory or
+    /// bare-file bundles).
+    pub fn fingerprint(&self) -> Option<&str> {
+        self.fingerprint.as_deref()
+    }
+
+    /// Kernel name recorded in the checkpoint meta, if any.
+    pub fn kernel(&self) -> Option<&str> {
+        self.kernel.as_deref()
+    }
+
+    /// Memo-cache hit/miss counters.
+    pub fn cache_counters(&self) -> &HitCounters {
+        &self.cache.counters
+    }
+
+    /// Approximate heap bytes of the serving arrays (telemetry).
+    pub fn mem_bytes(&self) -> usize {
+        self.compiled.mem_bytes()
+    }
+
+    /// Decision without the memo cache: flattened walks + snap. This is
+    /// the function both the scalar and the batched paths reduce to.
+    fn decide_uncached(&self, input: &[f64]) -> Config {
+        assert_eq!(input.len(), self.n_inputs(), "input dimension mismatch");
+        let raw = self.compiled.decide_raw(input);
+        self.trees.design_space.snap(&raw)
+    }
+
+    /// Which config for this input? Memoized on the exact input bits;
+    /// identical (bit for bit) to [`DesignTrees::predict`] on the bundled
+    /// model, cached or not, because decisions are pure.
+    pub fn decide(&self, input: &[f64]) -> Config {
+        let bits: Vec<u64> = input.iter().map(|v| v.to_bits()).collect();
+        if let Some(cfg) = self.cache.lookup(&bits) {
+            return cfg;
+        }
+        let cfg = self.decide_uncached(input);
+        self.cache.store(bits, cfg.clone());
+        cfg
+    }
+
+    /// Batched dispatch: decide every row, parallel over [`ROW_BLOCK`]-row
+    /// blocks when the batch is big enough (`threads == 0` selects the
+    /// adaptive default). Bypasses the memo cache — block workers never
+    /// contend on its locks — and is bit-identical to per-row
+    /// [`TreeBundle::decide`] at any thread count: each row's decision is
+    /// a pure function of that row alone.
+    pub fn decide_batch(&self, rows: &[Vec<f64>], threads: usize) -> Vec<Config> {
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        let threads = if threads == 0 {
+            if rows.len() < PAR_MIN_ROWS {
+                1
+            } else {
+                default_threads()
+            }
+        } else {
+            threads
+        };
+        if threads <= 1 {
+            return rows.iter().map(|r| self.decide_uncached(r)).collect();
+        }
+        let blocks: Vec<&[Vec<f64>]> = rows.chunks(ROW_BLOCK).collect();
+        let results = par_map(&blocks, threads, |_, chunk| {
+            chunk.iter().map(|r| self.decide_uncached(r)).collect::<Vec<Config>>()
+        });
+        let mut out = Vec::with_capacity(rows.len());
+        for r in results {
+            out.extend(r);
+        }
+        out
+    }
+}
+
+/// One serving endpoint for many tuned kernels: kernel name → bundle.
+/// Bundles come from checkpoint directories ([`KernelRegistry::load_dir`],
+/// fingerprint-validated) or are inserted directly.
+#[derive(Default)]
+pub struct KernelRegistry {
+    bundles: BTreeMap<String, TreeBundle>,
+}
+
+impl KernelRegistry {
+    pub fn new() -> KernelRegistry {
+        KernelRegistry::default()
+    }
+
+    /// Register a bundle under an explicit name (replaces any previous
+    /// bundle of that name).
+    pub fn insert(&mut self, name: impl Into<String>, bundle: TreeBundle) {
+        self.bundles.insert(name.into(), bundle);
+    }
+
+    /// Load a checkpoint directory and register it. `name` overrides the
+    /// kernel name recorded in the checkpoint meta. Returns the name the
+    /// bundle was registered under. Unlike [`KernelRegistry::insert`]
+    /// (which replaces, for deliberate hot-swaps), this refuses a name
+    /// collision: two checkpoint dirs of the same kernel loaded without
+    /// distinct names would otherwise silently shadow each other.
+    pub fn load_dir(
+        &mut self,
+        dir: impl AsRef<Path>,
+        name: Option<&str>,
+    ) -> Result<String, String> {
+        let bundle = TreeBundle::load_checkpoint_dir(dir)?;
+        let name = match name {
+            Some(n) => n.to_string(),
+            None => bundle
+                .kernel()
+                .ok_or("checkpoint meta has no kernel name; pass one explicitly")?
+                .to_string(),
+        };
+        if self.bundles.contains_key(&name) {
+            return Err(format!(
+                "kernel '{name}' is already registered; load this directory \
+                 under a distinct name"
+            ));
+        }
+        self.bundles.insert(name.clone(), bundle);
+        Ok(name)
+    }
+
+    pub fn get(&self, kernel: &str) -> Option<&TreeBundle> {
+        self.bundles.get(kernel)
+    }
+
+    /// Registered kernel names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.bundles.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bundles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bundles.is_empty()
+    }
+
+    fn bundle(&self, kernel: &str) -> Result<&TreeBundle, String> {
+        self.bundles.get(kernel).ok_or_else(|| {
+            format!(
+                "no tree bundle registered for kernel '{kernel}' (have: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Decide one input for a kernel.
+    pub fn decide(&self, kernel: &str, input: &[f64]) -> Result<Config, String> {
+        Ok(self.bundle(kernel)?.decide(input))
+    }
+
+    /// Decide a batch of inputs for a kernel (`threads == 0` adaptive).
+    pub fn decide_batch(
+        &self,
+        kernel: &str,
+        rows: &[Vec<f64>],
+        threads: usize,
+    ) -> Result<Vec<Config>, String> {
+        Ok(self.bundle(kernel)?.decide_batch(rows, threads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::ParamDef;
+    use crate::dtree::cart::{CartParams, TaskKind};
+
+    /// A small fitted model with mixed design-parameter kinds.
+    fn model() -> DesignTrees {
+        let input = ParamSpace::new(vec![
+            ParamDef::float("n", 100.0, 5000.0),
+            ParamDef::float("m", 100.0, 5000.0),
+        ]);
+        let design = ParamSpace::new(vec![
+            ParamDef::int("threads", 1, 64),
+            ParamDef::categorical("variant", &["a", "b", "c"]),
+            ParamDef::boolean("flag"),
+        ]);
+        let inputs = input.grid(8);
+        let designs: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|p| {
+                vec![
+                    if p[0] < 2000.0 { 4.0 } else { 48.0 },
+                    if p[1] < 1500.0 {
+                        0.0
+                    } else if p[1] < 3500.0 {
+                        1.0
+                    } else {
+                        2.0
+                    },
+                    if p[0] + p[1] > 6000.0 { 1.0 } else { 0.0 },
+                ]
+            })
+            .collect();
+        DesignTrees::fit(&inputs, &designs, &input, &design, 6)
+    }
+
+    fn probe_inputs() -> Vec<Vec<f64>> {
+        let mut rows = Vec::new();
+        for i in 0..40 {
+            for j in 0..40 {
+                rows.push(vec![
+                    100.0 + 4900.0 * (i as f64 / 39.0),
+                    100.0 + 4900.0 * (j as f64 / 39.0),
+                ]);
+            }
+        }
+        // Out-of-domain and NaN rows must serve without panicking and
+        // agree with the pointer-walk model.
+        rows.push(vec![-1e9, 1e9]);
+        rows.push(vec![f64::NAN, 2500.0]);
+        rows.push(vec![2500.0, f64::NAN]);
+        rows
+    }
+
+    #[test]
+    fn decide_matches_design_trees_predict_exactly() {
+        let m = model();
+        let bundle = TreeBundle::from_trees(m.clone()).unwrap();
+        for q in probe_inputs() {
+            assert_eq!(bundle.decide(&q), m.predict(&q), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_scalar_at_any_thread_count() {
+        let bundle = TreeBundle::from_trees(model()).unwrap();
+        let rows = probe_inputs();
+        let scalar: Vec<Config> = rows.iter().map(|r| bundle.decide(r)).collect();
+        for threads in [1usize, 2, 3, 8, 0] {
+            assert_eq!(bundle.decide_batch(&rows, threads), scalar, "threads={threads}");
+        }
+        assert!(bundle.decide_batch(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn memo_cache_counts_hits_and_serves_identical_configs() {
+        let bundle = TreeBundle::from_trees(model()).unwrap();
+        let q = vec![1234.5, 4321.0];
+        let first = bundle.decide(&q);
+        assert_eq!(bundle.cache_counters().misses(), 1);
+        assert_eq!(bundle.cache_counters().hits(), 0);
+        for _ in 0..5 {
+            assert_eq!(bundle.decide(&q), first);
+        }
+        assert_eq!(bundle.cache_counters().hits(), 5);
+        // A NaN input is cacheable by bit pattern too.
+        let nan_q = vec![f64::NAN, 100.0];
+        let a = bundle.decide(&nan_q);
+        let b = bundle.decide(&nan_q);
+        assert_eq!(a, b);
+        assert!(bundle.cache_counters().hits() >= 6);
+    }
+
+    #[test]
+    fn registry_routes_by_kernel_name() {
+        let mut reg = KernelRegistry::new();
+        assert!(reg.is_empty());
+        reg.insert("toy", TreeBundle::from_trees(model()).unwrap());
+        assert_eq!(reg.names(), vec!["toy"]);
+        assert_eq!(reg.len(), 1);
+        let q = vec![2500.0, 2500.0];
+        let cfg = reg.decide("toy", &q).unwrap();
+        assert_eq!(cfg.len(), 3);
+        assert_eq!(reg.decide_batch("toy", &[q.clone()], 1).unwrap()[0], cfg);
+        let err = reg.decide("nope", &q).unwrap_err();
+        assert!(err.contains("toy"), "{err}");
+    }
+
+    #[test]
+    fn from_trees_rejects_malformed_arenas() {
+        let m = model();
+        let mut bad = m.clone();
+        bad.trees[0] = crate::dtree::Cart {
+            params: CartParams { task: TaskKind::Regression, ..Default::default() },
+            nodes: vec![CartNode::Split { feat: 0, threshold: 1.0, left: 0, right: 0 }],
+        };
+        assert!(TreeBundle::from_trees(bad).is_err());
+        assert!(TreeBundle::from_trees(m).is_ok());
+    }
+
+    #[test]
+    fn served_configs_are_valid_design_points() {
+        let bundle = TreeBundle::from_trees(model()).unwrap();
+        for cfg in bundle.decide_batch(&probe_inputs(), 0) {
+            assert_eq!(cfg, bundle.design_space().snap(&cfg), "{cfg:?}");
+        }
+    }
+}

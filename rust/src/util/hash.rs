@@ -1,0 +1,47 @@
+//! FNV-1a 64-bit hashing — stable across platforms and processes (unlike
+//! `DefaultHasher`), which checkpoint fingerprints and cache keys
+//! require. One implementation shared by the checkpoint upstream-hash
+//! chain and the serving memo cache.
+
+/// FNV-1a over a byte stream.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a u64 stream (e.g. f64 bit patterns), byte order fixed to
+/// little-endian so the hash is platform-stable.
+pub fn fnv1a_u64s(words: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors_and_stream_equivalence() {
+        // FNV-1a reference values.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // The u64 variant must equal hashing the same little-endian bytes.
+        let words = [1u64, u64::MAX, 0x0123_4567_89ab_cdef];
+        let mut bytes = Vec::new();
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(fnv1a_u64s(&words), fnv1a(&bytes));
+        assert_ne!(fnv1a_u64s(&[1, 2]), fnv1a_u64s(&[2, 1]));
+    }
+}

@@ -8,7 +8,62 @@
 //! * [`rss_bytes`] — real process RSS from /proc/self/status, reported
 //!   alongside for context.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Lock-free hit/miss counters for caches on concurrent serving paths
+/// (e.g. the decision-runtime input memo). Relaxed ordering: the counts
+/// are monitoring data, not synchronization.
+#[derive(Debug, Default)]
+pub struct HitCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl HitCounters {
+    pub fn new() -> Self {
+        HitCounters::default()
+    }
+
+    /// Record a cache hit.
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a cache miss.
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total lookups observed so far.
+    pub fn total(&self) -> u64 {
+        self.hits() + self.misses()
+    }
+
+    /// Hit fraction in [0,1]; 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / total as f64
+        }
+    }
+
+    /// Zero both counters (e.g. between bench phases).
+    pub fn reset(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
 
 /// Types that can report the size of their live model state.
 pub trait ModelFootprint {
@@ -76,6 +131,22 @@ impl Stopwatch {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hit_counters_track_rate() {
+        let c = HitCounters::new();
+        assert_eq!(c.hit_rate(), 0.0);
+        c.hit();
+        c.hit();
+        c.hit();
+        c.miss();
+        assert_eq!(c.hits(), 3);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.total(), 4);
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.total(), 0);
+    }
 
     #[test]
     fn rss_is_positive_on_linux() {

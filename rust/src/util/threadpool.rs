@@ -9,10 +9,26 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use by default (cores, capped at 16).
+///
+/// The `MLKAPS_THREADS` environment variable overrides the detected
+/// count (any integer ≥ 1); CI runs the whole test suite under
+/// `MLKAPS_THREADS=1` as well as the default, so every adaptive
+/// "parallel above N rows" path is exercised in both regimes.
 pub fn default_threads() -> usize {
+    if let Some(t) = env_threads() {
+        return t;
+    }
     std::thread::available_parallelism()
         .map(|n| n.get().min(16))
         .unwrap_or(4)
+}
+
+/// Parse the `MLKAPS_THREADS` override (None when unset/empty/invalid).
+fn env_threads() -> Option<usize> {
+    std::env::var("MLKAPS_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
 }
 
 /// Output slot vector shared across workers by raw pointer.

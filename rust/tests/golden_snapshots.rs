@@ -1,0 +1,115 @@
+//! Golden-snapshot tests for the deployed-bundle formats: the JSON tree
+//! serialization (`dtree::serialize`) and the generated C/Rust source
+//! (`dtree::codegen`). The expected outputs are checked in under
+//! `tests/golden/`, so *any* format drift fails loudly here instead of
+//! silently corrupting bundles already deployed in the field.
+//!
+//! If a change is intentional, bump the relevant format/version marker
+//! and regenerate the snapshots with `MLKAPS_UPDATE_GOLDEN=1 cargo test`.
+
+use std::path::PathBuf;
+
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::dtree::{
+    to_c_function, to_rust_function, Cart, CartNode, CartParams, DesignTrees, TaskKind,
+};
+use mlkaps::util::json::parse;
+
+/// A hand-built fixture model (no fitting, so the snapshot can never
+/// drift through training-side changes): two float inputs, one int
+/// design parameter, a depth-2 tree with exactly representable values.
+fn fixture_model() -> DesignTrees {
+    let input_space = ParamSpace::new(vec![
+        ParamDef::float("n", 0.0, 10.0),
+        ParamDef::float("m", -5.0, 5.0),
+    ]);
+    let design_space = ParamSpace::new(vec![ParamDef::int("threads", 1, 8)]);
+    let tree = Cart {
+        params: CartParams { max_depth: 3, min_samples_leaf: 1, task: TaskKind::Regression },
+        nodes: vec![
+            CartNode::Split { feat: 0, threshold: 2.5, left: 1, right: 2 },
+            CartNode::Leaf { value: 1.0 },
+            CartNode::Split { feat: 1, threshold: -0.5, left: 3, right: 4 },
+            CartNode::Leaf { value: 2.5 },
+            CartNode::Leaf { value: 10.0 },
+        ],
+    };
+    DesignTrees { trees: vec![tree], input_space, design_space }
+}
+
+/// Compare produced output against a checked-in snapshot (trailing
+/// whitespace ignored). `MLKAPS_UPDATE_GOLDEN=1` regenerates the file.
+fn check_golden(name: &str, produced: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name);
+    if std::env::var("MLKAPS_UPDATE_GOLDEN").is_ok_and(|v| v == "1") {
+        std::fs::write(&path, format!("{}\n", produced.trim_end())).unwrap();
+    }
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("missing golden '{name}' ({e}); regenerate with MLKAPS_UPDATE_GOLDEN=1")
+    });
+    assert_eq!(
+        produced.trim_end(),
+        want.trim_end(),
+        "golden snapshot '{name}' drifted — deployed bundles would stop \
+         round-tripping; if the change is intentional, bump the format \
+         marker and regenerate with MLKAPS_UPDATE_GOLDEN=1"
+    );
+}
+
+#[test]
+fn serialized_model_matches_golden_json() {
+    check_golden("model.json.golden", &fixture_model().to_json().to_pretty());
+}
+
+#[test]
+fn golden_json_loads_and_predicts_like_the_fixture() {
+    // The checked-in snapshot itself must stay loadable: this is the
+    // "bundle already deployed in the field" compatibility check.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/model.json.golden");
+    let text = std::fs::read_to_string(path).unwrap();
+    let loaded = DesignTrees::from_json(&parse(&text).unwrap()).unwrap();
+    let fixture = fixture_model();
+    for q in [
+        [0.0, 0.0],
+        [2.5, -0.5],
+        [2.6, -0.5],
+        [2.6, -0.4],
+        [9.0, 4.0],
+        [f64::NAN, 1.0],
+    ] {
+        assert_eq!(loaded.predict(&q), fixture.predict(&q), "{q:?}");
+    }
+}
+
+#[test]
+fn generated_c_matches_golden_source() {
+    check_golden("model.c.golden", &fixture_model().to_c());
+}
+
+#[test]
+fn generated_rust_matches_golden_source() {
+    let m = fixture_model();
+    let names: Vec<String> = vec!["n".into(), "m".into()];
+    check_golden(
+        "tree.rs.golden",
+        &to_rust_function(&m.trees[0], "pick_threads", &names),
+    );
+}
+
+#[test]
+fn c_and_rust_emitters_stay_in_sync_on_the_fixture() {
+    // Structural invariant across both emitters: same thresholds, same
+    // leaf constants, balanced braces (guards the goldens themselves).
+    let m = fixture_model();
+    let names: Vec<String> = vec!["n".into(), "m".into()];
+    let c = to_c_function(&m.trees[0], "pick_threads", &names);
+    let r = to_rust_function(&m.trees[0], "pick_threads", &names);
+    for needle in ["2.5", "-0.5", "1.0", "10.0"] {
+        assert!(c.contains(needle), "C source lost {needle}");
+        assert!(r.contains(needle), "Rust source lost {needle}");
+    }
+    assert_eq!(c.matches('{').count(), c.matches('}').count());
+    assert_eq!(r.matches('{').count(), r.matches('}').count());
+}

@@ -1,0 +1,157 @@
+//! End-to-end serving tests: the full 4-stage pipeline run twice on
+//! toy_sum (and once resumed from a stage-2 checkpoint) must produce
+//! **byte-identical** tree bundles, and the serving runtime loaded from
+//! those bundles must decide identically to the in-memory tuned model —
+//! scalar and batched, at every thread count.
+//!
+//! Sampling runs with `threads: 1` so fresh runs are comparable (the
+//! simulator's measurement noise is drawn from a shared call counter;
+//! see `integration_checkpoint.rs`). Stages 2-4 are deterministic for a
+//! fixed stage-1 checkpoint regardless of thread count.
+
+use std::path::PathBuf;
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{PipelineRun, Stage};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::serving::{KernelRegistry, TreeBundle};
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::rng::Rng;
+
+fn config(seed: u64) -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 200,
+        batch_size: 100,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 40, ..Default::default() },
+        ga: Nsga2Params { pop_size: 12, generations: 8, ..Default::default() },
+        opt_grid: 5,
+        tree_depth: 4,
+        threads: 1,
+        seed,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mlkaps_serve_it_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn bundle_bytes(dir: &PathBuf) -> Vec<u8> {
+    std::fs::read(dir.join("stage4_trees.json")).unwrap()
+}
+
+#[test]
+fn pipeline_reruns_and_stage2_resume_produce_byte_identical_bundles() {
+    let dir_a = tmp_dir("a");
+    let dir_b = tmp_dir("b");
+    let dir_c = tmp_dir("c");
+
+    // Run 1: uninterrupted.
+    let run_a = PipelineRun::new(config(60), dir_a.clone());
+    let model_a = run_a.run(&ToySum::new(60)).unwrap().model;
+
+    // Run 2: fresh directory, same config + seed.
+    PipelineRun::new(config(60), dir_b.clone()).run(&ToySum::new(60)).unwrap();
+
+    // Run 3: "killed" after the surrogate stage, then resumed.
+    let run_c = PipelineRun::new(config(60), dir_c.clone());
+    run_c.run_prefix(&ToySum::new(60), Stage::Surrogate).unwrap();
+    let resumed = run_c.run(&ToySum::new(60)).unwrap();
+    assert!(resumed.stages[0].loaded && resumed.stages[1].loaded);
+    assert!(!resumed.stages[2].loaded && !resumed.stages[3].loaded);
+
+    // Byte-identical deployed artifacts across all three runs.
+    let a = bundle_bytes(&dir_a);
+    assert_eq!(a, bundle_bytes(&dir_b), "fresh rerun produced different bundle bytes");
+    assert_eq!(a, bundle_bytes(&dir_c), "stage-2 resume produced different bundle bytes");
+    assert_eq!(
+        std::fs::read(dir_a.join("stage3_grid.json")).unwrap(),
+        std::fs::read(dir_c.join("stage3_grid.json")).unwrap(),
+        "resumed grid artifact diverged"
+    );
+
+    // Serve from the checkpoint: bit-identical to the in-memory model,
+    // scalar and batched, across thread counts.
+    let bundle = TreeBundle::load_checkpoint_dir(&dir_a).unwrap();
+    assert_eq!(bundle.kernel(), Some("toy-sum"));
+    assert!(bundle.fingerprint().is_some());
+
+    let mut rng = Rng::new(7);
+    let rows: Vec<Vec<f64>> = (0..3000)
+        .map(|_| vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)])
+        .collect();
+    let want: Vec<Vec<f64>> = rows.iter().map(|r| model_a.predict(r)).collect();
+    let scalar: Vec<Vec<f64>> = rows.iter().map(|r| bundle.decide(r)).collect();
+    assert_eq!(scalar, want, "served decisions differ from the tuned model");
+    for threads in [1usize, 2, 8, 0] {
+        assert_eq!(
+            bundle.decide_batch(&rows, threads),
+            want,
+            "decide_batch diverged at threads={threads}"
+        );
+    }
+
+    // The in-memory bundle built straight from the tuned model agrees too.
+    let mem_bundle = model_a.serving_bundle().unwrap();
+    assert_eq!(mem_bundle.decide(&rows[0]), want[0]);
+
+    for d in [&dir_a, &dir_b, &dir_c] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn registry_serves_multiple_checkpoint_dirs() {
+    let dir_x = tmp_dir("reg_x");
+    let dir_y = tmp_dir("reg_y");
+    PipelineRun::new(config(61), dir_x.clone()).run(&ToySum::new(61)).unwrap();
+    PipelineRun::new(config(62), dir_y.clone()).run(&ToySum::new(62)).unwrap();
+
+    let mut reg = KernelRegistry::new();
+    let name_x = reg.load_dir(&dir_x, None).unwrap();
+    assert_eq!(name_x, "toy-sum", "default name must come from the checkpoint meta");
+    // A second dir of the same kernel must not silently shadow the first.
+    let err = reg.load_dir(&dir_y, None).unwrap_err();
+    assert!(err.contains("already registered"), "{err}");
+    reg.load_dir(&dir_y, Some("toy-sum-alt")).unwrap();
+    assert_eq!(reg.names(), vec!["toy-sum", "toy-sum-alt"]);
+
+    let q = vec![1000.0, 4000.0];
+    let a = reg.decide("toy-sum", &q).unwrap();
+    let b = reg.decide("toy-sum-alt", &q).unwrap();
+    assert_eq!(a.len(), 1);
+    assert_eq!(b.len(), 1);
+    assert_eq!(reg.decide_batch("toy-sum", &[q.clone()], 2).unwrap()[0], a);
+    assert!(reg.decide("missing", &q).is_err());
+
+    // Repeated traffic on the same input is served from the memo cache.
+    for _ in 0..10 {
+        assert_eq!(reg.decide("toy-sum", &q).unwrap(), a);
+    }
+    let counters = reg.get("toy-sum").unwrap().cache_counters();
+    assert!(counters.hits() >= 10, "hits={}", counters.hits());
+
+    std::fs::remove_dir_all(&dir_x).ok();
+    std::fs::remove_dir_all(&dir_y).ok();
+}
+
+#[test]
+fn tampered_checkpoint_is_refused_by_the_loader() {
+    let dir = tmp_dir("tamper");
+    PipelineRun::new(config(63), dir.clone()).run(&ToySum::new(63)).unwrap();
+
+    // Corrupt the grid artifact the trees were fit on: the stage-4
+    // upstream hash must make the serving loader refuse the bundle.
+    let p = dir.join("stage3_grid.json");
+    let mut text = std::fs::read_to_string(&p).unwrap();
+    text.push('\n');
+    std::fs::write(&p, text).unwrap();
+    let err = TreeBundle::load_checkpoint_dir(&dir).unwrap_err();
+    assert!(err.contains("different optimization grid"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

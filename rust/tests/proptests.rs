@@ -274,6 +274,106 @@ fn prop_pdgeqrf_reformulation_constraints_hold_everywhere() {
 }
 
 #[test]
+fn prop_serving_decide_matches_cart_predict_and_codegen_eval() {
+    // Three independent evaluators of the same tree bundle — the
+    // pointer-walk `Cart::predict`, the generated-code interpreter
+    // `eval_like_generated`, and the flattened serving arena behind
+    // `TreeBundle::decide` — must agree bit for bit on random fitted
+    // trees and adversarial queries (NaN, out-of-domain, huge values).
+    use mlkaps::dtree::codegen::eval_like_generated;
+    use mlkaps::dtree::DesignTrees;
+    use mlkaps::runtime::serving::TreeBundle;
+
+    let mut rng = Rng::new(0x5E_BF1E);
+    for trial in 0..20 {
+        let d_in = 1 + rng.below(4);
+        let input = ParamSpace::new(
+            (0..d_in)
+                .map(|i| ParamDef::float(&format!("x{i}"), -10.0, 10.0))
+                .collect(),
+        );
+        let n_design = 1 + rng.below(3);
+        let design = ParamSpace::new(
+            (0..n_design)
+                .map(|j| {
+                    let name = format!("d{j}");
+                    match rng.below(4) {
+                        0 => ParamDef::int(&name, 1, 2 + rng.int_range(1, 60)),
+                        1 => ParamDef::categorical(
+                            &name,
+                            &["a", "b", "c", "d"][..2 + rng.below(3)],
+                        ),
+                        2 => ParamDef::boolean(&name),
+                        _ => ParamDef::float(&name, 0.0, 1.0 + rng.uniform(0.0, 9.0)),
+                    }
+                })
+                .collect(),
+        );
+        let n = 30 + rng.below(200);
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d_in).map(|_| rng.uniform(-10.0, 10.0)).collect())
+            .collect();
+        let designs: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                let raw: Vec<f64> = (0..n_design)
+                    .map(|j| x[0].abs() * (1.0 + j as f64) + x[x.len() - 1])
+                    .collect();
+                design.snap(&raw)
+            })
+            .collect();
+        let model = DesignTrees::fit(&xs, &designs, &input, &design, 1 + rng.below(8));
+        let bundle = TreeBundle::from_trees(model.clone()).unwrap();
+
+        let mut probes: Vec<Vec<f64>> = Vec::new();
+        let mut wants: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..40 {
+            let q: Vec<f64> = (0..d_in)
+                .map(|_| match rng.below(10) {
+                    0 => f64::NAN,
+                    1 => rng.uniform(-1e6, 1e6), // far out of domain
+                    _ => rng.uniform(-12.0, 12.0),
+                })
+                .collect();
+            let raw: Vec<f64> = model.trees.iter().map(|t| t.predict(&q)).collect();
+            for (t, &r) in model.trees.iter().zip(&raw) {
+                assert_eq!(
+                    eval_like_generated(t, &q).to_bits(),
+                    r.to_bits(),
+                    "trial {trial}: codegen interpreter diverged on {q:?}"
+                );
+            }
+            let want = model.design_space.snap(&raw);
+            assert_eq!(model.predict(&q), want, "trial {trial}");
+            assert_eq!(bundle.decide(&q), want, "trial {trial}: serving diverged on {q:?}");
+            probes.push(q);
+            wants.push(want);
+        }
+        for threads in [1usize, 3, 0] {
+            assert_eq!(
+                bundle.decide_batch(&probes, threads),
+                wants,
+                "trial {trial}: batch diverged at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_param_space_json_roundtrip() {
+    let mut rng = Rng::new(0x0DD_BA11);
+    for trial in 0..200 {
+        let space = random_space(&mut rng);
+        let back = ParamSpace::from_json(&space.to_json()).unwrap();
+        assert_eq!(back, space, "trial {trial}: value round-trip");
+        // And through serialized text (what checkpoints actually store).
+        let text = space.to_json().to_pretty();
+        let back2 = ParamSpace::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, space, "trial {trial}: text round-trip");
+    }
+}
+
+#[test]
 fn prop_kind_cardinality_consistent_with_decode_range() {
     let mut rng = Rng::new(0x31337);
     for _ in 0..100 {
