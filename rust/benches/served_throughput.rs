@@ -1,0 +1,215 @@
+//! Served throughput: decisions/sec through the `mlkaps served` daemon
+//! over real TCP — one sequential client vs 8 concurrent clients (whose
+//! requests the daemon micro-batches) vs the in-process `decide_batch`
+//! upper bound. This is the perf datapoint for the serving daemon
+//! (README §Serving daemon): concurrency must *help*, because the
+//! batcher coalesces it into arena sweeps.
+//!
+//! Run: `cargo bench --bench served_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+//! CI asserts multi-client batched throughput ≥ single-client
+//! sequential throughput in decisions/sec.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::{Duration, Instant};
+
+use bench_util::*;
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::dtree::DesignTrees;
+use mlkaps::report;
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::runtime::server::daemon::{Daemon, DaemonConfig};
+use mlkaps::runtime::server::ServedRegistry;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::util::rng::Rng;
+
+const CLIENTS: usize = 8;
+
+fn main() {
+    header(
+        "served_throughput",
+        "serving daemon: sequential vs concurrent-batched decisions/sec over TCP",
+    );
+    let per_dim = budget3(64, 32, 12);
+    let n_query = budget3(400_000, 40_000, 4_000);
+    // Round down so every client thread issues the same share.
+    let n_query = (n_query / CLIENTS) * CLIENTS;
+
+    // The same tuning-shaped bundle as serving_throughput.
+    let input = ParamSpace::new(vec![
+        ParamDef::float("n", 64.0, 8192.0),
+        ParamDef::float("m", 64.0, 8192.0),
+    ]);
+    let design = ParamSpace::new(vec![
+        ParamDef::int("threads", 1, 64),
+        ParamDef::categorical("variant", &["row", "col", "tile"]),
+        ParamDef::boolean("prefetch"),
+    ]);
+    let grid = input.grid(per_dim);
+    let designs: Vec<Vec<f64>> = grid
+        .iter()
+        .map(|p| {
+            let size = p[0] * p[1];
+            vec![
+                (size.sqrt() / 128.0).round().clamp(1.0, 64.0),
+                if p[1] > 2.0 * p[0] {
+                    2.0
+                } else if p[0] > p[1] {
+                    0.0
+                } else {
+                    1.0
+                },
+                if size > 1e6 { 1.0 } else { 0.0 },
+            ]
+        })
+        .collect();
+    let trees = DesignTrees::fit(&grid, &designs, &input, &design, 8);
+    let bundle = TreeBundle::from_trees(trees.clone()).unwrap();
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_bundle("bench", TreeBundle::from_trees(trees).unwrap()).unwrap();
+    let mut daemon = Daemon::start(
+        reg,
+        DaemonConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_max: 256,
+            batch_window: Duration::from_micros(200),
+            poll_interval: Duration::from_secs(3600), // nothing to watch
+            threads: 0,
+            queue_capacity: 4096,
+        },
+    )
+    .unwrap();
+    let addr = daemon.local_addr();
+    println!("daemon: listening on {addr}, {CLIENTS} bench clients, {n_query} decisions/phase");
+
+    // A shared pool of distinct query rows (large enough that the memo
+    // cache isn't what's being measured).
+    let mut rng = Rng::new(4242);
+    let pool: Vec<Vec<f64>> = (0..4096)
+        .map(|_| vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)])
+        .collect();
+
+    // Warmup + correctness trail: served == in-process, bit for bit.
+    {
+        let mut client = ServedClient::connect(addr).unwrap();
+        for q in pool.iter().take(64) {
+            assert_eq!(
+                client.decide("bench", q, None).unwrap().values,
+                bundle.decide(q),
+                "served decision diverged from in-process decide"
+            );
+        }
+    }
+
+    // Phase 1: one client, strictly sequential round-trips.
+    let t0 = Instant::now();
+    {
+        let mut client = ServedClient::connect(addr).unwrap();
+        for i in 0..n_query {
+            let q = &pool[i % pool.len()];
+            std::hint::black_box(client.decide("bench", q, None).unwrap());
+        }
+    }
+    let single_secs = t0.elapsed().as_secs_f64();
+
+    // Phase 2: 8 concurrent clients, same total request count; the
+    // daemon's batcher coalesces their in-flight requests.
+    let t0 = Instant::now();
+    let mut max_batch = 1usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CLIENTS {
+            let pool = &pool;
+            handles.push(scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                let mut max_batch = 1usize;
+                for i in 0..n_query / CLIENTS {
+                    let q = &pool[(t * 7919 + i) % pool.len()];
+                    let d = client.decide("bench", q, None).unwrap();
+                    max_batch = max_batch.max(d.batch);
+                    std::hint::black_box(d);
+                }
+                max_batch
+            }));
+        }
+        for h in handles {
+            max_batch = max_batch.max(h.join().unwrap());
+        }
+    });
+    let multi_secs = t0.elapsed().as_secs_f64();
+
+    // Phase 3: the in-process batched upper bound (no sockets).
+    let rows: Vec<Vec<f64>> =
+        (0..n_query).map(|i| pool[i % pool.len()].clone()).collect();
+    let t0 = Instant::now();
+    std::hint::black_box(bundle.decide_batch(&rows, 0));
+    let direct_secs = t0.elapsed().as_secs_f64();
+
+    let dps = |secs: f64| n_query as f64 / secs.max(1e-12);
+    let rows_out = vec![
+        vec![
+            "served_1_client".to_string(),
+            n_query.to_string(),
+            format!("{single_secs:.4}"),
+            format!("{:.0}", dps(single_secs)),
+        ],
+        vec![
+            format!("served_{CLIENTS}_clients"),
+            n_query.to_string(),
+            format!("{multi_secs:.4}"),
+            format!("{:.0}", dps(multi_secs)),
+        ],
+        vec![
+            "direct_decide_batch".to_string(),
+            n_query.to_string(),
+            format!("{direct_secs:.4}"),
+            format!("{:.0}", dps(direct_secs)),
+        ],
+    ];
+    println!(
+        "{}",
+        report::table(&["phase", "rows", "secs", "decisions_per_sec"], &rows_out)
+    );
+    save_csv(
+        "served_throughput.csv",
+        &["phase", "rows", "secs", "decisions_per_sec"],
+        &rows_out,
+    );
+    println!(
+        "largest micro-batch observed under {CLIENTS}-client load: {max_batch} rows"
+    );
+
+    // Telemetry trail from the daemon itself.
+    let mut client = ServedClient::connect(addr).unwrap();
+    let stats = client.stats().unwrap();
+    if let Some(k) = stats.get("kernels").and_then(|k| k.get("bench")) {
+        println!(
+            "daemon stats: {} requests, {} dispatches, mean batch {:.2}, mean queue {:.1}us",
+            k.get("requests").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            k.get("batches").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            k.get("mean_batch").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            k.get("mean_queue_us").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+    client.shutdown().unwrap();
+    daemon.wait();
+
+    // The acceptance gate: concurrency must not lose to a single
+    // sequential client — micro-batching has to at least pay for its
+    // queueing.
+    assert!(
+        dps(multi_secs) >= dps(single_secs),
+        "{CLIENTS}-client batched serving slower than one sequential client: \
+         {:.0} < {:.0} dec/s",
+        dps(multi_secs),
+        dps(single_secs)
+    );
+    println!(
+        "(gate: {CLIENTS} clients x{:.2} vs 1 client — must be >= 1; direct batch is x{:.2})",
+        dps(multi_secs) / dps(single_secs),
+        dps(direct_secs) / dps(single_secs)
+    );
+}

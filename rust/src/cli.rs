@@ -12,6 +12,11 @@
 //!              [--model model.json [--model-name x]] [--kernel NAME]
 //!              [--threads N]
 //!              --input "4500,1600" | --inputs-file inputs.csv
+//! mlkaps served --dir runs/spr[,runs/knm] [--name lu@spr,lu@knm]
+//!               [--model model.json --model-name x]
+//!               [--addr 127.0.0.1:4517] [--profile auto|spr|knm|clx|none]
+//!               [--batch-max 256] [--batch-window-us 200]
+//!               [--poll-ms 500] [--threads N] [--queue-cap 4096]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -26,6 +31,16 @@
 //! stdout), `--inputs-file` batch-decides a CSV of inputs (one
 //! comma-separated input per line, `#` comments) and emits a CSV of
 //! input + chosen-config columns.
+//!
+//! `served` starts the long-running serving daemon
+//! ([`crate::runtime::server`]): a zero-dependency TCP endpoint speaking
+//! length-prefixed JSON and newline text (`docs/protocol.md`), with
+//! micro-batched dispatch, per-kernel telemetry (`STATS`), hot-reload of
+//! watched checkpoint directories, and per-hardware-profile bundle
+//! variants (`--name lu@spr,lu@knm`; `--profile` sets the default
+//! variant, `auto` probes the host). It prints one
+//! `mlkaps served: listening on HOST:PORT` line to stdout, then serves
+//! until a `SHUTDOWN` request arrives.
 
 use std::collections::HashMap;
 
@@ -38,11 +53,9 @@ use crate::report;
 
 /// Build a kernel by registry name.
 pub fn make_kernel(name: &str, seed: u64) -> Result<Box<dyn Kernel>, String> {
-    let hw = |n: &str| match n {
-        "knm" => HardwareProfile::knm(),
-        "clx" => HardwareProfile::clx(),
-        _ => HardwareProfile::spr(),
-    };
+    // One source of truth for profile names; unknown suffixes keep the
+    // historical default of SPR.
+    let hw = |n: &str| HardwareProfile::by_key(n).unwrap_or_else(HardwareProfile::spr);
     match name {
         "toy" => Ok(Box::new(toy_sum::ToySum::new(seed))),
         "pdgeqrf" => Ok(Box::new(pdgeqrf_sim::PdgeqrfSim::new(seed))),
@@ -333,6 +346,86 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::server::daemon::{Daemon, DaemonConfig};
+    use crate::runtime::server::ServedRegistry;
+    use crate::runtime::serving::TreeBundle;
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    let default_profile = match flags.get("profile").map(String::as_str) {
+        None | Some("auto") => Some(HardwareProfile::detect().key().to_string()),
+        Some("none") => None,
+        Some(p) => Some(
+            HardwareProfile::by_key(p)
+                .ok_or_else(|| format!("unknown profile '{p}' (spr, knm, clx, auto, none)"))?
+                .key()
+                .to_string(),
+        ),
+    };
+    let mut reg = ServedRegistry::new(default_profile);
+
+    let names: Vec<String> = flags
+        .get("name")
+        .map(|n| n.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
+    let n_dirs = flags.get("dir").map(|d| d.split(',').count()).unwrap_or(0);
+    if names.len() > n_dirs {
+        // Extra names would be silently dropped — an operator who
+        // listed two variants but one directory should hear about it.
+        return Err(format!(
+            "--name lists {} names but --dir lists {n_dirs} director{}",
+            names.len(),
+            if n_dirs == 1 { "y" } else { "ies" }
+        ));
+    }
+    if let Some(dirs) = flags.get("dir") {
+        for (i, dir) in dirs.split(',').enumerate() {
+            let dir = dir.trim();
+            let registered = reg.register_dir(dir, names.get(i).map(String::as_str))?;
+            eprintln!("served: registered '{registered}' from {dir}");
+        }
+    }
+    if let Some(path) = flags.get("model") {
+        let name = flags.get("model-name").cloned().unwrap_or_else(|| "model".into());
+        let registered = reg.register_bundle(&name, TreeBundle::load_model_file(path)?)?;
+        eprintln!("served: registered '{registered}' from {path} (not hot-reloadable)");
+    }
+    if reg.is_empty() {
+        return Err("served needs --dir CKPT_DIR[,...] and/or --model FILE".into());
+    }
+
+    let parse_num = |key: &str, default: u64| -> Result<u64, String> {
+        flags
+            .get(key)
+            .map(|v| v.parse().map_err(|e| format!("{key}: {e}")))
+            .transpose()
+            .map(|v| v.unwrap_or(default))
+    };
+    let cfg = DaemonConfig {
+        addr: flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:4517".into()),
+        batch_max: parse_num("batch-max", 256)? as usize,
+        batch_window: Duration::from_micros(parse_num("batch-window-us", 200)?),
+        poll_interval: Duration::from_millis(parse_num("poll-ms", 500)?),
+        threads: parse_num("threads", 0)? as usize,
+        queue_capacity: parse_num("queue-cap", 4096)? as usize,
+    };
+
+    let variants = reg.names().join(", ");
+    let profile_note = reg
+        .default_profile()
+        .map(|p| format!(" (default profile: {p})"))
+        .unwrap_or_default();
+    let mut daemon = Daemon::start(reg, cfg)?;
+    // The parseable readiness line (tests and scripts wait for it).
+    println!("mlkaps served: listening on {}", daemon.local_addr());
+    std::io::stdout().flush().ok();
+    eprintln!("served: variants: {variants}{profile_note}; SHUTDOWN verb stops the daemon");
+    daemon.wait();
+    eprintln!("served: daemon stopped");
+    Ok(())
+}
+
 fn cmd_artifacts(flags: HashMap<String, String>) -> Result<(), String> {
     let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
     let manifest = crate::runtime::Manifest::load(std::path::Path::new(&dir))
@@ -368,7 +461,7 @@ pub fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: mlkaps <kernels|tune|serve|artifacts> [--flags]");
+            eprintln!("usage: mlkaps <kernels|tune|serve|served|artifacts> [--flags]");
             eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
             std::process::exit(2);
         }
@@ -382,6 +475,7 @@ pub fn main() {
         }
         "tune" => parse_flags(&rest).and_then(cmd_tune),
         "serve" => parse_flags(&rest).and_then(cmd_serve),
+        "served" => parse_flags(&rest).and_then(cmd_served),
         "artifacts" => parse_flags(&rest).and_then(cmd_artifacts),
         other => Err(format!("unknown command '{other}'")),
     };
@@ -434,6 +528,17 @@ mod tests {
         let mut flags = HashMap::new();
         flags.insert("dir".to_string(), "/nonexistent/ckpt".to_string());
         assert!(cmd_serve(flags).is_err());
+    }
+
+    #[test]
+    fn served_requires_a_bundle_source_and_valid_profile() {
+        assert!(cmd_served(HashMap::new()).is_err());
+        let mut flags = HashMap::new();
+        flags.insert("profile".to_string(), "tpu".to_string());
+        assert!(cmd_served(flags).is_err());
+        let mut flags = HashMap::new();
+        flags.insert("dir".to_string(), "/nonexistent/ckpt".to_string());
+        assert!(cmd_served(flags).is_err());
     }
 
     #[test]

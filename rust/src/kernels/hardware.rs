@@ -85,6 +85,44 @@ impl HardwareProfile {
         self.cores * self.smt
     }
 
+    /// Lowercase registry key of this profile ("spr"/"knm"/"clx") — the
+    /// per-hardware-profile bundle-variant suffix used by the serving
+    /// daemon (`kernel@spr`).
+    pub fn key(&self) -> &'static str {
+        match self.name {
+            "KNM" => "knm",
+            "CLX" => "clx",
+            _ => "spr",
+        }
+    }
+
+    /// Look a profile up by its registry key (case-insensitive).
+    pub fn by_key(key: &str) -> Option<HardwareProfile> {
+        match key.to_ascii_lowercase().as_str() {
+            "spr" => Some(HardwareProfile::spr()),
+            "knm" => Some(HardwareProfile::knm()),
+            "clx" => Some(HardwareProfile::clx()),
+            _ => None,
+        }
+    }
+
+    /// Probe the host and pick the nearest known profile by hardware
+    /// thread count (the only signal `std` exposes portably). This is
+    /// the serving daemon's default bundle-variant selector; it is
+    /// deliberately coarse — a deployment that knows its machine passes
+    /// `--profile` (or a per-request `"profile"`) instead.
+    pub fn detect() -> HardwareProfile {
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        // Ascending by thread count; ties resolve to the smaller machine.
+        let candidates =
+            [HardwareProfile::clx(), HardwareProfile::spr(), HardwareProfile::knm()];
+        candidates
+            .into_iter()
+            .min_by_key(|p| p.max_threads().abs_diff(threads))
+            .expect("candidate list is non-empty")
+    }
+
     /// Peak DP GFLOP/s of the whole socket.
     pub fn peak_gflops(&self) -> f64 {
         self.cores as f64 * self.freq_ghz * self.flops_per_cycle
@@ -124,6 +162,18 @@ mod tests {
         // SPR socket peak ~4.5 TF DP; KNM ~1.7 TF DP.
         assert!((4000.0..5000.0).contains(&HardwareProfile::spr().peak_gflops()));
         assert!((1500.0..2000.0).contains(&HardwareProfile::knm().peak_gflops()));
+    }
+
+    #[test]
+    fn profile_keys_roundtrip_and_detect_returns_a_known_profile() {
+        for key in ["spr", "knm", "clx"] {
+            let p = HardwareProfile::by_key(key).unwrap();
+            assert_eq!(p.key(), key);
+            assert_eq!(HardwareProfile::by_key(&key.to_uppercase()).unwrap().key(), key);
+        }
+        assert!(HardwareProfile::by_key("tpu").is_none());
+        let detected = HardwareProfile::detect();
+        assert!(HardwareProfile::by_key(detected.key()).is_some());
     }
 
     #[test]

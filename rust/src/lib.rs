@@ -31,8 +31,11 @@
 //!   grid-optimization stage with deterministic per-point seeding, and
 //!   skips any stage whose checkpoint matches the run fingerprint
 //!   (`mlkaps tune --checkpoint-dir DIR`).
-//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`
-//!   (stubbed unless built with the `pjrt` feature).
+//! * [`runtime`] — the deployed side: the compiled decision-tree serving
+//!   runtime ([`runtime::serving`]), the `mlkaps served` TCP daemon with
+//!   micro-batching + hot-reload ([`runtime::server`]), and the PJRT
+//!   client wrapper loading `artifacts/*.hlo.txt` (stubbed unless built
+//!   with the `pjrt` feature).
 //! * [`report`] — ASCII tables / CSV emission for the figure benches.
 
 pub mod baselines;

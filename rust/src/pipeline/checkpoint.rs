@@ -553,6 +553,25 @@ pub struct TreeArtifact {
     pub kernel: Option<String>,
 }
 
+/// Read just the run fingerprint from a checkpoint directory's meta file
+/// — the cheap poll the serving daemon's hot-reload watcher runs on every
+/// tick. It deliberately does NOT verify the stage chain: a changed
+/// fingerprint only *triggers* a full [`load_tree_artifact`] (which does
+/// verify), so a directory mid-rewrite fails the expensive load and is
+/// retried on the next tick rather than being served half-written.
+pub fn read_fingerprint(dir: &Path) -> Result<String, String> {
+    let text = std::fs::read_to_string(dir.join(META_FILE))
+        .map_err(|e| format!("{META_FILE}: {e}"))?;
+    let meta = parse(&text).map_err(|e| format!("{META_FILE}: {e}"))?;
+    if meta.get("format").and_then(|f| f.as_str()) != Some(FORMAT) {
+        return Err(format!("{META_FILE}: not a {FORMAT} checkpoint"));
+    }
+    meta.get("fingerprint")
+        .and_then(|f| f.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| format!("{META_FILE}: missing fingerprint"))
+}
+
 /// Load and validate the stage-4 tree artifact of a checkpoint directory
 /// — the entry point the serving runtime uses to ingest a tuned bundle
 /// without constructing a pipeline. Validation is strict: the directory
@@ -777,6 +796,9 @@ mod tests {
         let art = load_tree_artifact(&dir).unwrap();
         assert_eq!(art.kernel.as_deref(), Some("toy-sum"));
         assert_eq!(art.fingerprint, fingerprint(&run.pipeline.config, &kernel));
+        // The cheap meta poll agrees with the fully verified load.
+        assert_eq!(read_fingerprint(&dir).unwrap(), art.fingerprint);
+        assert!(read_fingerprint(Path::new("/nonexistent/ckpt")).is_err());
         let q = [1234.0, 4321.0];
         assert_eq!(art.trees.predict(&q), out.model.trees.predict(&q));
 

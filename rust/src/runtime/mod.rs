@@ -1,6 +1,8 @@
-//! Runtime layer: the PJRT kernel executor (below) and the decision-tree
+//! Runtime layer: the PJRT kernel executor (below), the decision-tree
 //! serving runtime ([`serving`]) that answers "which config for this
-//! input?" from tuned tree bundles at memory speed.
+//! input?" from tuned tree bundles at memory speed, and the serving
+//! daemon ([`server`]) that exposes those decisions over TCP with
+//! micro-batching and hot-reload (`mlkaps served`).
 //!
 //! PJRT side: load the AOT-compiled HLO text artifacts produced by
 //! `python/compile/aot.py` and execute them on the CPU PJRT client.
@@ -17,6 +19,7 @@
 //! examples) degrades to a clear "rebuild with --features pjrt" message
 //! instead of a link failure. [`Manifest`] parsing works in both builds.
 
+pub mod server;
 pub mod serving;
 
 #[cfg(feature = "pjrt")]

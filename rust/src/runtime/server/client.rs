@@ -1,0 +1,152 @@
+//! Rust client for `mlkaps served` (binary length-prefixed framing).
+//!
+//! This is the reference protocol implementation the integration tests
+//! and the served-throughput bench drive the daemon with; a C or
+//! Fortran shim implements the same few dozen lines against the format
+//! in `docs/protocol.md`. One client owns one connection; it is
+//! deliberately synchronous (one request in flight) — concurrency comes
+//! from opening more clients, which is exactly what lets the daemon's
+//! micro-batcher coalesce them.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::protocol::{read_frame, write_frame, Request};
+use crate::util::json::{self, Value};
+
+/// One decided config as reported by the daemon.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Chosen config in design-space order (bit-exact payload).
+    pub values: Vec<f64>,
+    /// Same values, keyed by design-parameter name.
+    pub config: Vec<(String, f64)>,
+    /// Registry name of the variant that served this request
+    /// (`kernel` or `kernel@profile`).
+    pub variant: String,
+    /// Run fingerprint of the bundle epoch that decided (None for
+    /// bundles not loaded from a checkpoint).
+    pub fingerprint: Option<String>,
+    /// Rows in the micro-batch this decision rode in (≥ 1).
+    pub batch: usize,
+}
+
+/// A synchronous connection to a serving daemon.
+pub struct ServedClient {
+    stream: TcpStream,
+}
+
+impl ServedClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServedClient, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(ServedClient { stream })
+    }
+
+    /// Send one request, read one response, check `"ok"`.
+    fn roundtrip(&mut self, req: &Request) -> Result<Value, String> {
+        write_frame(&mut self.stream, req.to_json().to_string().as_bytes())?;
+        let payload = read_frame(&mut self.stream)?
+            .ok_or("daemon closed the connection mid-request")?;
+        let text = std::str::from_utf8(&payload)
+            .map_err(|e| format!("response is not UTF-8: {e}"))?;
+        let v = json::parse(text).map_err(|e| format!("response parse: {e}"))?;
+        match v.get("ok").and_then(Value::as_bool) {
+            Some(true) => Ok(v),
+            _ => Err(v
+                .get("error")
+                .and_then(Value::as_str)
+                .unwrap_or("daemon returned a malformed response")
+                .to_string()),
+        }
+    }
+
+    /// Which config for this input? `profile` overrides the daemon's
+    /// default hardware-profile variant.
+    pub fn decide(
+        &mut self,
+        kernel: &str,
+        input: &[f64],
+        profile: Option<&str>,
+    ) -> Result<Decision, String> {
+        let req = Request::Decide {
+            kernel: kernel.to_string(),
+            input: input.to_vec(),
+            profile: profile.map(str::to_string),
+            id: None,
+        };
+        let v = self.roundtrip(&req)?;
+        let values = v
+            .get("values")
+            .and_then(Value::as_arr)
+            .ok_or("response missing \"values\"")?
+            .iter()
+            .map(|x| x.as_f64().ok_or("non-numeric value in \"values\""))
+            .collect::<Result<Vec<f64>, &str>>()
+            .map_err(str::to_string)?;
+        let config = match v.get("config") {
+            Some(Value::Obj(m)) => m
+                .iter()
+                .map(|(k, x)| {
+                    Ok((
+                        k.clone(),
+                        x.as_f64().ok_or_else(|| format!("config entry '{k}' not a number"))?,
+                    ))
+                })
+                .collect::<Result<Vec<(String, f64)>, String>>()?,
+            _ => return Err("response missing \"config\"".into()),
+        };
+        Ok(Decision {
+            values,
+            config,
+            variant: v
+                .get("variant")
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            fingerprint: v
+                .get("fingerprint")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            batch: v.get("batch").and_then(Value::as_usize).unwrap_or(1),
+        })
+    }
+
+    /// Full telemetry snapshot (the `STATS` verb), as parsed JSON.
+    pub fn stats(&mut self) -> Result<Value, String> {
+        self.roundtrip(&Request::Stats)
+    }
+
+    /// Registered variant names, sorted (from the `LIST` verb).
+    pub fn list_names(&mut self) -> Result<Vec<String>, String> {
+        let v = self.roundtrip(&Request::List)?;
+        Ok(v.get("kernels")
+            .and_then(Value::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|k| k.get("name").and_then(Value::as_str).map(str::to_string))
+            .collect())
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.roundtrip(&Request::Ping).map(|_| ())
+    }
+
+    /// Force an immediate hot-reload poll of every watched directory;
+    /// returns the variant names that swapped epochs.
+    pub fn reload(&mut self) -> Result<Vec<String>, String> {
+        let v = self.roundtrip(&Request::Reload)?;
+        Ok(v.get("reloaded")
+            .and_then(Value::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|n| n.as_str().map(str::to_string))
+            .collect())
+    }
+
+    /// Ask the daemon to shut down gracefully (acknowledged before it
+    /// stops).
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        self.roundtrip(&Request::Shutdown).map(|_| ())
+    }
+}

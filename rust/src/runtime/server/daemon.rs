@@ -1,0 +1,593 @@
+//! The `mlkaps served` TCP daemon: accept loop, per-connection protocol
+//! handling, telemetry verbs, and lifecycle (start / shutdown / wait).
+//!
+//! Thread model:
+//!
+//! * one **accept** thread (`std::net::TcpListener`),
+//! * one detached thread per live connection (parsing + response
+//!   formatting happen here; the decide itself is delegated to the
+//!   batcher, so a slow client never stalls another connection's
+//!   decisions),
+//! * one **batcher** thread ([`super::batcher::BatchQueue::run`])
+//!   turning concurrent requests into `decide_batch` sweeps,
+//! * one **reload** thread polling watched checkpoint directories every
+//!   `poll_interval` and atomically swapping re-tuned bundles
+//!   ([`super::reload::ReloadableBundle::poll`]).
+//!
+//! Shutdown (the `SHUTDOWN` verb, [`Daemon::shutdown`], or drop) is
+//! graceful: the queue stops accepting, already-queued decisions are
+//! flushed and answered, the reload thread wakes and exits, and the
+//! accept loop is unblocked by a self-connection. In-flight requests are
+//! never dropped silently — a request that cannot be served anymore gets
+//! an explicit error response.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchQueue, DecideOk, Job};
+use super::protocol::{self, Request};
+use super::{ServedRegistry, ServedVariant};
+use crate::util::json::Value;
+
+/// Daemon tuning knobs (all have serving-shaped defaults).
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Flush a batch at this many pending requests…
+    pub batch_max: usize,
+    /// …or this long after the first request of the window, whichever
+    /// comes first.
+    pub batch_window: Duration,
+    /// Hot-reload poll cadence for watched checkpoint directories.
+    pub poll_interval: Duration,
+    /// Threads for `decide_batch` (0 = adaptive).
+    pub threads: usize,
+    /// Bounded queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig {
+            addr: "127.0.0.1:0".into(),
+            batch_max: 256,
+            batch_window: Duration::from_micros(200),
+            poll_interval: Duration::from_millis(500),
+            threads: 0,
+            queue_capacity: 4096,
+        }
+    }
+}
+
+/// State shared by every daemon thread.
+struct Shared {
+    registry: ServedRegistry,
+    queue: Arc<BatchQueue>,
+    shutdown: AtomicBool,
+    /// The reload thread parks here between polls; `true` = exit now.
+    reload_gate: (Mutex<bool>, Condvar),
+    connections: AtomicU64,
+    /// Requests currently between "read off the socket" and "response
+    /// written": [`Daemon::wait`] drains this (bounded) so a process
+    /// exiting right after shutdown can't cut off a response that the
+    /// batcher already produced on a detached connection thread.
+    in_flight: AtomicU64,
+    started: Instant,
+    local_addr: SocketAddr,
+    decide_threads: usize,
+}
+
+/// RAII increment of the in-flight request counter (decrements on drop,
+/// including every error path of a connection loop).
+struct InFlight<'a>(&'a AtomicU64);
+
+impl<'a> InFlight<'a> {
+    fn enter(counter: &'a AtomicU64) -> InFlight<'a> {
+        counter.fetch_add(1, Ordering::SeqCst);
+        InFlight(counter)
+    }
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running daemon. Dropping it shuts it down and joins its threads.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind, spawn the accept/batcher/reload threads, and start serving.
+    pub fn start(registry: ServedRegistry, cfg: DaemonConfig) -> Result<Daemon, String> {
+        if registry.is_empty() {
+            return Err("refusing to serve an empty registry".into());
+        }
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let queue = BatchQueue::new(cfg.queue_capacity);
+        let shared = Arc::new(Shared {
+            registry,
+            queue: queue.clone(),
+            shutdown: AtomicBool::new(false),
+            reload_gate: (Mutex::new(false), Condvar::new()),
+            connections: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            started: Instant::now(),
+            local_addr,
+            decide_threads: cfg.threads,
+        });
+        let mut handles = Vec::new();
+
+        let (batch_max, batch_window, threads) =
+            (cfg.batch_max, cfg.batch_window, cfg.threads);
+        handles.push(
+            std::thread::Builder::new()
+                .name("mlkaps-batcher".into())
+                .spawn(move || queue.run(batch_max, batch_window, threads))
+                .map_err(|e| format!("spawn batcher: {e}"))?,
+        );
+
+        if shared.registry.iter().any(|v| v.slot.dir().is_some()) {
+            let sh = shared.clone();
+            let interval = cfg.poll_interval;
+            handles.push(
+                std::thread::Builder::new()
+                    .name("mlkaps-reload".into())
+                    .spawn(move || reload_loop(&sh, interval))
+                    .map_err(|e| format!("spawn reloader: {e}"))?,
+            );
+        }
+
+        let sh = shared.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name("mlkaps-accept".into())
+                .spawn(move || accept_loop(sh, listener))
+                .map_err(|e| format!("spawn acceptor: {e}"))?,
+        );
+
+        Ok(Daemon { shared, handles })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    pub fn registry(&self) -> &ServedRegistry {
+        &self.shared.registry
+    }
+
+    /// Initiate a graceful shutdown (idempotent, non-blocking).
+    pub fn shutdown(&self) {
+        trigger_shutdown(&self.shared);
+    }
+
+    /// Block until the daemon's threads exit (after a `SHUTDOWN` verb or
+    /// [`Daemon::shutdown`]), then give in-flight responses on detached
+    /// connection threads a bounded grace window to reach their sockets
+    /// before the caller (typically `main`) exits the process.
+    pub fn wait(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.shared.in_flight.load(Ordering::SeqCst) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown();
+        self.wait();
+    }
+}
+
+fn trigger_shutdown(shared: &Shared) {
+    if shared.shutdown.swap(true, Ordering::SeqCst) {
+        return; // already shutting down
+    }
+    shared.queue.shutdown();
+    let (gate, cv) = &shared.reload_gate;
+    *gate.lock().unwrap() = true;
+    cv.notify_all();
+    // Unblock the accept loop with a throwaway self-connection. A
+    // wildcard bind (0.0.0.0 / ::) is not connectable on every
+    // platform, so poke the matching loopback instead; the timeout
+    // keeps shutdown from hanging even if the poke is filtered.
+    let mut poke = shared.local_addr;
+    if poke.ip().is_unspecified() {
+        poke.set_ip(match poke.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
+}
+
+fn reload_loop(shared: &Shared, interval: Duration) {
+    let (gate, cv) = &shared.reload_gate;
+    loop {
+        let guard = gate.lock().unwrap();
+        let (guard, _) = cv.wait_timeout(guard, interval).unwrap();
+        let stop = *guard;
+        drop(guard);
+        if stop || shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        for v in shared.registry.iter() {
+            if v.slot.dir().is_none() {
+                continue;
+            }
+            match v.slot.poll() {
+                Ok(true) => eprintln!(
+                    "mlkaps served: hot-reloaded '{}' (run {})",
+                    v.name,
+                    v.slot.fingerprint().unwrap_or_default()
+                ),
+                Ok(false) => {}
+                // Counted on the slot (reload_errors); a directory
+                // mid-rewrite simply retries on the next tick while the
+                // old epoch keeps serving.
+                Err(_) => {}
+            }
+        }
+    }
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        let sh = shared.clone();
+        // Detached: the thread exits when its peer hangs up. A stuck
+        // peer holds only its own thread, never the daemon.
+        let _ = std::thread::Builder::new()
+            .name("mlkaps-conn".into())
+            .spawn(move || {
+                let _ = handle_conn(sh, stream);
+            });
+    }
+}
+
+/// Serve one connection until EOF. The framing (binary length-prefixed
+/// vs newline text) is auto-detected from the first byte: binary frames
+/// always begin 0x00 (lengths are capped below 2^24), which no text
+/// request can start with.
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+    stream.set_nodelay(true).ok();
+    let mut first = [0u8; 1];
+    let n = stream.peek(&mut first).map_err(|e| format!("peek: {e}"))?;
+    if n == 0 {
+        return Ok(()); // peer connected and left (e.g. the shutdown poke)
+    }
+    if first[0] == 0x00 {
+        binary_loop(&shared, stream)
+    } else {
+        text_loop(&shared, stream)
+    }
+}
+
+fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String> {
+    loop {
+        let Some(payload) = protocol::read_frame(&mut stream)? else {
+            return Ok(());
+        };
+        let _in_flight = InFlight::enter(&shared.in_flight);
+        let req = std::str::from_utf8(&payload)
+            .map_err(|e| format!("frame is not UTF-8: {e}"))
+            .and_then(|text| {
+                crate::util::json::parse(text).and_then(|v| Request::from_json(&v))
+            });
+        let (resp, stop) = dispatch(shared, req);
+        protocol::write_frame(&mut stream, resp.to_string().as_bytes())?;
+        if stop {
+            trigger_shutdown(shared);
+            return Ok(());
+        }
+    }
+}
+
+/// Longest accepted text-mode request line. A decide request is tens of
+/// bytes; 1 MiB leaves room for bulky opaque ids while preventing a
+/// non-protocol peer (or a client that never sends '\n') from growing a
+/// connection thread's buffer without bound.
+const MAX_TEXT_LINE: usize = 1 << 20;
+
+fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // Bounded read: at most one byte past the cap, so "no newline
+        // within the cap" is distinguishable from a line that fits.
+        let n = (&mut reader)
+            .take(MAX_TEXT_LINE as u64 + 1)
+            .read_until(b'\n', &mut buf)
+            .map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Ok(()); // clean EOF
+        }
+        let terminated = buf.last() == Some(&b'\n');
+        if !terminated && buf.len() > MAX_TEXT_LINE {
+            let resp =
+                protocol::err_response("request line exceeds the 1 MiB cap", None);
+            let mut out = resp.to_string();
+            out.push('\n');
+            let _ = writer.write_all(out.as_bytes());
+            return Err("text request line exceeded the cap".into());
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(line) => line,
+            Err(e) => {
+                // Errors are responses, not bare disconnects — answer,
+                // then close (the framing is unrecoverable mid-bytes).
+                let resp = protocol::err_response(
+                    &format!("request line is not UTF-8: {e}"),
+                    None,
+                );
+                let mut out = resp.to_string();
+                out.push('\n');
+                let _ = writer.write_all(out.as_bytes());
+                return Err("non-UTF-8 text request".into());
+            }
+        };
+        if !line.trim().is_empty() {
+            let _in_flight = InFlight::enter(&shared.in_flight);
+            let (resp, stop) = dispatch(shared, Request::from_line(line));
+            let mut out = resp.to_string();
+            out.push('\n');
+            writer.write_all(out.as_bytes()).map_err(|e| e.to_string())?;
+            writer.flush().map_err(|e| e.to_string())?;
+            if stop {
+                trigger_shutdown(shared);
+                return Ok(());
+            }
+        }
+        if !terminated {
+            return Ok(()); // EOF after a final unterminated line
+        }
+    }
+}
+
+/// Route one request to its handler. Returns the response plus whether
+/// this connection (and the daemon) should stop afterwards.
+fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, bool) {
+    let req = match req {
+        Ok(r) => r,
+        Err(e) => return (protocol::err_response(&e, None), false),
+    };
+    match req {
+        Request::Ping => (
+            Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
+            false,
+        ),
+        Request::Stats => (stats_json(shared), false),
+        Request::List => (list_json(shared), false),
+        Request::Reload => (reload_now(shared), false),
+        Request::Shutdown => (
+            Value::obj(vec![("ok", Value::Bool(true)), ("shutdown", Value::Bool(true))]),
+            true,
+        ),
+        Request::Decide { kernel, input, profile, id } => {
+            (decide(shared, &kernel, input, profile.as_deref(), id), false)
+        }
+    }
+}
+
+fn decide(
+    shared: &Arc<Shared>,
+    kernel: &str,
+    input: Vec<f64>,
+    profile: Option<&str>,
+    id: Option<Value>,
+) -> Value {
+    let variant = match shared.registry.resolve(kernel, profile) {
+        Ok(v) => v,
+        Err(e) => return protocol::err_response(&e, id.as_ref()),
+    };
+    let (reply, rx) = sync_channel(1);
+    let job = Job { variant: variant.clone(), input, enqueued: Instant::now(), reply };
+    if let Err(e) = shared.queue.push(job) {
+        return protocol::err_response(&e, id.as_ref());
+    }
+    match rx.recv() {
+        Ok(Ok(ok)) => decide_response(&variant, ok, id),
+        Ok(Err(e)) => protocol::err_response(&e, id.as_ref()),
+        Err(_) => protocol::err_response(
+            "daemon dropped the request while shutting down",
+            id.as_ref(),
+        ),
+    }
+}
+
+fn decide_response(variant: &ServedVariant, ok: DecideOk, id: Option<Value>) -> Value {
+    let config: BTreeMap<String, Value> = ok
+        .names
+        .iter()
+        .zip(&ok.values)
+        .map(|(n, &v)| (n.clone(), Value::Num(v)))
+        .collect();
+    let mut pairs = vec![
+        ("ok", Value::Bool(true)),
+        ("kernel", Value::Str(variant.kernel.clone())),
+        ("variant", Value::Str(variant.name.clone())),
+        (
+            "profile",
+            variant.profile.as_ref().map(|p| Value::Str(p.clone())).unwrap_or(Value::Null),
+        ),
+        (
+            "fingerprint",
+            ok.fingerprint.map(|f| Value::Str(f.to_string())).unwrap_or(Value::Null),
+        ),
+        ("config", Value::Obj(config)),
+        (
+            "values",
+            Value::Arr(ok.values.iter().map(|&v| Value::Num(v)).collect()),
+        ),
+        ("batch", Value::Num(ok.batch as f64)),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id));
+    }
+    Value::obj(pairs)
+}
+
+fn stats_json(shared: &Shared) -> Value {
+    let uptime = shared.started.elapsed().as_secs_f64();
+    let mut kernels = BTreeMap::new();
+    for v in shared.registry.iter() {
+        let bundle = v.slot.get();
+        let cache = bundle.cache_counters();
+        let requests = v.stats.requests.load(Ordering::Relaxed);
+        let num = |x: u64| Value::Num(x as f64);
+        kernels.insert(
+            v.name.clone(),
+            Value::obj(vec![
+                ("kernel", Value::Str(v.kernel.clone())),
+                (
+                    "profile",
+                    v.profile.as_ref().map(|p| Value::Str(p.clone())).unwrap_or(Value::Null),
+                ),
+                (
+                    "fingerprint",
+                    bundle
+                        .fingerprint()
+                        .map(|f| Value::Str(f.into()))
+                        .unwrap_or(Value::Null),
+                ),
+                (
+                    "watched_dir",
+                    v.slot
+                        .dir()
+                        .map(|d| Value::Str(d.display().to_string()))
+                        .unwrap_or(Value::Null),
+                ),
+                ("requests", num(requests)),
+                (
+                    "requests_per_sec",
+                    Value::Num(requests as f64 / uptime.max(1e-9)),
+                ),
+                ("batches", num(v.stats.batches.load(Ordering::Relaxed))),
+                ("mean_batch", Value::Num(v.stats.mean_batch())),
+                ("mean_queue_us", Value::Num(v.stats.mean_queue_us())),
+                ("errors", num(v.stats.errors.load(Ordering::Relaxed))),
+                ("reloads", num(v.slot.reloads())),
+                ("reload_errors", num(v.slot.reload_errors())),
+                // Cache counters restart with each hot-reloaded epoch
+                // (the cache belongs to the bundle, and a new epoch's
+                // decisions are new).
+                ("cache_hits", num(cache.hits())),
+                ("cache_misses", num(cache.misses())),
+                ("cache_hit_rate", Value::Num(cache.hit_rate())),
+                ("mem_bytes", Value::Num(bundle.mem_bytes() as f64)),
+            ]),
+        );
+    }
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("uptime_secs", Value::Num(uptime)),
+        (
+            "connections",
+            Value::Num(shared.connections.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "default_profile",
+            shared
+                .registry
+                .default_profile()
+                .map(|p| Value::Str(p.into()))
+                .unwrap_or(Value::Null),
+        ),
+        ("decide_threads", Value::Num(shared.decide_threads as f64)),
+        ("kernels", Value::Obj(kernels)),
+    ])
+}
+
+fn list_json(shared: &Shared) -> Value {
+    let kernels: Vec<Value> = shared
+        .registry
+        .iter()
+        .map(|v| {
+            let bundle = v.slot.get();
+            Value::obj(vec![
+                ("name", Value::Str(v.name.clone())),
+                ("kernel", Value::Str(v.kernel.clone())),
+                (
+                    "profile",
+                    v.profile.as_ref().map(|p| Value::Str(p.clone())).unwrap_or(Value::Null),
+                ),
+                (
+                    "fingerprint",
+                    bundle
+                        .fingerprint()
+                        .map(|f| Value::Str(f.into()))
+                        .unwrap_or(Value::Null),
+                ),
+                (
+                    "inputs",
+                    Value::Arr(
+                        bundle
+                            .input_space()
+                            .names()
+                            .iter()
+                            .map(|n| Value::Str(n.to_string()))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "design",
+                    Value::Arr(
+                        bundle
+                            .design_space()
+                            .names()
+                            .iter()
+                            .map(|n| Value::Str(n.to_string()))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Value::obj(vec![("ok", Value::Bool(true)), ("kernels", Value::Arr(kernels))])
+}
+
+fn reload_now(shared: &Shared) -> Value {
+    let mut reloaded = Vec::new();
+    let mut errors = Vec::new();
+    for v in shared.registry.iter() {
+        if v.slot.dir().is_none() {
+            continue;
+        }
+        match v.slot.poll() {
+            Ok(true) => reloaded.push(Value::Str(v.name.clone())),
+            Ok(false) => {}
+            Err(e) => errors.push(Value::Str(format!("{}: {e}", v.name))),
+        }
+    }
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("reloaded", Value::Arr(reloaded)),
+        ("errors", Value::Arr(errors)),
+    ])
+}

@@ -1,0 +1,370 @@
+//! `mlkaps served` — the async serving daemon around the synchronous
+//! [`crate::runtime::serving`] runtime.
+//!
+//! The paper's deployed artifact is a set of decision trees consulted at
+//! runtime by an HPC library; that only pays off if *non-Rust* callers
+//! (C/Fortran/Python kernels) can ask "which config for this input?"
+//! with negligible overhead. This subsystem turns the in-process
+//! [`TreeBundle`] into a long-running network service:
+//!
+//! * [`protocol`] — zero-dependency wire format over `std::net` TCP:
+//!   length-prefixed JSON frames (binary clients) and newline-delimited
+//!   text (`printf | nc`), auto-detected per connection.
+//! * [`batcher`] — concurrent requests from independent connections are
+//!   collected into a bounded queue and flushed by size or time window
+//!   into single [`TreeBundle::decide_batch`] calls, amortizing the SoA
+//!   arena walk exactly the way `CompiledForest` amortizes surrogate
+//!   queries. Per-variant telemetry (requests, batch occupancy, queue
+//!   latency) is exposed via the `STATS` verb.
+//! * [`reload`] — each served bundle sits behind an atomically swapped
+//!   `Arc` epoch; a poll thread watches checkpoint directories' run
+//!   fingerprints and hot-swaps re-tuned bundles without dropping
+//!   in-flight decisions.
+//! * [`daemon`] — the TCP accept/connection loop tying it together,
+//!   started by `mlkaps served`.
+//! * [`client`] — the Rust client (binary framing) used by the
+//!   integration tests and the served-throughput bench.
+//!
+//! **Multi-backend bundles:** one kernel name can be registered with
+//! per-hardware-profile variants (`dgetrf@spr`, `dgetrf@knm`, …). A
+//! request picks its variant via an explicit `"profile"` field, else the
+//! daemon's `--profile` flag (default: a
+//! [`HardwareProfile::detect`] probe of the serving host), else the
+//! unprofiled registration, else the kernel's only variant.
+
+pub mod batcher;
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod reload;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::kernels::hardware::HardwareProfile;
+use crate::runtime::serving::TreeBundle;
+use reload::ReloadableBundle;
+
+/// Per-variant serving telemetry, updated by the batcher and reported by
+/// the `STATS` verb. Relaxed atomics: monitoring data, not sync.
+#[derive(Default)]
+pub struct VariantStats {
+    /// Decide requests routed to this variant.
+    pub requests: AtomicU64,
+    /// `decide`/`decide_batch` dispatches issued for this variant.
+    pub batches: AtomicU64,
+    /// Sum of dispatch sizes (mean batch occupancy = batched_rows /
+    /// batches).
+    pub batched_rows: AtomicU64,
+    /// Total nanoseconds requests spent queued before dispatch.
+    pub queue_ns: AtomicU64,
+    /// Requests answered with an error (dimension mismatch etc.).
+    pub errors: AtomicU64,
+}
+
+impl VariantStats {
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn mean_queue_us(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            0.0
+        } else {
+            self.queue_ns.load(Ordering::Relaxed) as f64 / r as f64 / 1_000.0
+        }
+    }
+}
+
+/// One served bundle variant: a kernel (optionally pinned to a hardware
+/// profile) behind a hot-reloadable slot, plus its telemetry.
+pub struct ServedVariant {
+    /// Kernel name ("dgetrf").
+    pub kernel: String,
+    /// Hardware-profile key ("spr") or None for an unprofiled variant.
+    pub profile: Option<String>,
+    /// Display/registry name: `kernel` or `kernel@profile`.
+    pub name: String,
+    pub slot: ReloadableBundle,
+    pub stats: VariantStats,
+}
+
+/// Compose the registry name of a (kernel, profile) pair.
+pub fn variant_name(kernel: &str, profile: Option<&str>) -> String {
+    match profile {
+        Some(p) => format!("{kernel}@{p}"),
+        None => kernel.to_string(),
+    }
+}
+
+/// Split a `kernel[@profile]` name spec. Profiles are normalized to
+/// lowercase (kernel names stay case-sensitive), matching the
+/// case-insensitive `HardwareProfile::by_key` the CLI's `--profile`
+/// goes through — so `LU@SPR` registers, and a request for `"SPR"`
+/// resolves, the same variant as `spr`.
+pub fn parse_name_spec(spec: &str) -> (String, Option<String>) {
+    match spec.split_once('@') {
+        Some((k, p)) if !p.is_empty() => {
+            (k.to_string(), Some(p.to_ascii_lowercase()))
+        }
+        _ => (spec.to_string(), None),
+    }
+}
+
+/// The daemon's routing table: registry name → served variant, plus the
+/// daemon-level default profile used when a request names none.
+/// Immutable once the daemon starts (bundles themselves hot-reload
+/// behind their slots).
+pub struct ServedRegistry {
+    variants: BTreeMap<String, Arc<ServedVariant>>,
+    default_profile: Option<String>,
+}
+
+impl ServedRegistry {
+    /// `default_profile` is the daemon-level variant selector (`--profile`
+    /// flag; `None` disables profile defaulting). Use
+    /// [`ServedRegistry::with_detected_profile`] for the hardware probe.
+    pub fn new(default_profile: Option<String>) -> ServedRegistry {
+        ServedRegistry { variants: BTreeMap::new(), default_profile }
+    }
+
+    /// Registry defaulting to the host's probed hardware profile.
+    pub fn with_detected_profile() -> ServedRegistry {
+        ServedRegistry::new(Some(HardwareProfile::detect().key().to_string()))
+    }
+
+    pub fn default_profile(&self) -> Option<&str> {
+        self.default_profile.as_deref()
+    }
+
+    fn insert(
+        &mut self,
+        kernel: String,
+        profile: Option<String>,
+        slot: ReloadableBundle,
+    ) -> Result<String, String> {
+        let name = variant_name(&kernel, profile.as_deref());
+        if self.variants.contains_key(&name) {
+            return Err(format!(
+                "variant '{name}' is already registered; load this bundle under \
+                 a distinct name (e.g. {kernel}@other)"
+            ));
+        }
+        let variant = ServedVariant {
+            kernel,
+            profile,
+            name: name.clone(),
+            slot,
+            stats: VariantStats::default(),
+        };
+        self.variants.insert(name.clone(), Arc::new(variant));
+        Ok(name)
+    }
+
+    /// Load a checkpoint directory (chain-verified) and register it as a
+    /// hot-reloadable variant. `name_spec` (`kernel[@profile]`) overrides
+    /// the kernel name recorded in the checkpoint meta. Returns the
+    /// registry name.
+    pub fn register_dir(
+        &mut self,
+        dir: impl Into<PathBuf>,
+        name_spec: Option<&str>,
+    ) -> Result<String, String> {
+        let dir = dir.into();
+        let bundle = TreeBundle::load_checkpoint_dir(&dir)?;
+        let (kernel, profile) = match name_spec {
+            Some(spec) => parse_name_spec(spec),
+            None => (
+                bundle
+                    .kernel()
+                    .ok_or("checkpoint meta has no kernel name; pass one explicitly")?
+                    .to_string(),
+                None,
+            ),
+        };
+        self.insert(kernel, profile, ReloadableBundle::new(bundle, Some(dir)))
+    }
+
+    /// Register an in-memory bundle (e.g. from a bare `--save-model`
+    /// file) under `kernel[@profile]`. Not hot-reloadable.
+    pub fn register_bundle(
+        &mut self,
+        name_spec: &str,
+        bundle: TreeBundle,
+    ) -> Result<String, String> {
+        let (kernel, profile) = parse_name_spec(name_spec);
+        self.insert(kernel, profile, ReloadableBundle::new(bundle, None))
+    }
+
+    /// Route a request to a variant. Precedence: the requested profile
+    /// (else the daemon default) exactly; then the unprofiled
+    /// registration; then the kernel's only variant; else an error
+    /// listing what is available.
+    pub fn resolve(
+        &self,
+        kernel: &str,
+        profile: Option<&str>,
+    ) -> Result<Arc<ServedVariant>, String> {
+        // Registered profiles are lowercase (parse_name_spec); accept
+        // any casing from the request side.
+        let requested = profile.map(str::to_ascii_lowercase);
+        let want = requested.as_deref().or(self.default_profile.as_deref());
+        if let Some(p) = want {
+            if let Some(v) = self.variants.get(&variant_name(kernel, Some(p))) {
+                return Ok(v.clone());
+            }
+        }
+        if let Some(v) = self.variants.get(kernel) {
+            return Ok(v.clone());
+        }
+        let of_kernel: Vec<&Arc<ServedVariant>> =
+            self.variants.values().filter(|v| v.kernel == kernel).collect();
+        if of_kernel.len() == 1 {
+            return Ok(of_kernel[0].clone());
+        }
+        Err(if of_kernel.is_empty() {
+            format!(
+                "no bundle registered for kernel '{kernel}' (have: {})",
+                self.names().join(", ")
+            )
+        } else {
+            format!(
+                "kernel '{kernel}' has multiple profile variants ({}); pick one \
+                 with \"profile\"",
+                of_kernel.iter().map(|v| v.name.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// All variants, in registry-name order.
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<ServedVariant>> {
+        self.variants.values()
+    }
+
+    /// Registry names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.variants.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::{ParamDef, ParamSpace};
+    use crate::dtree::DesignTrees;
+
+    /// A small tuned model whose decisions depend on a marker value, so
+    /// two variants are distinguishable by their outputs.
+    fn model(marker: f64) -> DesignTrees {
+        let input = ParamSpace::new(vec![ParamDef::float("n", 1.0, 100.0)]);
+        let design = ParamSpace::new(vec![ParamDef::int("threads", 1, 64)]);
+        let inputs = input.grid(16);
+        let designs: Vec<Vec<f64>> =
+            inputs.iter().map(|p| vec![if p[0] < 50.0 { marker } else { 64.0 }]).collect();
+        DesignTrees::fit(&inputs, &designs, &input, &design, 4)
+    }
+
+    fn bundle(marker: f64) -> TreeBundle {
+        TreeBundle::from_trees(model(marker)).unwrap()
+    }
+
+    #[test]
+    fn name_specs_parse_and_compose() {
+        assert_eq!(parse_name_spec("dgetrf@spr"), ("dgetrf".into(), Some("spr".into())));
+        assert_eq!(parse_name_spec("dgetrf"), ("dgetrf".into(), None));
+        assert_eq!(parse_name_spec("dgetrf@"), ("dgetrf@".into(), None));
+        // Profiles normalize to lowercase; kernels stay case-sensitive.
+        assert_eq!(parse_name_spec("LU@SPR"), ("LU".into(), Some("spr".into())));
+        assert_eq!(variant_name("k", Some("knm")), "k@knm");
+        assert_eq!(variant_name("k", None), "k");
+    }
+
+    #[test]
+    fn resolve_prefers_profile_then_unprofiled_then_singleton() {
+        let mut reg = ServedRegistry::new(Some("spr".into()));
+        reg.register_bundle("lu@spr", bundle(8.0)).unwrap();
+        reg.register_bundle("lu@knm", bundle(16.0)).unwrap();
+        reg.register_bundle("qr", bundle(24.0)).unwrap();
+        reg.register_bundle("solo@clx", bundle(32.0)).unwrap();
+        assert_eq!(reg.names(), vec!["lu@knm", "lu@spr", "qr", "solo@clx"]);
+
+        // Explicit per-request profile wins, in any casing.
+        assert_eq!(reg.resolve("lu", Some("knm")).unwrap().name, "lu@knm");
+        assert_eq!(reg.resolve("lu", Some("KNM")).unwrap().name, "lu@knm");
+        // Daemon default profile applies when the request names none.
+        assert_eq!(reg.resolve("lu", None).unwrap().name, "lu@spr");
+        // Unprofiled registration serves any profile request as fallback.
+        assert_eq!(reg.resolve("qr", Some("knm")).unwrap().name, "qr");
+        assert_eq!(reg.resolve("qr", None).unwrap().name, "qr");
+        // A kernel with a single variant resolves even when the profile
+        // doesn't match.
+        assert_eq!(reg.resolve("solo", None).unwrap().name, "solo@clx");
+        assert_eq!(reg.resolve("solo", Some("spr")).unwrap().name, "solo@clx");
+        // Unknown kernel errors list what's available.
+        let err = reg.resolve("nope", None).unwrap_err();
+        assert!(err.contains("lu@spr"), "{err}");
+    }
+
+    #[test]
+    fn ambiguous_multi_profile_kernel_requires_a_profile() {
+        let mut reg = ServedRegistry::new(None);
+        reg.register_bundle("lu@spr", bundle(8.0)).unwrap();
+        reg.register_bundle("lu@knm", bundle(16.0)).unwrap();
+        let err = reg.resolve("lu", None).unwrap_err();
+        assert!(err.contains("profile"), "{err}");
+        assert_eq!(reg.resolve("lu", Some("spr")).unwrap().name, "lu@spr");
+    }
+
+    #[test]
+    fn duplicate_variant_names_are_refused() {
+        let mut reg = ServedRegistry::new(None);
+        reg.register_bundle("lu@spr", bundle(8.0)).unwrap();
+        let err = reg.register_bundle("lu@spr", bundle(8.0)).unwrap_err();
+        assert!(err.contains("already registered"), "{err}");
+        reg.register_bundle("lu", bundle(8.0)).unwrap();
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn in_memory_bundles_never_reload() {
+        let reg = {
+            let mut r = ServedRegistry::new(None);
+            r.register_bundle("lu", bundle(8.0)).unwrap();
+            r
+        };
+        let v = reg.resolve("lu", None).unwrap();
+        assert!(v.slot.dir().is_none());
+        assert_eq!(v.slot.poll(), Ok(false));
+        assert_eq!(v.slot.reloads(), 0);
+        assert!(v.slot.fingerprint().is_none());
+    }
+
+    #[test]
+    fn variant_stats_means() {
+        let s = VariantStats::default();
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.mean_queue_us(), 0.0);
+        s.requests.fetch_add(4, Ordering::Relaxed);
+        s.batches.fetch_add(2, Ordering::Relaxed);
+        s.batched_rows.fetch_add(4, Ordering::Relaxed);
+        s.queue_ns.fetch_add(8_000, Ordering::Relaxed);
+        assert_eq!(s.mean_batch(), 2.0);
+        assert_eq!(s.mean_queue_us(), 2.0);
+    }
+}

@@ -1,0 +1,290 @@
+//! Wire protocol for `mlkaps served` (reference: `docs/protocol.md`).
+//!
+//! One protocol, two framings, auto-detected per connection from its
+//! first byte:
+//!
+//! * **Binary** — each message is a 4-byte big-endian length prefix
+//!   followed by that many bytes of UTF-8 JSON. Frames are capped at
+//!   [`MAX_FRAME`] (16 MiB), so the first byte of a well-formed binary
+//!   connection is always `0x00` — that is the detection rule. This is
+//!   the framing the Rust [`super::client::ServedClient`] speaks and
+//!   what a C/Fortran shim should implement (a length prefix needs no
+//!   incremental JSON parser on either side).
+//! * **Text** — newline-delimited: one request per line (a JSON object,
+//!   or a bare verb like `STATS`), one JSON response per line. Any
+//!   first byte other than `0x00` selects text mode, so
+//!   `printf '...\n' | nc` works from a shell with zero tooling.
+//!
+//! Requests are either a **decide** (`{"kernel": ..., "input": [...]}`
+//! with optional `"profile"` and opaque `"id"`) or an **op**
+//! (`{"op": "stats"}` / bare `STATS` in text mode). Responses always
+//! carry `"ok"`; decide responses carry the chosen config both as a
+//! named object (`"config"`) and as the raw value-space array
+//! (`"values"`, the bit-exact payload in design-space order).
+//!
+//! JSON numbers are f64 and the serializer emits shortest
+//! round-tripping decimal forms, so finite values survive the wire
+//! bit-exactly. NaN/Inf are **not** representable in a request input
+//! (JSON has no literal for them); the daemon rejects such rows rather
+//! than guessing.
+
+use std::io::{Read, Write};
+
+use crate::util::json::{self, Value};
+
+/// Upper bound on one frame's payload (16 MiB). Also the framing
+/// detection invariant: lengths below 2^24 make the first prefix byte
+/// 0x00, which no text-mode request can start with.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), String> {
+    if payload.len() >= MAX_FRAME {
+        return Err(format!("frame of {} bytes exceeds MAX_FRAME", payload.len()));
+    }
+    let len = (payload.len() as u32).to_be_bytes();
+    w.write_all(&len).map_err(|e| format!("write frame length: {e}"))?;
+    w.write_all(payload).map_err(|e| format!("write frame payload: {e}"))?;
+    w.flush().map_err(|e| format!("flush frame: {e}"))
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer hung up between requests).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, String> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(format!("read frame length: {e}")),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len >= MAX_FRAME {
+        return Err(format!("peer announced a {len}-byte frame (max {MAX_FRAME})"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| format!("read frame payload: {e}"))?;
+    Ok(Some(buf))
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Which config for this input? `profile` overrides the daemon's
+    /// default hardware-profile variant; `id` is echoed back opaquely.
+    Decide {
+        kernel: String,
+        input: Vec<f64>,
+        profile: Option<String>,
+        id: Option<Value>,
+    },
+    /// Telemetry snapshot (per-variant counters + daemon globals).
+    Stats,
+    /// Registered bundle variants with fingerprints.
+    List,
+    /// Liveness probe.
+    Ping,
+    /// Poll every watched checkpoint directory now (don't wait for the
+    /// reload thread's next tick).
+    Reload,
+    /// Stop accepting connections and exit the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// The bare text-mode verbs (case-insensitive).
+    pub fn from_verb(verb: &str) -> Option<Request> {
+        match verb.to_ascii_lowercase().as_str() {
+            "stats" => Some(Request::Stats),
+            "list" => Some(Request::List),
+            "ping" => Some(Request::Ping),
+            "reload" => Some(Request::Reload),
+            "shutdown" => Some(Request::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON request object (either framing).
+    pub fn from_json(v: &Value) -> Result<Request, String> {
+        if let Some(op) = v.get("op").and_then(|o| o.as_str()) {
+            return Request::from_verb(op).ok_or_else(|| {
+                format!("unknown op '{op}' (stats, list, ping, reload, shutdown)")
+            });
+        }
+        let kernel = v
+            .get("kernel")
+            .and_then(|k| k.as_str())
+            .ok_or("request needs \"kernel\" (or an \"op\")")?
+            .to_string();
+        let input = v
+            .get("input")
+            .and_then(|a| a.as_arr())
+            .ok_or("request needs \"input\": [numbers]")?
+            .iter()
+            // `filter` catches overflow literals like 1e999, which the
+            // JSON parser turns into f64 infinity.
+            .map(|x| {
+                x.as_f64()
+                    .filter(|v| v.is_finite())
+                    .ok_or("\"input\" entries must be finite numbers")
+            })
+            .collect::<Result<Vec<f64>, &str>>()
+            .map_err(str::to_string)?;
+        let profile = match v.get("profile") {
+            None | Some(Value::Null) => None,
+            Some(p) => Some(
+                p.as_str()
+                    .ok_or("\"profile\" must be a string")?
+                    .to_string(),
+            ),
+        };
+        Ok(Request::Decide { kernel, input, profile, id: v.get("id").cloned() })
+    }
+
+    /// Parse one text-mode line: a bare verb or a JSON object.
+    pub fn from_line(line: &str) -> Result<Request, String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return Err("empty request line".into());
+        }
+        if line.starts_with('{') {
+            let v = json::parse(line)?;
+            Request::from_json(&v)
+        } else {
+            Request::from_verb(line)
+                .ok_or_else(|| format!("unknown verb '{line}' (or send a JSON object)"))
+        }
+    }
+
+    /// Serialize for the wire (what [`super::client::ServedClient`]
+    /// sends; the daemon's parser is the inverse).
+    pub fn to_json(&self) -> Value {
+        match self {
+            Request::Decide { kernel, input, profile, id } => {
+                let mut pairs = vec![
+                    ("kernel", Value::Str(kernel.clone())),
+                    (
+                        "input",
+                        Value::Arr(input.iter().map(|&v| Value::Num(v)).collect()),
+                    ),
+                ];
+                if let Some(p) = profile {
+                    pairs.push(("profile", Value::Str(p.clone())));
+                }
+                if let Some(id) = id {
+                    pairs.push(("id", id.clone()));
+                }
+                Value::obj(pairs)
+            }
+            Request::Stats => Value::obj(vec![("op", Value::Str("stats".into()))]),
+            Request::List => Value::obj(vec![("op", Value::Str("list".into()))]),
+            Request::Ping => Value::obj(vec![("op", Value::Str("ping".into()))]),
+            Request::Reload => Value::obj(vec![("op", Value::Str("reload".into()))]),
+            Request::Shutdown => Value::obj(vec![("op", Value::Str("shutdown".into()))]),
+        }
+    }
+}
+
+/// Build an error response, echoing the request id when present.
+pub fn err_response(msg: &str, id: Option<&Value>) -> Value {
+    let mut pairs =
+        vec![("ok", Value::Bool(false)), ("error", Value::Str(msg.to_string()))];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    Value::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"op\":\"ping\"}").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        assert_eq!(buf[0], 0x00, "framing detection byte must be 0x00");
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"{\"op\":\"ping\"}");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF is None");
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_both_ways() {
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &vec![0u8; MAX_FRAME]).is_err());
+        let mut r = std::io::Cursor::new((MAX_FRAME as u32).to_be_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let mut buf = (100u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"short");
+        let mut r = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn decide_requests_roundtrip_through_json() {
+        let req = Request::Decide {
+            kernel: "dgetrf".into(),
+            input: vec![4500.0, 1600.5],
+            profile: Some("spr".into()),
+            id: Some(Value::Num(7.0)),
+        };
+        let text = req.to_json().to_string();
+        assert_eq!(Request::from_line(&text).unwrap(), req);
+
+        let bare = Request::Decide {
+            kernel: "toy".into(),
+            input: vec![1.0],
+            profile: None,
+            id: None,
+        };
+        assert_eq!(
+            Request::from_json(&json::parse(&bare.to_json().to_string()).unwrap()).unwrap(),
+            bare
+        );
+    }
+
+    #[test]
+    fn verbs_parse_in_both_modes() {
+        assert_eq!(Request::from_line("STATS").unwrap(), Request::Stats);
+        assert_eq!(Request::from_line("  ping  ").unwrap(), Request::Ping);
+        assert_eq!(Request::from_line("{\"op\":\"reload\"}").unwrap(), Request::Reload);
+        assert_eq!(Request::from_line("{\"op\":\"shutdown\"}").unwrap(), Request::Shutdown);
+        assert_eq!(Request::from_line("{\"op\":\"list\"}").unwrap(), Request::List);
+        assert!(Request::from_line("EXPLODE").is_err());
+        assert!(Request::from_line("").is_err());
+    }
+
+    #[test]
+    fn malformed_decides_are_rejected() {
+        assert!(Request::from_line("{\"input\":[1]}").is_err(), "missing kernel");
+        assert!(Request::from_line("{\"kernel\":\"x\"}").is_err(), "missing input");
+        assert!(
+            Request::from_line("{\"kernel\":\"x\",\"input\":[null]}").is_err(),
+            "non-numeric input entry (e.g. a NaN serialized to null)"
+        );
+        assert!(
+            Request::from_line("{\"kernel\":\"x\",\"input\":[1e999]}").is_err(),
+            "overflow literal parses to infinity and must be rejected"
+        );
+        assert!(
+            Request::from_line("{\"kernel\":\"x\",\"input\":[1],\"profile\":3}").is_err(),
+            "non-string profile"
+        );
+    }
+
+    #[test]
+    fn error_responses_echo_the_id() {
+        let id = Value::Str("req-9".into());
+        let v = err_response("boom", Some(&id));
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(v.get("error").and_then(Value::as_str), Some("boom"));
+        assert_eq!(v.get("id"), Some(&id));
+        assert!(err_response("x", None).get("id").is_none());
+    }
+}

@@ -21,7 +21,10 @@
 //! * **Input memo cache** — kernels are typically re-invoked with the
 //!   same shapes; a small fixed-size exact-match (bit-pattern) cache
 //!   short-circuits repeated `decide` calls, with hit/miss counters via
-//!   [`crate::util::telemetry::HitCounters`].
+//!   [`crate::util::telemetry::HitCounters`]. The cache is 2-way
+//!   set-associative with per-set LRU: two hot inputs whose hashes land
+//!   in the same set both stay resident instead of ping-pong evicting
+//!   each other on every alternation (the direct-mapped pathology).
 //! * **[`KernelRegistry`]** — one serving endpoint for many kernels: maps
 //!   kernel name → loaded bundle, ingesting checkpoint directories
 //!   through [`checkpoint::load_tree_artifact`], which verifies the
@@ -30,7 +33,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::config::space::ParamSpace;
 use crate::dtree::{Cart, CartNode, DesignTrees};
@@ -54,8 +57,13 @@ const ROW_BLOCK: usize = 256;
 /// workers costs more than walking a few depth-8 trees.
 const PAR_MIN_ROWS: usize = 2048;
 
-/// Default memo-cache capacity (direct-mapped slots).
+/// Default memo-cache capacity (total entries across all sets).
 pub const DEFAULT_CACHE_SLOTS: usize = 512;
+
+/// Ways per memo-cache set. Two ways are enough to absorb the common
+/// pathology (two alternating hot shapes hashing to the same set) while
+/// keeping lookup a pair of key compares under one short lock.
+const CACHE_WAYS: usize = 2;
 
 /// The per-parameter CART trees of one bundle, flattened into a single
 /// contiguous structure-of-arrays (same layout discipline as
@@ -134,37 +142,57 @@ impl CompiledTrees {
     }
 }
 
-/// Fixed-size direct-mapped exact-match cache: input bit patterns → the
-/// configs previously decided for them. Exact bit matching makes NaN
-/// inputs cacheable too, and guarantees a hit can only ever return what
-/// the uncached path would have computed (decisions are pure).
-/// One cache slot: (input bit patterns, decided config).
-type Slot = Option<(Box<[u64]>, Config)>;
+/// One resident cache entry: (input bit patterns, decided config).
+type Entry = (Box<[u64]>, Config);
 
+/// One 2-way set: up to two resident entries plus which way to evict
+/// next (the least-recently-used one).
+#[derive(Default)]
+struct CacheSet {
+    ways: [Option<Entry>; CACHE_WAYS],
+    /// Index of the least-recently-used way — the eviction victim.
+    lru: u8,
+}
+
+/// Fixed-size 2-way set-associative exact-match cache with per-set LRU:
+/// input bit patterns → the configs previously decided for them. Exact
+/// bit matching makes NaN inputs cacheable too, and guarantees a hit can
+/// only ever return what the uncached path would have computed
+/// (decisions are pure). Two ways per set fix the direct-mapped
+/// pathology where two alternating hot inputs that hash to the same
+/// index evict each other on every call and never hit.
 struct MemoCache {
-    slots: Vec<Mutex<Slot>>,
+    sets: Vec<Mutex<CacheSet>>,
     counters: HitCounters,
 }
 
 impl MemoCache {
+    /// `n_slots` is the total entry capacity; it is split into 2-way
+    /// sets (minimum one set).
     fn new(n_slots: usize) -> MemoCache {
+        let n_sets = (n_slots / CACHE_WAYS).max(1);
         MemoCache {
-            slots: (0..n_slots.max(1)).map(|_| Mutex::new(None)).collect(),
+            sets: (0..n_sets).map(|_| Mutex::new(CacheSet::default())).collect(),
             counters: HitCounters::new(),
         }
     }
 
-    /// FNV-1a over the input's f64 bit patterns → slot index.
-    fn slot_of(&self, bits: &[u64]) -> usize {
-        (fnv1a_u64s(bits) % self.slots.len() as u64) as usize
+    /// FNV-1a over the input's f64 bit patterns → set index.
+    fn set_of(&self, bits: &[u64]) -> usize {
+        (fnv1a_u64s(bits) % self.sets.len() as u64) as usize
     }
 
     fn lookup(&self, bits: &[u64]) -> Option<Config> {
-        let slot = self.slots[self.slot_of(bits)].lock().unwrap();
-        if let Some((key, cfg)) = slot.as_ref() {
-            if key.as_ref() == bits {
-                self.counters.hit();
-                return Some(cfg.clone());
+        let mut set = self.sets[self.set_of(bits)].lock().unwrap();
+        for w in 0..CACHE_WAYS {
+            if let Some((key, cfg)) = &set.ways[w] {
+                if key.as_ref() == bits {
+                    let cfg = cfg.clone();
+                    // The other way becomes the eviction victim.
+                    set.lru = (CACHE_WAYS - 1 - w) as u8;
+                    self.counters.hit();
+                    return Some(cfg);
+                }
             }
         }
         self.counters.miss();
@@ -172,8 +200,17 @@ impl MemoCache {
     }
 
     fn store(&self, bits: Vec<u64>, cfg: Config) {
-        let mut slot = self.slots[self.slot_of(&bits)].lock().unwrap();
-        *slot = Some((bits.into_boxed_slice(), cfg));
+        let mut set = self.sets[self.set_of(&bits)].lock().unwrap();
+        // Refresh an already-resident key (two threads can race the same
+        // miss), else fill an empty way, else evict the LRU way.
+        let way = (0..CACHE_WAYS)
+            .find(|&w| {
+                matches!(&set.ways[w], Some((k, _)) if k.as_ref() == bits.as_slice())
+            })
+            .or_else(|| (0..CACHE_WAYS).find(|&w| set.ways[w].is_none()))
+            .unwrap_or(set.lru as usize);
+        set.ways[way] = Some((bits.into_boxed_slice(), cfg));
+        set.lru = (CACHE_WAYS - 1 - way) as u8;
     }
 }
 
@@ -184,8 +221,12 @@ pub struct TreeBundle {
     trees: DesignTrees,
     compiled: CompiledTrees,
     cache: MemoCache,
-    fingerprint: Option<String>,
+    fingerprint: Option<Arc<str>>,
     kernel: Option<String>,
+    /// Design-parameter names, shared (the serving daemon stamps them on
+    /// every batched response — one refcount bump per dispatch instead
+    /// of re-collecting the strings on the hot path).
+    design_names: Arc<[String]>,
 }
 
 impl TreeBundle {
@@ -198,12 +239,20 @@ impl TreeBundle {
             t.validate(dim).map_err(|e| format!("tree {j}: {e}"))?;
         }
         let compiled = CompiledTrees::compile(&trees.trees);
+        let design_names: Arc<[String]> = trees
+            .design_space
+            .names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<String>>()
+            .into();
         Ok(TreeBundle {
             trees,
             compiled,
             cache: MemoCache::new(DEFAULT_CACHE_SLOTS),
             fingerprint: None,
             kernel: None,
+            design_names,
         })
     }
 
@@ -213,7 +262,7 @@ impl TreeBundle {
     pub fn load_checkpoint_dir(dir: impl AsRef<Path>) -> Result<TreeBundle, String> {
         let art = checkpoint::load_tree_artifact(dir.as_ref())?;
         let mut bundle = TreeBundle::from_trees(art.trees)?;
-        bundle.fingerprint = Some(art.fingerprint);
+        bundle.fingerprint = Some(art.fingerprint.into());
         bundle.kernel = art.kernel;
         Ok(bundle)
     }
@@ -224,7 +273,8 @@ impl TreeBundle {
         TreeBundle::from_trees(DesignTrees::load(path)?)
     }
 
-    /// Resize the memo cache (clears it). 0 keeps one slot.
+    /// Resize the memo cache (clears it). `n_slots` is the total entry
+    /// capacity, organised as 2-way sets; 0 keeps one set.
     pub fn with_cache_slots(mut self, n_slots: usize) -> TreeBundle {
         self.cache = MemoCache::new(n_slots);
         self
@@ -251,6 +301,17 @@ impl TreeBundle {
     /// bare-file bundles).
     pub fn fingerprint(&self) -> Option<&str> {
         self.fingerprint.as_deref()
+    }
+
+    /// Shared handle to the fingerprint (refcount bump — what the
+    /// serving daemon stamps on every response of a dispatch).
+    pub fn fingerprint_shared(&self) -> Option<Arc<str>> {
+        self.fingerprint.clone()
+    }
+
+    /// Shared design-parameter names, in design-space order.
+    pub fn design_names(&self) -> Arc<[String]> {
+        self.design_names.clone()
     }
 
     /// Kernel name recorded in the checkpoint meta, if any.
@@ -505,6 +566,71 @@ mod tests {
         let b = bundle.decide(&nan_q);
         assert_eq!(a, b);
         assert!(bundle.cache_counters().hits() >= 6);
+    }
+
+    /// The set index the bundle's memo cache assigns to an input.
+    fn cache_set(bundle: &TreeBundle, q: &[f64]) -> usize {
+        let bits: Vec<u64> = q.iter().map(|v| v.to_bits()).collect();
+        bundle.cache.set_of(&bits)
+    }
+
+    /// Find `n` distinct inputs that all land in the same cache set as
+    /// `anchor` (exercising associativity deterministically).
+    fn colliders(bundle: &TreeBundle, anchor: &[f64], n: usize) -> Vec<Vec<f64>> {
+        let target = cache_set(bundle, anchor);
+        let mut found = Vec::new();
+        for i in 0..100_000 {
+            let q = vec![150.0 + i as f64 * 0.25, 3000.0];
+            if q != anchor && cache_set(bundle, &q) == target {
+                found.push(q);
+                if found.len() == n {
+                    return found;
+                }
+            }
+        }
+        panic!("no {n} colliding inputs found for set {target}");
+    }
+
+    #[test]
+    fn two_way_cache_absorbs_the_pingpong_pattern() {
+        // Two hot inputs hashing to the same index used to evict each
+        // other on every alternation under the direct-mapped cache: the
+        // alternating loop below was 100% misses. With 2-way sets both
+        // stay resident.
+        let bundle = TreeBundle::from_trees(model()).unwrap().with_cache_slots(8);
+        let a = vec![1111.0, 2222.0];
+        let b = colliders(&bundle, &a, 1).remove(0);
+
+        let cfg_a = bundle.decide(&a);
+        let cfg_b = bundle.decide(&b);
+        let (h0, m0) = (bundle.cache_counters().hits(), bundle.cache_counters().misses());
+        for _ in 0..10 {
+            assert_eq!(bundle.decide(&a), cfg_a);
+            assert_eq!(bundle.decide(&b), cfg_b);
+        }
+        assert_eq!(
+            bundle.cache_counters().hits() - h0,
+            20,
+            "alternating same-set inputs must both stay resident"
+        );
+        assert_eq!(bundle.cache_counters().misses(), m0, "ping-pong eviction is back");
+    }
+
+    #[test]
+    fn cache_eviction_is_lru_within_a_set() {
+        let bundle = TreeBundle::from_trees(model()).unwrap().with_cache_slots(8);
+        let a = vec![1111.0, 2222.0];
+        let mut extra = colliders(&bundle, &a, 2);
+        let c = extra.pop().unwrap();
+        let b = extra.pop().unwrap();
+
+        let cfg_a = bundle.decide(&a); // miss, fills way 0
+        bundle.decide(&b); // miss, fills way 1
+        assert_eq!(bundle.decide(&a), cfg_a); // hit: b becomes the LRU victim
+        bundle.decide(&c); // miss: evicts b, keeps a
+        let hits = bundle.cache_counters().hits();
+        assert_eq!(bundle.decide(&a), cfg_a, "MRU entry must survive the eviction");
+        assert_eq!(bundle.cache_counters().hits(), hits + 1);
     }
 
     #[test]

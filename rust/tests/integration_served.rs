@@ -1,0 +1,330 @@
+//! End-to-end daemon tests: `mlkaps served` must answer concurrent
+//! clients **bit-identically** to in-process [`TreeBundle::decide`], and
+//! survive an atomic hot-reload under live traffic with zero dropped or
+//! erroneous requests — old and new run fingerprints both observed.
+//!
+//! The daemon is started in-process on an ephemeral port (port 0) and
+//! driven over real TCP sockets by the Rust client; one test also speaks
+//! the newline-text framing over a raw socket, covering both framings of
+//! `docs/protocol.md`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{copy_checkpoints, PipelineRun};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::runtime::server::daemon::{Daemon, DaemonConfig};
+use mlkaps::runtime::server::ServedRegistry;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::json::Value;
+use mlkaps::util::rng::Rng;
+
+fn config(seed: u64) -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 120,
+        batch_size: 60,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mlkaps_served_it_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Tune toy-sum with `seed` into `dir`, returning the serving bundle.
+fn tune_into(dir: &PathBuf, seed: u64) -> TreeBundle {
+    PipelineRun::new(config(seed), dir.clone()).run(&ToySum::new(seed)).unwrap();
+    TreeBundle::load_checkpoint_dir(dir).unwrap()
+}
+
+fn daemon_config() -> DaemonConfig {
+    DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        batch_max: 64,
+        // Wider than the production default (200µs) so concurrent test
+        // clients reliably coalesce even on a single-core CI runner.
+        batch_window: Duration::from_millis(1),
+        poll_interval: Duration::from_millis(25),
+        threads: 1,
+        queue_capacity: 1024,
+    }
+}
+
+#[test]
+fn concurrent_clients_get_bit_identical_decisions() {
+    let dir = tmp_dir("concurrent");
+    let reference = tune_into(&dir, 70);
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&dir, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+    let addr = daemon.local_addr();
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 100;
+    let reference = Arc::new(reference);
+    let mut max_batch_seen = 1usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CLIENTS {
+            let reference = reference.clone();
+            handles.push(scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                let mut rng = Rng::new(1000 + t as u64);
+                let mut max_batch = 1usize;
+                for _ in 0..PER_CLIENT {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    let d = client.decide("toy-sum", &q, None).unwrap();
+                    assert_eq!(
+                        d.values,
+                        reference.decide(&q),
+                        "served decision diverged from in-process decide for {q:?}"
+                    );
+                    assert!(d.fingerprint.is_some());
+                    assert!(d.batch >= 1);
+                    max_batch = max_batch.max(d.batch);
+                }
+                max_batch
+            }));
+        }
+        for h in handles {
+            max_batch_seen = max_batch_seen.max(h.join().unwrap());
+        }
+    });
+
+    // Telemetry saw every request; concurrent traffic produced at least
+    // one multi-row micro-batch (4 clients × the widened 1ms test
+    // window configured in `daemon_config`).
+    let mut client = ServedClient::connect(addr).unwrap();
+    client.ping().unwrap();
+    assert_eq!(client.list_names().unwrap(), vec!["toy-sum".to_string()]);
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    let requests = k.get("requests").and_then(Value::as_usize).unwrap();
+    assert!(requests >= CLIENTS * PER_CLIENT, "requests={requests}");
+    assert_eq!(k.get("errors").and_then(Value::as_usize), Some(0));
+    assert!(
+        max_batch_seen >= 2,
+        "4 concurrent clients never coalesced into one micro-batch"
+    );
+
+    // Dimension mismatches are clean errors, not daemon crashes.
+    let err = client.decide("toy-sum", &[1.0, 2.0, 3.0], None).unwrap_err();
+    assert!(err.contains("takes 2"), "{err}");
+    let err = client.decide("nope", &[1.0, 2.0], None).unwrap_err();
+    assert!(err.contains("toy-sum"), "{err}");
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn text_framing_serves_the_same_decisions() {
+    let dir = tmp_dir("text");
+    let reference = tune_into(&dir, 71);
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&dir, None).unwrap();
+    let daemon = Daemon::start(reg, daemon_config()).unwrap();
+
+    let stream = TcpStream::connect(daemon.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut roundtrip = |req: &str, line: &mut String| {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+        mlkaps::util::json::parse(line.trim()).unwrap()
+    };
+
+    let v = roundtrip("PING", &mut line);
+    assert_eq!(v.get("pong").and_then(Value::as_bool), Some(true));
+
+    let q = vec![1234.0, 5678.0];
+    let v = roundtrip("{\"kernel\":\"toy-sum\",\"input\":[1234,5678],\"id\":\"r1\"}", &mut line);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{line}");
+    assert_eq!(v.get("id").and_then(Value::as_str), Some("r1"));
+    let served: Vec<f64> = v
+        .get("values")
+        .and_then(Value::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    assert_eq!(served, reference.decide(&q), "text-mode decision diverged");
+
+    let v = roundtrip("STATS", &mut line);
+    assert!(v.get("kernels").and_then(|k| k.get("toy-sum")).is_some());
+    let v = roundtrip("gibberish", &mut line);
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+
+    let v = roundtrip("SHUTDOWN", &mut line);
+    assert_eq!(v.get("shutdown").and_then(Value::as_bool), Some(true));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hot_reload_under_load_drops_nothing_and_serves_both_epochs() {
+    let staging_a = tmp_dir("reload_a");
+    let staging_b = tmp_dir("reload_b");
+    let watch = tmp_dir("reload_watch");
+
+    // Two complete runs with different seeds → different fingerprints.
+    let bundle_a = tune_into(&staging_a, 80);
+    let bundle_b = tune_into(&staging_b, 81);
+    let fp_a = bundle_a.fingerprint().unwrap().to_string();
+    let fp_b = bundle_b.fingerprint().unwrap().to_string();
+    assert_ne!(fp_a, fp_b);
+
+    // The daemon watches `watch`, which starts as run A.
+    copy_checkpoints(&staging_a, &watch).unwrap();
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&watch, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+    let addr = daemon.local_addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let bundle_a = Arc::new(bundle_a);
+    let bundle_b = Arc::new(bundle_b);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            let stop = stop.clone();
+            let (bundle_a, bundle_b) = (bundle_a.clone(), bundle_b.clone());
+            let (fp_a, fp_b) = (fp_a.clone(), fp_b.clone());
+            handles.push(scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                let mut rng = Rng::new(2000 + t as u64);
+                let (mut saw_a, mut saw_b, mut n) = (false, false, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    // Zero tolerated errors: every request during the
+                    // swap must be answered, by one epoch or the other.
+                    let d = client.decide("toy-sum", &q, None).unwrap();
+                    let fp = d.fingerprint.expect("checkpoint bundles carry fingerprints");
+                    if fp == fp_a {
+                        assert_eq!(d.values, bundle_a.decide(&q), "epoch-A mismatch {q:?}");
+                        saw_a = true;
+                    } else if fp == fp_b {
+                        assert_eq!(d.values, bundle_b.decide(&q), "epoch-B mismatch {q:?}");
+                        saw_b = true;
+                    } else {
+                        panic!("unknown fingerprint {fp}");
+                    }
+                    n += 1;
+                }
+                (saw_a, saw_b, n)
+            }));
+        }
+
+        // Let traffic run on epoch A, then land the re-tuned run B in
+        // the watched directory mid-traffic.
+        std::thread::sleep(Duration::from_millis(150));
+        copy_checkpoints(&staging_b, &watch).unwrap();
+
+        // Wait until the poller (25ms cadence) has swapped to B. Always
+        // stop traffic before asserting, so a failure can't leave the
+        // scoped client threads spinning forever.
+        let mut control = ServedClient::connect(addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut reloaded = false;
+        while Instant::now() < deadline {
+            let stats = control.stats().unwrap();
+            let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+            if k.get("fingerprint").and_then(Value::as_str) == Some(fp_b.as_str()) {
+                reloaded = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if reloaded {
+            // Keep serving from the new epoch a little before stopping.
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(reloaded, "hot reload never happened");
+
+        let (mut saw_a_any, mut saw_b_any, mut total) = (false, false, 0u64);
+        for h in handles {
+            let (a, b, n) = h.join().unwrap();
+            saw_a_any |= a;
+            saw_b_any |= b;
+            total += n;
+        }
+        assert!(saw_a_any, "no traffic was served by the pre-reload epoch");
+        assert!(saw_b_any, "no traffic was served by the post-reload epoch");
+        assert!(total > 0);
+
+        let stats = control.stats().unwrap();
+        let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+        assert_eq!(
+            k.get("errors").and_then(Value::as_usize),
+            Some(0),
+            "requests were dropped or errored during the hot reload"
+        );
+        assert!(k.get("reloads").and_then(Value::as_usize).unwrap() >= 1);
+        control.shutdown().unwrap();
+    });
+
+    daemon.wait();
+    for d in [&staging_a, &staging_b, &watch] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn profile_variants_route_and_reload_verb_works() {
+    let dir_spr = tmp_dir("prof_spr");
+    let dir_knm = tmp_dir("prof_knm");
+    let spr = tune_into(&dir_spr, 90);
+    let knm = tune_into(&dir_knm, 91);
+
+    let mut reg = ServedRegistry::new(Some("spr".into()));
+    reg.register_dir(&dir_spr, Some("toy@spr")).unwrap();
+    reg.register_dir(&dir_knm, Some("toy@knm")).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+
+    let mut client = ServedClient::connect(daemon.local_addr()).unwrap();
+    assert_eq!(
+        client.list_names().unwrap(),
+        vec!["toy@knm".to_string(), "toy@spr".to_string()]
+    );
+    let q = vec![2000.0, 3000.0];
+    // Explicit per-request profile, then the daemon default (spr).
+    let d = client.decide("toy", &q, Some("knm")).unwrap();
+    assert_eq!(d.variant, "toy@knm");
+    assert_eq!(d.values, knm.decide(&q));
+    let d = client.decide("toy", &q, None).unwrap();
+    assert_eq!(d.variant, "toy@spr");
+    assert_eq!(d.values, spr.decide(&q));
+
+    // RELOAD with unchanged fingerprints swaps nothing.
+    assert!(client.reload().unwrap().is_empty());
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    std::fs::remove_dir_all(&dir_spr).ok();
+    std::fs::remove_dir_all(&dir_knm).ok();
+}
