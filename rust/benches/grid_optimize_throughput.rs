@@ -1,0 +1,168 @@
+//! Stage-3 throughput: fused lockstep grid optimization vs the legacy
+//! per-point schedule, in grid points per second. This is the perf
+//! datapoint for the lockstep engine (README §Performance): the fused
+//! schedule scores every point's GA generation through one giant
+//! pre-binned `predict_batch`, finally reaching the compiled forest's
+//! blocked/parallel fast path that per-point pop-sized batches never
+//! touched.
+//!
+//! Run: `cargo bench --bench grid_optimize_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+//! CI asserts the fused schedule ≥ the per-point baseline in points/sec,
+//! and that both schedules produce bit-identical results.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::*;
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::data::Dataset;
+use mlkaps::optimizer::grid::{optimize_grid_shard, optimize_grid_shard_per_point};
+use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
+use mlkaps::report;
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::{LogSurrogate, Surrogate};
+use mlkaps::util::rng::Rng;
+
+/// Median-of-reps wall time of `f`.
+fn med_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let _ = f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = f();
+        times.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(&r);
+    }
+    mlkaps::util::stats::median(&times)
+}
+
+fn main() {
+    header(
+        "grid_optimize_throughput",
+        "stage-3 grid points/sec: fused lockstep vs legacy per-point GA",
+    );
+    // Smoke uses an 8x8 grid so the fused batch (64 points x pop 32 =
+    // 2048 rows/generation) reaches the parallel traversal threshold —
+    // otherwise the gate would compare a serial fused schedule against a
+    // point-parallel legacy one on multi-core runners.
+    let grid_per_dim = budget3(24, 12, 8);
+    let generations = budget3(30, 15, 6);
+    let n_trees = budget3(200, 120, 60);
+    let n_fit = budget3(20_000, 8_000, 1_500);
+    let threads = mlkaps::util::threadpool::default_threads();
+
+    // Tuning-shaped problem: 2 input dims, 3 design dims (one integer,
+    // one categorical), log-scale objective — what stage 3 really sees.
+    let input = ParamSpace::new(vec![
+        ParamDef::float("m", 64.0, 8192.0),
+        ParamDef::float("n", 64.0, 8192.0),
+    ]);
+    let design = ParamSpace::new(vec![
+        ParamDef::float("t", 0.0, 1.0),
+        ParamDef::int("nb", 1, 64),
+        ParamDef::categorical("variant", &["a", "b", "c"]),
+    ]);
+    let mut rng = Rng::new(42);
+    let mut data = Dataset::with_capacity(n_fit);
+    for _ in 0..n_fit {
+        let m = rng.uniform(64.0, 8192.0);
+        let n = rng.uniform(64.0, 8192.0);
+        let t = rng.f64();
+        let nb = rng.uniform(1.0, 64.0);
+        let variant = rng.below(3) as f64;
+        let y = (m * n * 1e-6 + 1.0)
+            * (1.0 + (t - 0.4).powi(2))
+            * (1.0 + ((nb - 24.0) * 0.02).powi(2))
+            * if variant == 1.0 { 0.9 } else { 1.1 }
+            * rng.lognormal(0.05);
+        data.push(vec![m, n, t, nb, variant], y);
+    }
+    let mut surrogate = LogSurrogate::new(Gbdt::with_mask(
+        GbdtParams { n_trees, seed: 7, ..Default::default() },
+        vec![false, false, false, false, true],
+    ));
+    surrogate.fit(&data);
+    assert!(
+        surrogate.fused_forest().is_some_and(|cf| cf.bin_plan().is_some()),
+        "bench surrogate must exercise the pre-binned fused path"
+    );
+
+    let inputs = input.grid(grid_per_dim);
+    let n_points = inputs.len();
+    let ga = Nsga2::new(Nsga2Params {
+        pop_size: 32,
+        generations,
+        ..Default::default()
+    });
+
+    // Smoke timings are sub-second on shared CI runners; median of 5
+    // (vs 3) keeps the gate below from tripping on scheduler noise.
+    let reps = if smoke_mode() { 5 } else { 3 };
+    let legacy_secs = med_secs(reps, || {
+        optimize_grid_shard_per_point(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9)
+    });
+    let fused_secs = med_secs(reps, || {
+        optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9)
+    });
+
+    // Correctness trail: the two schedules must agree bit for bit.
+    let (d_legacy, p_legacy) =
+        optimize_grid_shard_per_point(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9);
+    let (d_fused, p_fused) =
+        optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9);
+    assert_eq!(d_fused, d_legacy, "fused designs diverged from per-point");
+    for (a, b) in p_fused.iter().zip(&p_legacy) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fused predictions diverged");
+    }
+
+    let pps = |secs: f64| n_points as f64 / secs.max(1e-12);
+    let speedup = legacy_secs / fused_secs.max(1e-12);
+    let rows = vec![
+        vec![
+            "per_point".to_string(),
+            n_points.to_string(),
+            format!("{legacy_secs:.4}"),
+            format!("{:.1}", pps(legacy_secs)),
+            String::from("1.00"),
+        ],
+        vec![
+            "fused_lockstep".to_string(),
+            n_points.to_string(),
+            format!("{fused_secs:.4}"),
+            format!("{:.1}", pps(fused_secs)),
+            format!("{speedup:.2}"),
+        ],
+    ];
+    println!(
+        "{}",
+        report::table(
+            &["schedule", "grid_points", "secs", "points_per_sec", "speedup"],
+            &rows
+        )
+    );
+    save_csv(
+        "grid_optimize_throughput.csv",
+        &["schedule", "grid_points", "secs", "points_per_sec", "speedup"],
+        &rows,
+    );
+
+    // The acceptance gate: the fused lockstep schedule must not lose to
+    // the per-point baseline it replaced. Smoke mode allows 5% for
+    // timing noise (sub-second runs on shared CI hardware, and the two
+    // schedules are not 5x-separated like the serving gates); fast and
+    // full modes gate strictly.
+    let floor = if smoke_mode() { 0.95 } else { 1.0 };
+    assert!(
+        pps(fused_secs) >= pps(legacy_secs) * floor,
+        "fused lockstep ({:.1} points/s) slower than per-point ({:.1} points/s)",
+        pps(fused_secs),
+        pps(legacy_secs)
+    );
+    println!(
+        "(gate: fused >= legacy points/sec; fused x{speedup:.2} at {threads} threads, \
+         {n_points} points, pop 32 x {generations} generations)"
+    );
+}

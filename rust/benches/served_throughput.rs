@@ -79,6 +79,7 @@ fn main() {
             poll_interval: Duration::from_secs(3600), // nothing to watch
             threads: 0,
             queue_capacity: 4096,
+            ..Default::default()
         },
     )
     .unwrap();

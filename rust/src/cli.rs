@@ -10,13 +10,14 @@
 //!             [--out results/tune.json]
 //! mlkaps serve --dir runs/spr[,runs/knm] [--name spr,knm]
 //!              [--model model.json [--model-name x]] [--kernel NAME]
-//!              [--threads N]
+//!              [--threads N] [--memo exact|quantized]
 //!              --input "4500,1600" | --inputs-file inputs.csv
 //! mlkaps served --dir runs/spr[,runs/knm] [--name lu@spr,lu@knm]
 //!               [--model model.json --model-name x]
 //!               [--addr 127.0.0.1:4517] [--profile auto|spr|knm|clx|none]
 //!               [--batch-max 256] [--batch-window-us 200]
 //!               [--poll-ms 500] [--threads N] [--queue-cap 4096]
+//!               [--memo exact|quantized] [--read-timeout-ms 30000]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -40,7 +41,13 @@
 //! variants (`--name lu@spr,lu@knm`; `--profile` sets the default
 //! variant, `auto` probes the host). It prints one
 //! `mlkaps served: listening on HOST:PORT` line to stdout, then serves
-//! until a `SHUTDOWN` request arrives.
+//! until a `SHUTDOWN` (stop now) or `DRAIN` (stop accepting, finish
+//! in-flight, exit 0 — rolling restarts) request arrives.
+//!
+//! `--memo quantized` keys both commands' input memo caches on
+//! threshold-cell codes instead of exact input bits, so inputs landing
+//! in the same leaf cell of every tree share one entry (hit telemetry
+//! reports exact and quantized hits separately).
 
 use std::collections::HashMap;
 
@@ -227,10 +234,16 @@ fn parse_row(s: &str) -> Result<Vec<f64>, String> {
 }
 
 fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
-    use crate::runtime::serving::{KernelRegistry, TreeBundle};
+    use crate::runtime::serving::{KernelRegistry, MemoMode, TreeBundle};
     use crate::util::json::Value;
 
+    let memo_mode = flags
+        .get("memo")
+        .map(|m| MemoMode::parse(m))
+        .transpose()?
+        .unwrap_or_default();
     let mut reg = KernelRegistry::new();
+    reg.set_memo_mode(memo_mode);
     let names: Vec<String> = flags
         .get("name")
         .map(|n| n.split(',').map(|s| s.trim().to_string()).collect())
@@ -256,7 +269,10 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
                 "name '{name}' is already registered; pick another with --model-name"
             ));
         }
-        reg.insert(name.clone(), TreeBundle::load_model_file(path)?);
+        reg.insert(
+            name.clone(),
+            TreeBundle::load_model_file(path)?.with_memo_mode(memo_mode),
+        );
         eprintln!("serve: registered '{name}' from {path}");
     }
     if reg.is_empty() {
@@ -337,8 +353,11 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
     }
 
     let c = bundle.cache_counters();
+    let (exact, quantized) = bundle.cache_hit_split();
     eprintln!(
-        "serve: memo cache {} hits / {} misses ({:.0}% hit rate)",
+        "serve: memo cache [{}] {} hits ({exact} exact, {quantized} quantized) / \
+         {} misses ({:.0}% hit rate)",
+        bundle.memo_mode().name(),
         c.hits(),
         c.misses(),
         100.0 * c.hit_rate()
@@ -364,6 +383,9 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
         ),
     };
     let mut reg = ServedRegistry::new(default_profile);
+    if let Some(m) = flags.get("memo") {
+        reg.set_memo_mode(crate::runtime::serving::MemoMode::parse(m)?);
+    }
 
     let names: Vec<String> = flags
         .get("name")
@@ -409,6 +431,8 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
         poll_interval: Duration::from_millis(parse_num("poll-ms", 500)?),
         threads: parse_num("threads", 0)? as usize,
         queue_capacity: parse_num("queue-cap", 4096)? as usize,
+        // 0 disables the per-connection request read timeout.
+        read_timeout: Duration::from_millis(parse_num("read-timeout-ms", 30_000)?),
     };
 
     let variants = reg.names().join(", ");

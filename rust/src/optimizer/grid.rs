@@ -2,9 +2,35 @@
 //! grid over the input space, each minimizing the surrogate over the
 //! design space. The grid results are the training set for the final
 //! decision trees.
+//!
+//! **Fused lockstep execution.** The naive schedule — one private NSGA-II
+//! per grid point, parallel over points — feeds the surrogate one
+//! pop-sized batch (~32 rows) at a time, far below the compiled forest's
+//! blocked/parallel fast path. [`optimize_grid_shard`] instead advances
+//! **all points of a cohort in lockstep**: per GA generation, every
+//! active point's pending population is assembled into one fused matrix
+//! (points × pop rows) and scored by a single
+//! [`Surrogate::predict_batch_with`] call — or, when the surrogate
+//! exposes a pre-binnable compiled forest, by
+//! [`predict_batch_prebinned`] over u16 codes, with each point's
+//! constant input columns quantized **once** per point and only the
+//! design columns re-coded per generation.
+//!
+//! The schedule is a pure reordering: every point still runs its own
+//! [`Nsga2Run`] state machine on its own globally-seeded RNG stream, and
+//! the surrogate batch paths are row-independent and bit-identical at
+//! any batch size or thread count — so fused results (and therefore
+//! stage-3 shard checkpoints and resumes) are bit-for-bit identical to
+//! the per-point reference path, which survives as
+//! [`optimize_grid_shard_per_point`] for the equivalence suite and the
+//! `grid_optimize_throughput` bench baseline.
+//!
+//! [`Nsga2Run`]: crate::optimizer::nsga2::Nsga2Run
+//! [`predict_batch_prebinned`]: crate::surrogate::forest::CompiledForest::predict_batch_prebinned
 
 use crate::config::space::ParamSpace;
 use crate::optimizer::nsga2::Nsga2;
+use crate::surrogate::forest::par_min_rows;
 use crate::surrogate::Surrogate;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -85,11 +111,25 @@ impl GridOptResult {
     }
 }
 
-/// Run the GA on a contiguous shard of grid points (parallel across the
-/// shard's points). `base_idx` is the global grid index of `inputs[0]`:
-/// each point's RNG stream is seeded from its **global** index, so shard
-/// boundaries and thread counts never change the result — a sharded or
-/// resumed run is bit-identical to a single-shot one.
+/// Max grid points advanced in one lockstep cohort: bounds the fused
+/// row matrix (`points × pop_size` rows per generation) while keeping
+/// every fused batch far above the parallel traversal threshold.
+const COHORT_POINTS: usize = 4096;
+
+/// The per-point RNG stream: seeded from the point's **global** grid
+/// index, so shard/cohort boundaries and thread counts never change any
+/// point's stream.
+fn point_rng(seed: u64, gidx: usize) -> Rng {
+    Rng::new(seed ^ (gidx as u64).wrapping_mul(0x9E37_79B9))
+}
+
+/// Run the GA on a contiguous shard of grid points with the **fused
+/// lockstep** schedule: the shard is cut into cohorts, each cohort's
+/// points advance generation-by-generation together, and every
+/// generation is scored by one giant surrogate batch. `base_idx` is the
+/// global grid index of `inputs[0]`; results are bit-identical to
+/// [`optimize_grid_shard_per_point`] (and to any other shard split), so
+/// sharded or resumed runs are bit-identical to single-shot ones.
 #[allow(clippy::too_many_arguments)]
 pub fn optimize_grid_shard(
     surrogate: &(dyn Surrogate + Sync),
@@ -103,14 +143,154 @@ pub fn optimize_grid_shard(
 ) -> (Vec<Vec<f64>>, Vec<f64>) {
     let unit_seeds: Vec<Vec<f64>> =
         seeds.iter().map(|s| design_space.encode(s)).collect();
+    let mut designs = Vec::with_capacity(inputs.len());
+    let mut predicted = Vec::with_capacity(inputs.len());
+    for (c, cohort) in inputs.chunks(COHORT_POINTS).enumerate() {
+        let mut rngs: Vec<Rng> = (0..cohort.len())
+            .map(|i| point_rng(seed, base_idx + c * COHORT_POINTS + i))
+            .collect();
+        let results = lockstep_minimize_points(
+            surrogate,
+            ga,
+            design_space.dim(),
+            &unit_seeds,
+            cohort,
+            &mut rngs,
+            &|genes| design_space.snap(&design_space.decode(genes)),
+            threads,
+        );
+        for (best_unit, best_val) in results {
+            designs.push(design_space.snap(&design_space.decode(&best_unit)));
+            predicted.push(best_val);
+        }
+    }
+    (designs, predicted)
+}
+
+/// Fused lockstep GA minimization for points that share the row shape
+/// "constant per-point prefix ++ per-individual design suffix" — the
+/// evaluator behind both stage-3 grid optimization and the GA-Adaptive
+/// sampler's exploitation step. `decode_design` maps unit-cube genes to
+/// the value-space suffix appended to the prefix (snap∘decode for the
+/// grid, identity for unit-space surrogates).
+///
+/// When the surrogate exposes a pre-binnable compiled forest covering
+/// exactly `prefix + suffix` features, each point's prefix columns are
+/// quantized once up front and only suffix columns are re-coded per
+/// generation, feeding [`predict_batch_prebinned`]; otherwise raw value
+/// rows go through [`Surrogate::predict_batch_with`]. Both are
+/// bit-identical to scoring each point privately.
+///
+/// Returns `(best unit genes, best objective)` per point.
+///
+/// [`predict_batch_prebinned`]: crate::surrogate::forest::CompiledForest::predict_batch_prebinned
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lockstep_minimize_points(
+    surrogate: &(dyn Surrogate + Sync),
+    ga: &Nsga2,
+    dim: usize,
+    unit_seeds: &[Vec<f64>],
+    inputs: &[Vec<f64>],
+    rngs: &mut [Rng],
+    decode_design: &(dyn Fn(&[f64]) -> Vec<f64> + Sync),
+    threads: usize,
+) -> Vec<(Vec<f64>, f64)> {
+    if inputs.is_empty() {
+        return Vec::new();
+    }
+    assert_eq!(inputs.len(), rngs.len(), "one RNG stream per point");
+    let n_inputs = inputs[0].len();
+    // Below the block-parallel threshold a fused batch runs inline; at
+    // or above it, the run's thread budget fans the row blocks out.
+    let pred_threads = |rows: usize| if rows < par_min_rows() { 1 } else { threads };
+
+    let fused = surrogate
+        .fused_forest()
+        .filter(|cf| cf.n_features() == n_inputs + dim);
+    if let Some((cf, plan)) = fused.and_then(|cf| cf.bin_plan().map(|p| (cf, p))) {
+        // Pre-bin each point's constant input columns once; generations
+        // only re-code the design suffix.
+        let width = cf.n_features();
+        let input_codes: Vec<Vec<u16>> = inputs
+            .iter()
+            .map(|inp| {
+                let mut codes = vec![0u16; n_inputs];
+                plan.code_prefix(inp, &mut codes);
+                codes
+            })
+            .collect();
+        // One flat code block per point per generation (pop × width
+        // u16s) — no per-row heap traffic on the hot path.
+        let make_rows = |p: usize, genes: &[Vec<f64>]| -> Vec<u16> {
+            let mut codes = Vec::with_capacity(genes.len() * width);
+            for g in genes {
+                let design = decode_design(g);
+                codes.extend_from_slice(&input_codes[p]);
+                for (j, &v) in design.iter().enumerate() {
+                    codes.push(plan.code(n_inputs + j, v));
+                }
+            }
+            codes
+        };
+        let mut flat: Vec<u16> = Vec::new();
+        let mut batch_eval = |blocks: Vec<Vec<u16>>| -> Vec<f64> {
+            flat.clear();
+            let total: usize = blocks.iter().map(Vec::len).sum();
+            flat.reserve(total);
+            for b in &blocks {
+                flat.extend_from_slice(b);
+            }
+            let n_rows = total / width.max(1);
+            let mut out = cf.predict_batch_prebinned(&flat, pred_threads(n_rows));
+            for v in &mut out {
+                *v = surrogate.fused_post(*v);
+            }
+            out
+        };
+        ga.minimize_lockstep(dim, unit_seeds, rngs, &make_rows, &mut batch_eval, threads)
+    } else {
+        let make_rows = |p: usize, genes: &[Vec<f64>]| -> Vec<Vec<f64>> {
+            genes
+                .iter()
+                .map(|g| {
+                    let design = decode_design(g);
+                    let mut x = inputs[p].clone();
+                    x.extend_from_slice(&design);
+                    x
+                })
+                .collect()
+        };
+        let mut batch_eval = |blocks: Vec<Vec<Vec<f64>>>| -> Vec<f64> {
+            // Row Vecs move (not clone) into one contiguous batch.
+            let rows: Vec<Vec<f64>> = blocks.into_iter().flatten().collect();
+            surrogate.predict_batch_with(&rows, pred_threads(rows.len()))
+        };
+        ga.minimize_lockstep(dim, unit_seeds, rngs, &make_rows, &mut batch_eval, threads)
+    }
+}
+
+/// The per-point reference schedule: one private GA per grid point,
+/// parallel across points, each generation scored by a pop-sized batch.
+/// This is what [`optimize_grid_shard`] replaced as the production path;
+/// it is kept as the bit-exactness oracle for the fused lockstep engine
+/// (`tests/fused_grid_equivalence.rs`) and as the baseline of the
+/// `grid_optimize_throughput` bench.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_grid_shard_per_point(
+    surrogate: &(dyn Surrogate + Sync),
+    design_space: &ParamSpace,
+    inputs: &[Vec<f64>],
+    base_idx: usize,
+    ga: &Nsga2,
+    seeds: &[Vec<f64>],
+    threads: usize,
+    seed: u64,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let unit_seeds: Vec<Vec<f64>> =
+        seeds.iter().map(|s| design_space.encode(s)).collect();
 
     let results = par_map(inputs, threads, |idx, input| {
-        let gidx = (base_idx + idx) as u64;
-        let mut rng = Rng::new(seed ^ gidx.wrapping_mul(0x9E37_79B9));
-        // Whole GA generations are scored through one predict_batch call
-        // (the compiled-forest fast path) instead of one scalar predict
-        // per individual; values are bit-identical, so per-point results
-        // (and checkpoint resumes) are unchanged.
+        let mut rng = point_rng(seed, base_idx + idx);
         let f = |population: &[Vec<f64>]| -> Vec<f64> {
             let xs: Vec<Vec<f64>> = population
                 .iter()
@@ -132,7 +312,8 @@ pub fn optimize_grid_shard(
     results.into_iter().unzip()
 }
 
-/// Run the GA on every grid point (parallel across points).
+/// Run the GA on every grid point (fused lockstep schedule, one giant
+/// surrogate batch per generation — see the module docs).
 ///
 /// `seeds` optionally injects known designs (expert knowledge / incumbent
 /// configurations) into each GA's initial population, in value space.
@@ -241,6 +422,45 @@ mod tests {
         }
         assert_eq!(designs, full.designs);
         assert_eq!(predicted, full.predicted);
+    }
+
+    #[test]
+    fn fused_lockstep_matches_per_point_reference() {
+        // The Analytic surrogate has no compiled forest, so this pins the
+        // raw fused fallback against the per-point oracle bit for bit
+        // (the prebinned path is pinned in tests/fused_grid_equivalence.rs).
+        let design = ParamSpace::new(vec![
+            ParamDef::float("t", 0.0, 1.0),
+            ParamDef::int("u", 1, 9),
+        ]);
+        struct TwoDim;
+        impl Surrogate for TwoDim {
+            fn fit(&mut self, _d: &Dataset) {}
+            fn predict(&self, x: &[f64]) -> f64 {
+                (x[1] - x[0]).powi(2) + (x[2] - 4.0).abs() * 0.1
+            }
+        }
+        let input = ParamSpace::new(vec![ParamDef::float("x", 0.0, 1.0)]);
+        let inputs = input.grid(7);
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 10,
+            generations: 6,
+            ..Default::default()
+        });
+        let (d_ref, p_ref) = optimize_grid_shard_per_point(
+            &TwoDim, &design, &inputs, 3, &ga, &[vec![0.5, 4.0]], 2, 77,
+        );
+        for threads in [1usize, 2, 8] {
+            let (d, p) = optimize_grid_shard(
+                &TwoDim, &design, &inputs, 3, &ga, &[vec![0.5, 4.0]], threads, 77,
+            );
+            assert_eq!(d, d_ref, "threads={threads}");
+            assert_eq!(
+                p.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

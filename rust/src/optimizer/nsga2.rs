@@ -9,6 +9,7 @@
 //! pymoo's NSGA-II for both its sampling and optimization phases.
 
 use crate::util::rng::Rng;
+use crate::util::threadpool::par_map;
 
 /// GA hyperparameters.
 #[derive(Clone, Debug)]
@@ -83,6 +84,10 @@ impl Nsga2 {
     /// [`crate::surrogate::Surrogate::predict_batch`] instead of one
     /// `predict` per individual (the stage-3 hot path: grid points ×
     /// generations × pop_size rows).
+    ///
+    /// Thin driver over the step-wise [`Nsga2Run`] state machine — the
+    /// lockstep grid optimizer advances many such runs side by side and
+    /// is bit-identical to this loop by construction (same code).
     pub fn run_batch(
         &self,
         dim: usize,
@@ -90,10 +95,23 @@ impl Nsga2 {
         seeds: &[Vec<f64>],
         rng: &mut Rng,
     ) -> Vec<Individual> {
+        let mut run = self.start(dim, seeds, rng);
+        loop {
+            let objectives = f(run.pending());
+            if !run.step(objectives, rng) {
+                break;
+            }
+        }
+        run.into_population()
+    }
+
+    /// Begin a step-wise GA run: generate the initial population (seeds +
+    /// uniform random fill, consuming `rng` exactly like
+    /// [`Nsga2::run_batch`]) and hand back a [`Nsga2Run`] whose pending
+    /// genes await their first evaluation.
+    pub fn start(&self, dim: usize, seeds: &[Vec<f64>], rng: &mut Rng) -> Nsga2Run {
         let pop_size = self.params.pop_size.max(4);
         let pm = self.params.p_mutation.unwrap_or(1.0 / dim.max(1) as f64);
-
-        // Initial population: seeds + uniform random fill.
         let mut genes: Vec<Vec<f64>> = Vec::with_capacity(pop_size);
         for s in seeds.iter().take(pop_size) {
             assert_eq!(s.len(), dim, "seed dimension mismatch");
@@ -102,37 +120,91 @@ impl Nsga2 {
         while genes.len() < pop_size {
             genes.push((0..dim).map(|_| rng.f64()).collect());
         }
-        let mut pop = Self::eval_batch(genes, f);
-        Self::assign_rank_crowding(&mut pop);
+        Nsga2Run {
+            params: self.params.clone(),
+            pm,
+            pop_size,
+            pop: Vec::new(),
+            pending: genes,
+            generation: 0,
+            phase: RunPhase::Init,
+        }
+    }
 
-        for _gen in 0..self.params.generations {
-            // Offspring genes via tournament + SBX + polynomial mutation;
-            // evaluated as one block once the generation is assembled.
-            let mut off_genes = Vec::with_capacity(pop_size);
-            while off_genes.len() < pop_size {
-                let p1 = Self::tournament(&pop, rng);
-                let p2 = Self::tournament(&pop, rng);
-                let (mut c1, mut c2) = self.sbx(&pop[p1].genes, &pop[p2].genes, rng);
-                self.mutate(&mut c1, pm, rng);
-                self.mutate(&mut c2, pm, rng);
-                off_genes.push(c1);
-                if off_genes.len() < pop_size {
-                    off_genes.push(c2);
+    /// Advance many independent GA instances in **lockstep**: every
+    /// step, the pending populations of all still-active points are
+    /// mapped to evaluation rows (`make_rows`, parallel over points) and
+    /// scored through **one** fused `batch_eval` call — tens of
+    /// thousands of rows per generation instead of one pop-sized batch
+    /// per point — before each point breeds its next generation from its
+    /// own RNG stream.
+    ///
+    /// Per-point results are bit-identical to running
+    /// [`Nsga2::minimize_batch`] point by point with the same `rngs`:
+    /// the state machine is the same code, each point only consumes its
+    /// own RNG, and `batch_eval` must be row-independent (true of every
+    /// surrogate batch path in this crate). Points whose runs finish
+    /// early drop out of the fused batch.
+    ///
+    /// `make_rows` maps one point's pending genes to **one** evaluation
+    /// block (generic `R`: a flat pre-binned code matrix, a row list, …
+    /// — one allocation per point per generation, not per row);
+    /// `batch_eval` consumes all active blocks, in point order, and
+    /// returns one objective per pending individual (row-major across
+    /// the blocks).
+    ///
+    /// Returns `(best genes, best objective)` per point — single
+    /// objective, selected exactly like [`Nsga2::minimize_batch`].
+    pub fn minimize_lockstep<R: Send>(
+        &self,
+        dim: usize,
+        seeds: &[Vec<f64>],
+        rngs: &mut [Rng],
+        make_rows: &(dyn Fn(usize, &[Vec<f64>]) -> R + Sync),
+        batch_eval: &mut dyn FnMut(Vec<R>) -> Vec<f64>,
+        threads: usize,
+    ) -> Vec<(Vec<f64>, f64)> {
+        let mut runs: Vec<Nsga2Run> =
+            rngs.iter_mut().map(|r| self.start(dim, seeds, r)).collect();
+        let mut active: Vec<usize> = (0..runs.len()).collect();
+        while !active.is_empty() {
+            // Assemble the fused row matrix (parallel over points: the
+            // decode/snap/quantize work per row is the assembly cost).
+            let lens: Vec<usize> =
+                active.iter().map(|&p| runs[p].pending().len()).collect();
+            let blocks: Vec<R> = {
+                let runs = &runs;
+                par_map(&active, threads, move |_, &p| {
+                    make_rows(p, runs[p].pending())
+                })
+            };
+            let total: usize = lens.iter().sum();
+            let values = batch_eval(blocks);
+            assert_eq!(values.len(), total, "fused objective count mismatch");
+            // Slice the fused objectives back per point and advance each
+            // point's state machine on its own RNG stream.
+            let mut offset = 0;
+            let mut still_active = Vec::with_capacity(active.len());
+            for (k, &p) in active.iter().enumerate() {
+                let objectives: Vec<Vec<f64>> =
+                    values[offset..offset + lens[k]].iter().map(|&v| vec![v]).collect();
+                offset += lens[k];
+                if runs[p].step(objectives, &mut rngs[p]) {
+                    still_active.push(p);
                 }
             }
-            // Elitist environmental selection over parents ∪ offspring.
-            pop.extend(Self::eval_batch(off_genes, f));
-            Self::assign_rank_crowding(&mut pop);
-            pop.sort_by(|a, b| {
-                a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
-            });
-            pop.truncate(pop_size);
+            active = still_active;
         }
-        Self::assign_rank_crowding(&mut pop);
-        pop.sort_by(|a, b| {
-            a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
-        });
-        pop
+        runs.into_iter()
+            .map(|run| {
+                let pop = run.into_population();
+                let best = pop
+                    .iter()
+                    .min_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]))
+                    .expect("population is never empty");
+                (best.genes.clone(), best.objectives[0])
+            })
+            .collect()
     }
 
     /// Single-objective convenience: returns (best genes, best objective).
@@ -165,19 +237,6 @@ impl Nsga2 {
             .min_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]))
             .unwrap();
         (best.genes.clone(), best.objectives[0])
-    }
-
-    fn eval_batch(
-        genes: Vec<Vec<f64>>,
-        f: &dyn Fn(&[Vec<f64>]) -> Vec<Vec<f64>>,
-    ) -> Vec<Individual> {
-        let objectives = f(&genes);
-        assert_eq!(objectives.len(), genes.len(), "batch objective count mismatch");
-        genes
-            .into_iter()
-            .zip(objectives)
-            .map(|(genes, objectives)| Individual { genes, objectives, rank: 0, crowding: 0.0 })
-            .collect()
     }
 
     /// a dominates b iff a is <= everywhere and < somewhere.
@@ -274,14 +333,19 @@ impl Nsga2 {
     }
 
     /// Simulated binary crossover (SBX), clamped to [0,1].
-    fn sbx(&self, p1: &[f64], p2: &[f64], rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+    fn sbx(
+        params: &Nsga2Params,
+        p1: &[f64],
+        p2: &[f64],
+        rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>) {
         let d = p1.len();
         let mut c1 = p1.to_vec();
         let mut c2 = p2.to_vec();
-        if !rng.bool(self.params.p_crossover) {
+        if !rng.bool(params.p_crossover) {
             return (c1, c2);
         }
-        let eta = self.params.eta_crossover;
+        let eta = params.eta_crossover;
         for i in 0..d {
             if !rng.bool(0.5) {
                 continue;
@@ -301,8 +365,8 @@ impl Nsga2 {
     }
 
     /// Polynomial mutation, clamped to [0,1].
-    fn mutate(&self, genes: &mut [f64], pm: f64, rng: &mut Rng) {
-        let eta = self.params.eta_mutation;
+    fn mutate(params: &Nsga2Params, genes: &mut [f64], pm: f64, rng: &mut Rng) {
+        let eta = params.eta_mutation;
         for g in genes.iter_mut() {
             if !rng.bool(pm) {
                 continue;
@@ -315,6 +379,115 @@ impl Nsga2 {
             };
             *g = (*g + delta).clamp(0.0, 1.0);
         }
+    }
+}
+
+/// Where a step-wise run is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RunPhase {
+    /// The initial population awaits evaluation.
+    Init,
+    /// An offspring block awaits evaluation.
+    Evolve,
+    /// Finished: the population is final-sorted, nothing is pending.
+    Done,
+}
+
+/// One NSGA-II run as an explicit state machine: [`Nsga2::start`] yields
+/// the initial genes, each [`Nsga2Run::step`] absorbs their objectives
+/// and breeds the next pending block. This inversion of control is what
+/// lets the lockstep grid optimizer interleave thousands of runs and
+/// score all their pending populations in a single fused surrogate
+/// batch per generation ([`Nsga2::minimize_lockstep`]). [`Nsga2::run_batch`]
+/// is a plain loop over this machine, so the two schedules share every
+/// line of GA logic and cannot drift apart.
+pub struct Nsga2Run {
+    params: Nsga2Params,
+    pm: f64,
+    pop_size: usize,
+    pop: Vec<Individual>,
+    /// Genes awaiting objectives: the initial population, then one
+    /// offspring block per generation.
+    pending: Vec<Vec<f64>>,
+    generation: usize,
+    phase: RunPhase,
+}
+
+impl Nsga2Run {
+    /// The genes to evaluate next (empty once the run is done).
+    pub fn pending(&self) -> &[Vec<f64>] {
+        &self.pending
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == RunPhase::Done
+    }
+
+    /// Absorb the objectives of the pending genes, run environmental
+    /// selection, and — unless the generation budget is exhausted —
+    /// breed the next offspring block from `rng`. The RNG consumption
+    /// order is exactly [`Nsga2::run_batch`]'s (breeding happens between
+    /// evaluations, evaluation itself never touches the RNG). Returns
+    /// `true` while more evaluations are pending.
+    pub fn step(&mut self, objectives: Vec<Vec<f64>>, rng: &mut Rng) -> bool {
+        assert_eq!(
+            objectives.len(),
+            self.pending.len(),
+            "batch objective count mismatch"
+        );
+        let genes = std::mem::take(&mut self.pending);
+        let evaluated = genes.into_iter().zip(objectives).map(|(genes, objectives)| {
+            Individual { genes, objectives, rank: 0, crowding: 0.0 }
+        });
+        match self.phase {
+            RunPhase::Init => {
+                self.pop = evaluated.collect();
+                Nsga2::assign_rank_crowding(&mut self.pop);
+                self.phase = RunPhase::Evolve;
+            }
+            RunPhase::Evolve => {
+                // Elitist environmental selection over parents ∪ offspring.
+                self.pop.extend(evaluated);
+                Nsga2::assign_rank_crowding(&mut self.pop);
+                self.pop.sort_by(|a, b| {
+                    a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
+                });
+                self.pop.truncate(self.pop_size);
+                self.generation += 1;
+            }
+            RunPhase::Done => panic!("step on a finished GA run"),
+        }
+        if self.generation >= self.params.generations {
+            Nsga2::assign_rank_crowding(&mut self.pop);
+            self.pop.sort_by(|a, b| {
+                a.rank.cmp(&b.rank).then(b.crowding.total_cmp(&a.crowding))
+            });
+            self.phase = RunPhase::Done;
+            return false;
+        }
+        // Offspring genes via tournament + SBX + polynomial mutation;
+        // they become the next pending evaluation block.
+        let mut off_genes = Vec::with_capacity(self.pop_size);
+        while off_genes.len() < self.pop_size {
+            let p1 = Nsga2::tournament(&self.pop, rng);
+            let p2 = Nsga2::tournament(&self.pop, rng);
+            let (mut c1, mut c2) =
+                Nsga2::sbx(&self.params, &self.pop[p1].genes, &self.pop[p2].genes, rng);
+            Nsga2::mutate(&self.params, &mut c1, self.pm, rng);
+            Nsga2::mutate(&self.params, &mut c2, self.pm, rng);
+            off_genes.push(c1);
+            if off_genes.len() < self.pop_size {
+                off_genes.push(c2);
+            }
+        }
+        self.pending = off_genes;
+        true
+    }
+
+    /// The final population, best-first. Panics unless [`Nsga2Run::is_done`].
+    pub fn into_population(self) -> Vec<Individual> {
+        assert!(self.is_done(), "GA run still has pending evaluations");
+        self.pop
     }
 }
 
@@ -424,6 +597,100 @@ mod tests {
         let a = ga.minimize(2, &f, &[], &mut r1);
         let b = ga.minimize(2, &f, &[], &mut r2);
         assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn stepwise_run_is_identical_to_run_batch() {
+        // Driving the state machine by hand must replay run_batch's RNG
+        // and selection sequence exactly.
+        let obj = |x: &[f64]| vec![(x[0] - 0.4).powi(2), (x[1] - 0.6).powi(2)];
+        let ga = Nsga2::new(Nsga2Params { pop_size: 10, generations: 7, ..Default::default() });
+        let f = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> { xs.iter().map(|x| obj(x)).collect() };
+        let mut r1 = Rng::new(31);
+        let reference = ga.run_batch(2, &f, &[vec![0.4, 0.6]], &mut r1);
+
+        let mut r2 = Rng::new(31);
+        let mut run = ga.start(2, &[vec![0.4, 0.6]], &mut r2);
+        let mut steps = 0;
+        while !run.is_done() {
+            let objectives: Vec<Vec<f64>> = run.pending().iter().map(|x| obj(x)).collect();
+            run.step(objectives, &mut r2);
+            steps += 1;
+        }
+        assert_eq!(steps, 8, "init + one step per generation");
+        let pop = run.into_population();
+        assert_eq!(pop.len(), reference.len());
+        for (a, b) in pop.iter().zip(&reference) {
+            assert_eq!(a.genes, b.genes);
+            assert_eq!(a.objectives, b.objectives);
+        }
+    }
+
+    #[test]
+    fn lockstep_matches_per_point_minimize_batch() {
+        // Many points advanced in lockstep (one fused eval per
+        // generation) must be bit-identical to running each point's GA
+        // privately with the same RNG stream.
+        let ga = Nsga2::new(Nsga2Params { pop_size: 12, generations: 9, ..Default::default() });
+        let score = |p: usize, x: &[f64]| {
+            let t = p as f64 / 4.0;
+            (x[0] - t).powi(2) + 0.5 * (x[1] - 0.3).abs()
+        };
+
+        let mut expected = Vec::new();
+        for p in 0..5usize {
+            let mut rng = Rng::new(1000 + p as u64);
+            let f = |xs: &[Vec<f64>]| -> Vec<f64> {
+                xs.iter().map(|x| score(p, x)).collect()
+            };
+            expected.push(ga.minimize_batch(2, &f, &[], &mut rng));
+        }
+
+        for threads in [1usize, 4] {
+            let mut rngs: Vec<Rng> =
+                (0..5).map(|p| Rng::new(1000 + p as u64)).collect();
+            let make_rows = |p: usize, genes: &[Vec<f64>]| -> Vec<(usize, Vec<f64>)> {
+                genes.iter().map(|g| (p, g.clone())).collect()
+            };
+            let mut batch_eval = |blocks: Vec<Vec<(usize, Vec<f64>)>>| -> Vec<f64> {
+                blocks
+                    .into_iter()
+                    .flatten()
+                    .map(|(p, x)| score(p, &x))
+                    .collect()
+            };
+            let got = ga.minimize_lockstep(
+                2,
+                &[],
+                &mut rngs,
+                &make_rows,
+                &mut batch_eval,
+                threads,
+            );
+            assert_eq!(got.len(), expected.len());
+            for (g, e) in got.iter().zip(&expected) {
+                assert_eq!(g.0, e.0, "threads={threads}");
+                assert_eq!(g.1.to_bits(), e.1.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_handles_no_points_and_zero_generations() {
+        let ga = Nsga2::new(Nsga2Params { pop_size: 6, generations: 0, ..Default::default() });
+        let make_rows = |_: usize, genes: &[Vec<f64>]| genes.to_vec();
+        let mut eval = |blocks: Vec<Vec<Vec<f64>>>| -> Vec<f64> {
+            blocks.into_iter().flatten().map(|r| r[0]).collect()
+        };
+        assert!(ga.minimize_lockstep(1, &[], &mut [], &make_rows, &mut eval, 2).is_empty());
+
+        // generations == 0 still evaluates the initial population once.
+        let mut rngs = vec![Rng::new(3)];
+        let got = ga.minimize_lockstep(1, &[], &mut rngs, &make_rows, &mut eval, 1);
+        let mut rng = Rng::new(3);
+        let f = |xs: &[Vec<f64>]| -> Vec<f64> { xs.iter().map(|x| x[0]).collect() };
+        let want = ga.minimize_batch(1, &f, &[], &mut rng);
+        assert_eq!(got[0], want);
     }
 
     #[test]

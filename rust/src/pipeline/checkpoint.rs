@@ -29,10 +29,16 @@
 //! fixed-size chunks and seeds every grid point's GA from its **global**
 //! index ([`crate::optimizer::grid::optimize_grid_shard`]), so a resumed
 //! run — even with a different `--threads` — produces a bit-identical
-//! [`TunedModel`] to an uninterrupted one. Freshly computed stages are
-//! written and immediately reloaded, so a run's downstream stages always
-//! consume the checkpointed representation: resumed and uninterrupted runs
-//! see byte-identical inputs by construction.
+//! [`TunedModel`] to an uninterrupted one. The shard executes on the
+//! fused lockstep schedule (all points per cohort advance together, one
+//! giant surrogate batch per GA generation), which is a pure reordering
+//! of the same per-point GA runs: shard files are keyed and laid out
+//! exactly as before and their bytes are identical to the per-point
+//! schedule's, so checkpoints written by either engine resume
+//! interchangeably. Freshly computed stages are written and immediately
+//! reloaded, so a run's downstream stages always consume the
+//! checkpointed representation: resumed and uninterrupted runs see
+//! byte-identical inputs by construction.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -334,7 +340,11 @@ impl PipelineRun {
 
     /// Stage 3: sharded grid optimization (upstream: the stage-2
     /// artifact). Each shard checkpoints on completion, so a kill
-    /// mid-stage only re-pays the unfinished shards.
+    /// mid-stage only re-pays the unfinished shards. Within a shard the
+    /// fused lockstep engine scores all points' GA generations through
+    /// one surrogate batch at a time — with [`SHARD_SIZE`] = 64 points
+    /// and the default pop of 32, that is a 2048-row fused batch per
+    /// generation, exactly the compiled forest's parallel regime.
     fn stage_grid(
         &self,
         surrogate: &LogSurrogate<Gbdt>,

@@ -144,6 +144,13 @@ impl ServedClient {
             .collect())
     }
 
+    /// Ask the daemon to drain for a rolling restart: stop accepting,
+    /// answer everything already read, then exit 0 (acknowledged before
+    /// the daemon stops; the connection closes after the ack).
+    pub fn drain(&mut self) -> Result<(), String> {
+        self.roundtrip(&Request::Drain).map(|_| ())
+    }
+
     /// Ask the daemon to shut down gracefully (acknowledged before it
     /// stops).
     pub fn shutdown(&mut self) -> Result<(), String> {

@@ -20,6 +20,18 @@
 //! accept loop is unblocked by a self-connection. In-flight requests are
 //! never dropped silently — a request that cannot be served anymore gets
 //! an explicit error response.
+//!
+//! The `DRAIN` verb is the rolling-restart variant (for hosts behind a
+//! load balancer): new connections stop being accepted, every request
+//! already read off a socket is answered normally, each connection
+//! closes after its current response, and once the last in-flight
+//! request lands the daemon falls through to the normal graceful
+//! shutdown and the process exits 0.
+//!
+//! Resilience: every connection runs under a request **read timeout**
+//! ([`DaemonConfig::read_timeout`]) — a peer that opens a connection and
+//! stalls (or trickles a partial request forever) is disconnected
+//! instead of holding a connection thread for the daemon's lifetime.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -51,6 +63,13 @@ pub struct DaemonConfig {
     pub threads: usize,
     /// Bounded queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
+    /// Per-connection request read timeout: a connection whose next
+    /// request (or next byte of one) does not arrive within this window
+    /// is closed. `Duration::ZERO` disables the timeout. Note this also
+    /// bounds how long an *idle* keep-alive connection stays open —
+    /// clients are expected to reconnect (connections are cheap and the
+    /// protocol is stateless per request).
+    pub read_timeout: Duration,
 }
 
 impl Default for DaemonConfig {
@@ -62,6 +81,7 @@ impl Default for DaemonConfig {
             poll_interval: Duration::from_millis(500),
             threads: 0,
             queue_capacity: 4096,
+            read_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -71,6 +91,9 @@ struct Shared {
     registry: ServedRegistry,
     queue: Arc<BatchQueue>,
     shutdown: AtomicBool,
+    /// Set by the `DRAIN` verb: no new connections, each connection
+    /// closes after its current response, shutdown once in-flight = 0.
+    draining: AtomicBool,
     /// The reload thread parks here between polls; `true` = exit now.
     reload_gate: (Mutex<bool>, Condvar),
     connections: AtomicU64,
@@ -82,6 +105,8 @@ struct Shared {
     started: Instant,
     local_addr: SocketAddr,
     decide_threads: usize,
+    /// Per-connection request read timeout (None = disabled).
+    read_timeout: Option<Duration>,
 }
 
 /// RAII increment of the in-flight request counter (decrements on drop,
@@ -121,12 +146,14 @@ impl Daemon {
             registry,
             queue: queue.clone(),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             reload_gate: (Mutex::new(false), Condvar::new()),
             connections: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             started: Instant::now(),
             local_addr,
             decide_threads: cfg.threads,
+            read_timeout: (cfg.read_timeout > Duration::ZERO).then_some(cfg.read_timeout),
         });
         let mut handles = Vec::new();
 
@@ -207,10 +234,15 @@ fn trigger_shutdown(shared: &Shared) {
     let (gate, cv) = &shared.reload_gate;
     *gate.lock().unwrap() = true;
     cv.notify_all();
-    // Unblock the accept loop with a throwaway self-connection. A
-    // wildcard bind (0.0.0.0 / ::) is not connectable on every
-    // platform, so poke the matching loopback instead; the timeout
-    // keeps shutdown from hanging even if the poke is filtered.
+    poke_accept(shared);
+}
+
+/// Unblock the accept loop with a throwaway self-connection so it
+/// re-checks its stop flags. A wildcard bind (0.0.0.0 / ::) is not
+/// connectable on every platform, so poke the matching loopback
+/// instead; the timeout keeps stopping from hanging even if the poke
+/// is filtered.
+fn poke_accept(shared: &Shared) {
     let mut poke = shared.local_addr;
     if poke.ip().is_unspecified() {
         poke.set_ip(match poke.ip() {
@@ -219,6 +251,56 @@ fn trigger_shutdown(shared: &Shared) {
         });
     }
     let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
+}
+
+/// The `DRAIN` verb: stop accepting, let every already-read request
+/// answer normally, then fall through to the regular graceful shutdown.
+/// A watchdog bounds the wait so a wedged in-flight request cannot pin a
+/// draining daemon forever.
+fn trigger_drain(shared: &Arc<Shared>) {
+    if shared.draining.swap(true, Ordering::SeqCst)
+        || shared.shutdown.load(Ordering::SeqCst)
+    {
+        return; // already draining (or past it)
+    }
+    poke_accept(shared);
+    let sh = shared.clone();
+    let supervisor = std::thread::Builder::new().name("mlkaps-drain".into()).spawn(
+        move || {
+            let deadline = Instant::now() + Duration::from_secs(30);
+            // Shut down only once in-flight has been zero for a settle
+            // window: a request read off a socket concurrently with the
+            // drain registers its in-flight guard a moment after the
+            // read returns, so a single zero sample could race it into
+            // a shutdown error. The gap is a couple of instructions,
+            // but a descheduled connection thread can stretch it, so
+            // the window is a generous 250ms of continuous zero. This
+            // makes the race vanishingly unlikely, not impossible — a
+            // thread preempted longer than the window between its read
+            // and its guard still gets a shutting-down error response
+            // (never a silent drop). The draining connection's own
+            // guard drops right after its response is written, so an
+            // idle daemon still exits fast.
+            let mut zero_since: Option<Instant> = None;
+            while Instant::now() < deadline {
+                if sh.in_flight.load(Ordering::SeqCst) == 0 {
+                    let since = *zero_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() >= Duration::from_millis(250) {
+                        break;
+                    }
+                } else {
+                    zero_since = None;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            trigger_shutdown(&sh);
+        },
+    );
+    if supervisor.is_err() {
+        // Could not spawn the watchdog: degrade to an immediate
+        // graceful shutdown rather than draining forever.
+        trigger_shutdown(shared);
+    }
 }
 
 fn reload_loop(shared: &Shared, interval: Duration) {
@@ -253,7 +335,8 @@ fn reload_loop(shared: &Shared, interval: Duration) {
 
 fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
     for stream in listener.incoming() {
-        if shared.shutdown.load(Ordering::SeqCst) {
+        if shared.shutdown.load(Ordering::SeqCst) || shared.draining.load(Ordering::SeqCst)
+        {
             return;
         }
         let Ok(stream) = stream else { continue };
@@ -275,6 +358,12 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
 /// request can start with.
 fn handle_conn(shared: Arc<Shared>, stream: TcpStream) -> Result<(), String> {
     stream.set_nodelay(true).ok();
+    // The request read timeout applies to every blocking read on this
+    // socket (including the framing peek): a peer that stalls is
+    // disconnected instead of pinning this thread forever.
+    if let Some(t) = shared.read_timeout {
+        stream.set_read_timeout(Some(t)).ok();
+    }
     let mut first = [0u8; 1];
     let n = stream.peek(&mut first).map_err(|e| format!("peek: {e}"))?;
     if n == 0 {
@@ -298,10 +387,22 @@ fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String
             .and_then(|text| {
                 crate::util::json::parse(text).and_then(|v| Request::from_json(&v))
             });
-        let (resp, stop) = dispatch(shared, req);
+        let (resp, after) = dispatch(shared, req);
         protocol::write_frame(&mut stream, resp.to_string().as_bytes())?;
-        if stop {
-            trigger_shutdown(shared);
+        match after {
+            After::Shutdown => {
+                trigger_shutdown(shared);
+                return Ok(());
+            }
+            After::Drain => {
+                trigger_drain(shared);
+                return Ok(());
+            }
+            After::Continue => {}
+        }
+        if shared.draining.load(Ordering::SeqCst) {
+            // Another connection started a drain: this request (already
+            // read) was answered above; close before reading more.
             return Ok(());
         }
     }
@@ -354,13 +455,25 @@ fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
         };
         if !line.trim().is_empty() {
             let _in_flight = InFlight::enter(&shared.in_flight);
-            let (resp, stop) = dispatch(shared, Request::from_line(line));
+            let (resp, after) = dispatch(shared, Request::from_line(line));
             let mut out = resp.to_string();
             out.push('\n');
             writer.write_all(out.as_bytes()).map_err(|e| e.to_string())?;
             writer.flush().map_err(|e| e.to_string())?;
-            if stop {
-                trigger_shutdown(shared);
+            match after {
+                After::Shutdown => {
+                    trigger_shutdown(shared);
+                    return Ok(());
+                }
+                After::Drain => {
+                    trigger_drain(shared);
+                    return Ok(());
+                }
+                After::Continue => {}
+            }
+            if shared.draining.load(Ordering::SeqCst) {
+                // Another connection started a drain: close after this
+                // (already-read, now answered) request.
                 return Ok(());
             }
         }
@@ -370,28 +483,42 @@ fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
     }
 }
 
-/// Route one request to its handler. Returns the response plus whether
-/// this connection (and the daemon) should stop afterwards.
-fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, bool) {
+/// What a connection loop does after writing a request's response.
+enum After {
+    Continue,
+    /// `SHUTDOWN`: stop the daemon now (queued requests get errors).
+    Shutdown,
+    /// `DRAIN`: stop accepting, serve what was read, then shut down.
+    Drain,
+}
+
+/// Route one request to its handler. Returns the response plus what the
+/// connection (and the daemon) should do afterwards.
+fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, After) {
     let req = match req {
         Ok(r) => r,
-        Err(e) => return (protocol::err_response(&e, None), false),
+        Err(e) => return (protocol::err_response(&e, None), After::Continue),
     };
     match req {
         Request::Ping => (
             Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
-            false,
+            After::Continue,
         ),
-        Request::Stats => (stats_json(shared), false),
-        Request::List => (list_json(shared), false),
-        Request::Reload => (reload_now(shared), false),
+        Request::Stats => (stats_json(shared), After::Continue),
+        Request::List => (list_json(shared), After::Continue),
+        Request::Reload => (reload_now(shared), After::Continue),
+        Request::Drain => (
+            Value::obj(vec![("ok", Value::Bool(true)), ("draining", Value::Bool(true))]),
+            After::Drain,
+        ),
         Request::Shutdown => (
             Value::obj(vec![("ok", Value::Bool(true)), ("shutdown", Value::Bool(true))]),
-            true,
+            After::Shutdown,
         ),
-        Request::Decide { kernel, input, profile, id } => {
-            (decide(shared, &kernel, input, profile.as_deref(), id), false)
-        }
+        Request::Decide { kernel, input, profile, id } => (
+            decide(shared, &kernel, input, profile.as_deref(), id),
+            After::Continue,
+        ),
     }
 }
 
@@ -497,7 +624,10 @@ fn stats_json(shared: &Shared) -> Value {
                 // Cache counters restart with each hot-reloaded epoch
                 // (the cache belongs to the bundle, and a new epoch's
                 // decisions are new).
+                ("cache_mode", Value::Str(bundle.memo_mode().name().into())),
                 ("cache_hits", num(cache.hits())),
+                ("cache_hits_exact", num(bundle.cache_hit_split().0)),
+                ("cache_hits_quantized", num(bundle.cache_hit_split().1)),
                 ("cache_misses", num(cache.misses())),
                 ("cache_hit_rate", Value::Num(cache.hit_rate())),
                 ("mem_bytes", Value::Num(bundle.mem_bytes() as f64)),

@@ -126,6 +126,9 @@ pub fn parse_name_spec(spec: &str) -> (String, Option<String>) {
 pub struct ServedRegistry {
     variants: BTreeMap<String, Arc<ServedVariant>>,
     default_profile: Option<String>,
+    /// Memo keying mode applied to every registered bundle (`--memo`
+    /// flag); hot-reloads inherit it from the serving epoch.
+    memo_mode: crate::runtime::serving::MemoMode,
 }
 
 impl ServedRegistry {
@@ -133,7 +136,16 @@ impl ServedRegistry {
     /// flag; `None` disables profile defaulting). Use
     /// [`ServedRegistry::with_detected_profile`] for the hardware probe.
     pub fn new(default_profile: Option<String>) -> ServedRegistry {
-        ServedRegistry { variants: BTreeMap::new(), default_profile }
+        ServedRegistry {
+            variants: BTreeMap::new(),
+            default_profile,
+            memo_mode: crate::runtime::serving::MemoMode::Exact,
+        }
+    }
+
+    /// Set the memo keying mode applied by subsequent registrations.
+    pub fn set_memo_mode(&mut self, mode: crate::runtime::serving::MemoMode) {
+        self.memo_mode = mode;
     }
 
     /// Registry defaulting to the host's probed hardware profile.
@@ -179,7 +191,8 @@ impl ServedRegistry {
         name_spec: Option<&str>,
     ) -> Result<String, String> {
         let dir = dir.into();
-        let bundle = TreeBundle::load_checkpoint_dir(&dir)?;
+        let bundle =
+            TreeBundle::load_checkpoint_dir(&dir)?.with_memo_mode(self.memo_mode);
         let (kernel, profile) = match name_spec {
             Some(spec) => parse_name_spec(spec),
             None => (
@@ -201,6 +214,7 @@ impl ServedRegistry {
         bundle: TreeBundle,
     ) -> Result<String, String> {
         let (kernel, profile) = parse_name_spec(name_spec);
+        let bundle = bundle.with_memo_mode(self.memo_mode);
         self.insert(kernel, profile, ReloadableBundle::new(bundle, None))
     }
 

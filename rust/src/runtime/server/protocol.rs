@@ -86,6 +86,11 @@ pub enum Request {
     /// Poll every watched checkpoint directory now (don't wait for the
     /// reload thread's next tick).
     Reload,
+    /// Rolling-restart drain: stop accepting new connections, answer
+    /// every request already read off a socket, then exit 0. Unlike
+    /// `Shutdown`, requests in flight on other connections are served,
+    /// not error-answered.
+    Drain,
     /// Stop accepting connections and exit the daemon.
     Shutdown,
 }
@@ -98,6 +103,7 @@ impl Request {
             "list" => Some(Request::List),
             "ping" => Some(Request::Ping),
             "reload" => Some(Request::Reload),
+            "drain" => Some(Request::Drain),
             "shutdown" => Some(Request::Shutdown),
             _ => None,
         }
@@ -107,7 +113,7 @@ impl Request {
     pub fn from_json(v: &Value) -> Result<Request, String> {
         if let Some(op) = v.get("op").and_then(|o| o.as_str()) {
             return Request::from_verb(op).ok_or_else(|| {
-                format!("unknown op '{op}' (stats, list, ping, reload, shutdown)")
+                format!("unknown op '{op}' (stats, list, ping, reload, drain, shutdown)")
             });
         }
         let kernel = v
@@ -179,6 +185,7 @@ impl Request {
             Request::List => Value::obj(vec![("op", Value::Str("list".into()))]),
             Request::Ping => Value::obj(vec![("op", Value::Str("ping".into()))]),
             Request::Reload => Value::obj(vec![("op", Value::Str("reload".into()))]),
+            Request::Drain => Value::obj(vec![("op", Value::Str("drain".into()))]),
             Request::Shutdown => Value::obj(vec![("op", Value::Str("shutdown".into()))]),
         }
     }
@@ -254,6 +261,8 @@ mod tests {
         assert_eq!(Request::from_line("STATS").unwrap(), Request::Stats);
         assert_eq!(Request::from_line("  ping  ").unwrap(), Request::Ping);
         assert_eq!(Request::from_line("{\"op\":\"reload\"}").unwrap(), Request::Reload);
+        assert_eq!(Request::from_line("DRAIN").unwrap(), Request::Drain);
+        assert_eq!(Request::from_line("{\"op\":\"drain\"}").unwrap(), Request::Drain);
         assert_eq!(Request::from_line("{\"op\":\"shutdown\"}").unwrap(), Request::Shutdown);
         assert_eq!(Request::from_line("{\"op\":\"list\"}").unwrap(), Request::List);
         assert!(Request::from_line("EXPLODE").is_err());

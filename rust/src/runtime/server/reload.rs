@@ -114,7 +114,10 @@ impl ReloadableBundle {
         // The fingerprint moved (or the current bundle has none): pay
         // for the fully chain-verified load, then swap. A directory
         // caught mid-rewrite fails here and the old epoch keeps serving.
-        let bundle = TreeBundle::load_checkpoint_dir(dir)?;
+        // The new epoch inherits the serving epoch's memo keying mode —
+        // `--memo quantized` must survive hot-reloads.
+        let mode = self.get().memo_mode();
+        let bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(mode);
         let changed = bundle.fingerprint().map(str::to_string) != current_fp;
         *self.current.lock().unwrap() = Arc::new(bundle);
         if changed {

@@ -19,12 +19,19 @@
 //!   the batch output is **bit-identical** to scalar [`TreeBundle::decide`]
 //!   at any thread count (pinned by `tests/integration_serving.rs`).
 //! * **Input memo cache** — kernels are typically re-invoked with the
-//!   same shapes; a small fixed-size exact-match (bit-pattern) cache
-//!   short-circuits repeated `decide` calls, with hit/miss counters via
+//!   same shapes; a small fixed-size cache short-circuits repeated
+//!   `decide` calls, with hit/miss counters via
 //!   [`crate::util::telemetry::HitCounters`]. The cache is 2-way
 //!   set-associative with per-set LRU: two hot inputs whose hashes land
 //!   in the same set both stay resident instead of ping-pong evicting
 //!   each other on every alternation (the direct-mapped pathology).
+//!   Keys come in two modes ([`MemoMode`]): **exact** input bit
+//!   patterns (the default), or **quantized** threshold-cell codes —
+//!   the trees only ever compare `input <= threshold`, so two inputs
+//!   falling between the same consecutive split thresholds of every
+//!   feature provably take identical branches everywhere and can share
+//!   one entry. Hit telemetry splits exact-input hits from the extra
+//!   hits quantization bought ([`TreeBundle::cache_hit_split`]).
 //! * **[`KernelRegistry`]** — one serving endpoint for many kernels: maps
 //!   kernel name → loaded bundle, ingesting checkpoint directories
 //!   through [`checkpoint::load_tree_artifact`], which verifies the
@@ -33,6 +40,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::space::ParamSpace;
@@ -142,8 +150,89 @@ impl CompiledTrees {
     }
 }
 
-/// One resident cache entry: (input bit patterns, decided config).
-type Entry = (Box<[u64]>, Config);
+/// How the input memo cache keys its entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MemoMode {
+    /// Exact input bit patterns: a hit requires the bit-identical input.
+    #[default]
+    Exact,
+    /// Per-feature threshold-cell codes derived from every split
+    /// threshold in the bundle's trees: inputs landing in the same cell
+    /// of every feature share one entry. Safe because decisions depend
+    /// on the input only through `x[feat] <= threshold` comparisons
+    /// (leaf outputs and snapping are input-independent), so equal cell
+    /// codes imply identical branches in every tree.
+    Quantized,
+}
+
+impl MemoMode {
+    /// Parse a `--memo` flag value.
+    pub fn parse(s: &str) -> Result<MemoMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(MemoMode::Exact),
+            "quantized" | "quantised" => Ok(MemoMode::Quantized),
+            other => Err(format!("unknown memo mode '{other}' (exact, quantized)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoMode::Exact => "exact",
+            MemoMode::Quantized => "quantized",
+        }
+    }
+}
+
+/// Reserved cell code for NaN inputs: every `x <= t` comparison is false
+/// for NaN, so all NaN values of a feature route identically and share
+/// one cell.
+const Q_NAN: u64 = u64::MAX;
+
+/// Per-input-feature sorted split thresholds collected from **all** of a
+/// bundle's trees. The cell code of a value is the number of thresholds
+/// strictly below it, so `code(a) == code(b)` implies
+/// `a <= t ⟺ b <= t` for every threshold `t` the trees can ever test —
+/// the invariant that makes [`MemoMode::Quantized`] sound.
+struct InputQuantizer {
+    cuts: Vec<Vec<f64>>,
+}
+
+impl InputQuantizer {
+    fn build(compiled: &CompiledTrees, n_inputs: usize) -> InputQuantizer {
+        let mut cuts: Vec<Vec<f64>> = vec![Vec::new(); n_inputs];
+        for i in 0..compiled.feat.len() {
+            if compiled.feat[i] != LEAF {
+                cuts[compiled.feat[i] as usize].push(compiled.value[i]);
+            }
+        }
+        for c in &mut cuts {
+            c.sort_by(f64::total_cmp);
+            c.dedup();
+        }
+        InputQuantizer { cuts }
+    }
+
+    /// The cell-code cache key of one input row.
+    fn key(&self, x: &[f64]) -> Vec<u64> {
+        x.iter()
+            .zip(&self.cuts)
+            .map(|(&v, cuts)| {
+                if v.is_nan() {
+                    Q_NAN
+                } else {
+                    cuts.partition_point(|&t| t < v) as u64
+                }
+            })
+            .collect()
+    }
+}
+
+/// One resident cache entry: (cache key, exact input bit patterns of the
+/// filling input, decided config). The bits are stored only in quantized
+/// mode (in exact mode the key *is* the bits — no second allocation) and
+/// ride along purely for telemetry: a quantized-mode hit whose stored
+/// bits differ from the query is a hit the exact cache would have missed.
+type Entry = (Box<[u64]>, Option<Box<[u64]>>, Config);
 
 /// One 2-way set: up to two resident entries plus which way to evict
 /// next (the least-recently-used one).
@@ -154,16 +243,23 @@ struct CacheSet {
     lru: u8,
 }
 
-/// Fixed-size 2-way set-associative exact-match cache with per-set LRU:
-/// input bit patterns → the configs previously decided for them. Exact
-/// bit matching makes NaN inputs cacheable too, and guarantees a hit can
+/// Fixed-size 2-way set-associative cache with per-set LRU: cache key
+/// ([`MemoMode::Exact`] input bit patterns, or [`MemoMode::Quantized`]
+/// threshold-cell codes) → the config previously decided for it. Both
+/// key spaces make NaN inputs cacheable, and both guarantee a hit can
 /// only ever return what the uncached path would have computed
-/// (decisions are pure). Two ways per set fix the direct-mapped
-/// pathology where two alternating hot inputs that hash to the same
-/// index evict each other on every call and never hit.
+/// (decisions are pure; equal cell codes imply an equal decision). Two
+/// ways per set fix the direct-mapped pathology where two alternating
+/// hot inputs that hash to the same index evict each other on every
+/// call and never hit.
 struct MemoCache {
     sets: Vec<Mutex<CacheSet>>,
     counters: HitCounters,
+    /// Hits whose stored input bits matched the query exactly.
+    hits_exact: AtomicU64,
+    /// Hits that only the cell-code key produced (stored bits differ) —
+    /// always 0 in [`MemoMode::Exact`].
+    hits_quantized: AtomicU64,
 }
 
 impl MemoCache {
@@ -174,20 +270,41 @@ impl MemoCache {
         MemoCache {
             sets: (0..n_sets).map(|_| Mutex::new(CacheSet::default())).collect(),
             counters: HitCounters::new(),
+            hits_exact: AtomicU64::new(0),
+            hits_quantized: AtomicU64::new(0),
         }
     }
 
-    /// FNV-1a over the input's f64 bit patterns → set index.
-    fn set_of(&self, bits: &[u64]) -> usize {
-        (fnv1a_u64s(bits) % self.sets.len() as u64) as usize
+    /// Total entry capacity (used to rebuild the cache on a mode switch).
+    fn n_slots(&self) -> usize {
+        self.sets.len() * CACHE_WAYS
     }
 
-    fn lookup(&self, bits: &[u64]) -> Option<Config> {
-        let mut set = self.sets[self.set_of(bits)].lock().unwrap();
+    /// FNV-1a over the key words → set index.
+    fn set_of(&self, key: &[u64]) -> usize {
+        (fnv1a_u64s(key) % self.sets.len() as u64) as usize
+    }
+
+    /// `key` is the mode's cache key; `bits` the query's exact input bit
+    /// patterns when they differ from the key (quantized mode), used
+    /// only to attribute the hit in the split telemetry. `None` means
+    /// the key already is the exact bits.
+    fn lookup(&self, key: &[u64], bits: Option<&[u64]>) -> Option<Config> {
+        let mut set = self.sets[self.set_of(key)].lock().unwrap();
         for w in 0..CACHE_WAYS {
-            if let Some((key, cfg)) = &set.ways[w] {
-                if key.as_ref() == bits {
+            if let Some((k, stored_bits, cfg)) = &set.ways[w] {
+                if k.as_ref() == key {
                     let cfg = cfg.clone();
+                    let exact = match (stored_bits, bits) {
+                        (Some(sb), Some(b)) => sb.as_ref() == b,
+                        // Exact mode: key == bits by construction.
+                        _ => true,
+                    };
+                    if exact {
+                        self.hits_exact.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.hits_quantized.fetch_add(1, Ordering::Relaxed);
+                    }
                     // The other way becomes the eviction victim.
                     set.lru = (CACHE_WAYS - 1 - w) as u8;
                     self.counters.hit();
@@ -199,17 +316,18 @@ impl MemoCache {
         None
     }
 
-    fn store(&self, bits: Vec<u64>, cfg: Config) {
-        let mut set = self.sets[self.set_of(&bits)].lock().unwrap();
+    fn store(&self, key: Vec<u64>, bits: Option<Vec<u64>>, cfg: Config) {
+        let mut set = self.sets[self.set_of(&key)].lock().unwrap();
         // Refresh an already-resident key (two threads can race the same
         // miss), else fill an empty way, else evict the LRU way.
         let way = (0..CACHE_WAYS)
             .find(|&w| {
-                matches!(&set.ways[w], Some((k, _)) if k.as_ref() == bits.as_slice())
+                matches!(&set.ways[w], Some((k, _, _)) if k.as_ref() == key.as_slice())
             })
             .or_else(|| (0..CACHE_WAYS).find(|&w| set.ways[w].is_none()))
             .unwrap_or(set.lru as usize);
-        set.ways[way] = Some((bits.into_boxed_slice(), cfg));
+        set.ways[way] =
+            Some((key.into_boxed_slice(), bits.map(Vec::into_boxed_slice), cfg));
         set.lru = (CACHE_WAYS - 1 - way) as u8;
     }
 }
@@ -221,6 +339,8 @@ pub struct TreeBundle {
     trees: DesignTrees,
     compiled: CompiledTrees,
     cache: MemoCache,
+    memo_mode: MemoMode,
+    quantizer: InputQuantizer,
     fingerprint: Option<Arc<str>>,
     kernel: Option<String>,
     /// Design-parameter names, shared (the serving daemon stamps them on
@@ -239,6 +359,7 @@ impl TreeBundle {
             t.validate(dim).map_err(|e| format!("tree {j}: {e}"))?;
         }
         let compiled = CompiledTrees::compile(&trees.trees);
+        let quantizer = InputQuantizer::build(&compiled, dim);
         let design_names: Arc<[String]> = trees
             .design_space
             .names()
@@ -250,6 +371,8 @@ impl TreeBundle {
             trees,
             compiled,
             cache: MemoCache::new(DEFAULT_CACHE_SLOTS),
+            memo_mode: MemoMode::Exact,
+            quantizer,
             fingerprint: None,
             kernel: None,
             design_names,
@@ -278,6 +401,21 @@ impl TreeBundle {
     pub fn with_cache_slots(mut self, n_slots: usize) -> TreeBundle {
         self.cache = MemoCache::new(n_slots);
         self
+    }
+
+    /// Switch the memo keying mode (clears the cache — the two modes'
+    /// keys live in different spaces).
+    pub fn with_memo_mode(mut self, mode: MemoMode) -> TreeBundle {
+        if mode != self.memo_mode {
+            self.memo_mode = mode;
+            self.cache = MemoCache::new(self.cache.n_slots());
+        }
+        self
+    }
+
+    /// The active memo keying mode.
+    pub fn memo_mode(&self) -> MemoMode {
+        self.memo_mode
     }
 
     pub fn n_inputs(&self) -> usize {
@@ -324,6 +462,17 @@ impl TreeBundle {
         &self.cache.counters
     }
 
+    /// `(exact, quantized)` hit breakdown: `exact` counts hits whose
+    /// resident entry was filled by the bit-identical input, `quantized`
+    /// the extra hits that only threshold-cell keying produced (always 0
+    /// in [`MemoMode::Exact`]). They sum to `cache_counters().hits()`.
+    pub fn cache_hit_split(&self) -> (u64, u64) {
+        (
+            self.cache.hits_exact.load(Ordering::Relaxed),
+            self.cache.hits_quantized.load(Ordering::Relaxed),
+        )
+    }
+
     /// Approximate heap bytes of the serving arrays (telemetry).
     pub fn mem_bytes(&self) -> usize {
         self.compiled.mem_bytes()
@@ -337,17 +486,39 @@ impl TreeBundle {
         self.trees.design_space.snap(&raw)
     }
 
-    /// Which config for this input? Memoized on the exact input bits;
-    /// identical (bit for bit) to [`DesignTrees::predict`] on the bundled
-    /// model, cached or not, because decisions are pure.
+    /// Which config for this input? Memoized on the mode's key — exact
+    /// input bits, or threshold-cell codes under
+    /// [`MemoMode::Quantized`]. Identical (bit for bit) to
+    /// [`DesignTrees::predict`] on the bundled model, cached or not:
+    /// decisions are pure, and equal cell codes provably imply an equal
+    /// decision (see [`InputQuantizer`]).
     pub fn decide(&self, input: &[f64]) -> Config {
+        // Dimension check before the cache: a quantized-mode lookup on a
+        // malformed row could otherwise hit (key() zips against the
+        // per-feature tables) and silently serve a config that the
+        // uncached path would reject.
+        assert_eq!(input.len(), self.n_inputs(), "input dimension mismatch");
         let bits: Vec<u64> = input.iter().map(|v| v.to_bits()).collect();
-        if let Some(cfg) = self.cache.lookup(&bits) {
-            return cfg;
+        match self.memo_mode {
+            MemoMode::Exact => {
+                // The bits are the key: one allocation, nothing stored twice.
+                if let Some(cfg) = self.cache.lookup(&bits, None) {
+                    return cfg;
+                }
+                let cfg = self.decide_uncached(input);
+                self.cache.store(bits, None, cfg.clone());
+                cfg
+            }
+            MemoMode::Quantized => {
+                let key = self.quantizer.key(input);
+                if let Some(cfg) = self.cache.lookup(&key, Some(&bits)) {
+                    return cfg;
+                }
+                let cfg = self.decide_uncached(input);
+                self.cache.store(key, Some(bits), cfg.clone());
+                cfg
+            }
         }
-        let cfg = self.decide_uncached(input);
-        self.cache.store(bits, cfg.clone());
-        cfg
     }
 
     /// Batched dispatch: decide every row, parallel over [`ROW_BLOCK`]-row
@@ -390,11 +561,20 @@ impl TreeBundle {
 #[derive(Default)]
 pub struct KernelRegistry {
     bundles: BTreeMap<String, TreeBundle>,
+    /// Memo keying mode applied to bundles loaded via
+    /// [`KernelRegistry::load_dir`].
+    memo_mode: MemoMode,
 }
 
 impl KernelRegistry {
     pub fn new() -> KernelRegistry {
         KernelRegistry::default()
+    }
+
+    /// Set the memo mode applied by subsequent [`KernelRegistry::load_dir`]
+    /// calls (directly inserted bundles keep whatever mode they carry).
+    pub fn set_memo_mode(&mut self, mode: MemoMode) {
+        self.memo_mode = mode;
     }
 
     /// Register a bundle under an explicit name (replaces any previous
@@ -414,7 +594,7 @@ impl KernelRegistry {
         dir: impl AsRef<Path>,
         name: Option<&str>,
     ) -> Result<String, String> {
-        let bundle = TreeBundle::load_checkpoint_dir(dir)?;
+        let bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(self.memo_mode);
         let name = match name {
             Some(n) => n.to_string(),
             None => bundle
@@ -631,6 +811,77 @@ mod tests {
         let hits = bundle.cache_counters().hits();
         assert_eq!(bundle.decide(&a), cfg_a, "MRU entry must survive the eviction");
         assert_eq!(bundle.cache_counters().hits(), hits + 1);
+    }
+
+    #[test]
+    fn quantized_memo_shares_entries_within_a_threshold_cell() {
+        let m = model();
+        let exact = TreeBundle::from_trees(m.clone()).unwrap();
+        let quant =
+            TreeBundle::from_trees(m.clone()).unwrap().with_memo_mode(MemoMode::Quantized);
+        assert_eq!(quant.memo_mode(), MemoMode::Quantized);
+
+        // Two nearby-but-bit-different inputs in the same threshold cell:
+        // thresholds are CART split points fit on a coarse grid, so a
+        // tiny perturbation stays within the cell.
+        let a = vec![1234.5, 4321.0];
+        let b = vec![1234.5000001, 4321.0000001];
+        assert_eq!(m.predict(&a), m.predict(&b), "perturbation crossed a split");
+
+        let cfg = quant.decide(&a);
+        assert_eq!(quant.cache_counters().misses(), 1);
+        assert_eq!(quant.decide(&b), cfg, "same cell must serve the same config");
+        assert_eq!(quant.cache_counters().hits(), 1, "cell sharing must hit");
+        assert_eq!(
+            quant.cache_hit_split(),
+            (0, 1),
+            "a differing-bits hit is attributed to quantization"
+        );
+        assert_eq!(quant.decide(&a), cfg);
+        assert_eq!(quant.cache_hit_split(), (1, 1));
+
+        // The exact-mode cache misses on the perturbed input.
+        exact.decide(&a);
+        exact.decide(&b);
+        assert_eq!(exact.cache_counters().misses(), 2);
+        assert_eq!(exact.cache_hit_split(), (0, 0));
+
+        // Quantized decisions stay bit-identical to the uncached model.
+        for q in probe_inputs() {
+            assert_eq!(quant.decide(&q), m.predict(&q), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn quantized_memo_caches_nan_rows_in_one_cell() {
+        let bundle =
+            TreeBundle::from_trees(model()).unwrap().with_memo_mode(MemoMode::Quantized);
+        // All-NaN comparisons route right in every tree regardless of the
+        // NaN payload, so distinct NaN bit patterns share the cell.
+        let a = vec![f64::NAN, 2500.0];
+        let b = vec![f64::from_bits(f64::NAN.to_bits() ^ 1), 2500.0];
+        let cfg = bundle.decide(&a);
+        assert_eq!(bundle.decide(&b), cfg);
+        assert_eq!(bundle.cache_counters().hits(), 1);
+        assert_eq!(bundle.cache_hit_split(), (0, 1));
+    }
+
+    #[test]
+    fn memo_mode_parses_and_mode_switch_clears_the_cache() {
+        assert_eq!(MemoMode::parse("exact").unwrap(), MemoMode::Exact);
+        assert_eq!(MemoMode::parse("Quantized").unwrap(), MemoMode::Quantized);
+        assert_eq!(MemoMode::parse("quantised").unwrap(), MemoMode::Quantized);
+        assert!(MemoMode::parse("lossy").is_err());
+        assert_eq!(MemoMode::default().name(), "exact");
+
+        let bundle = TreeBundle::from_trees(model()).unwrap();
+        let q = vec![1000.0, 1000.0];
+        bundle.decide(&q);
+        let bundle = bundle.with_memo_mode(MemoMode::Quantized);
+        bundle.decide(&q);
+        // The pre-switch entry was dropped with the old key space.
+        assert_eq!(bundle.cache_counters().misses(), 1);
+        assert_eq!(bundle.cache_counters().hits(), 0);
     }
 
     #[test]

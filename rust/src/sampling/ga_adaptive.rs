@@ -114,43 +114,41 @@ impl Sampler for GaAdaptive {
         let mut out = Vec::with_capacity(n);
 
         // Lines 6-7: GA exploitation — pick random inputs, optimize the
-        // design dims on the surrogate for each. The per-input GA runs are
-        // independent, so they fan out across the thread pool (the fitted
-        // model is immutable; each run gets a deterministic forked RNG) —
-        // EXPERIMENTS.md §Perf.
+        // design dims on the surrogate for each. All per-input GAs
+        // advance in lockstep through the same fused evaluator as the
+        // stage-3 grid optimizer: one giant surrogate batch per
+        // generation (pre-binned input columns when the compiled forest
+        // allows it) instead of one pop-sized batch per input. Each
+        // point keeps its own deterministic forked RNG stream, so the
+        // points are bit-identical to the old per-input schedule.
         let ga = Nsga2::new(self.params.ga.clone());
         let n_design = d - ctx.n_inputs;
-        let jobs: Vec<(Vec<f64>, Rng)> = (0..n_ga)
-            .map(|_| {
-                let input: Vec<f64> = (0..ctx.n_inputs).map(|_| rng.f64()).collect();
-                (input, rng.fork())
-            })
-            .collect();
-        let points = crate::util::threadpool::par_map(
-            &jobs,
+        // Input draw and fork stay interleaved per point, exactly like
+        // the old per-input schedule, so the main RNG stream (and with
+        // it every downstream sample) is unchanged.
+        let mut inputs: Vec<Vec<f64>> = Vec::with_capacity(n_ga);
+        let mut rngs: Vec<Rng> = Vec::with_capacity(n_ga);
+        for _ in 0..n_ga {
+            inputs.push((0..ctx.n_inputs).map(|_| rng.f64()).collect());
+            rngs.push(rng.fork());
+        }
+        let results = crate::optimizer::grid::lockstep_minimize_points(
+            &model,
+            &ga,
+            n_design,
+            &[],
+            &inputs,
+            &mut rngs,
+            // The sampler optimizes directly in the unit cube: genes are
+            // the design suffix, no decode/snap.
+            &|genes| genes.to_vec(),
             crate::util::threadpool::default_threads(),
-            |_, (input, job_rng)| {
-                // One predict_batch per GA generation (compiled-forest
-                // path) instead of one scalar predict per individual.
-                let f = |population: &[Vec<f64>]| -> Vec<f64> {
-                    let xs: Vec<Vec<f64>> = population
-                        .iter()
-                        .map(|design| {
-                            let mut x = input.clone();
-                            x.extend_from_slice(design);
-                            x
-                        })
-                        .collect();
-                    model.predict_batch(&xs)
-                };
-                let mut r = job_rng.clone();
-                let (best_design, _) = ga.minimize_batch(n_design, &f, &[], &mut r);
-                let mut point = input.clone();
-                point.extend(best_design);
-                point
-            },
         );
-        out.extend(points);
+        for (input, (best_design, _)) in inputs.into_iter().zip(results) {
+            let mut point = input;
+            point.extend(best_design);
+            out.push(point);
+        }
 
         // Line 8: exploration via the sub-sampler.
         if n_sub > 0 {

@@ -63,11 +63,39 @@ const MAX_CUTS: usize = (MISS_CODE - 1) as usize;
 /// large enough to amortize the per-block tree sweep.
 const ROW_BLOCK: usize = 256;
 
-/// Batches below this row count run single-threaded: the GA population
-/// loops call `predict_batch` with ~32-row blocks from *inside* an outer
-/// `par_map` over grid points, where spawning scoped threads per call
-/// would cost more than the traversal itself.
-const PAR_MIN_ROWS: usize = 2048;
+/// Total traversal rows that justify fanning a batch across the pool:
+/// the adaptive parallel threshold is derived as roughly this many rows
+/// divided across the available workers (clamped below).
+const PAR_WORK_ROWS: usize = 32_768;
+
+/// Minimum adaptive batch size before `predict_batch` parallelizes over
+/// row blocks. `MLKAPS_PAR_THRESHOLD` overrides it exactly (any integer
+/// ≥ 1); the default shrinks as the machine widens — a fused lockstep
+/// cohort of ~1k rows is worth splitting on a 64-way box even though it
+/// would not pay for spawns on a laptop — and clamps to the historical
+/// 2048 on ≤ 16 workers so small machines behave exactly as before.
+/// Resolved once per process (this sits on the `predict_batch` hot
+/// path; the environment cannot meaningfully change mid-run).
+pub fn par_min_rows() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        par_threshold(
+            std::env::var("MLKAPS_PAR_THRESHOLD").ok().as_deref(),
+            crate::util::threadpool::default_threads(),
+        )
+    })
+}
+
+/// Parse/derive logic behind [`par_min_rows`] (separated for testing:
+/// mutating real environment variables races parallel test threads).
+fn par_threshold(env: Option<&str>, threads: usize) -> usize {
+    if let Some(v) = env {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    (PAR_WORK_ROWS / threads.max(1)).clamp(2 * ROW_BLOCK, 8 * ROW_BLOCK)
+}
 
 /// How one feature's values are quantized.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -315,14 +343,14 @@ impl CompiledForest {
 
     /// Predict a whole query block, parallelized over row blocks when the
     /// batch is large enough to pay for it. `threads == 0` selects the
-    /// adaptive default (single-threaded under [`PAR_MIN_ROWS`] rows, the
+    /// adaptive default (single-threaded under [`par_min_rows`] rows, the
     /// pool default above it).
     pub fn predict_batch(&self, xs: &[Vec<f64>], threads: usize) -> Vec<f64> {
         if xs.is_empty() {
             return Vec::new();
         }
         let threads = if threads == 0 {
-            if xs.len() < PAR_MIN_ROWS {
+            if xs.len() < par_min_rows() {
                 1
             } else {
                 crate::util::threadpool::default_threads()
@@ -383,11 +411,16 @@ impl CompiledForest {
                 }
             }
         }
+        self.walk_block(&codes[..rows.len() * d], out);
+    }
 
+    /// Traverse one already-quantized block trees-outer / rows-inner
+    /// (`codes` row-major, `n_features` codes per row).
+    fn walk_block(&self, codes: &[u16], out: &mut [f64]) {
+        let d = self.n_features;
         for o in out.iter_mut() {
             *o = self.base_score;
         }
-
         // Trees outer, rows inner: each tree's nodes stream through cache
         // once per block instead of once per row.
         let lr = self.learning_rate;
@@ -413,6 +446,107 @@ impl CompiledForest {
                     i = if go_left { self.left[i] } else { self.right[i] } as usize;
                 }
             }
+        }
+    }
+
+    /// The forest's quantization tables as a caller-usable handle, or
+    /// `None` when the integer-compare fast path is inactive. Callers
+    /// that know part of a row is constant across many queries — the
+    /// fused grid optimizer's per-point input columns, fixed across
+    /// every GA generation — quantize that part **once** through the
+    /// plan and re-code only the varying columns per batch, then score
+    /// via [`CompiledForest::predict_batch_prebinned`].
+    pub fn bin_plan(&self) -> Option<BinPlan<'_>> {
+        self.prebinned.then_some(BinPlan { cuts: &self.cuts })
+    }
+
+    /// Predict rows that the caller already quantized (`codes` row-major,
+    /// [`CompiledForest::n_features`] codes per row, produced by this
+    /// forest's [`BinPlan`]). Bit-identical to [`CompiledForest::predict_batch`]
+    /// on the raw rows the codes came from: both run the same coded walk,
+    /// and [`BinPlan::code`] is the same quantizer the internal block
+    /// path uses. `threads` as in `predict_batch` (0 = adaptive).
+    ///
+    /// Panics when the forest is not pre-binnable (no [`CompiledForest::bin_plan`]).
+    pub fn predict_batch_prebinned(&self, codes: &[u16], threads: usize) -> Vec<f64> {
+        assert!(
+            self.prebinned,
+            "predict_batch_prebinned on a forest without a bin plan"
+        );
+        let d = self.n_features.max(1);
+        assert_eq!(codes.len() % d, 0, "codes must be n_features per row");
+        let n = codes.len() / d;
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = if threads == 0 {
+            if n < par_min_rows() {
+                1
+            } else {
+                crate::util::threadpool::default_threads()
+            }
+        } else {
+            threads
+        };
+
+        if threads <= 1 {
+            let mut out = vec![0.0; n];
+            for (b, chunk) in codes.chunks(ROW_BLOCK * d).enumerate() {
+                let start = b * ROW_BLOCK;
+                let rows = chunk.len() / d;
+                self.walk_block(chunk, &mut out[start..start + rows]);
+            }
+            return out;
+        }
+
+        // Same block discipline as predict_batch: each row is summed
+        // whole on one worker, so the result is thread-count invariant.
+        let blocks: Vec<&[u16]> = codes.chunks(ROW_BLOCK * d).collect();
+        let results = par_map(&blocks, threads, |_, chunk| {
+            let mut out = vec![0.0; chunk.len() / d];
+            self.walk_block(chunk, &mut out);
+            out
+        });
+        let mut out = Vec::with_capacity(n);
+        for r in results {
+            out.extend_from_slice(&r);
+        }
+        out
+    }
+
+    /// Feature count the forest was compiled for (row width).
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+}
+
+/// A borrowed view of a [`CompiledForest`]'s per-feature cut tables for
+/// callers that quantize rows themselves (see
+/// [`CompiledForest::bin_plan`]). Codes produced here are exactly what
+/// the internal block quantizer would produce for the same values.
+pub struct BinPlan<'a> {
+    cuts: &'a [FeatureCuts],
+}
+
+impl BinPlan<'_> {
+    /// Quantize one feature value. Unused features (never split on)
+    /// code to 0, mirroring the internal quantizer; the traversal never
+    /// consults them.
+    #[inline]
+    pub fn code(&self, feat: usize, v: f64) -> u16 {
+        let fc = &self.cuts[feat];
+        if fc.kind == CutKind::Unused {
+            0
+        } else {
+            fc.code(v)
+        }
+    }
+
+    /// Quantize the leading `values.len()` feature columns into `out`
+    /// (e.g. a grid point's constant input prefix, coded once per point).
+    pub fn code_prefix(&self, values: &[f64], out: &mut [u16]) {
+        for (j, (&v, o)) in values.iter().zip(out.iter_mut()).enumerate() {
+            *o = self.code(j, v);
         }
     }
 }
@@ -519,5 +653,56 @@ mod tests {
     #[test]
     fn empty_batch() {
         assert!(toy_forest().predict_batch(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn par_threshold_env_overrides_and_default_scales_with_width() {
+        // Env override wins exactly (with trimming), garbage is ignored.
+        assert_eq!(par_threshold(Some("100"), 16), 100);
+        assert_eq!(par_threshold(Some(" 4096 "), 2), 4096);
+        assert_eq!(par_threshold(Some("0"), 16), 1, "clamped to >= 1");
+        assert_eq!(par_threshold(Some("nope"), 16), par_threshold(None, 16));
+        // Derived default: unchanged 2048 up to 16 workers, then shrinks
+        // so wide machines still parallelize fused cohorts; floored at
+        // two row blocks.
+        assert_eq!(par_threshold(None, 1), 2048);
+        assert_eq!(par_threshold(None, 16), 2048);
+        assert_eq!(par_threshold(None, 32), 1024);
+        assert_eq!(par_threshold(None, 64), 512);
+        assert_eq!(par_threshold(None, 1024), 512);
+    }
+
+    #[test]
+    fn prebinned_codes_reproduce_predict_batch_bits() {
+        let f = toy_forest();
+        let plan = f.bin_plan().expect("toy forest is prebinnable");
+        let qs: Vec<Vec<f64>> = vec![
+            vec![-2.0],
+            vec![-1.0],
+            vec![0.5],
+            vec![0.51],
+            vec![f64::NAN],
+            vec![1e300],
+        ];
+        let mut codes = vec![0u16; qs.len() * f.n_features()];
+        for (r, q) in qs.iter().enumerate() {
+            plan.code_prefix(q, &mut codes[r..r + 1]);
+        }
+        let raw = f.predict_batch(&qs, 1);
+        for threads in [1usize, 3, 0] {
+            let pre = f.predict_batch_prebinned(&codes, threads);
+            for (a, b) in raw.iter().zip(&pre) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+        assert!(f.predict_batch_prebinned(&[], 2).is_empty());
+    }
+
+    #[test]
+    fn non_prebinnable_forest_has_no_plan() {
+        let t0 = vec![split(0, 0, 0.5, 1, 2), leaf(1.0), leaf(2.0)];
+        let t1 = vec![split(0, F_EQ, 0.25, 1, 2), leaf(10.0), leaf(20.0)];
+        let f = CompiledForest::compile(&[t0, t1], 1, 0.0, 1.0);
+        assert!(f.bin_plan().is_none());
     }
 }

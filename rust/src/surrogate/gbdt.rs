@@ -877,6 +877,16 @@ impl Surrogate for Gbdt {
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         self.predict_batch_threads(xs, 0)
     }
+
+    fn predict_batch_with(&self, xs: &[Vec<f64>], threads: usize) -> Vec<f64> {
+        self.predict_batch_threads(xs, threads)
+    }
+
+    /// Expose the compiled engine so the fused lockstep grid optimizer
+    /// can pre-bin query rows (output transform is the identity).
+    fn fused_forest(&self) -> Option<&CompiledForest> {
+        self.compiled()
+    }
 }
 
 #[cfg(test)]

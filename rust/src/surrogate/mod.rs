@@ -33,6 +33,50 @@ pub trait Surrogate: Send + Sync {
     fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict(x)).collect()
     }
+
+    /// [`Surrogate::predict_batch`] with an explicit thread budget
+    /// (0 = adaptive). The fused lockstep grid optimizer scores tens of
+    /// thousands of rows per call and routes the run's `--threads`
+    /// setting through here. Values must be identical at any thread
+    /// count. The default fans row blocks across the pool around
+    /// [`Surrogate::predict_batch`] — rows are independent, so chunking
+    /// cannot change any value — which keeps stage 3 parallel even for
+    /// surrogates with no internally-parallel batch path (the old
+    /// per-point schedule got that parallelism from its outer `par_map`
+    /// over grid points).
+    fn predict_batch_with(&self, xs: &[Vec<f64>], threads: usize) -> Vec<f64> {
+        if threads <= 1 || xs.len() <= 1 {
+            return self.predict_batch(xs);
+        }
+        let blocks: Vec<&[Vec<f64>]> = xs.chunks(256).collect();
+        let results = crate::util::threadpool::par_map(&blocks, threads, |_, chunk| {
+            self.predict_batch(chunk)
+        });
+        let mut out = Vec::with_capacity(xs.len());
+        for r in results {
+            out.extend(r);
+        }
+        out
+    }
+
+    /// Fused-evaluator hook: surrogates backed by a compiled forest
+    /// expose it so batch callers (the lockstep grid optimizer) can
+    /// quantize rows themselves via [`forest::CompiledForest::bin_plan`]
+    /// — constant input columns coded once per grid point — and score
+    /// through [`forest::CompiledForest::predict_batch_prebinned`].
+    /// `None` (the default) means "no fused path; use `predict_batch`".
+    fn fused_forest(&self) -> Option<&forest::CompiledForest> {
+        None
+    }
+
+    /// Elementwise map from [`Surrogate::fused_forest`] raw output to
+    /// this surrogate's objective scale (identity unless wrapped —
+    /// [`LogSurrogate`] composes its `exp` here). Must satisfy
+    /// `predict_batch(rows)[i] == fused_post(forest_output(rows[i]))`
+    /// bit for bit whenever `fused_forest` is `Some`.
+    fn fused_post(&self, v: f64) -> f64 {
+        v
+    }
 }
 
 /// Log-objective adapter: fits the inner model on `ln(y)` and predicts
@@ -77,5 +121,23 @@ impl<S: Surrogate> Surrogate for LogSurrogate<S> {
             *v = v.exp();
         }
         out
+    }
+
+    fn predict_batch_with(&self, xs: &[Vec<f64>], threads: usize) -> Vec<f64> {
+        let mut out = self.inner.predict_batch_with(xs, threads);
+        for v in &mut out {
+            *v = v.exp();
+        }
+        out
+    }
+
+    /// The wrapper is transparent to the fused path: the inner forest
+    /// serves the traversal, and the log transform rides in `fused_post`.
+    fn fused_forest(&self) -> Option<&forest::CompiledForest> {
+        self.inner.fused_forest()
+    }
+
+    fn fused_post(&self, v: f64) -> f64 {
+        self.inner.fused_post(v).exp()
     }
 }

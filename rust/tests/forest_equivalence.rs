@@ -136,6 +136,53 @@ fn prop_deserialized_forest_matches_original_batch() {
 }
 
 #[test]
+fn prop_prebinned_codes_match_raw_batch() {
+    // Caller-side quantization (the fused grid optimizer's bin-plan
+    // path: constant columns coded once, the rest per row) must be
+    // bit-identical to handing predict_batch the raw rows — including
+    // NaN injections, out-of-domain numerics and unseen categories.
+    let mut rng = Rng::new(0x9B1_4_B14);
+    let mut prebinned_trials = 0;
+    for trial in 0..30 {
+        let (model, data) = random_case(&mut rng);
+        let cf = model.compiled().expect("forest compiles after fit");
+        let Some(plan) = cf.bin_plan() else { continue };
+        prebinned_trials += 1;
+        let queries = random_queries(&mut rng, &model, &data, 150);
+        let d = cf.n_features();
+        // Code a "constant prefix" of random width once per row via
+        // code_prefix and the remainder via per-feature code(), exactly
+        // how the lockstep optimizer splits input/design columns.
+        let split = rng.below(d + 1);
+        let mut codes = vec![0u16; queries.len() * d];
+        for (r, q) in queries.iter().enumerate() {
+            let row = &mut codes[r * d..(r + 1) * d];
+            plan.code_prefix(&q[..split], &mut row[..split]);
+            for j in split..d {
+                row[j] = plan.code(j, q[j]);
+            }
+        }
+        let raw = model.predict_batch_threads(&queries, 1);
+        for threads in [1usize, 4, 0] {
+            let pre = cf.predict_batch_prebinned(&codes, threads);
+            assert_eq!(raw.len(), pre.len());
+            for (i, (a, b)) in raw.iter().zip(&pre).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "trial {trial} threads {threads} query {i} ({:?}): \
+                     raw {a} != prebinned {b}",
+                    queries[i]
+                );
+            }
+        }
+    }
+    assert!(
+        prebinned_trials >= 20,
+        "only {prebinned_trials}/30 trials exercised the bin plan"
+    );
+}
+
+#[test]
 fn one_node_constant_trees_are_exact() {
     // Constant target -> every tree is a single constant-fit leaf; the
     // compiled forest must reproduce the exact telescoped sum.

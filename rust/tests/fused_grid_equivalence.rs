@@ -1,0 +1,208 @@
+//! Property suite for the fused lockstep grid optimizer: advancing all
+//! grid points' GAs together and scoring whole generations through one
+//! giant (pre-binned) surrogate batch must be **bit-identical** to the
+//! legacy per-point schedule — same designs, same predicted objectives,
+//! at any thread count, under any shard split, and across a mid-shard
+//! kill/resume of the checkpointed pipeline.
+//!
+//! Exactness (assert_eq on f64 bits, no epsilon) is the contract that
+//! lets stage-3 checkpoints written by either engine resume
+//! interchangeably and keeps every golden artifact unchanged.
+
+use std::path::PathBuf;
+
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::data::Dataset;
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::kernels::Kernel;
+use mlkaps::optimizer::grid::{optimize_grid_shard, optimize_grid_shard_per_point};
+use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
+use mlkaps::pipeline::checkpoint::{copy_checkpoints, PipelineRun};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::surrogate::{LogSurrogate, Surrogate};
+use mlkaps::util::rng::Rng;
+
+/// Build a random tuning-shaped problem: input/design spaces with mixed
+/// parameter kinds and a log-objective GBDT surrogate fit on noisy data
+/// over the joint space — i.e. exactly what stage 3 consumes.
+fn random_case(rng: &mut Rng) -> (ParamSpace, ParamSpace, LogSurrogate<Gbdt>) {
+    let input = if rng.bool(0.5) {
+        ParamSpace::new(vec![ParamDef::float("n", 64.0, 8192.0)])
+    } else {
+        ParamSpace::new(vec![
+            ParamDef::float("n", 64.0, 8192.0),
+            ParamDef::float("m", 64.0, 8192.0),
+        ])
+    };
+    let mut design_params = vec![ParamDef::float("t", 0.0, 1.0)];
+    if rng.bool(0.7) {
+        design_params.push(ParamDef::int("nb", 1, 64));
+    }
+    if rng.bool(0.5) {
+        design_params.push(ParamDef::categorical("variant", &["a", "b", "c"]));
+    }
+    let design = ParamSpace::new(design_params);
+
+    let d = input.dim() + design.dim();
+    let n = 150 + rng.below(150);
+    let mut data = Dataset::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, 8192.0)).collect();
+        let y = 1.0
+            + (x[0] * 1e-3).abs()
+            + x.iter().skip(1).map(|v| (v * 0.7e-3).sin().abs()).sum::<f64>()
+            + rng.uniform(0.0, 0.2);
+        data.push(x, y);
+    }
+    let mut surrogate = LogSurrogate::new(Gbdt::new(GbdtParams {
+        n_trees: 10 + rng.below(40),
+        seed: rng.next_u64(),
+        ..Default::default()
+    }));
+    surrogate.fit(&data);
+    (input, design, surrogate)
+}
+
+#[test]
+fn prop_fused_lockstep_equals_per_point_bit_for_bit() {
+    let mut rng = Rng::new(0xF0_5ED);
+    let mut prebinned_cases = 0;
+    for trial in 0..8 {
+        let (input, design, surrogate) = random_case(&mut rng);
+        // Most fitted forests must actually exercise the pre-binned
+        // fused path, not just the raw fallback.
+        if surrogate.fused_forest().is_some_and(|cf| cf.bin_plan().is_some()) {
+            prebinned_cases += 1;
+        }
+        let inputs = input.grid(4);
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 8 + rng.below(12),
+            generations: 4 + rng.below(8),
+            ..Default::default()
+        });
+        let seed = rng.next_u64();
+        let base = rng.below(100);
+        let (d_ref, p_ref) = optimize_grid_shard_per_point(
+            &surrogate, &design, &inputs, base, &ga, &[], 2, seed,
+        );
+        for threads in [1usize, 2, 8] {
+            let (d, p) =
+                optimize_grid_shard(&surrogate, &design, &inputs, base, &ga, &[], threads, seed);
+            assert_eq!(d, d_ref, "trial {trial} threads {threads}: designs diverge");
+            assert_eq!(
+                p.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} threads {threads}: predictions diverge"
+            );
+        }
+
+        // Shard-split invariance: computing the same global index range
+        // in uneven pieces (what a mid-stage resume does) must
+        // reassemble to the identical result.
+        let cut = 1 + rng.below(inputs.len() - 1);
+        let (mut d_split, d_tail) = {
+            let (a, _) = optimize_grid_shard(
+                &surrogate, &design, &inputs[..cut], base, &ga, &[], 4, seed,
+            );
+            let (b, _) = optimize_grid_shard(
+                &surrogate, &design, &inputs[cut..], base + cut, &ga, &[], 1, seed,
+            );
+            (a, b)
+        };
+        d_split.extend(d_tail);
+        assert_eq!(d_split, d_ref, "trial {trial}: shard split changed designs");
+    }
+    assert!(prebinned_cases >= 6, "only {prebinned_cases}/8 cases were prebinned");
+}
+
+fn tiny_config(seed: u64) -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 150,
+        batch_size: 75,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 25, ..Default::default() },
+        ga: Nsga2Params { pop_size: 10, generations: 6, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlkaps_fused_eq_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn mid_shard_kill_resume_produces_byte_identical_stage3() {
+    // An uninterrupted fused run vs one killed mid-stage-3 (only the
+    // first shard survived) and resumed with a different thread count:
+    // the assembled stage-3 artifact must be byte-identical, and both
+    // must agree with the per-point reference on every grid design.
+    let dir_full = tmp_dir("full");
+    let dir_killed = tmp_dir("killed");
+
+    let mut run_full = PipelineRun::new(tiny_config(60), dir_full.clone());
+    run_full.shard_size = 6; // 4^2 grid -> shards of 6, 6, 4
+    let uninterrupted = run_full.run(&ToySum::new(60)).unwrap();
+
+    copy_checkpoints(&dir_full, &dir_killed).unwrap();
+    // The "kill": assembled grid, trees, and all but the first shard
+    // are lost mid-stage.
+    for f in [
+        "stage3_grid.json",
+        "stage3_shard_0001.json",
+        "stage3_shard_0002.json",
+        "stage4_trees.json",
+    ] {
+        std::fs::remove_file(dir_killed.join(f)).unwrap();
+    }
+    let mut resumed_run = PipelineRun::new(
+        MlkapsConfig { threads: 4, ..tiny_config(60) },
+        dir_killed.clone(),
+    );
+    resumed_run.shard_size = 6;
+    let resumed = resumed_run.run(&ToySum::new(60)).unwrap();
+
+    assert_eq!(resumed.model.grid.designs, uninterrupted.model.grid.designs);
+    assert_eq!(resumed.model.grid.predicted, uninterrupted.model.grid.predicted);
+    let full_bytes = std::fs::read(dir_full.join("stage3_grid.json")).unwrap();
+    let resumed_bytes = std::fs::read(dir_killed.join("stage3_grid.json")).unwrap();
+    assert_eq!(full_bytes, resumed_bytes, "stage3 bytes diverge across resume");
+
+    // Cross-check the fused engine against the per-point reference on
+    // the very surrogate the pipeline fit (same GA settings; a fresh
+    // seed is fine — equivalence must hold for any seed).
+    let kernel = ToySum::new(60);
+    let inputs = kernel.input_space().grid(4);
+    let ga = Nsga2::new(tiny_config(60).ga);
+    let (d_fused, p_fused) = optimize_grid_shard(
+        &uninterrupted.model.surrogate,
+        kernel.design_space(),
+        &inputs,
+        0,
+        &ga,
+        &[],
+        2,
+        4242,
+    );
+    let (d_ref, p_ref) = optimize_grid_shard_per_point(
+        &uninterrupted.model.surrogate,
+        kernel.design_space(),
+        &inputs,
+        0,
+        &ga,
+        &[],
+        2,
+        4242,
+    );
+    assert_eq!(d_fused, d_ref);
+    assert_eq!(p_fused, p_ref);
+
+    std::fs::remove_dir_all(&dir_full).ok();
+    std::fs::remove_dir_all(&dir_killed).ok();
+}

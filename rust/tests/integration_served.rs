@@ -64,6 +64,7 @@ fn daemon_config() -> DaemonConfig {
         poll_interval: Duration::from_millis(25),
         threads: 1,
         queue_capacity: 1024,
+        ..Default::default()
     }
 }
 
@@ -292,6 +293,110 @@ fn hot_reload_under_load_drops_nothing_and_serves_both_epochs() {
     for d in [&staging_a, &staging_b, &watch] {
         std::fs::remove_dir_all(d).ok();
     }
+}
+
+#[test]
+fn drain_verb_answers_in_flight_then_exits_cleanly() {
+    let dir = tmp_dir("drain");
+    let reference = tune_into(&dir, 72);
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&dir, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+    let addr = daemon.local_addr();
+
+    // A second connection with a request in flight while DRAIN lands on
+    // the first: the decide must still be answered normally.
+    let mut worker = ServedClient::connect(addr).unwrap();
+    let q = vec![1500.0, 2500.0];
+    let d = worker.decide("toy-sum", &q, None).unwrap();
+    assert_eq!(d.values, reference.decide(&q));
+
+    let mut control = ServedClient::connect(addr).unwrap();
+    control.drain().unwrap();
+
+    // The daemon's threads must all exit on their own (DRAIN, not drop).
+    daemon.wait();
+
+    // Post-drain, the endpoint is gone: connects fail outright or are
+    // closed without service.
+    let refused = match TcpStream::connect_timeout(&addr, Duration::from_secs(2)) {
+        Err(_) => true,
+        Ok(mut s) => {
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            s.write_all(b"PING\n").ok();
+            let mut buf = String::new();
+            // EOF (0 bytes) or an error both mean "no longer serving".
+            matches!(BufReader::new(&mut s).read_line(&mut buf), Ok(0) | Err(_))
+        }
+    };
+    assert!(refused, "daemon still serving after DRAIN");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stalled_connections_are_disconnected_by_the_read_timeout() {
+    let dir = tmp_dir("timeout");
+    tune_into(&dir, 73);
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&dir, None).unwrap();
+    let cfg = DaemonConfig {
+        read_timeout: Duration::from_millis(100),
+        ..daemon_config()
+    };
+    let mut daemon = Daemon::start(reg, cfg).unwrap();
+    let addr = daemon.local_addr();
+
+    // Open a connection, send half a request line, then stall: the
+    // daemon must hang up instead of holding the thread forever.
+    let mut stalled = TcpStream::connect(addr).unwrap();
+    stalled.write_all(b"{\"kernel\":\"toy-sum\"").unwrap();
+    stalled.flush().unwrap();
+    stalled.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let hung_up = matches!(std::io::Read::read_to_end(&mut stalled, &mut buf), Ok(_));
+    assert!(hung_up, "expected EOF from the daemon's read timeout");
+
+    // The daemon is unaffected: a well-behaved client still gets served.
+    let mut client = ServedClient::connect(addr).unwrap();
+    client.ping().unwrap();
+    client.shutdown().unwrap();
+    daemon.wait();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_memo_mode_survives_registration_and_reports_in_stats() {
+    let dir = tmp_dir("memo_quant");
+    let reference = tune_into(&dir, 74);
+
+    let mut reg = ServedRegistry::new(None);
+    reg.set_memo_mode(mlkaps::runtime::serving::MemoMode::Quantized);
+    reg.register_dir(&dir, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+
+    let mut client = ServedClient::connect(daemon.local_addr()).unwrap();
+    // Sequential singleton requests take the memoized scalar path; the
+    // second, bit-identical input must hit.
+    let q = vec![3000.0, 4000.0];
+    let a = client.decide("toy-sum", &q, None).unwrap();
+    let b = client.decide("toy-sum", &q, None).unwrap();
+    assert_eq!(a.values, b.values);
+    assert_eq!(a.values, reference.decide(&q));
+
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    assert_eq!(k.get("cache_mode").and_then(Value::as_str), Some("quantized"));
+    let hits = k.get("cache_hits").and_then(Value::as_usize).unwrap();
+    let exact = k.get("cache_hits_exact").and_then(Value::as_usize).unwrap();
+    let quant = k.get("cache_hits_quantized").and_then(Value::as_usize).unwrap();
+    assert!(hits >= 1, "repeat input must hit the memo cache");
+    assert_eq!(exact + quant, hits, "split telemetry must sum to hits");
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
