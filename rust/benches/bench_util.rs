@@ -46,9 +46,24 @@ pub fn budget3(paper: usize, fast: usize, smoke: usize) -> usize {
     }
 }
 
-/// Where CSV/JSON results land.
+/// Where CSV/JSON results land: `<package root>/results`, i.e.
+/// `rust/results/` — the exact directory the CI artifact globs
+/// (`rust/results/*.csv`, `if-no-files-found: error`) and the
+/// bench-regression comparator (`rust/results/baseline/`) read.
+///
+/// Anchored on the manifest dir rather than the cwd: `cargo bench` runs
+/// bench binaries with cwd = package root, where a bare `results/`
+/// happens to work, but invoking the built binary directly (e.g.
+/// `target/release/deps/serving_throughput-* --smoke`, or a CI step
+/// with a repo-root working-directory) would otherwise scatter CSVs
+/// wherever the caller stands and brick the `if-no-files-found: error`
+/// upload. The runtime `CARGO_MANIFEST_DIR` wins when cargo is the
+/// invoker; the compile-time path is the fallback for bare binaries.
 pub fn results_dir() -> PathBuf {
-    PathBuf::from("results")
+    match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(d) => PathBuf::from(d).join("results"),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"),
+    }
 }
 
 /// Print the standard bench header (incl. the Fig 5 hardware table).

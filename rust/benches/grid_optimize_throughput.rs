@@ -1,15 +1,16 @@
-//! Stage-3 throughput: fused lockstep grid optimization vs the legacy
-//! per-point schedule, in grid points per second. This is the perf
-//! datapoint for the lockstep engine (README §Performance): the fused
-//! schedule scores every point's GA generation through one giant
-//! pre-binned `predict_batch`, finally reaching the compiled forest's
-//! blocked/parallel fast path that per-point pop-sized batches never
-//! touched.
+//! Stage-3 throughput: fused grid optimization vs the legacy per-point
+//! schedule, in grid points per second — with the fused schedule
+//! measured over both forest layouts: the branchy blocked walk and the
+//! branch-free oblivious lockstep walk. This is the perf datapoint for
+//! the lockstep engine (README §Performance): the fused schedule scores
+//! every point's GA generation through one giant pre-binned
+//! `predict_batch_prebinned`, and the oblivious overlay turns that
+//! batch into fixed-trip-count SIMD-friendly lane walks.
 //!
 //! Run: `cargo bench --bench grid_optimize_throughput [-- --full | -- --smoke]`
 //! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
-//! CI asserts the fused schedule ≥ the per-point baseline in points/sec,
-//! and that both schedules produce bit-identical results.
+//! CI asserts fused ≥ per-point and lockstep ≥ blocked in points/sec,
+//! and that all three schedules produce bit-identical results.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -22,6 +23,7 @@ use mlkaps::data::Dataset;
 use mlkaps::optimizer::grid::{optimize_grid_shard, optimize_grid_shard_per_point};
 use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
 use mlkaps::report;
+use mlkaps::surrogate::forest::Traversal;
 use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
 use mlkaps::surrogate::{LogSurrogate, Surrogate};
 use mlkaps::util::rng::Rng;
@@ -42,7 +44,7 @@ fn med_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
 fn main() {
     header(
         "grid_optimize_throughput",
-        "stage-3 grid points/sec: fused lockstep vs legacy per-point GA",
+        "stage-3 grid points/sec: per-point vs fused blocked vs fused lockstep",
     );
     // Smoke uses an 8x8 grid so the fused batch (64 points x pop 32 =
     // 2048 rows/generation) reaches the parallel traversal threshold —
@@ -99,27 +101,51 @@ fn main() {
     });
 
     // Smoke timings are sub-second on shared CI runners; median of 5
-    // (vs 3) keeps the gate below from tripping on scheduler noise.
+    // (vs 3) keeps the gates below from tripping on scheduler noise.
     let reps = if smoke_mode() { 5 } else { 3 };
+
+    // Phase 1: the branchy blocked layout — the per-point legacy
+    // baseline and the fused schedule on the pre-lockstep engine.
+    surrogate.inner.set_forest_traversal(Traversal::Blocked);
+    assert!(
+        surrogate.fused_forest().is_some_and(|cf| !cf.is_lockstep()),
+        "blocked phase must run without the overlay"
+    );
     let legacy_secs = med_secs(reps, || {
         optimize_grid_shard_per_point(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9)
     });
-    let fused_secs = med_secs(reps, || {
+    let blocked_secs = med_secs(reps, || {
         optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9)
     });
-
-    // Correctness trail: the two schedules must agree bit for bit.
     let (d_legacy, p_legacy) =
         optimize_grid_shard_per_point(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9);
-    let (d_fused, p_fused) =
+    let (d_blocked, p_blocked) =
         optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9);
-    assert_eq!(d_fused, d_legacy, "fused designs diverged from per-point");
-    for (a, b) in p_fused.iter().zip(&p_legacy) {
-        assert_eq!(a.to_bits(), b.to_bits(), "fused predictions diverged");
+
+    // Phase 2: same fused schedule, branch-free oblivious overlay armed.
+    surrogate.inner.set_forest_traversal(Traversal::Lockstep);
+    assert!(
+        surrogate.fused_forest().is_some_and(|cf| cf.is_lockstep()),
+        "lockstep phase must arm the overlay"
+    );
+    let lockstep_secs = med_secs(reps, || {
+        optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9)
+    });
+    let (d_lockstep, p_lockstep) =
+        optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, 9);
+
+    // Correctness trail: all three schedules must agree bit for bit.
+    assert_eq!(d_blocked, d_legacy, "fused blocked designs diverged from per-point");
+    assert_eq!(d_lockstep, d_legacy, "fused lockstep designs diverged from per-point");
+    for (a, b) in p_blocked.iter().zip(&p_legacy) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fused blocked predictions diverged");
+    }
+    for (a, b) in p_lockstep.iter().zip(&p_legacy) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fused lockstep predictions diverged");
     }
 
     let pps = |secs: f64| n_points as f64 / secs.max(1e-12);
-    let speedup = legacy_secs / fused_secs.max(1e-12);
+    let speedup = |secs: f64| legacy_secs / secs.max(1e-12);
     let rows = vec![
         vec![
             "per_point".to_string(),
@@ -129,11 +155,18 @@ fn main() {
             String::from("1.00"),
         ],
         vec![
+            "fused_blocked".to_string(),
+            n_points.to_string(),
+            format!("{blocked_secs:.4}"),
+            format!("{:.1}", pps(blocked_secs)),
+            format!("{:.2}", speedup(blocked_secs)),
+        ],
+        vec![
             "fused_lockstep".to_string(),
             n_points.to_string(),
-            format!("{fused_secs:.4}"),
-            format!("{:.1}", pps(fused_secs)),
-            format!("{speedup:.2}"),
+            format!("{lockstep_secs:.4}"),
+            format!("{:.1}", pps(lockstep_secs)),
+            format!("{:.2}", speedup(lockstep_secs)),
         ],
     ];
     println!(
@@ -149,20 +182,36 @@ fn main() {
         &rows,
     );
 
-    // The acceptance gate: the fused lockstep schedule must not lose to
-    // the per-point baseline it replaced. Smoke mode allows 5% for
-    // timing noise (sub-second runs on shared CI hardware, and the two
+    // The acceptance gates: the fused schedule must not lose to the
+    // per-point baseline it replaced, and the lockstep layout must not
+    // lose to the blocked one it replaced. Smoke mode allows 5% for
+    // timing noise (sub-second runs on shared CI hardware, and the
     // schedules are not 5x-separated like the serving gates); fast and
     // full modes gate strictly.
     let floor = if smoke_mode() { 0.95 } else { 1.0 };
     assert!(
-        pps(fused_secs) >= pps(legacy_secs) * floor,
+        pps(blocked_secs) >= pps(legacy_secs) * floor,
+        "fused blocked ({:.1} points/s) slower than per-point ({:.1} points/s)",
+        pps(blocked_secs),
+        pps(legacy_secs)
+    );
+    assert!(
+        pps(lockstep_secs) >= pps(blocked_secs) * floor,
+        "fused lockstep ({:.1} points/s) slower than fused blocked ({:.1} points/s)",
+        pps(lockstep_secs),
+        pps(blocked_secs)
+    );
+    assert!(
+        pps(lockstep_secs) >= pps(legacy_secs) * floor,
         "fused lockstep ({:.1} points/s) slower than per-point ({:.1} points/s)",
-        pps(fused_secs),
+        pps(lockstep_secs),
         pps(legacy_secs)
     );
     println!(
-        "(gate: fused >= legacy points/sec; fused x{speedup:.2} at {threads} threads, \
-         {n_points} points, pop 32 x {generations} generations)"
+        "(gates: fused >= per-point, lockstep >= blocked points/sec; blocked x{:.2}, \
+         lockstep x{:.2} at {threads} threads, {n_points} points, pop 32 x {generations} \
+         generations)",
+        speedup(blocked_secs),
+        speedup(lockstep_secs)
     );
 }

@@ -1,13 +1,16 @@
 //! Serving throughput: decisions/sec of the deployed decision-tree
 //! runtime — pointer-walk `DesignTrees::predict` baseline vs the
-//! flattened-arena scalar `decide`, the memoized hot path, and blocked
-//! `decide_batch` at 1 thread and adaptive threads. This is the perf
-//! datapoint for the serving layer (README §Serving): the selector must
-//! cost nothing next to the kernel it configures.
+//! flattened-arena scalar `decide`, the memoized hot path, and batched
+//! `decide_batch` at 1 thread and adaptive threads, with the branchy
+//! blocked dispatch and the branch-free oblivious lockstep walk measured
+//! side by side. This is the perf datapoint for the serving layer
+//! (README §Serving): the selector must cost nothing next to the kernel
+//! it configures.
 //!
 //! Run: `cargo bench --bench serving_throughput [-- --full | -- --smoke]`
 //! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
-//! CI asserts batched dispatch ≥ the scalar baseline in decisions/sec.
+//! CI asserts batched dispatch ≥ the scalar baseline and the lockstep
+//! walk ≥ the blocked walk in decisions/sec.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -19,6 +22,7 @@ use mlkaps::config::space::{ParamDef, ParamSpace};
 use mlkaps::dtree::DesignTrees;
 use mlkaps::report;
 use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::surrogate::forest::Traversal;
 use mlkaps::util::rng::Rng;
 
 /// Median-of-reps wall time of `f`. Five reps (vs the usual three)
@@ -39,7 +43,7 @@ fn med_secs<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
 fn main() {
     header(
         "serving_throughput",
-        "decision-tree serving: scalar vs memoized vs batched decisions/sec",
+        "decision-tree serving: scalar vs memoized vs blocked vs lockstep decisions/sec",
     );
     let per_dim = budget3(64, 48, 16);
     let n_query = budget3(2_000_000, 300_000, 50_000);
@@ -74,9 +78,15 @@ fn main() {
         })
         .collect();
     let trees = DesignTrees::fit(&grid, &designs, &input, &design, 8);
-    let bundle = TreeBundle::from_trees(trees.clone()).unwrap();
+    let mut bundle = TreeBundle::from_trees(trees.clone()).unwrap();
+    // Pin the layout explicitly: the lockstep-vs-blocked comparison must
+    // not silently degenerate if the ambient MLKAPS_FOREST_TRAVERSAL is
+    // set to `blocked`.
+    bundle.set_traversal(Traversal::Lockstep);
+    assert!(bundle.lockstep_active(), "depth-8 CARTs must arm the overlay");
+    let bundle = bundle;
     println!(
-        "bundle: {} trees, {} nodes, {} arena bytes",
+        "bundle: {} trees, {} nodes, {} arena bytes (incl. oblivious overlay)",
         trees.trees.len(),
         trees.total_nodes(),
         bundle.mem_bytes()
@@ -112,11 +122,24 @@ fn main() {
         }
         acc
     });
+    // The branchy per-row dispatch (the pre-lockstep engine) vs the
+    // branch-free lockstep walk, both at 1 thread and adaptive threads.
+    let blocked1_secs = med_secs(5, || bundle.decide_batch_blocked(&queries, 1));
+    let blocked_secs = med_secs(5, || bundle.decide_batch_blocked(&queries, 0));
     let batch1_secs = med_secs(5, || bundle.decide_batch(&queries, 1));
     let batch_secs = med_secs(5, || bundle.decide_batch(&queries, 0));
 
     let dps = |secs: f64| n_query as f64 / secs.max(1e-12);
     let speedup = |secs: f64| walk_secs / secs.max(1e-12);
+    let row = |phase: &str, secs: f64| {
+        vec![
+            phase.to_string(),
+            n_query.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.0}", dps(secs)),
+            format!("{:.2}", speedup(secs)),
+        ]
+    };
     let rows = vec![
         vec![
             "predict_walk".to_string(),
@@ -125,34 +148,12 @@ fn main() {
             format!("{:.0}", dps(walk_secs)),
             String::from("1.00"),
         ],
-        vec![
-            "decide_scalar".to_string(),
-            n_query.to_string(),
-            format!("{scalar_secs:.4}"),
-            format!("{:.0}", dps(scalar_secs)),
-            format!("{:.2}", speedup(scalar_secs)),
-        ],
-        vec![
-            "decide_memoized".to_string(),
-            n_query.to_string(),
-            format!("{cached_secs:.4}"),
-            format!("{:.0}", dps(cached_secs)),
-            format!("{:.2}", speedup(cached_secs)),
-        ],
-        vec![
-            "decide_batch_1t".to_string(),
-            n_query.to_string(),
-            format!("{batch1_secs:.4}"),
-            format!("{:.0}", dps(batch1_secs)),
-            format!("{:.2}", speedup(batch1_secs)),
-        ],
-        vec![
-            "decide_batch".to_string(),
-            n_query.to_string(),
-            format!("{batch_secs:.4}"),
-            format!("{:.0}", dps(batch_secs)),
-            format!("{:.2}", speedup(batch_secs)),
-        ],
+        row("decide_scalar", scalar_secs),
+        row("decide_memoized", cached_secs),
+        row("decide_batch_blocked_1t", blocked1_secs),
+        row("decide_batch_blocked", blocked_secs),
+        row("decide_batch_1t", batch1_secs),
+        row("decide_batch", batch_secs),
     ];
     println!(
         "{}",
@@ -171,19 +172,28 @@ fn main() {
         100.0 * c.hit_rate()
     );
 
-    // Correctness trail: batched dispatch must be bit-identical to the
-    // model walk on a probe sample, at 1 and several threads.
+    // Correctness trail: batched dispatch — lockstep and blocked — must
+    // be bit-identical to the model walk on a probe sample, at 1 and
+    // several threads.
     let probe: Vec<Vec<f64>> = queries.iter().take(512).cloned().collect();
     let want: Vec<Vec<f64>> = probe.iter().map(|q| trees.predict(q)).collect();
     for threads in [1usize, 4] {
         assert_eq!(
             bundle.decide_batch(&probe, threads),
             want,
-            "batch/scalar drift at threads={threads}"
+            "lockstep batch/scalar drift at threads={threads}"
+        );
+        assert_eq!(
+            bundle.decide_batch_blocked(&probe, threads),
+            want,
+            "blocked batch/scalar drift at threads={threads}"
         );
     }
-    // The acceptance gate: batched dispatch must not lose to the scalar
-    // paths in decisions/sec.
+    // The acceptance gates: batched dispatch must not lose to the scalar
+    // paths, and the lockstep walk must not lose to the blocked walk it
+    // replaced. Smoke budgets measure milliseconds on shared runners, so
+    // the lockstep-vs-blocked gate gets a 5% noise floor there; fast and
+    // full modes enforce it strictly.
     assert!(
         dps(batch_secs) >= dps(walk_secs),
         "batched serving slower than the pointer walk: {:.0} < {:.0} dec/s",
@@ -196,9 +206,23 @@ fn main() {
         dps(batch_secs),
         dps(scalar_secs)
     );
+    let floor = if smoke_mode() { 0.95 } else { 1.0 };
+    assert!(
+        dps(batch1_secs) >= dps(blocked1_secs) * floor,
+        "lockstep slower than blocked at 1 thread: {:.0} < {:.0} dec/s",
+        dps(batch1_secs),
+        dps(blocked1_secs)
+    );
+    assert!(
+        dps(batch_secs) >= dps(blocked_secs) * floor,
+        "lockstep slower than blocked at adaptive threads: {:.0} < {:.0} dec/s",
+        dps(batch_secs),
+        dps(blocked_secs)
+    );
     println!(
-        "(gate: batch x{:.2} vs walk, x{:.2} vs scalar decide — both must be >= 1)",
+        "(gates: batch x{:.2} vs walk, x{:.2} vs scalar, lockstep x{:.2} vs blocked — all >= 1)",
         dps(batch_secs) / dps(walk_secs),
-        dps(batch_secs) / dps(scalar_secs)
+        dps(batch_secs) / dps(scalar_secs),
+        dps(batch_secs) / dps(blocked_secs)
     );
 }

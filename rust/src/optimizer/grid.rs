@@ -14,7 +14,12 @@
 //! exposes a pre-binnable compiled forest, by
 //! [`predict_batch_prebinned`] over u16 codes, with each point's
 //! constant input columns quantized **once** per point and only the
-//! design columns re-coded per generation.
+//! design columns re-coded per generation. Those giant prebinned
+//! batches are exactly what the forest's branch-free oblivious
+//! traversal was built for: when the overlay is armed (the default —
+//! see [`crate::surrogate::forest::Traversal`]) every generation's
+//! matrix is walked 16 rows per tree in lockstep with no exit branch,
+//! with zero changes here — the codes path is the same either way.
 //!
 //! The schedule is a pure reordering: every point still runs its own
 //! [`Nsga2Run`] state machine on its own globally-seeded RNG stream, and

@@ -18,6 +18,15 @@
 //!   pay for it. Rows are independent pure functions of the input, so
 //!   the batch output is **bit-identical** to scalar [`TreeBundle::decide`]
 //!   at any thread count (pinned by `tests/integration_serving.rs`).
+//!   Inside a block the walk is the branch-free **oblivious lockstep**
+//!   one whenever [`Traversal`] arms it (the default): leaves self-loop
+//!   so [`LANES`] rows advance per tree through a fixed trip count with
+//!   no exit branch — the same overlay the surrogate's
+//!   [`crate::surrogate::forest::CompiledForest`] builds, here over raw
+//!   f64 compares (`(x <= t) as u32` is a single branchless setcc, and
+//!   NaN comparing false routes right exactly like the branchy walk).
+//!   [`TreeBundle::decide_batch_blocked`] keeps the per-row branchy
+//!   dispatch as the equivalence oracle and bench baseline.
 //! * **Input memo cache** — kernels are typically re-invoked with the
 //!   same shapes; a small fixed-size cache short-circuits repeated
 //!   `decide` calls, with hit/miss counters via
@@ -46,6 +55,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::space::ParamSpace;
 use crate::dtree::{Cart, CartNode, DesignTrees};
 use crate::pipeline::checkpoint;
+use crate::surrogate::forest::{max_depths, traversal_default, Traversal, LANES};
 use crate::util::hash::fnv1a_u64s;
 use crate::util::telemetry::HitCounters;
 use crate::util::threadpool::{default_threads, par_map};
@@ -64,6 +74,12 @@ const ROW_BLOCK: usize = 256;
 /// Batches below this row count stay single-threaded: spawning scoped
 /// workers costs more than walking a few depth-8 trees.
 const PAR_MIN_ROWS: usize = 2048;
+
+/// `Traversal::Auto` declines the serving overlay beyond this tree
+/// depth, for the same reason as the forest engine: the lockstep walk
+/// pays every tree's worst path for every row. CART trees from the
+/// pipeline are depth-capped far below this.
+const OBLIVIOUS_MAX_DEPTH: u32 = 64;
 
 /// Default memo-cache capacity (total entries across all sets).
 pub const DEFAULT_CACHE_SLOTS: usize = 512;
@@ -86,6 +102,23 @@ struct CompiledTrees {
     right: Vec<u32>,
     /// Root offset of each design parameter's tree.
     roots: Vec<u32>,
+    /// Branch-free lockstep overlay (None = per-row branchy dispatch).
+    /// Same self-looping-leaf construction as the forest engine's; the
+    /// compare here stays on raw f64 — `(x <= t) as u32` is already a
+    /// single branchless setcc, and NaN comparing false routes right
+    /// exactly like [`CompiledTrees::predict_tree`].
+    oblivious: Option<ObliviousTrees>,
+}
+
+/// The overlay's rewritten link arrays (leaves self-loop, gather feature
+/// 0) plus the per-tree fixed trip count. See
+/// [`crate::surrogate::forest`] for the layout rationale.
+#[derive(Clone, Debug)]
+struct ObliviousTrees {
+    feat: Vec<u32>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    depth: Vec<u32>,
 }
 
 impl CompiledTrees {
@@ -116,7 +149,83 @@ impl CompiledTrees {
                 }
             }
         }
-        CompiledTrees { feat, value, left, right, roots }
+        let mut compiled =
+            CompiledTrees { feat, value, left, right, roots, oblivious: None };
+        compiled.set_traversal(traversal_default());
+        compiled
+    }
+
+    /// Re-arm the batched traversal (the scalar [`CompiledTrees::decide_raw`]
+    /// path is unaffected). Mirrors `CompiledForest::set_traversal`.
+    fn set_traversal(&mut self, t: Traversal) {
+        self.oblivious = match t {
+            Traversal::Blocked => None,
+            Traversal::Auto => self.build_oblivious(OBLIVIOUS_MAX_DEPTH),
+            Traversal::Lockstep => self.build_oblivious(u32::MAX),
+        };
+    }
+
+    /// Self-looping leaf overlay, or None when some tree exceeds the cap.
+    fn build_oblivious(&self, depth_cap: u32) -> Option<ObliviousTrees> {
+        let depth = max_depths(&self.feat, &self.left, &self.right, &self.roots, LEAF);
+        if depth.iter().any(|&d| d > depth_cap) {
+            return None;
+        }
+        let n = self.feat.len();
+        let mut feat = Vec::with_capacity(n);
+        let mut left = Vec::with_capacity(n);
+        let mut right = Vec::with_capacity(n);
+        for i in 0..n {
+            if self.feat[i] == LEAF {
+                feat.push(0);
+                left.push(i as u32);
+                right.push(i as u32);
+            } else {
+                feat.push(self.feat[i]);
+                left.push(self.left[i]);
+                right.push(self.right[i]);
+            }
+        }
+        Some(ObliviousTrees { feat, left, right, depth })
+    }
+
+    /// Branch-free lockstep decisions for one row block: trees-outer,
+    /// [`LANES`] rows advancing together through a fixed trip count (the
+    /// sub-`LANES` tail reuses the branchy per-row walk). Writes the raw
+    /// (unsnapped) outputs row-major into `raw` (`rows.len() × k`, where
+    /// `k` is the design-parameter count). Each cell is the same leaf
+    /// [`CompiledTrees::predict_tree`] reaches, so downstream snapping is
+    /// bit-identical to the scalar path.
+    fn decide_raw_block_lockstep(
+        &self,
+        obl: &ObliviousTrees,
+        rows: &[Vec<f64>],
+        raw: &mut [f64],
+    ) {
+        let k = self.roots.len();
+        debug_assert_eq!(raw.len(), rows.len() * k);
+        for (t, &root) in self.roots.iter().enumerate() {
+            let depth = obl.depth[t];
+            let mut r = 0;
+            while r + LANES <= rows.len() {
+                let mut idx = [root; LANES];
+                for _ in 0..depth {
+                    for l in 0..LANES {
+                        let i = idx[l] as usize;
+                        let go_left =
+                            (rows[r + l][obl.feat[i] as usize] <= self.value[i]) as u32;
+                        idx[l] = go_left * obl.left[i] + (1 - go_left) * obl.right[i];
+                    }
+                }
+                for l in 0..LANES {
+                    raw[(r + l) * k + t] = self.value[idx[l] as usize];
+                }
+                r += LANES;
+            }
+            for rr in r..rows.len() {
+                raw[rr * k + t] = self.predict_tree(root, &rows[rr]);
+            }
+        }
     }
 
     /// Walk one tree. The comparison is exactly [`Cart::predict`]'s
@@ -140,13 +249,21 @@ impl CompiledTrees {
         self.roots.iter().map(|&r| self.predict_tree(r, x)).collect()
     }
 
-    /// Approximate heap bytes of the flattened arrays (telemetry).
+    /// Approximate heap bytes of the flattened arrays (telemetry),
+    /// including the oblivious overlay when armed (12 bytes per node
+    /// plus 4 per tree — the padding's whole memory cost).
     fn mem_bytes(&self) -> usize {
         self.feat.capacity() * 4
             + self.value.capacity() * 8
             + self.left.capacity() * 4
             + self.right.capacity() * 4
             + self.roots.capacity() * 4
+            + self.oblivious.as_ref().map_or(0, |o| {
+                o.feat.capacity() * 4
+                    + o.left.capacity() * 4
+                    + o.right.capacity() * 4
+                    + o.depth.capacity() * 4
+            })
     }
 }
 
@@ -521,13 +638,77 @@ impl TreeBundle {
         }
     }
 
+    /// Whether batched dispatch runs the branch-free lockstep walk
+    /// (scalar [`TreeBundle::decide`] always uses the branchy walk; the
+    /// two are bit-identical regardless).
+    pub fn lockstep_active(&self) -> bool {
+        self.compiled.oblivious.is_some()
+    }
+
+    /// Re-arm the batched traversal layout (benches and the equivalence
+    /// suite pit lockstep against blocked on one bundle without touching
+    /// `MLKAPS_FOREST_TRAVERSAL`).
+    pub fn set_traversal(&mut self, t: Traversal) {
+        self.compiled.set_traversal(t);
+    }
+
+    /// Decide one row block: the lockstep raw matrix + per-row snap when
+    /// the overlay is armed, the per-row branchy walk otherwise.
+    fn decide_block(&self, rows: &[Vec<f64>]) -> Vec<Config> {
+        match &self.compiled.oblivious {
+            Some(obl) => {
+                // Same guard as decide_uncached, before any tree walks.
+                for r in rows {
+                    assert_eq!(r.len(), self.n_inputs(), "input dimension mismatch");
+                }
+                let k = self.compiled.roots.len();
+                let mut raw = vec![0.0; rows.len() * k];
+                self.compiled.decide_raw_block_lockstep(obl, rows, &mut raw);
+                raw.chunks(k).map(|row| self.trees.design_space.snap(row)).collect()
+            }
+            None => rows.iter().map(|r| self.decide_uncached(r)).collect(),
+        }
+    }
+
     /// Batched dispatch: decide every row, parallel over [`ROW_BLOCK`]-row
     /// blocks when the batch is big enough (`threads == 0` selects the
-    /// adaptive default). Bypasses the memo cache — block workers never
-    /// contend on its locks — and is bit-identical to per-row
-    /// [`TreeBundle::decide`] at any thread count: each row's decision is
-    /// a pure function of that row alone.
+    /// adaptive default). Runs the branch-free lockstep walk when armed
+    /// ([`TreeBundle::lockstep_active`]). Bypasses the memo cache — block
+    /// workers never contend on its locks — and is bit-identical to
+    /// per-row [`TreeBundle::decide`] at any thread count: each row's
+    /// decision is a pure function of that row alone.
     pub fn decide_batch(&self, rows: &[Vec<f64>], threads: usize) -> Vec<Config> {
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        let threads = if threads == 0 {
+            if rows.len() < PAR_MIN_ROWS {
+                1
+            } else {
+                default_threads()
+            }
+        } else {
+            threads
+        };
+        if threads <= 1 {
+            let mut out = Vec::with_capacity(rows.len());
+            for chunk in rows.chunks(ROW_BLOCK) {
+                out.extend(self.decide_block(chunk));
+            }
+            return out;
+        }
+        let blocks: Vec<&[Vec<f64>]> = rows.chunks(ROW_BLOCK).collect();
+        let results = par_map(&blocks, threads, |_, chunk| self.decide_block(chunk));
+        let mut out = Vec::with_capacity(rows.len());
+        for r in results {
+            out.extend(r);
+        }
+        out
+    }
+
+    /// [`TreeBundle::decide_batch`] forced down the per-row branchy walk
+    /// — the equivalence oracle and bench baseline for the lockstep path.
+    pub fn decide_batch_blocked(&self, rows: &[Vec<f64>], threads: usize) -> Vec<Config> {
         if rows.is_empty() {
             return Vec::new();
         }
@@ -727,6 +908,34 @@ mod tests {
             assert_eq!(bundle.decide_batch(&rows, threads), scalar, "threads={threads}");
         }
         assert!(bundle.decide_batch(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn lockstep_blocked_and_scalar_decisions_are_identical() {
+        // Force both layouts explicitly (the default is Auto, i.e.
+        // lockstep for these shallow trees) and pin all three paths to
+        // each other on probes that include NaN and out-of-domain rows —
+        // at a row count that leaves a ragged sub-LANES tail.
+        let mut bundle = TreeBundle::from_trees(model()).unwrap();
+        let mut rows = probe_inputs();
+        rows.truncate(3 * LANES + 5);
+        rows.push(vec![f64::NAN, f64::NAN]);
+        let scalar: Vec<Config> = rows.iter().map(|r| bundle.decide(r)).collect();
+        bundle.set_traversal(Traversal::Lockstep);
+        assert!(bundle.lockstep_active());
+        let with_overlay = bundle.mem_bytes();
+        for threads in [1usize, 2, 8] {
+            assert_eq!(bundle.decide_batch(&rows, threads), scalar, "lockstep t={threads}");
+            assert_eq!(
+                bundle.decide_batch_blocked(&rows, threads),
+                scalar,
+                "blocked t={threads}"
+            );
+        }
+        bundle.set_traversal(Traversal::Blocked);
+        assert!(!bundle.lockstep_active());
+        assert!(bundle.mem_bytes() < with_overlay, "overlay must be counted");
+        assert_eq!(bundle.decide_batch(&rows, 2), scalar, "disarmed batch");
     }
 
     #[test]

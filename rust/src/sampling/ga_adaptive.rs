@@ -118,9 +118,11 @@ impl Sampler for GaAdaptive {
         // advance in lockstep through the same fused evaluator as the
         // stage-3 grid optimizer: one giant surrogate batch per
         // generation (pre-binned input columns when the compiled forest
-        // allows it) instead of one pop-sized batch per input. Each
-        // point keeps its own deterministic forked RNG stream, so the
-        // points are bit-identical to the old per-input schedule.
+        // allows it, walked branch-free by the oblivious lockstep
+        // traversal when armed) instead of one pop-sized batch per
+        // input. Each point keeps its own deterministic forked RNG
+        // stream, so the points are bit-identical to the old per-input
+        // schedule.
         let ga = Nsga2::new(self.params.ga.clone());
         let n_design = d - ctx.n_inputs;
         // Input draw and fork stay interleaved per point, exactly like

@@ -37,6 +37,26 @@
 //! * NaN gets a reserved `NAN` code routed by the node's default-left
 //!   flag, exactly like the scalar walk's `is_nan()` branch.
 //!
+//! 3. **Oblivious lockstep traversal.** On top of the coded walk,
+//!    [`CompiledForest::compile`] builds a branch-free overlay when the
+//!    forest allows it ([`Traversal`]): leaves become *self-looping*
+//!    nodes (`left == right == self`, a leaf-safe gather feature id), so
+//!    every root-to-leaf path is implicitly padded to the tree's maximum
+//!    depth and the inner loop is a **fixed-trip-count gather with no
+//!    exit branch**. [`CompiledForest::predict_batch_prebinned`] then
+//!    advances [`LANES`] (16) rows per tree in lockstep: each step is
+//!    pure `u16` compares and integer selects over the lane array — no
+//!    data-dependent branches — which is the shape the stable-Rust
+//!    autovectorizer turns into SIMD compares/blends (no nightly
+//!    `std::simd`). A row that reaches its leaf early simply self-loops
+//!    until the lane's trip count ends, so the reached leaf — and with
+//!    it the accumulated sum — is bit-identical to the branchy walk.
+//!    The branchy blocked walk survives as
+//!    [`CompiledForest::predict_batch_prebinned_blocked`]: it is the
+//!    equivalence oracle (`tests/forest_equivalence.rs`) and the bench
+//!    baseline (`benches/grid_optimize_throughput.rs`), exactly as the
+//!    per-point stage-3 schedule is for the fused one.
+//!
 //! [`predict`]: crate::surrogate::Surrogate::predict
 
 use crate::util::threadpool::par_map;
@@ -62,6 +82,20 @@ const MAX_CUTS: usize = (MISS_CODE - 1) as usize;
 /// (`ROW_BLOCK × dim × 2` bytes) and accumulators stay cache-resident,
 /// large enough to amortize the per-block tree sweep.
 const ROW_BLOCK: usize = 256;
+
+/// Rows advanced per tree in one lockstep group. 16 `u16` codes fill one
+/// 256-bit vector register, and the per-step state (16 × u32 node
+/// indices) fits a second — the natural width for the autovectorizer on
+/// both AVX2 and NEON (two 128-bit ops).
+pub const LANES: usize = 16;
+
+/// `Traversal::Auto` declines the oblivious overlay beyond this tree
+/// depth: the lockstep walk pays `max_depth` steps for **every** row of
+/// a tree, so a degenerate chain-shaped tree (only constructible from
+/// hand-written JSON; the trainer's leaf-wise growth stays shallow)
+/// would make all rows pay its worst path. [`Traversal::Lockstep`]
+/// overrides the cap explicitly.
+const OBLIVIOUS_MAX_DEPTH: u32 = 64;
 
 /// Total traversal rows that justify fanning a batch across the pool:
 /// the adaptive parallel threshold is derived as roughly this many rows
@@ -95,6 +129,97 @@ fn par_threshold(env: Option<&str>, threads: usize) -> usize {
         }
     }
     (PAR_WORK_ROWS / threads.max(1)).clamp(2 * ROW_BLOCK, 8 * ROW_BLOCK)
+}
+
+/// Which batch traversal the compiler arms. Selected when the model is
+/// compiled (after `fit`/`from_json`), not per call: the oblivious
+/// overlay is a property of the built engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Traversal {
+    /// Build the branch-free oblivious overlay whenever the forest is
+    /// pre-binnable and every tree is at most [`OBLIVIOUS_MAX_DEPTH`]
+    /// deep; otherwise fall back to the blocked branchy walk.
+    #[default]
+    Auto,
+    /// Branchy blocked traversal only (the pre-lockstep engine); also
+    /// what non-pre-binnable forests always get.
+    Blocked,
+    /// Force the oblivious overlay for any pre-binnable forest, ignoring
+    /// the depth cap.
+    Lockstep,
+}
+
+impl Traversal {
+    /// Parse an `MLKAPS_FOREST_TRAVERSAL` value (None for unknown).
+    pub fn parse(s: &str) -> Option<Traversal> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(Traversal::Auto),
+            "blocked" => Some(Traversal::Blocked),
+            "lockstep" | "oblivious" => Some(Traversal::Lockstep),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide default traversal, from `MLKAPS_FOREST_TRAVERSAL`
+/// (`auto` | `blocked` | `lockstep`; unset/garbage = auto). Resolved
+/// once: the compiled layout must not flip between fits mid-run.
+pub fn traversal_default() -> Traversal {
+    static CACHED: std::sync::OnceLock<Traversal> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("MLKAPS_FOREST_TRAVERSAL")
+            .ok()
+            .and_then(|v| Traversal::parse(&v))
+            .unwrap_or_default()
+    })
+}
+
+/// Per-tree maximum root-to-leaf edge count over a flattened arena with
+/// absolute child indices and a `leaf` sentinel in `feat` — the fixed
+/// trip count of the oblivious walk. Shared with the serving-tree
+/// compiler (`runtime::serving`), whose arenas use the same discipline.
+pub(crate) fn max_depths(
+    feat: &[u32],
+    left: &[u32],
+    right: &[u32],
+    roots: &[u32],
+    leaf: u32,
+) -> Vec<u32> {
+    roots
+        .iter()
+        .map(|&root| {
+            let mut max_d = 0u32;
+            let mut stack = vec![(root as usize, 0u32)];
+            while let Some((i, d)) = stack.pop() {
+                if feat[i] == leaf {
+                    max_d = max_d.max(d);
+                } else {
+                    stack.push((left[i] as usize, d + 1));
+                    stack.push((right[i] as usize, d + 1));
+                }
+            }
+            max_d
+        })
+        .collect()
+}
+
+/// The branch-free overlay: the same nodes as the standard arrays, with
+/// leaves rewritten so traversal needs no exit test. A leaf's children
+/// point at itself (reaching it early just spins in place until the
+/// fixed trip count ends — the "padding") and its gather feature id is 0
+/// (any in-bounds column; the self-loop makes the comparison outcome
+/// irrelevant). `flags`/`bin`/`value` are shared with the standard
+/// layout — only the three link arrays differ, so the overlay costs 12
+/// bytes per node plus 4 per tree ([`CompiledForest::oblivious_mem_bytes`]).
+#[derive(Clone, Debug)]
+struct Oblivious {
+    /// Leaf-safe gather feature ids (leaves → 0).
+    feat: Vec<u32>,
+    /// Self-looping absolute child links (leaves → own index).
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Per-tree fixed trip count (max root-to-leaf edges).
+    depth: Vec<u32>,
 }
 
 /// How one feature's values are quantized.
@@ -173,6 +298,10 @@ pub struct CompiledForest {
     /// True when every feature's cut table fits the u16 code space and no
     /// feature mixes split kinds; otherwise traversal compares raw f64s.
     prebinned: bool,
+    /// Branch-free lockstep overlay (None = blocked traversal). Built by
+    /// [`CompiledForest::compile`] per [`traversal_default`], rebuilt on
+    /// demand by [`CompiledForest::set_traversal`].
+    oblivious: Option<Oblivious>,
     base_score: f64,
     learning_rate: f64,
     n_features: usize,
@@ -268,7 +397,7 @@ impl CompiledForest {
             }
         }
 
-        CompiledForest {
+        let mut forest = CompiledForest {
             feat,
             flags,
             bin,
@@ -278,10 +407,55 @@ impl CompiledForest {
             roots,
             cuts,
             prebinned,
+            oblivious: None,
             base_score,
             learning_rate,
             n_features,
+        };
+        forest.set_traversal(traversal_default());
+        forest
+    }
+
+    /// Re-arm the batch traversal: [`Traversal::Blocked`] drops the
+    /// overlay, [`Traversal::Auto`]/[`Traversal::Lockstep`] (re)build it
+    /// when the forest qualifies (building is deterministic and cheap —
+    /// one pass over the arrays). Benches and the equivalence suite use
+    /// this to pit both layouts against each other on one forest.
+    pub fn set_traversal(&mut self, t: Traversal) {
+        self.oblivious = match t {
+            Traversal::Blocked => None,
+            Traversal::Auto => self.build_oblivious(OBLIVIOUS_MAX_DEPTH),
+            Traversal::Lockstep => self.build_oblivious(u32::MAX),
+        };
+    }
+
+    /// Build the self-looping leaf overlay, or None when the forest is
+    /// not pre-binnable (the lockstep walk compares u16 codes only) or
+    /// some tree exceeds `depth_cap`.
+    fn build_oblivious(&self, depth_cap: u32) -> Option<Oblivious> {
+        if !self.prebinned {
+            return None;
         }
+        let depth = max_depths(&self.feat, &self.left, &self.right, &self.roots, LEAF);
+        if depth.iter().any(|&d| d > depth_cap) {
+            return None;
+        }
+        let n = self.feat.len();
+        let mut feat = Vec::with_capacity(n);
+        let mut left = Vec::with_capacity(n);
+        let mut right = Vec::with_capacity(n);
+        for i in 0..n {
+            if self.feat[i] == LEAF {
+                feat.push(0);
+                left.push(i as u32);
+                right.push(i as u32);
+            } else {
+                feat.push(self.feat[i]);
+                left.push(self.left[i]);
+                right.push(self.right[i]);
+            }
+        }
+        Some(Oblivious { feat, left, right, depth })
     }
 
     /// Number of trees compiled in.
@@ -301,7 +475,26 @@ impl CompiledForest {
         self.prebinned
     }
 
-    /// Approximate heap bytes of the compiled arrays (telemetry).
+    /// Whether the branch-free oblivious overlay is armed — i.e. batch
+    /// traversal runs the [`LANES`]-row lockstep walk.
+    pub fn is_lockstep(&self) -> bool {
+        self.oblivious.is_some()
+    }
+
+    /// Heap bytes of the oblivious overlay alone (0 when blocked): the
+    /// price of the padding — 12 bytes per node (three duplicated u32
+    /// link arrays) plus 4 per tree (trip counts).
+    pub fn oblivious_mem_bytes(&self) -> usize {
+        self.oblivious.as_ref().map_or(0, |o| {
+            o.feat.capacity() * 4
+                + o.left.capacity() * 4
+                + o.right.capacity() * 4
+                + o.depth.capacity() * 4
+        })
+    }
+
+    /// Approximate heap bytes of the compiled arrays (telemetry),
+    /// including the oblivious overlay when armed.
     pub fn mem_bytes(&self) -> usize {
         self.feat.capacity() * 4
             + self.flags.capacity()
@@ -311,6 +504,7 @@ impl CompiledForest {
             + self.right.capacity() * 4
             + self.roots.capacity() * 4
             + self.cuts.iter().map(|c| c.cuts.capacity() * 8).sum::<usize>()
+            + self.oblivious_mem_bytes()
     }
 
     /// Scalar reference walk over the SoA arrays (raw f64 compares).
@@ -414,37 +608,106 @@ impl CompiledForest {
         self.walk_block(&codes[..rows.len() * d], out);
     }
 
-    /// Traverse one already-quantized block trees-outer / rows-inner
-    /// (`codes` row-major, `n_features` codes per row).
+    /// Traverse one already-quantized block: the lockstep walk when the
+    /// oblivious overlay is armed, the branchy blocked walk otherwise.
+    /// Both are bit-identical per row (same leaf, same tree-order sum).
     fn walk_block(&self, codes: &[u16], out: &mut [f64]) {
+        match &self.oblivious {
+            Some(obl) => self.walk_block_lockstep(obl, codes, out),
+            None => self.walk_block_blocked(codes, out),
+        }
+    }
+
+    /// One tree's branchy coded walk for one row (`row_codes` is that
+    /// row's `n_features` codes); returns the raw leaf value. Shared by
+    /// the blocked walk and the lockstep walk's sub-[`LANES`] tail, so
+    /// both paths add exactly the same `lr * leaf` term per tree.
+    #[inline]
+    fn walk_row_coded(&self, root: u32, row_codes: &[u16]) -> f64 {
+        let mut i = root as usize;
+        loop {
+            let f = self.feat[i];
+            if f == LEAF {
+                return self.value[i];
+            }
+            let c = row_codes[f as usize];
+            let fl = self.flags[i];
+            let go_left = if c == NAN_CODE {
+                fl & F_DEFAULT_LEFT != 0
+            } else if fl & F_EQ != 0 {
+                c == self.bin[i]
+            } else {
+                c <= self.bin[i]
+            };
+            i = if go_left { self.left[i] } else { self.right[i] } as usize;
+        }
+    }
+
+    /// Branchy blocked traversal, trees-outer / rows-inner (`codes`
+    /// row-major, `n_features` codes per row): each tree's nodes stream
+    /// through cache once per block instead of once per row. This is the
+    /// equivalence oracle and bench baseline for the lockstep walk.
+    fn walk_block_blocked(&self, codes: &[u16], out: &mut [f64]) {
         let d = self.n_features;
         for o in out.iter_mut() {
             *o = self.base_score;
         }
-        // Trees outer, rows inner: each tree's nodes stream through cache
-        // once per block instead of once per row.
         let lr = self.learning_rate;
         for &root in &self.roots {
             for (r, o) in out.iter_mut().enumerate() {
-                let row_codes = &codes[r * d..(r + 1) * d];
-                let mut i = root as usize;
-                loop {
-                    let f = self.feat[i];
-                    if f == LEAF {
-                        *o += lr * self.value[i];
-                        break;
+                *o += lr * self.walk_row_coded(root, &codes[r * d..(r + 1) * d]);
+            }
+        }
+    }
+
+    /// Branch-free lockstep traversal over the oblivious overlay:
+    /// trees-outer, then [`LANES`] rows advance together through a
+    /// fixed-trip-count inner loop with no exit test. Every step is u16
+    /// compares folded to 0/1 masks and integer selects — the lane loop
+    /// has constant bounds and no data-dependent branches, which is what
+    /// lets the stable-Rust autovectorizer emit SIMD compares/blends.
+    /// Rows that reach a leaf early self-loop (the implicit path
+    /// padding); the reached leaf is identical to the branchy walk's, so
+    /// the per-row sum is bit-identical. The sub-`LANES` row tail of a
+    /// block reuses the branchy per-row walk (same terms, same order).
+    fn walk_block_lockstep(&self, obl: &Oblivious, codes: &[u16], out: &mut [f64]) {
+        let d = self.n_features;
+        let n = out.len();
+        for o in out.iter_mut() {
+            *o = self.base_score;
+        }
+        let lr = self.learning_rate;
+        for (t, &root) in self.roots.iter().enumerate() {
+            let depth = obl.depth[t];
+            let mut r = 0;
+            while r + LANES <= n {
+                let lane_codes = &codes[r * d..(r + LANES) * d];
+                let mut idx = [root; LANES];
+                for _ in 0..depth {
+                    for l in 0..LANES {
+                        let i = idx[l] as usize;
+                        let c = lane_codes[l * d + obl.feat[i] as usize];
+                        let b = self.bin[i];
+                        let fl = self.flags[i] as u32;
+                        // 0/1 masks; NaN shortcuts to the default-left
+                        // flag, Eq splits compare ==, numeric <=.
+                        let nan = (c == NAN_CODE) as u32;
+                        let eq = (c == b) as u32;
+                        let le = (c <= b) as u32;
+                        let is_eq = fl & F_EQ as u32;
+                        let dl = (fl & F_DEFAULT_LEFT as u32) >> 1;
+                        let cmp = is_eq * eq + (1 - is_eq) * le;
+                        let go_left = nan * dl + (1 - nan) * cmp;
+                        idx[l] = go_left * obl.left[i] + (1 - go_left) * obl.right[i];
                     }
-                    let c = row_codes[f as usize];
-                    let fl = self.flags[i];
-                    let go_left = if c == NAN_CODE {
-                        fl & F_DEFAULT_LEFT != 0
-                    } else if fl & F_EQ != 0 {
-                        c == self.bin[i]
-                    } else {
-                        c <= self.bin[i]
-                    };
-                    i = if go_left { self.left[i] } else { self.right[i] } as usize;
                 }
+                for l in 0..LANES {
+                    out[r + l] += lr * self.value[idx[l] as usize];
+                }
+                r += LANES;
+            }
+            for rr in r..n {
+                out[rr] += lr * self.walk_row_coded(root, &codes[rr * d..(rr + 1) * d]);
             }
         }
     }
@@ -469,6 +732,24 @@ impl CompiledForest {
     ///
     /// Panics when the forest is not pre-binnable (no [`CompiledForest::bin_plan`]).
     pub fn predict_batch_prebinned(&self, codes: &[u16], threads: usize) -> Vec<f64> {
+        self.predict_batch_prebinned_impl(codes, threads, false)
+    }
+
+    /// Like [`CompiledForest::predict_batch_prebinned`] but always via
+    /// the branchy blocked walk, even when the oblivious overlay is
+    /// armed. Kept public as the equivalence oracle and bench baseline
+    /// for the lockstep path (mirrors the fused-vs-per-point pairing in
+    /// the grid optimizer).
+    pub fn predict_batch_prebinned_blocked(&self, codes: &[u16], threads: usize) -> Vec<f64> {
+        self.predict_batch_prebinned_impl(codes, threads, true)
+    }
+
+    fn predict_batch_prebinned_impl(
+        &self,
+        codes: &[u16],
+        threads: usize,
+        force_blocked: bool,
+    ) -> Vec<f64> {
         assert!(
             self.prebinned,
             "predict_batch_prebinned on a forest without a bin plan"
@@ -479,6 +760,13 @@ impl CompiledForest {
         if n == 0 {
             return Vec::new();
         }
+        let walk = |chunk: &[u16], out: &mut [f64]| {
+            if force_blocked {
+                self.walk_block_blocked(chunk, out);
+            } else {
+                self.walk_block(chunk, out);
+            }
+        };
         let threads = if threads == 0 {
             if n < par_min_rows() {
                 1
@@ -494,7 +782,7 @@ impl CompiledForest {
             for (b, chunk) in codes.chunks(ROW_BLOCK * d).enumerate() {
                 let start = b * ROW_BLOCK;
                 let rows = chunk.len() / d;
-                self.walk_block(chunk, &mut out[start..start + rows]);
+                walk(chunk, &mut out[start..start + rows]);
             }
             return out;
         }
@@ -504,7 +792,7 @@ impl CompiledForest {
         let blocks: Vec<&[u16]> = codes.chunks(ROW_BLOCK * d).collect();
         let results = par_map(&blocks, threads, |_, chunk| {
             let mut out = vec![0.0; chunk.len() / d];
-            self.walk_block(chunk, &mut out);
+            walk(chunk, &mut out);
             out
         });
         let mut out = Vec::with_capacity(n);
@@ -704,5 +992,132 @@ mod tests {
         let t1 = vec![split(0, F_EQ, 0.25, 1, 2), leaf(10.0), leaf(20.0)];
         let f = CompiledForest::compile(&[t0, t1], 1, 0.0, 1.0);
         assert!(f.bin_plan().is_none());
+        // Never lockstep without codes to compare.
+        assert!(!f.is_lockstep());
+        assert_eq!(f.oblivious_mem_bytes(), 0);
+    }
+
+    #[test]
+    fn traversal_parse_accepts_all_spellings() {
+        assert_eq!(Traversal::parse("auto"), Some(Traversal::Auto));
+        assert_eq!(Traversal::parse(" Blocked "), Some(Traversal::Blocked));
+        assert_eq!(Traversal::parse("LOCKSTEP"), Some(Traversal::Lockstep));
+        assert_eq!(Traversal::parse("oblivious"), Some(Traversal::Lockstep));
+        assert_eq!(Traversal::parse("vectorized"), None);
+        assert_eq!(Traversal::parse(""), None);
+    }
+
+    #[test]
+    fn set_traversal_arms_and_disarms_overlay() {
+        let mut f = toy_forest();
+        f.set_traversal(Traversal::Lockstep);
+        assert!(f.is_lockstep());
+        // 7 nodes × 12 B links + 3 trees × 4 B trip counts.
+        assert_eq!(f.oblivious_mem_bytes(), 7 * 12 + 3 * 4);
+        let with = f.mem_bytes();
+        f.set_traversal(Traversal::Blocked);
+        assert!(!f.is_lockstep());
+        assert_eq!(f.oblivious_mem_bytes(), 0);
+        assert_eq!(f.mem_bytes(), with - (7 * 12 + 3 * 4));
+        f.set_traversal(Traversal::Auto);
+        assert!(f.is_lockstep(), "shallow prebinned forest qualifies for Auto");
+    }
+
+    #[test]
+    fn oblivious_overlay_self_loops_leaves_and_tracks_depth() {
+        let mut f = toy_forest();
+        f.set_traversal(Traversal::Lockstep);
+        let obl = f.oblivious.as_ref().unwrap();
+        assert_eq!(obl.depth, vec![1, 1, 0], "stump, stump, constant tree");
+        for i in 0..f.n_nodes() {
+            if f.feat[i] == LEAF {
+                assert_eq!(obl.feat[i], 0, "leaf gather feature must be in-bounds");
+                assert_eq!(obl.left[i], i as u32, "leaf must self-loop");
+                assert_eq!(obl.right[i], i as u32, "leaf must self-loop");
+            } else {
+                assert_eq!(obl.feat[i], f.feat[i]);
+                assert_eq!(obl.left[i], f.left[i]);
+                assert_eq!(obl.right[i], f.right[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_matches_blocked_and_scalar_with_ragged_tail() {
+        // 37 rows: two full LANES groups plus a 5-row branchy tail, with
+        // NaN (default-left and default-right trees), boundary values and
+        // out-of-domain numerics in both regions.
+        let mut f = toy_forest();
+        f.set_traversal(Traversal::Lockstep);
+        assert!(f.is_lockstep());
+        let plan = f.bin_plan().unwrap();
+        let qs: Vec<Vec<f64>> = (0..37)
+            .map(|i| match i % 6 {
+                0 => vec![f64::NAN],
+                1 => vec![-1e300],
+                2 => vec![-1.0],
+                3 => vec![0.5],
+                4 => vec![f64::from_bits(0.5f64.to_bits() + 1)],
+                _ => vec![1e300],
+            })
+            .collect();
+        let mut codes = vec![0u16; qs.len()];
+        for (r, q) in qs.iter().enumerate() {
+            plan.code_prefix(q, &mut codes[r..r + 1]);
+        }
+        for threads in [1usize, 2, 8] {
+            let lock = f.predict_batch_prebinned(&codes, threads);
+            let blocked = f.predict_batch_prebinned_blocked(&codes, threads);
+            for (i, q) in qs.iter().enumerate() {
+                let s = f.predict_one(q);
+                assert_eq!(s.to_bits(), lock[i].to_bits(), "lockstep row {i} {q:?}");
+                assert_eq!(s.to_bits(), blocked[i].to_bits(), "blocked row {i} {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_handles_categorical_and_deep_trees() {
+        // A depth-3 numeric tree (uneven leaf depths — real padding) plus
+        // a categorical stump; exercises Eq routing and self-loop spins.
+        let deep = vec![
+            split(0, 0, 0.0, 1, 2),
+            split(0, 0, -1.0, 3, 4),
+            leaf(4.0),
+            split(0, F_DEFAULT_LEFT, -2.0, 5, 6),
+            leaf(3.0),
+            leaf(1.0),
+            leaf(2.0),
+        ];
+        let cat = vec![split(1, F_EQ, 2.0, 1, 2), leaf(10.0), leaf(20.0)];
+        let mut f = CompiledForest::compile(&[deep, cat], 2, 0.0, 1.0);
+        f.set_traversal(Traversal::Lockstep);
+        assert!(f.is_lockstep());
+        assert_eq!(f.oblivious.as_ref().unwrap().depth, vec![3, 1]);
+        let plan = f.bin_plan().unwrap();
+        let vals = [-3.0, -2.0, -1.5, -1.0, 0.0, 0.25, f64::NAN];
+        let cats = [0.0, 2.0, 5.0, f64::NAN];
+        let qs: Vec<Vec<f64>> = (0..48)
+            .map(|i| vec![vals[i % vals.len()], cats[i % cats.len()]])
+            .collect();
+        let mut codes = vec![0u16; qs.len() * 2];
+        for (r, q) in qs.iter().enumerate() {
+            plan.code_prefix(q, &mut codes[r * 2..(r + 1) * 2]);
+        }
+        let lock = f.predict_batch_prebinned(&codes, 1);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(f.predict_one(q).to_bits(), lock[i].to_bits(), "row {i} {q:?}");
+        }
+    }
+
+    #[test]
+    fn max_depths_on_hand_built_arena() {
+        // One chain of length 2 and one lone leaf, flattened by compile.
+        let chain = vec![split(0, 0, 0.0, 1, 2), split(0, 0, -1.0, 3, 4), leaf(0.0), leaf(1.0), leaf(2.0)];
+        let f = CompiledForest::compile(&[chain, vec![leaf(9.0)]], 1, 0.0, 1.0);
+        assert_eq!(
+            max_depths(&f.feat, &f.left, &f.right, &f.roots, LEAF),
+            vec![2, 0]
+        );
     }
 }

@@ -412,6 +412,17 @@ impl Gbdt {
         self.compiled.as_ref()
     }
 
+    /// Re-arm the compiled engine's batch traversal (no-op before the
+    /// first fit). Benches and the equivalence suite use this to pit the
+    /// lockstep and blocked layouts against each other on one fitted
+    /// model without touching `MLKAPS_FOREST_TRAVERSAL` (mutating real
+    /// environment variables races parallel test threads).
+    pub fn set_forest_traversal(&mut self, t: crate::surrogate::forest::Traversal) {
+        if let Some(cf) = self.compiled.as_mut() {
+            cf.set_traversal(t);
+        }
+    }
+
     /// Batched prediction with an explicit worker count (0 = adaptive).
     /// Bit-identical to per-row [`Surrogate::predict`] at any count —
     /// exercised by `tests/forest_equivalence.rs`.

@@ -63,8 +63,10 @@ pub trait Surrogate: Send + Sync {
     /// expose it so batch callers (the lockstep grid optimizer) can
     /// quantize rows themselves via [`forest::CompiledForest::bin_plan`]
     /// — constant input columns coded once per grid point — and score
-    /// through [`forest::CompiledForest::predict_batch_prebinned`].
-    /// `None` (the default) means "no fused path; use `predict_batch`".
+    /// through [`forest::CompiledForest::predict_batch_prebinned`]
+    /// (branch-free oblivious lockstep traversal when armed, see
+    /// [`forest::Traversal`]). `None` (the default) means "no fused
+    /// path; use `predict_batch`".
     fn fused_forest(&self) -> Option<&forest::CompiledForest> {
         None
     }

@@ -183,6 +183,75 @@ fn prop_prebinned_codes_match_raw_batch() {
 }
 
 #[test]
+fn prop_oblivious_lockstep_equals_blocked_and_scalar() {
+    // The branch-free oblivious lockstep walk, the branchy blocked walk,
+    // and the scalar predict must agree bit for bit on every random
+    // forest and query mix — NaN injections, out-of-domain numerics,
+    // unseen categories — at several thread counts. The overlay is armed
+    // and disarmed explicitly (environment-independent) so both layouts
+    // run on the very same compiled forest.
+    let mut rng = Rng::new(0x0B_11_510);
+    let mut lockstep_trials = 0;
+    for trial in 0..30 {
+        let (model, data) = random_case(&mut rng);
+        let cf = model.compiled().expect("forest compiles after fit");
+        let Some(plan) = cf.bin_plan() else { continue };
+        let mut lockstep = cf.clone();
+        lockstep.set_traversal(mlkaps::surrogate::forest::Traversal::Lockstep);
+        assert!(lockstep.is_lockstep(), "trial {trial}: prebinned forest must arm");
+        let mut blocked = cf.clone();
+        blocked.set_traversal(mlkaps::surrogate::forest::Traversal::Blocked);
+        assert!(!blocked.is_lockstep());
+        lockstep_trials += 1;
+
+        // 100 queries: several LANES groups plus a ragged tail.
+        let queries = random_queries(&mut rng, &model, &data, 100);
+        let d = cf.n_features();
+        let mut codes = vec![0u16; queries.len() * d];
+        for (r, q) in queries.iter().enumerate() {
+            plan.code_prefix(q, &mut codes[r * d..(r + 1) * d]);
+        }
+        let scalar: Vec<f64> = queries.iter().map(|q| model.predict(q)).collect();
+        for threads in [1usize, 2, 8] {
+            let lock = lockstep.predict_batch_prebinned(&codes, threads);
+            let block = blocked.predict_batch_prebinned(&codes, threads);
+            let oracle = lockstep.predict_batch_prebinned_blocked(&codes, threads);
+            for i in 0..queries.len() {
+                assert!(
+                    scalar[i].to_bits() == lock[i].to_bits(),
+                    "trial {trial} threads {threads} query {i} ({:?}): \
+                     scalar {} != lockstep {}",
+                    queries[i],
+                    scalar[i],
+                    lock[i]
+                );
+                assert_eq!(
+                    scalar[i].to_bits(),
+                    block[i].to_bits(),
+                    "trial {trial} threads {threads} query {i}: blocked diverged"
+                );
+                assert_eq!(
+                    scalar[i].to_bits(),
+                    oracle[i].to_bits(),
+                    "trial {trial} threads {threads} query {i}: forced-blocked \
+                     oracle diverged on the lockstep forest"
+                );
+            }
+        }
+        // Raw-row batches on the armed forest route through the same
+        // lockstep walk; they must stay pinned to scalar too.
+        let raw = lockstep.predict_batch(&queries, 2);
+        for (i, (s, b)) in scalar.iter().zip(&raw).enumerate() {
+            assert_eq!(s.to_bits(), b.to_bits(), "trial {trial} raw query {i}");
+        }
+    }
+    assert!(
+        lockstep_trials >= 20,
+        "only {lockstep_trials}/30 trials exercised the lockstep overlay"
+    );
+}
+
+#[test]
 fn one_node_constant_trees_are_exact() {
     // Constant target -> every tree is a single constant-fit leaf; the
     // compiled forest must reproduce the exact telescoped sum.

@@ -19,6 +19,7 @@ use mlkaps::optimizer::grid::{optimize_grid_shard, optimize_grid_shard_per_point
 use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
 use mlkaps::pipeline::checkpoint::{copy_checkpoints, PipelineRun};
 use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::surrogate::forest::Traversal;
 use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
 use mlkaps::surrogate::{LogSurrogate, Surrogate};
 use mlkaps::util::rng::Rng;
@@ -114,6 +115,58 @@ fn prop_fused_lockstep_equals_per_point_bit_for_bit() {
         assert_eq!(d_split, d_ref, "trial {trial}: shard split changed designs");
     }
     assert!(prebinned_cases >= 6, "only {prebinned_cases}/8 cases were prebinned");
+}
+
+#[test]
+fn fused_lockstep_traversal_matches_blocked_and_per_point() {
+    // One configuration pinned through the branch-free oblivious
+    // lockstep layout explicitly: forcing the overlay on and off on the
+    // same fitted surrogate must not move a single bit of the fused
+    // stage-3 result — which itself must equal the per-point reference.
+    let mut rng = Rng::new(0x0B_11_F05D);
+    let mut armed_cases = 0;
+    for trial in 0..4 {
+        let (input, design, mut surrogate) = random_case(&mut rng);
+        let inputs = input.grid(4);
+        let ga = Nsga2::new(Nsga2Params {
+            pop_size: 12,
+            generations: 6,
+            ..Default::default()
+        });
+        let seed = rng.next_u64();
+
+        surrogate.inner.set_forest_traversal(Traversal::Blocked);
+        assert!(surrogate.fused_forest().is_some_and(|cf| !cf.is_lockstep()));
+        let (d_ref, p_ref) =
+            optimize_grid_shard_per_point(&surrogate, &design, &inputs, 0, &ga, &[], 2, seed);
+        let (d_blocked, p_blocked) =
+            optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], 2, seed);
+
+        surrogate.inner.set_forest_traversal(Traversal::Lockstep);
+        if surrogate.fused_forest().is_some_and(|cf| cf.is_lockstep()) {
+            armed_cases += 1;
+        }
+        for threads in [1usize, 2, 8] {
+            let (d_lock, p_lock) =
+                optimize_grid_shard(&surrogate, &design, &inputs, 0, &ga, &[], threads, seed);
+            assert_eq!(d_lock, d_ref, "trial {trial} threads {threads}: designs diverge");
+            assert_eq!(
+                p_lock.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                p_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} threads {threads}: predictions diverge"
+            );
+        }
+        assert_eq!(d_blocked, d_ref, "trial {trial}: blocked designs diverge");
+        assert_eq!(
+            p_blocked.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            p_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "trial {trial}: blocked predictions diverge"
+        );
+    }
+    assert!(
+        armed_cases >= 3,
+        "only {armed_cases}/4 cases armed the lockstep overlay"
+    );
 }
 
 fn tiny_config(seed: u64) -> MlkapsConfig {

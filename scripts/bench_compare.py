@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare current smoke-bench CSVs to the
+committed baselines under rust/results/baseline/.
+
+Policy
+------
+* Every baseline file must exist in the current results, and every
+  baseline row (by key column) must still be present — a bench that
+  stops emitting a phase is a regression in coverage, not noise.
+* Gated metric columns are throughput/speedup ratios (higher is
+  better). A current value below ``baseline * (1 - tolerance)`` fails
+  the job; the default tolerance is 15%.
+* A baseline cell of ``NA`` is "recording mode": no real number has
+  been captured for that metric yet (the baselines were seeded before
+  any CI runner produced trustworthy numbers), so the structural gates
+  apply but the numeric gate is skipped. Replace NA cells with real
+  medians from the trajectory artifacts once a few runs accumulate.
+* Absolute wall-clock columns (``secs``) are never gated: they track
+  the runner, not the code. The ratio columns divide that out.
+
+Usage
+-----
+    python3 scripts/bench_compare.py --baseline rust/results/baseline \\
+        --current rust/results [--tolerance 0.15]
+    python3 scripts/bench_compare.py --self-test
+
+stdlib only — the CI image has no pip.
+"""
+
+import argparse
+import csv
+import os
+import sys
+
+# Per-file comparison spec: which columns identify a row and which
+# (higher-is-better) metric columns are gated. Keep in sync with the
+# save_csv calls in rust/benches/*.rs.
+SPECS = {
+    "fig08_sampler_speedup.csv": {"key": ["sampler", "samples"], "gate": []},
+    "gbdt_throughput.csv": {
+        "key": ["phase"],
+        "gate": ["rows_per_sec", "speedup_vs_scalar"],
+    },
+    "grid_optimize_throughput.csv": {
+        "key": ["schedule"],
+        "gate": ["points_per_sec", "speedup"],
+    },
+    "serving_throughput.csv": {
+        "key": ["phase"],
+        "gate": ["decisions_per_sec", "speedup_vs_walk"],
+    },
+    "served_throughput.csv": {"key": ["phase"], "gate": ["decisions_per_sec"]},
+}
+
+
+def load_rows(path):
+    """CSV -> (header list, list of row dicts)."""
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        return list(reader.fieldnames or []), list(reader)
+
+
+def compare_file(name, spec, baseline_path, current_path, tolerance):
+    """Return a list of failure strings for one bench CSV."""
+    failures = []
+    if not os.path.exists(baseline_path):
+        # No baseline committed for this bench: nothing to gate.
+        print(f"  [skip] {name}: no baseline committed")
+        return failures
+    if not os.path.exists(current_path):
+        return [f"{name}: current results file missing ({current_path})"]
+
+    b_header, b_rows = load_rows(baseline_path)
+    c_header, c_rows = load_rows(current_path)
+    missing_cols = [c for c in spec["key"] + spec["gate"] if c not in c_header]
+    if missing_cols:
+        return [f"{name}: current CSV lost columns {missing_cols} (has {c_header})"]
+
+    def key_of(row):
+        return tuple(row.get(k, "").strip() for k in spec["key"])
+
+    current = {key_of(r): r for r in c_rows}
+    gated = skipped = 0
+    for b_row in b_rows:
+        key = key_of(b_row)
+        c_row = current.get(key)
+        if c_row is None:
+            failures.append(
+                f"{name}: row {key} present in baseline but missing from "
+                f"current results (present: {sorted(current)})"
+            )
+            continue
+        for col in spec["gate"]:
+            b_cell = (b_row.get(col) or "").strip()
+            if b_cell.upper() == "NA" or b_cell == "":
+                skipped += 1
+                continue
+            try:
+                b_val = float(b_cell)
+                c_val = float((c_row.get(col) or "").strip())
+            except ValueError:
+                failures.append(
+                    f"{name}: row {key} column {col}: unparseable value "
+                    f"(baseline {b_cell!r}, current {c_row.get(col)!r})"
+                )
+                continue
+            gated += 1
+            floor = b_val * (1.0 - tolerance)
+            if c_val < floor:
+                failures.append(
+                    f"{name}: row {key} column {col} regressed >"
+                    f"{tolerance:.0%}: {c_val:g} < {b_val:g} * "
+                    f"{1.0 - tolerance:g} = {floor:g}"
+                )
+    print(
+        f"  [ok-ish] {name}: {len(b_rows)} baseline rows, "
+        f"{gated} metrics gated, {skipped} NA cells skipped"
+        if not failures
+        else f"  [FAIL] {name}: {len(failures)} failure(s)"
+    )
+    return failures
+
+
+def run_compare(baseline_dir, current_dir, tolerance):
+    print(
+        f"bench_compare: baseline={baseline_dir} current={current_dir} "
+        f"tolerance={tolerance:.0%}"
+    )
+    failures = []
+    for name, spec in sorted(SPECS.items()):
+        failures += compare_file(
+            name,
+            spec,
+            os.path.join(baseline_dir, name),
+            os.path.join(current_dir, name),
+            tolerance,
+        )
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs committed baseline:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nno regressions vs committed baseline")
+    return 0
+
+
+def self_test(tolerance):
+    """Prove the gate fires: synthesize a baseline and a current result
+    with one metric slowed down by more than the tolerance, and check
+    the comparator (a) flags exactly that metric, (b) passes an
+    identical/improved run, and (c) flags a dropped phase row."""
+    import shutil
+    import tempfile
+
+    header = "schedule,grid_points,secs,points_per_sec,speedup\n"
+    base = (
+        header
+        + "per_point,64,NA,100.0,1.00\n"
+        + "fused_blocked,64,NA,150.0,1.50\n"
+        + "fused_lockstep,64,NA,NA,NA\n"  # NA cells must be skipped
+    )
+    slower = (
+        header
+        + "per_point,64,0.9,99.0,1.00\n"  # -1%: inside tolerance
+        + "fused_blocked,64,0.9,120.0,1.20\n"  # -20%: must fire
+        + "fused_lockstep,64,0.9,500.0,5.00\n"
+    )
+    faster = (
+        header
+        + "per_point,64,0.5,140.0,1.00\n"
+        + "fused_blocked,64,0.5,210.0,1.50\n"
+        + "fused_lockstep,64,0.5,400.0,2.80\n"
+    )
+    dropped = header + "per_point,64,0.5,140.0,1.00\n"
+
+    tmp = tempfile.mkdtemp(prefix="bench_compare_selftest_")
+    try:
+        bdir = os.path.join(tmp, "baseline")
+        os.makedirs(bdir)
+        with open(os.path.join(bdir, "grid_optimize_throughput.csv"), "w") as f:
+            f.write(base)
+
+        def current(content):
+            cdir = os.path.join(tmp, "current")
+            shutil.rmtree(cdir, ignore_errors=True)
+            os.makedirs(cdir)
+            with open(
+                os.path.join(cdir, "grid_optimize_throughput.csv"), "w"
+            ) as f:
+                f.write(content)
+            return cdir
+
+        print("self-test 1: synthetic >15% slowdown must fail the gate")
+        if run_compare(bdir, current(slower), tolerance) == 0:
+            print("SELF-TEST FAILED: >15% regression was not flagged")
+            return 1
+        print("\nself-test 2: equal-or-faster run must pass the gate")
+        if run_compare(bdir, current(faster), tolerance) != 0:
+            print("SELF-TEST FAILED: faster run was flagged as a regression")
+            return 1
+        print("\nself-test 3: a dropped phase row must fail the gate")
+        if run_compare(bdir, current(dropped), tolerance) == 0:
+            print("SELF-TEST FAILED: missing baseline row was not flagged")
+            return 1
+        print("\nself-test passed: the gate fires on regressions and "
+              "dropped rows, and stays quiet otherwise")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="rust/results/baseline")
+    ap.add_argument("--current", default="rust/results")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="allowed fractional drop on gated metrics (default 0.15)",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="verify the gate fires on a synthetic >tolerance slowdown",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test(args.tolerance))
+    sys.exit(run_compare(args.baseline, args.current, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()
