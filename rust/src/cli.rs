@@ -18,6 +18,7 @@
 //!               [--batch-max 256] [--batch-window-us 200]
 //!               [--poll-ms 500] [--threads N] [--queue-cap 4096]
 //!               [--memo exact|quantized] [--read-timeout-ms 30000]
+//!               [--write-timeout-ms 30000]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -431,8 +432,9 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
         poll_interval: Duration::from_millis(parse_num("poll-ms", 500)?),
         threads: parse_num("threads", 0)? as usize,
         queue_capacity: parse_num("queue-cap", 4096)? as usize,
-        // 0 disables the per-connection request read timeout.
+        // 0 disables the per-connection request read/write timeouts.
         read_timeout: Duration::from_millis(parse_num("read-timeout-ms", 30_000)?),
+        write_timeout: Duration::from_millis(parse_num("write-timeout-ms", 30_000)?),
     };
 
     let variants = reg.names().join(", ");

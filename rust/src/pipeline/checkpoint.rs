@@ -54,6 +54,7 @@ use crate::optimizer::nsga2::Nsga2;
 use crate::pipeline::{GRID_SEED_SALT, Mlkaps, MlkapsConfig, PipelineStats, TunedModel};
 use crate::surrogate::gbdt::Gbdt;
 use crate::surrogate::LogSurrogate;
+use crate::util::failpoint::{self, sites};
 use crate::util::hash::fnv1a;
 use crate::util::json::{parse, Value};
 
@@ -154,6 +155,9 @@ fn envelope(stage: Stage, upstream: &str, payload: Value) -> Value {
 /// Unwrap a stage envelope, validating stage identity and the upstream
 /// hash. `None` means "not a valid checkpoint for this chain state".
 fn open_envelope<'a>(v: &'a Value, stage: Stage, upstream: &str) -> Option<&'a Value> {
+    // Injected verification failure: the envelope is treated as stale,
+    // which the chain design already defines as "recompute downstream".
+    failpoint::fail(sites::CHECKPOINT_VERIFY).ok()?;
     if v.get("format").and_then(|f| f.as_str()) != Some(STAGE_FORMAT) {
         return None;
     }
@@ -224,6 +228,10 @@ impl PipelineRun {
     }
 
     fn read_stage(&self, file: &str) -> Option<Value> {
+        // An injected read fault models an unreadable artifact; `None`
+        // already means "recompute this stage", so the recovery path is
+        // the normal path.
+        failpoint::fail(sites::CHECKPOINT_READ).ok()?;
         let text = std::fs::read_to_string(self.path(file)).ok()?;
         parse(&text).ok()
     }
@@ -236,12 +244,32 @@ impl PipelineRun {
     }
 
     /// Write an artifact into the checkpoint directory atomically
-    /// (write-then-rename), so a kill mid-write never leaves a truncated
-    /// file that happens to parse as valid JSON.
+    /// (write-then-rename, so a kill mid-write never leaves a truncated
+    /// file that happens to parse as valid JSON) and durably (the temp
+    /// file is fsynced before the rename and the directory after it, so
+    /// a committed artifact survives a power cut, not just a process
+    /// kill). Each step is an injectable failpoint site; failure at any
+    /// of them leaves either the old artifact or none — never a torn
+    /// one — which the chaos suite proves by resuming through each.
     pub fn write_artifact(&self, file: &str, v: &Value) -> Result<(), String> {
+        failpoint::fail(sites::CHECKPOINT_WRITE).map_err(|e| format!("write {file}: {e}"))?;
         let tmp = self.path(&format!("{file}.tmp"));
         std::fs::write(&tmp, v.to_string()).map_err(|e| format!("write {file}: {e}"))?;
-        std::fs::rename(&tmp, self.path(file)).map_err(|e| format!("commit {file}: {e}"))
+        failpoint::fail(sites::CHECKPOINT_FSYNC)
+            .and_then(|()| {
+                std::fs::File::open(&tmp)
+                    .and_then(|f| f.sync_all())
+                    .map_err(|e| e.to_string())
+            })
+            .map_err(|e| format!("fsync {file}: {e}"))?;
+        failpoint::fail(sites::CHECKPOINT_COMMIT).map_err(|e| format!("commit {file}: {e}"))?;
+        std::fs::rename(&tmp, self.path(file)).map_err(|e| format!("commit {file}: {e}"))?;
+        // The rename is only durable once the directory entry is: fsync
+        // the directory itself (Linux semantics; see docs on atomic
+        // rename durability).
+        std::fs::File::open(&self.dir)
+            .and_then(|d| d.sync_all())
+            .map_err(|e| format!("fsync checkpoint dir for {file}: {e}"))
     }
 
     /// Create/validate the checkpoint directory for this config + kernel.

@@ -33,10 +33,11 @@ use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::SyncSender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::ServedVariant;
+use crate::util::failpoint::{self, sites};
 
 /// One queued decide request.
 pub struct Job {
@@ -73,14 +74,38 @@ struct QueueState {
     shutdown: bool,
 }
 
+/// Why a push was refused (the queue never blocks producers).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity: the job was **shed**, not queued. The
+    /// daemon turns this into a structured `overloaded` error response
+    /// with a retry-after hint; carrying the capacity lets it size the
+    /// hint from the drain rate.
+    Overloaded { capacity: usize },
+    /// The daemon is shutting down; nothing new is accepted.
+    ShuttingDown,
+    /// An armed `batcher.enqueue` failpoint fired (chaos testing).
+    Injected(String),
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Overloaded { capacity } => {
+                write!(f, "daemon is overloaded ({capacity} requests queued)")
+            }
+            PushError::ShuttingDown => f.write_str("daemon is shutting down"),
+            PushError::Injected(msg) => f.write_str(msg),
+        }
+    }
+}
+
 /// The bounded job queue + the batcher loop that drains it.
 pub struct BatchQueue {
     state: Mutex<QueueState>,
     /// Producers signal arrivals; the batcher also waits here for its
     /// time window.
     added: Condvar,
-    /// The batcher signals drains so blocked producers can retry.
-    space: Condvar,
     capacity: usize,
 }
 
@@ -89,21 +114,34 @@ impl BatchQueue {
         Arc::new(BatchQueue {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             added: Condvar::new(),
-            space: Condvar::new(),
             capacity: capacity.max(1),
         })
     }
 
-    /// Enqueue a job, blocking while the queue is full (backpressure on
-    /// the connection thread, and transitively on the client socket).
-    /// Errors once the daemon is shutting down.
-    pub fn push(&self, job: Job) -> Result<(), String> {
-        let mut st = self.state.lock().unwrap();
-        while st.jobs.len() >= self.capacity && !st.shutdown {
-            st = self.space.wait(st).unwrap();
+    /// Poison-tolerant state lock: the queue is a plain deque + flag,
+    /// structurally valid at every instruction boundary, so a panic on
+    /// some other thread (injected by the chaos suite or real) must not
+    /// cascade into wedging every producer and the batcher forever.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Try to enqueue a job. Never blocks: a full queue sheds the job
+    /// with [`PushError::Overloaded`] instead of wedging the connection
+    /// thread — under saturation, blocking producers would turn one
+    /// slow consumer into daemon-wide head-of-line blocking, whereas a
+    /// shed is answered immediately and the client retries after the
+    /// hinted delay.
+    pub fn push(&self, job: Job) -> Result<(), PushError> {
+        if let Err(e) = failpoint::fail(sites::BATCHER_ENQUEUE) {
+            return Err(PushError::Injected(e));
         }
+        let mut st = self.lock_state();
         if st.shutdown {
-            return Err("daemon is shutting down".into());
+            return Err(PushError::ShuttingDown);
+        }
+        if st.jobs.len() >= self.capacity {
+            return Err(PushError::Overloaded { capacity: self.capacity });
         }
         st.jobs.push_back(job);
         drop(st);
@@ -111,24 +149,31 @@ impl BatchQueue {
         Ok(())
     }
 
-    /// Stop the batcher after it drains what is already queued; wake
-    /// every blocked producer.
+    /// Current queue depth (diagnostics; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.lock_state().jobs.len()
+    }
+
+    /// Stop the batcher after it drains what is already queued.
     pub fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
+        self.lock_state().shutdown = true;
         self.added.notify_all();
-        self.space.notify_all();
     }
 
     /// The batcher thread body: collect → flush until shutdown.
     /// `threads` is passed through to `decide_batch` (0 = adaptive).
+    /// May unwind (a panicking tree traversal, an armed `batcher.flush`
+    /// failpoint): the daemon runs it under a supervisor that catches
+    /// the panic and calls `run` again, and the queue state stays valid
+    /// because `flush` executes outside the lock.
     pub fn run(&self, batch_max: usize, batch_window: Duration, threads: usize) {
         let batch_max = batch_max.max(1);
         loop {
             let mut batch: Vec<Job> = Vec::with_capacity(batch_max);
             {
-                let mut st = self.state.lock().unwrap();
+                let mut st = self.lock_state();
                 while st.jobs.is_empty() && !st.shutdown {
-                    st = self.added.wait(st).unwrap();
+                    st = self.added.wait(st).unwrap_or_else(|e| e.into_inner());
                 }
                 if st.jobs.is_empty() {
                     // Shutdown with nothing queued: done.
@@ -143,7 +188,6 @@ impl BatchQueue {
                             None => break,
                         }
                     }
-                    self.space.notify_all();
                     if batch.len() >= batch_max || st.shutdown {
                         break;
                     }
@@ -151,8 +195,10 @@ impl BatchQueue {
                     if now >= deadline {
                         break;
                     }
-                    let (guard, timeout) =
-                        self.added.wait_timeout(st, deadline - now).unwrap();
+                    let (guard, timeout) = self
+                        .added
+                        .wait_timeout(st, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
                     st = guard;
                     if timeout.timed_out() && st.jobs.is_empty() {
                         break;
@@ -168,6 +214,14 @@ impl BatchQueue {
 /// and one (batched or memoized-scalar) decide per group, then answer
 /// every job.
 fn flush(batch: Vec<Job>, threads: usize) {
+    // Supervisor test hook: a `panic` fault here unwinds out of `run`
+    // into the daemon's batcher supervisor (which restarts the loop);
+    // an `err` fault aborts this flush. Either way the batch's reply
+    // senders drop, so every affected connection gets an explicit
+    // dropped-request error — never a hang.
+    if failpoint::fail(sites::BATCHER_FLUSH).is_err() {
+        return;
+    }
     let now = Instant::now();
     // Group by variant identity (the Arc pointer): no per-job key
     // allocation on the hot path, and jobs of one variant always share

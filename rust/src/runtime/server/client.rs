@@ -8,10 +8,13 @@
 //! from opening more clients, which is exactly what lets the daemon's
 //! micro-batcher coalesce them.
 
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use super::protocol::{read_frame, write_frame, Request};
+use crate::util::hash::fnv1a;
 use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
 
 /// One decided config as reported by the daemon.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,17 +38,109 @@ pub struct ServedClient {
     stream: TcpStream,
 }
 
+/// Resolve to a non-empty address list (required because
+/// `TcpStream::connect_timeout` takes a single already-resolved
+/// address, unlike `TcpStream::connect`).
+fn resolve(addr: impl ToSocketAddrs) -> Result<Vec<SocketAddr>, String> {
+    let addrs: Vec<SocketAddr> =
+        addr.to_socket_addrs().map_err(|e| format!("resolve: {e}"))?.collect();
+    if addrs.is_empty() {
+        return Err("resolve: address list is empty".into());
+    }
+    Ok(addrs)
+}
+
+/// Default per-attempt connect timeout: long enough for a loaded host,
+/// short enough that a black-holed address (firewall drop, wrong subnet)
+/// fails in seconds instead of the kernel's minutes-long SYN retry.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// First retry delay for [`ServedClient::connect_with_retry`]; doubles
+/// per failed attempt up to half a second.
+const RETRY_BACKOFF_START: Duration = Duration::from_millis(10);
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(500);
+
 impl ServedClient {
+    /// Connect once, with the default [`CONNECT_TIMEOUT`] per resolved
+    /// address. Refused connections still fail immediately — the
+    /// timeout only bounds the no-answer case.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<ServedClient, String> {
-        let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
-        stream.set_nodelay(true).ok();
-        Ok(ServedClient { stream })
+        ServedClient::connect_timeout(addr, CONNECT_TIMEOUT)
+    }
+
+    /// Connect once with an explicit per-address timeout, trying every
+    /// address the name resolves to in order.
+    pub fn connect_timeout(
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+    ) -> Result<ServedClient, String> {
+        let addrs = resolve(addr)?;
+        let mut last = String::new();
+        for a in &addrs {
+            match TcpStream::connect_timeout(a, timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    return Ok(ServedClient { stream });
+                }
+                Err(e) => last = format!("connect {a}: {e}"),
+            }
+        }
+        Err(last)
+    }
+
+    /// Connect with jittered exponential-backoff retries under an
+    /// overall deadline — for clients racing a daemon boot, a rolling
+    /// restart (connection refused while a drained daemon re-execs), or
+    /// a transiently-full accept backlog. The backoff doubles from 10ms
+    /// to a 500ms cap and each sleep is jittered to 50–100% of the
+    /// nominal delay so a fleet of clients doesn't retry in lockstep.
+    pub fn connect_with_retry(
+        addr: impl ToSocketAddrs,
+        overall: Duration,
+    ) -> Result<ServedClient, String> {
+        let addrs = resolve(addr)?;
+        let deadline = Instant::now() + overall;
+        // Jitter seed: wall-clock nanos XOR the target address, so
+        // concurrent clients (and consecutive runs) de-correlate even
+        // without OS entropy. Determinism doesn't matter here — only
+        // that two clients rarely share a schedule.
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0xc0_ffee)
+            ^ fnv1a(format!("{addrs:?}").as_bytes());
+        let mut rng = Rng::new(seed);
+        let mut backoff = RETRY_BACKOFF_START;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(format!(
+                    "connect: gave up after {:.1}s of retries",
+                    overall.as_secs_f64()
+                ));
+            }
+            match ServedClient::connect_timeout(&addrs[..], CONNECT_TIMEOUT.min(remaining))
+            {
+                Ok(client) => return Ok(client),
+                Err(e) => {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        return Err(e);
+                    }
+                    let jittered = backoff.mul_f64(0.5 + 0.5 * rng.f64());
+                    std::thread::sleep(jittered.min(remaining));
+                    backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+                }
+            }
+        }
     }
 
     /// Send one request, read one response, check `"ok"`.
     fn roundtrip(&mut self, req: &Request) -> Result<Value, String> {
-        write_frame(&mut self.stream, req.to_json().to_string().as_bytes())?;
-        let payload = read_frame(&mut self.stream)?
+        write_frame(&mut self.stream, req.to_json().to_string().as_bytes())
+            .map_err(|e| e.to_string())?;
+        let payload = read_frame(&mut self.stream)
+            .map_err(|e| e.to_string())?
             .ok_or("daemon closed the connection mid-request")?;
         let text = std::str::from_utf8(&payload)
             .map_err(|e| format!("response is not UTF-8: {e}"))?;

@@ -28,24 +28,36 @@
 //! request lands the daemon falls through to the normal graceful
 //! shutdown and the process exits 0.
 //!
-//! Resilience: every connection runs under a request **read timeout**
-//! ([`DaemonConfig::read_timeout`]) — a peer that opens a connection and
-//! stalls (or trickles a partial request forever) is disconnected
-//! instead of holding a connection thread for the daemon's lifetime.
+//! Resilience: every connection runs under request **read and write
+//! timeouts** ([`DaemonConfig::read_timeout`],
+//! [`DaemonConfig::write_timeout`]) — a peer that opens a connection and
+//! stalls (or trickles a partial request forever, or stops draining its
+//! receive buffer) is disconnected instead of holding a connection
+//! thread for the daemon's lifetime. The batcher and reload threads run
+//! under a panic-catching **supervisor** with bounded exponential
+//! backoff, and a panicking connection handler kills only its own
+//! connection. A full batch queue **sheds** the request with a
+//! structured `overloaded` error (plus a `retry_after_ms` hint) instead
+//! of blocking the producer. All of it is observable: the `STATS` verb
+//! reports `restarts`, `sheds`, `timeouts`, `malformed_frames`, and
+//! `conn_panics`, and the chaos suites assert they move.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{BatchQueue, DecideOk, Job};
-use super::protocol::{self, Request};
+use super::batcher::{BatchQueue, DecideOk, Job, PushError};
+use super::protocol::{self, FrameError, Request};
 use super::{ServedRegistry, ServedVariant};
+use crate::util::failpoint::{self, sites, Fault};
 use crate::util::json::Value;
+use crate::util::telemetry::RecoveryCounters;
 
 /// Daemon tuning knobs (all have serving-shaped defaults).
 #[derive(Clone, Debug)]
@@ -70,6 +82,11 @@ pub struct DaemonConfig {
     /// clients are expected to reconnect (connections are cheap and the
     /// protocol is stateless per request).
     pub read_timeout: Duration,
+    /// Per-connection response write timeout: a peer that stops
+    /// draining its receive buffer while the daemon has a response to
+    /// deliver is disconnected once this window elapses mid-write.
+    /// `Duration::ZERO` disables the timeout.
+    pub write_timeout: Duration,
 }
 
 impl Default for DaemonConfig {
@@ -82,6 +99,7 @@ impl Default for DaemonConfig {
             threads: 0,
             queue_capacity: 4096,
             read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -107,6 +125,15 @@ struct Shared {
     decide_threads: usize,
     /// Per-connection request read timeout (None = disabled).
     read_timeout: Option<Duration>,
+    /// Per-connection response write timeout (None = disabled).
+    write_timeout: Option<Duration>,
+    /// Restart / shed / timeout / malformed-frame counters, reported
+    /// under `STATS`.
+    recovery: RecoveryCounters,
+    /// The `retry_after_ms` hint attached to `overloaded` responses:
+    /// roughly how long a full queue takes to drain at the configured
+    /// batch size and window, clamped to [1, 1000] ms.
+    retry_after_ms: u64,
 }
 
 /// RAII increment of the in-flight request counter (decrements on drop,
@@ -142,6 +169,11 @@ impl Daemon {
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
         let queue = BatchQueue::new(cfg.queue_capacity);
+        // Drain-time estimate for the overload retry hint: a full queue
+        // of Q jobs drains in about (Q / batch_max) windows.
+        let drain_secs = cfg.batch_window.as_secs_f64()
+            * (cfg.queue_capacity as f64 / cfg.batch_max.max(1) as f64);
+        let retry_after_ms = (drain_secs * 1e3).ceil().clamp(1.0, 1000.0) as u64;
         let shared = Arc::new(Shared {
             registry,
             queue: queue.clone(),
@@ -154,15 +186,24 @@ impl Daemon {
             local_addr,
             decide_threads: cfg.threads,
             read_timeout: (cfg.read_timeout > Duration::ZERO).then_some(cfg.read_timeout),
+            write_timeout: (cfg.write_timeout > Duration::ZERO)
+                .then_some(cfg.write_timeout),
+            recovery: RecoveryCounters::new(),
+            retry_after_ms,
         });
         let mut handles = Vec::new();
 
         let (batch_max, batch_window, threads) =
             (cfg.batch_max, cfg.batch_window, cfg.threads);
+        let sh = shared.clone();
         handles.push(
             std::thread::Builder::new()
                 .name("mlkaps-batcher".into())
-                .spawn(move || queue.run(batch_max, batch_window, threads))
+                .spawn(move || {
+                    supervise(&sh, "batcher", || {
+                        queue.run(batch_max, batch_window, threads)
+                    })
+                })
                 .map_err(|e| format!("spawn batcher: {e}"))?,
         );
 
@@ -172,7 +213,10 @@ impl Daemon {
             handles.push(
                 std::thread::Builder::new()
                     .name("mlkaps-reload".into())
-                    .spawn(move || reload_loop(&sh, interval))
+                    .spawn(move || {
+                        let sh2 = sh.clone();
+                        supervise(&sh, "reload", move || reload_loop(&sh2, interval))
+                    })
                     .map_err(|e| format!("spawn reloader: {e}"))?,
             );
         }
@@ -223,6 +267,37 @@ impl Drop for Daemon {
     fn drop(&mut self) {
         self.shutdown();
         self.wait();
+    }
+}
+
+/// First restart delay for a supervised thread; doubles per consecutive
+/// panic up to [`SUPERVISOR_BACKOFF_CAP`], so a persistently-crashing
+/// loop settles into a slow retry instead of a hot spin, while a
+/// one-off panic (a poisoned request, an injected fault) restarts
+/// almost immediately.
+const SUPERVISOR_BACKOFF_START: Duration = Duration::from_millis(10);
+const SUPERVISOR_BACKOFF_CAP: Duration = Duration::from_millis(1280);
+
+/// Run a supervised thread body, restarting it after a caught panic
+/// with bounded exponential backoff. Returns when the body returns
+/// normally (its clean-shutdown path) or when the daemon is shutting
+/// down. Each restart is counted in `recovery.restarts`.
+fn supervise(shared: &Shared, name: &str, mut body: impl FnMut()) {
+    let mut backoff = SUPERVISOR_BACKOFF_START;
+    loop {
+        if std::panic::catch_unwind(AssertUnwindSafe(&mut body)).is_ok() {
+            return;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        shared.recovery.restarts.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "mlkaps served: {name} thread panicked; restarting in {}ms",
+            backoff.as_millis()
+        );
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(SUPERVISOR_BACKOFF_CAP);
     }
 }
 
@@ -340,14 +415,27 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
             return;
         }
         let Ok(stream) = stream else { continue };
+        // Simulated transient accept(2) failure: drop this connection
+        // on the floor exactly as a failed accept would, keep serving.
+        if failpoint::fail(sites::DAEMON_ACCEPT).is_err() {
+            continue;
+        }
         shared.connections.fetch_add(1, Ordering::Relaxed);
         let sh = shared.clone();
         // Detached: the thread exits when its peer hangs up. A stuck
-        // peer holds only its own thread, never the daemon.
+        // peer holds only its own thread, never the daemon; likewise a
+        // *panicking* handler (corrupt input tripping an assert, an
+        // injected `daemon.conn` panic) is caught here and kills only
+        // its own connection.
         let _ = std::thread::Builder::new()
             .name("mlkaps-conn".into())
             .spawn(move || {
-                let _ = handle_conn(sh, stream);
+                let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    let _ = handle_conn(&sh, stream);
+                }));
+                if caught.is_err() {
+                    sh.recovery.conn_panics.fetch_add(1, Ordering::Relaxed);
+                }
             });
     }
 }
@@ -356,30 +444,81 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
 /// vs newline text) is auto-detected from the first byte: binary frames
 /// always begin 0x00 (lengths are capped below 2^24), which no text
 /// request can start with.
-fn handle_conn(shared: Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+    // `panic` fault here exercises the per-connection catch_unwind in
+    // the accept loop; `err`/`eof` model a peer lost before the peek.
+    failpoint::fail(sites::DAEMON_CONN)?;
     stream.set_nodelay(true).ok();
     // The request read timeout applies to every blocking read on this
     // socket (including the framing peek): a peer that stalls is
-    // disconnected instead of pinning this thread forever.
+    // disconnected instead of pinning this thread forever. The write
+    // timeout does the same for a peer that stops draining responses.
     if let Some(t) = shared.read_timeout {
         stream.set_read_timeout(Some(t)).ok();
     }
+    if let Some(t) = shared.write_timeout {
+        stream.set_write_timeout(Some(t)).ok();
+    }
     let mut first = [0u8; 1];
-    let n = stream.peek(&mut first).map_err(|e| format!("peek: {e}"))?;
+    let n = match stream.peek(&mut first) {
+        Ok(n) => n,
+        Err(e) => {
+            if is_timeout(&e) {
+                shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(format!("peek: {e}"));
+        }
+    };
     if n == 0 {
         return Ok(()); // peer connected and left (e.g. the shutdown poke)
     }
     if first[0] == 0x00 {
-        binary_loop(&shared, stream)
+        binary_loop(shared, stream)
     } else {
-        text_loop(&shared, stream)
+        text_loop(shared, stream)
     }
+}
+
+/// Did this I/O error come from the socket read/write timeout?
+/// (WouldBlock on Unix, TimedOut on Windows.)
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
 fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String> {
     loop {
-        let Some(payload) = protocol::read_frame(&mut stream)? else {
-            return Ok(());
+        if let Some(f) = failpoint::check(sites::DAEMON_READ) {
+            match f {
+                // An injected EOF models a peer disconnect: clean close.
+                Fault::Eof => return Ok(()),
+                Fault::Err => return Err("failpoint daemon.read: injected err".into()),
+                Fault::Panic => panic!("failpoint daemon.read: injected panic"),
+            }
+        }
+        let payload = match protocol::read_frame(&mut stream) {
+            Ok(Some(payload)) => payload,
+            Ok(None) => return Ok(()), // clean EOF between frames
+            Err(e @ FrameError::Oversized(_)) => {
+                // The length prefix asked for an absurd allocation. The
+                // stream position is still sane (only the 4 prefix
+                // bytes were consumed), so answer with a structured
+                // error — then close, because the peer is about to send
+                // that many bytes we refuse to read.
+                shared.recovery.malformed.fetch_add(1, Ordering::Relaxed);
+                let resp = protocol::err_response(&e.to_string(), None);
+                let _ = protocol::write_frame(&mut stream, resp.to_string().as_bytes());
+                return Err(e.to_string());
+            }
+            Err(FrameError::TimedOut) => {
+                shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err("read timed out mid-frame".into());
+            }
+            // Any other mid-frame I/O error is a truncated frame (the
+            // peer hung up between the length prefix and the payload).
+            Err(e) => {
+                shared.recovery.malformed.fetch_add(1, Ordering::Relaxed);
+                return Err(e.to_string());
+            }
         };
         let _in_flight = InFlight::enter(&shared.in_flight);
         let req = std::str::from_utf8(&payload)
@@ -388,7 +527,13 @@ fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String
                 crate::util::json::parse(text).and_then(|v| Request::from_json(&v))
             });
         let (resp, after) = dispatch(shared, req);
-        protocol::write_frame(&mut stream, resp.to_string().as_bytes())?;
+        failpoint::fail(sites::DAEMON_WRITE)?;
+        if let Err(e) = protocol::write_frame(&mut stream, resp.to_string().as_bytes()) {
+            if matches!(e, FrameError::TimedOut) {
+                shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            return Err(e.to_string());
+        }
         match after {
             After::Shutdown => {
                 trigger_shutdown(shared);
@@ -420,17 +565,31 @@ fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
     let mut buf: Vec<u8> = Vec::new();
     loop {
         buf.clear();
+        if let Some(f) = failpoint::check(sites::DAEMON_READ) {
+            match f {
+                Fault::Eof => return Ok(()),
+                Fault::Err => return Err("failpoint daemon.read: injected err".into()),
+                Fault::Panic => panic!("failpoint daemon.read: injected panic"),
+            }
+        }
         // Bounded read: at most one byte past the cap, so "no newline
         // within the cap" is distinguishable from a line that fits.
-        let n = (&mut reader)
-            .take(MAX_TEXT_LINE as u64 + 1)
-            .read_until(b'\n', &mut buf)
-            .map_err(|e| e.to_string())?;
+        let n = match (&mut reader).take(MAX_TEXT_LINE as u64 + 1).read_until(b'\n', &mut buf)
+        {
+            Ok(n) => n,
+            Err(e) => {
+                if is_timeout(&e) {
+                    shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(e.to_string());
+            }
+        };
         if n == 0 {
             return Ok(()); // clean EOF
         }
         let terminated = buf.last() == Some(&b'\n');
         if !terminated && buf.len() > MAX_TEXT_LINE {
+            shared.recovery.malformed.fetch_add(1, Ordering::Relaxed);
             let resp =
                 protocol::err_response("request line exceeds the 1 MiB cap", None);
             let mut out = resp.to_string();
@@ -443,6 +602,7 @@ fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
             Err(e) => {
                 // Errors are responses, not bare disconnects — answer,
                 // then close (the framing is unrecoverable mid-bytes).
+                shared.recovery.malformed.fetch_add(1, Ordering::Relaxed);
                 let resp = protocol::err_response(
                     &format!("request line is not UTF-8: {e}"),
                     None,
@@ -458,8 +618,14 @@ fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
             let (resp, after) = dispatch(shared, Request::from_line(line));
             let mut out = resp.to_string();
             out.push('\n');
-            writer.write_all(out.as_bytes()).map_err(|e| e.to_string())?;
-            writer.flush().map_err(|e| e.to_string())?;
+            failpoint::fail(sites::DAEMON_WRITE)?;
+            if let Err(e) = writer.write_all(out.as_bytes()).and_then(|()| writer.flush())
+            {
+                if is_timeout(&e) {
+                    shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(e.to_string());
+            }
             match after {
                 After::Shutdown => {
                     trigger_shutdown(shared);
@@ -497,7 +663,12 @@ enum After {
 fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, After) {
     let req = match req {
         Ok(r) => r,
-        Err(e) => return (protocol::err_response(&e, None), After::Continue),
+        Err(e) => {
+            // Unparseable payload (bad UTF-8, bad JSON, unknown verb):
+            // answered with an error, counted as malformed.
+            shared.recovery.malformed.fetch_add(1, Ordering::Relaxed);
+            return (protocol::err_response(&e, None), After::Continue);
+        }
     };
     match req {
         Request::Ping => (
@@ -536,13 +707,31 @@ fn decide(
     let (reply, rx) = sync_channel(1);
     let job = Job { variant: variant.clone(), input, enqueued: Instant::now(), reply };
     if let Err(e) = shared.queue.push(job) {
-        return protocol::err_response(&e, id.as_ref());
+        if let PushError::Overloaded { .. } = e {
+            // Shed, not blocked: the client gets a structured response
+            // it can branch on ("overloaded": true) plus a hint for how
+            // long to back off before retrying.
+            shared.recovery.sheds.fetch_add(1, Ordering::Relaxed);
+            let mut resp = protocol::err_response(&e.to_string(), id.as_ref());
+            if let Value::Obj(map) = &mut resp {
+                map.insert("overloaded".into(), Value::Bool(true));
+                map.insert(
+                    "retry_after_ms".into(),
+                    Value::Num(shared.retry_after_ms as f64),
+                );
+            }
+            return resp;
+        }
+        return protocol::err_response(&e.to_string(), id.as_ref());
     }
     match rx.recv() {
         Ok(Ok(ok)) => decide_response(&variant, ok, id),
         Ok(Err(e)) => protocol::err_response(&e, id.as_ref()),
+        // The job's reply sender dropped unanswered: shutdown raced the
+        // request, or a batcher flush was aborted/restarted mid-batch.
+        // Either way the client gets an explicit, retryable error.
         Err(_) => protocol::err_response(
-            "daemon dropped the request while shutting down",
+            "daemon dropped the request while shutting down or restarting; retry",
             id.as_ref(),
         ),
     }
@@ -634,6 +823,8 @@ fn stats_json(shared: &Shared) -> Value {
             ]),
         );
     }
+    let (restarts, sheds, timeouts, malformed, conn_panics) = shared.recovery.snapshot();
+    let num = |x: u64| Value::Num(x as f64);
     Value::obj(vec![
         ("ok", Value::Bool(true)),
         ("uptime_secs", Value::Num(uptime)),
@@ -641,6 +832,11 @@ fn stats_json(shared: &Shared) -> Value {
             "connections",
             Value::Num(shared.connections.load(Ordering::Relaxed) as f64),
         ),
+        ("restarts", num(restarts)),
+        ("sheds", num(sheds)),
+        ("timeouts", num(timeouts)),
+        ("malformed_frames", num(malformed)),
+        ("conn_panics", num(conn_panics)),
         (
             "default_profile",
             shared

@@ -37,32 +37,75 @@ use crate::util::json::{self, Value};
 /// 0x00, which no text-mode request can start with.
 pub const MAX_FRAME: usize = 16 << 20;
 
+/// Why a frame operation failed, classified so the daemon can count
+/// socket timeouts and malformed frames separately, and answer an
+/// oversized length announcement with an error response instead of a
+/// bare disconnect. `Display` renders the human-readable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The peer announced (or the caller built) a frame larger than
+    /// [`MAX_FRAME`]. Detected from the 4 prefix bytes alone — the
+    /// absurd allocation is never attempted.
+    Oversized(usize),
+    /// The socket's read/write timeout elapsed mid-frame.
+    TimedOut,
+    /// Any other I/O failure (peer reset, truncated payload, …).
+    Io(String),
+}
+
+impl FrameError {
+    fn from_io(e: std::io::Error, what: &str) -> FrameError {
+        match e.kind() {
+            // Unix read/write timeouts surface as WouldBlock; some
+            // platforms report TimedOut.
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                FrameError::TimedOut
+            }
+            _ => FrameError::Io(format!("{what}: {e}")),
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized(len) => {
+                write!(f, "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::TimedOut => write!(f, "socket timed out mid-frame"),
+            FrameError::Io(msg) => f.write_str(msg),
+        }
+    }
+}
+
 /// Write one length-prefixed frame.
-pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), String> {
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), FrameError> {
     if payload.len() >= MAX_FRAME {
-        return Err(format!("frame of {} bytes exceeds MAX_FRAME", payload.len()));
+        return Err(FrameError::Oversized(payload.len()));
     }
     let len = (payload.len() as u32).to_be_bytes();
-    w.write_all(&len).map_err(|e| format!("write frame length: {e}"))?;
-    w.write_all(payload).map_err(|e| format!("write frame payload: {e}"))?;
-    w.flush().map_err(|e| format!("flush frame: {e}"))
+    w.write_all(&len).map_err(|e| FrameError::from_io(e, "write frame length"))?;
+    w.write_all(payload).map_err(|e| FrameError::from_io(e, "write frame payload"))?;
+    w.flush().map_err(|e| FrameError::from_io(e, "flush frame"))
 }
 
 /// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
-/// boundary (the peer hung up between requests).
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, String> {
+/// boundary (the peer hung up between requests). A length prefix at or
+/// above [`MAX_FRAME`] is rejected as [`FrameError::Oversized`] before
+/// any payload buffer is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(format!("read frame length: {e}")),
+        Err(e) => return Err(FrameError::from_io(e, "read frame length")),
     }
     let len = u32::from_be_bytes(len_buf) as usize;
     if len >= MAX_FRAME {
-        return Err(format!("peer announced a {len}-byte frame (max {MAX_FRAME})"));
+        return Err(FrameError::Oversized(len));
     }
     let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf).map_err(|e| format!("read frame payload: {e}"))?;
+    r.read_exact(&mut buf).map_err(|e| FrameError::from_io(e, "read frame payload"))?;
     Ok(Some(buf))
 }
 
@@ -220,9 +263,14 @@ mod tests {
     #[test]
     fn oversized_frames_are_rejected_both_ways() {
         let mut buf = Vec::new();
-        assert!(write_frame(&mut buf, &vec![0u8; MAX_FRAME]).is_err());
+        assert_eq!(
+            write_frame(&mut buf, &vec![0u8; MAX_FRAME]),
+            Err(FrameError::Oversized(MAX_FRAME))
+        );
+        let mut r = std::io::Cursor::new(u32::MAX.to_be_bytes().to_vec());
+        assert_eq!(read_frame(&mut r), Err(FrameError::Oversized(u32::MAX as usize)));
         let mut r = std::io::Cursor::new((MAX_FRAME as u32).to_be_bytes().to_vec());
-        assert!(read_frame(&mut r).is_err());
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Oversized(_))));
     }
 
     #[test]

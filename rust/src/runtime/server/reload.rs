@@ -26,6 +26,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::pipeline::checkpoint;
 use crate::runtime::serving::TreeBundle;
+use crate::util::failpoint::{self, sites};
 
 /// An atomically swappable served bundle, optionally watching the
 /// checkpoint directory it was loaded from.
@@ -65,8 +66,13 @@ impl ReloadableBundle {
 
     /// Snapshot the current bundle. The clone keeps the epoch alive for
     /// as long as the caller holds it, independent of any swap.
+    ///
+    /// Locks here are poison-tolerant: both guard plain pointer-sized
+    /// state that is valid at every instruction boundary, and a panic
+    /// in a poller (injected by the chaos suite or real) must not
+    /// cascade into wedging every decide and every future reload.
     pub fn get(&self) -> Arc<TreeBundle> {
-        self.current.lock().unwrap().clone()
+        self.current.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Fingerprint of the currently served epoch (None for bundles not
@@ -97,7 +103,7 @@ impl ReloadableBundle {
     /// also counted on [`ReloadableBundle::reload_errors`]).
     pub fn poll(&self) -> Result<bool, String> {
         let Some(dir) = self.dir.as_deref() else { return Ok(false) };
-        let _gate = self.poll_gate.lock().unwrap();
+        let _gate = self.poll_gate.lock().unwrap_or_else(|e| e.into_inner());
         let result = self.poll_inner(dir);
         if result.is_err() {
             self.reload_errors.fetch_add(1, Ordering::Relaxed);
@@ -106,6 +112,10 @@ impl ReloadableBundle {
     }
 
     fn poll_inner(&self, dir: &std::path::Path) -> Result<bool, String> {
+        // `err` counts as a reload error and retries next tick (like a
+        // directory caught mid-rewrite); `panic` unwinds into the
+        // daemon's reload-thread supervisor, which restarts the loop.
+        failpoint::fail(sites::RELOAD_POLL)?;
         let current_fp = self.fingerprint();
         let meta_fp = checkpoint::read_fingerprint(dir)?;
         if current_fp.as_deref() == Some(meta_fp.as_str()) {
@@ -119,7 +129,7 @@ impl ReloadableBundle {
         let mode = self.get().memo_mode();
         let bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(mode);
         let changed = bundle.fingerprint().map(str::to_string) != current_fp;
-        *self.current.lock().unwrap() = Arc::new(bundle);
+        *self.current.lock().unwrap_or_else(|e| e.into_inner()) = Arc::new(bundle);
         if changed {
             self.reloads.fetch_add(1, Ordering::Relaxed);
         }

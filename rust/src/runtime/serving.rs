@@ -500,6 +500,12 @@ impl TreeBundle {
     /// the stage-4 artifact and the full upstream-hash chain via
     /// [`checkpoint::load_tree_artifact`].
     pub fn load_checkpoint_dir(dir: impl AsRef<Path>) -> Result<TreeBundle, String> {
+        // Injectable load failure: callers (registry boot, hot-reload
+        // poll) must treat it exactly like a directory caught
+        // mid-rewrite — error out / keep the old epoch, never serve a
+        // half-loaded bundle.
+        crate::util::failpoint::fail(crate::util::failpoint::sites::SERVING_LOAD)
+            .map_err(|e| format!("load {}: {e}", dir.as_ref().display()))?;
         let art = checkpoint::load_tree_artifact(dir.as_ref())?;
         let mut bundle = TreeBundle::from_trees(art.trees)?;
         bundle.fingerprint = Some(art.fingerprint.into());

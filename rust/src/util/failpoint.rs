@@ -1,0 +1,419 @@
+//! Deterministic, zero-dependency fault injection for chaos testing.
+//!
+//! A **failpoint** is a named site at an I/O or concurrency choke point
+//! (checkpoint commits, daemon socket reads, batcher enqueue, …) where a
+//! fault can be injected on demand. Sites are compiled in permanently
+//! but cost a single relaxed atomic load when disarmed, so they stay in
+//! release builds and the serving hot path (the gated smoke benches run
+//! with failpoints disarmed and must not move).
+//!
+//! Activation is either programmatic ([`arm`] / [`arm_scoped`], what the
+//! chaos suites use) or via the environment at first use:
+//!
+//! ```text
+//! MLKAPS_FAILPOINTS="checkpoint.commit=err@2;daemon.read=eof@0.05"
+//! ```
+//!
+//! Each clause is `site=fault[@arg]`:
+//!
+//! * fault — `err` (the operation fails with an error), `eof` (the
+//!   operation observes end-of-stream / absent data), `panic` (the
+//!   thread panics; for exercising the daemon's supervisors).
+//! * no arg — fire on every hit.
+//! * integer arg (`err@2`) — fire exactly once, on the Nth hit
+//!   (0-based), modelling "the third write dies".
+//! * fractional arg (`eof@0.05`) — fire each hit with that probability,
+//!   drawn from a [`crate::util::rng::Rng`] seeded per site from
+//!   `MLKAPS_FAILPOINTS_SEED` (default seed if unset), so a chaotic run
+//!   is exactly reproducible from its spec + seed.
+//!
+//! Site names are a closed registry ([`registered`]): arming an unknown
+//! site is an error, so a typo in a spec fails loudly instead of
+//! silently injecting nothing.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, RwLock};
+
+use crate::util::hash::fnv1a;
+use crate::util::rng::Rng;
+
+/// The registered failpoint sites. Each constant names one choke point;
+/// `ALL` is the closed registry the spec parser validates against and
+/// the chaos suites enumerate.
+pub mod sites {
+    /// Writing a stage artifact's temp file (`pipeline/checkpoint.rs`).
+    pub const CHECKPOINT_WRITE: &str = "checkpoint.write";
+    /// Fsyncing the temp file before the commit rename.
+    pub const CHECKPOINT_FSYNC: &str = "checkpoint.fsync";
+    /// The atomic rename committing an artifact (+ directory fsync).
+    pub const CHECKPOINT_COMMIT: &str = "checkpoint.commit";
+    /// Reading a stage artifact back (resume / reload-after-write).
+    pub const CHECKPOINT_READ: &str = "checkpoint.read";
+    /// Stage-envelope upstream-hash chain verification.
+    pub const CHECKPOINT_VERIFY: &str = "checkpoint.verify";
+    /// Full chain-verified artifact load in `runtime/serving.rs`.
+    pub const SERVING_LOAD: &str = "serving.load";
+    /// Accepting a connection in the daemon's accept loop.
+    pub const DAEMON_ACCEPT: &str = "daemon.accept";
+    /// Reading a request frame/line off a connection.
+    pub const DAEMON_READ: &str = "daemon.read";
+    /// Writing a response frame/line to a connection.
+    pub const DAEMON_WRITE: &str = "daemon.write";
+    /// Inside a per-connection handler (panic here to test that one
+    /// connection's death never takes the daemon with it).
+    pub const DAEMON_CONN: &str = "daemon.conn";
+    /// Enqueueing a decide job into the batch queue.
+    pub const BATCHER_ENQUEUE: &str = "batcher.enqueue";
+    /// Inside the batcher's flush (panic here to test the batcher
+    /// supervisor's restart path).
+    pub const BATCHER_FLUSH: &str = "batcher.flush";
+    /// A hot-reload poll of a watched checkpoint directory.
+    pub const RELOAD_POLL: &str = "reload.poll";
+    /// Reserved for unit tests (never evaluated by production code).
+    pub const TEST_PROBE: &str = "test.probe";
+
+    pub const ALL: &[&str] = &[
+        CHECKPOINT_WRITE,
+        CHECKPOINT_FSYNC,
+        CHECKPOINT_COMMIT,
+        CHECKPOINT_READ,
+        CHECKPOINT_VERIFY,
+        SERVING_LOAD,
+        DAEMON_ACCEPT,
+        DAEMON_READ,
+        DAEMON_WRITE,
+        DAEMON_CONN,
+        BATCHER_ENQUEUE,
+        BATCHER_FLUSH,
+        RELOAD_POLL,
+        TEST_PROBE,
+    ];
+}
+
+/// Every registered site name (the closed registry).
+pub fn registered() -> &'static [&'static str] {
+    sites::ALL
+}
+
+/// What an armed site injects when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The guarded operation fails with an injected error.
+    Err,
+    /// The guarded operation observes end-of-stream / missing data.
+    Eof,
+    /// The current thread panics (supervisor testing).
+    Panic,
+}
+
+impl Fault {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fault::Err => "err",
+            Fault::Eof => "eof",
+            Fault::Panic => "panic",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    Every,
+    /// Fire exactly once, on the Nth evaluation (0-based).
+    Nth(u64),
+    /// Fire each evaluation with probability p (seeded, reproducible).
+    Prob(f64),
+}
+
+struct Rule {
+    fault: Fault,
+    trigger: Trigger,
+    hits: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+impl Rule {
+    fn fire(&self) -> Option<Fault> {
+        let hit = self.hits.fetch_add(1, Ordering::Relaxed);
+        let fired = match self.trigger {
+            Trigger::Every => true,
+            Trigger::Nth(n) => hit == n,
+            Trigger::Prob(p) => {
+                let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+                rng.bool(p)
+            }
+        };
+        fired.then_some(self.fault)
+    }
+}
+
+struct Config {
+    rules: BTreeMap<&'static str, Rule>,
+}
+
+/// Fast-path flag: one relaxed load decides "disarmed, do nothing".
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Active rules. Only read when `ARMED` is set (the cold path).
+static REGISTRY: RwLock<Option<Config>> = RwLock::new(None);
+/// First-use environment activation; claimed (as a no-op) by
+/// programmatic [`arm`] so a later env read can't clobber a test's spec.
+static ENV_INIT: Once = Once::new();
+
+const DEFAULT_SEED: u64 = 0x6d6c_6b61_7073; // "mlkaps" in spirit
+
+fn env_seed() -> u64 {
+    std::env::var("MLKAPS_FAILPOINTS_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+fn ensure_env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("MLKAPS_FAILPOINTS") {
+            if !spec.trim().is_empty() {
+                if let Err(e) = install(&spec, env_seed()) {
+                    // A malformed env spec must not silently disable
+                    // chaos runs; fail loudly on stderr and stay
+                    // disarmed (the chaos CI greps for this line).
+                    eprintln!("mlkaps: invalid MLKAPS_FAILPOINTS: {e}");
+                }
+            }
+        }
+    });
+}
+
+fn canonical(site: &str) -> Result<&'static str, String> {
+    sites::ALL
+        .iter()
+        .copied()
+        .find(|s| *s == site)
+        .ok_or_else(|| {
+            format!("unknown failpoint site '{site}' (registered: {})", sites::ALL.join(", "))
+        })
+}
+
+fn parse_clause(clause: &str, seed: u64) -> Result<(&'static str, Rule), String> {
+    let (site, action) = clause
+        .split_once('=')
+        .ok_or_else(|| format!("failpoint clause '{clause}' is not site=fault[@arg]"))?;
+    let site = canonical(site.trim())?;
+    let action = action.trim();
+    let (fault, arg) = match action.split_once('@') {
+        Some((f, a)) => (f.trim(), Some(a.trim())),
+        None => (action, None),
+    };
+    let fault = match fault {
+        "err" => Fault::Err,
+        "eof" => Fault::Eof,
+        "panic" => Fault::Panic,
+        other => return Err(format!("unknown fault '{other}' (err, eof, panic)")),
+    };
+    let trigger = match arg {
+        None => Trigger::Every,
+        Some(a) => {
+            if let Ok(n) = a.parse::<u64>() {
+                Trigger::Nth(n)
+            } else {
+                let p: f64 = a
+                    .parse()
+                    .map_err(|_| format!("failpoint arg '{a}' is neither a hit index nor a probability"))?;
+                if !(p > 0.0 && p <= 1.0) {
+                    return Err(format!("failpoint probability {p} is outside (0, 1]"));
+                }
+                Trigger::Prob(p)
+            }
+        }
+    };
+    Ok((
+        site,
+        Rule {
+            fault,
+            trigger,
+            hits: AtomicU64::new(0),
+            // Per-site stream: reproducible and independent of how many
+            // other sites fire in between.
+            rng: Mutex::new(Rng::new(seed ^ fnv1a(site.as_bytes()))),
+        },
+    ))
+}
+
+fn install(spec: &str, seed: u64) -> Result<(), String> {
+    let mut rules = BTreeMap::new();
+    for clause in spec.split(';') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (site, rule) = parse_clause(clause, seed)?;
+        rules.insert(site, rule);
+    }
+    let mut guard = REGISTRY.write().unwrap_or_else(|e| e.into_inner());
+    let armed = !rules.is_empty();
+    *guard = armed.then_some(Config { rules });
+    // Publish the flag while holding the write lock so check() can
+    // never observe ARMED set with yesterday's rules.
+    ARMED.store(armed, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Arm the given spec (`site=fault[@arg];...`), replacing any active
+/// one. Hit counters and per-site RNG streams start fresh. Errors on an
+/// unknown site or malformed clause, leaving the previous spec armed.
+pub fn arm(spec: &str) -> Result<(), String> {
+    arm_with_seed(spec, env_seed())
+}
+
+/// [`arm`] with an explicit RNG seed for probabilistic triggers.
+pub fn arm_with_seed(spec: &str, seed: u64) -> Result<(), String> {
+    // Claim env-activation so a later first-hit can't overwrite this.
+    ENV_INIT.call_once(|| {});
+    install(spec, seed)
+}
+
+/// Disarm every site. The hot path goes back to one relaxed load.
+pub fn disarm() {
+    ENV_INIT.call_once(|| {});
+    let mut guard = REGISTRY.write().unwrap_or_else(|e| e.into_inner());
+    *guard = None;
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// RAII arming for tests: the spec stays armed until the guard drops.
+pub struct ScopedFailpoints(());
+
+impl Drop for ScopedFailpoints {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Arm a spec and get a guard that disarms on drop.
+pub fn arm_scoped(spec: &str) -> Result<ScopedFailpoints, String> {
+    arm(spec)?;
+    Ok(ScopedFailpoints(()))
+}
+
+/// Evaluate a site: `None` (the overwhelmingly common answer) means
+/// proceed normally; `Some(fault)` means the caller must act out the
+/// injected fault. Disarmed cost: one relaxed atomic load (plus a
+/// one-time env check).
+pub fn check(site: &str) -> Option<Fault> {
+    ensure_env_init();
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let guard = REGISTRY.read().unwrap_or_else(|e| e.into_inner());
+    guard.as_ref()?.rules.get(site)?.fire()
+}
+
+/// Guard an operation whose only failure mode is an error `Result`:
+/// `Err`/`Eof` faults become an injected error, `Panic` panics.
+pub fn fail(site: &str) -> Result<(), String> {
+    match check(site) {
+        None => Ok(()),
+        Some(Fault::Panic) => panic!("failpoint {site}: injected panic"),
+        Some(f) => Err(format!("failpoint {site}: injected {}", f.name())),
+    }
+}
+
+/// Times a site has been evaluated under the currently armed spec
+/// (0 when the site is not armed). Chaos-test observability.
+pub fn hits(site: &str) -> u64 {
+    let guard = REGISTRY.read().unwrap_or_else(|e| e.into_inner());
+    guard
+        .as_ref()
+        .and_then(|c| c.rules.get(site))
+        .map(|r| r.hits.load(Ordering::Relaxed))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Failpoints are process-global; unit tests that arm them must not
+    /// interleave (other modules' tests never arm `test.probe`).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        let _g = gate();
+        disarm();
+        assert_eq!(check(sites::TEST_PROBE), None);
+        assert!(fail(sites::TEST_PROBE).is_ok());
+        assert_eq!(hits(sites::TEST_PROBE), 0);
+    }
+
+    #[test]
+    fn every_and_nth_triggers() {
+        let _g = gate();
+        {
+            let _fp = arm_scoped("test.probe=err").unwrap();
+            assert_eq!(check(sites::TEST_PROBE), Some(Fault::Err));
+            assert_eq!(check(sites::TEST_PROBE), Some(Fault::Err));
+            assert!(fail(sites::TEST_PROBE).unwrap_err().contains("test.probe"));
+            assert_eq!(hits(sites::TEST_PROBE), 3);
+        }
+        // Nth is one-shot: only the (N+1)-th evaluation fires.
+        let _fp = arm_scoped(" test.probe = eof@2 ").unwrap();
+        assert_eq!(check(sites::TEST_PROBE), None);
+        assert_eq!(check(sites::TEST_PROBE), None);
+        assert_eq!(check(sites::TEST_PROBE), Some(Fault::Eof));
+        assert_eq!(check(sites::TEST_PROBE), None);
+    }
+
+    #[test]
+    fn probability_stream_is_reproducible() {
+        let _g = gate();
+        let run = || -> Vec<bool> {
+            let _fp = arm_scoped("test.probe=err@0.3").unwrap();
+            (0..64).map(|_| check(sites::TEST_PROBE).is_some()).collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same spec + seed must fire identically");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!(fired > 0 && fired < 64, "p=0.3 over 64 draws fired {fired} times");
+    }
+
+    #[test]
+    fn specs_validate_sites_and_shapes() {
+        let _g = gate();
+        assert!(arm("nope.site=err").is_err(), "unknown site");
+        assert!(arm("test.probe").is_err(), "missing fault");
+        assert!(arm("test.probe=explode").is_err(), "unknown fault");
+        assert!(arm("test.probe=err@1.5").is_err(), "probability > 1");
+        assert!(arm("test.probe=err@wat").is_err(), "garbage arg");
+        // A failed arm leaves the process disarmed (nothing installed).
+        assert_eq!(check(sites::TEST_PROBE), None);
+        // Multi-clause specs parse; empty clauses are tolerated.
+        let _fp =
+            arm_scoped("test.probe=panic@0; ;checkpoint.commit=err@2;").unwrap();
+        assert_eq!(hits(sites::CHECKPOINT_COMMIT), 0);
+        disarm();
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic")]
+    fn panic_fault_panics_through_fail() {
+        let _g = gate();
+        let _fp = arm_scoped("test.probe=panic").unwrap();
+        let _ = fail(sites::TEST_PROBE);
+    }
+
+    #[test]
+    fn registry_is_closed_and_deduplicated() {
+        let mut all: Vec<&str> = registered().to_vec();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate site names");
+        assert!(registered().contains(&sites::DAEMON_READ));
+    }
+}

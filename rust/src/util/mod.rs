@@ -2,6 +2,7 @@
 //! memory telemetry. Built in-tree because the build environment is fully
 //! offline (see DESIGN.md §1, substitution index).
 
+pub mod failpoint;
 pub mod hash;
 pub mod json;
 pub mod rng;

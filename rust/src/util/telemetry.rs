@@ -65,6 +65,47 @@ impl HitCounters {
     }
 }
 
+/// Lock-free counters for the serving daemon's recovery paths, reported
+/// under the `STATS` verb. Relaxed ordering for the same reason as
+/// [`HitCounters`]: these observe failures, they don't synchronize
+/// recovery. A regression that silently stops a recovery path from
+/// firing shows up as a counter that no longer moves in the chaos
+/// suites.
+#[derive(Debug, Default)]
+pub struct RecoveryCounters {
+    /// Supervised threads (batcher, reload poller) restarted after a
+    /// caught panic.
+    pub restarts: AtomicU64,
+    /// Decide requests shed with an `overloaded` response because the
+    /// batch queue was full.
+    pub sheds: AtomicU64,
+    /// Connections closed by the read/write timeout.
+    pub timeouts: AtomicU64,
+    /// Malformed inputs answered with an error response: oversized or
+    /// truncated frames, non-UTF-8 payloads, unparseable requests.
+    pub malformed: AtomicU64,
+    /// Per-connection handlers that panicked (each kills only its own
+    /// connection).
+    pub conn_panics: AtomicU64,
+}
+
+impl RecoveryCounters {
+    pub fn new() -> Self {
+        RecoveryCounters::default()
+    }
+
+    /// (restarts, sheds, timeouts, malformed, conn_panics) snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.restarts.load(Ordering::Relaxed),
+            self.sheds.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.malformed.load(Ordering::Relaxed),
+            self.conn_panics.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Types that can report the size of their live model state.
 pub trait ModelFootprint {
     /// Approximate heap bytes held by the model (data structures that grow
@@ -146,6 +187,18 @@ mod tests {
         assert!((c.hit_rate() - 0.75).abs() < 1e-12);
         c.reset();
         assert_eq!(c.total(), 0);
+    }
+
+    #[test]
+    fn recovery_counters_snapshot_in_field_order() {
+        let c = RecoveryCounters::new();
+        assert_eq!(c.snapshot(), (0, 0, 0, 0, 0));
+        c.restarts.fetch_add(1, Ordering::Relaxed);
+        c.sheds.fetch_add(2, Ordering::Relaxed);
+        c.timeouts.fetch_add(3, Ordering::Relaxed);
+        c.malformed.fetch_add(4, Ordering::Relaxed);
+        c.conn_panics.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(c.snapshot(), (1, 2, 3, 4, 5));
     }
 
     #[test]

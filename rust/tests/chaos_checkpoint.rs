@@ -1,0 +1,219 @@
+//! Chaos suite for the checkpoint pipeline: inject a deterministic
+//! fault at every `checkpoint.*` / `serving.load` failpoint site, let
+//! the run die, then resume with the faults disarmed and prove the
+//! recovered directory is **byte-for-byte identical** to a run that
+//! never faulted — including a full `load_tree_artifact` chain
+//! verification on the recovered directory.
+//!
+//! Failpoints are process-global, so every test serializes on one
+//! mutex; the suite lives in its own test binary so it never races the
+//! integration tests.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{load_tree_artifact, read_fingerprint, PipelineRun};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::failpoint::{self, sites};
+
+/// Failpoint state is process-global: tests take this before arming.
+/// Poison-tolerant so one failed test doesn't wedge the rest.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One fixed seed everywhere: every dir in this suite must converge to
+/// the same bytes, faulted or not.
+const SEED: u64 = 77;
+
+fn config() -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 120,
+        batch_size: 60,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed: SEED,
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlkaps_chaos_ckpt_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn run(dir: &PathBuf) -> Result<(), String> {
+    PipelineRun::new(config(), dir.clone()).run(&ToySum::new(SEED)).map(|_| ())
+}
+
+/// Every regular file in the checkpoint directory, name → bytes. Also
+/// catches leftovers a resume should have consumed (e.g. `.tmp` files).
+fn snapshot(dir: &PathBuf) -> BTreeMap<String, Vec<u8>> {
+    let mut files = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).expect("checkpoint dir readable").flatten() {
+        if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            files.insert(
+                entry.file_name().to_string_lossy().into_owned(),
+                std::fs::read(entry.path()).expect("checkpoint file readable"),
+            );
+        }
+    }
+    files
+}
+
+fn assert_identical(
+    got: &BTreeMap<String, Vec<u8>>,
+    want: &BTreeMap<String, Vec<u8>>,
+    ctx: &str,
+) {
+    assert_eq!(
+        got.keys().collect::<Vec<_>>(),
+        want.keys().collect::<Vec<_>>(),
+        "{ctx}: recovered directory holds a different file set"
+    );
+    for (name, bytes) in want {
+        assert!(got[name] == *bytes, "{ctx}: {name} differs from the unfaulted run");
+    }
+}
+
+/// Tentpole acceptance: for each write-path site (write / fsync /
+/// commit), inject at the first and at a mid-pipeline artifact, watch
+/// the run die with the injected error, resume disarmed, and require
+/// byte-identical artifacts plus a passing chain verification.
+#[test]
+fn write_path_faults_resume_to_byte_identical_artifacts() {
+    let _g = gate();
+    let reference = tmp("ref");
+    run(&reference).expect("unfaulted reference run");
+    let want = snapshot(&reference);
+    assert!(want.len() >= 5, "reference run wrote {} files", want.len());
+
+    for site in [sites::CHECKPOINT_WRITE, sites::CHECKPOINT_FSYNC, sites::CHECKPOINT_COMMIT] {
+        // hit 0 = the meta file, hit 3 = a stage-3 shard mid-pipeline.
+        for nth in [0u64, 3] {
+            let dir = tmp(&format!("{}_{nth}", site.replace('.', "_")));
+            {
+                let _armed = failpoint::arm_scoped(&format!("{site}=err@{nth}")).unwrap();
+                let err = run(&dir).expect_err("the faulted run must die");
+                assert!(err.contains("injected"), "{site}@{nth}: unexpected error: {err}");
+                assert!(failpoint::hits(site) >= nth + 1, "{site} never reached hit {nth}");
+            }
+            run(&dir).unwrap_or_else(|e| panic!("resume after {site}@{nth} failed: {e}"));
+            assert_identical(&snapshot(&dir), &want, &format!("{site}@{nth}"));
+            load_tree_artifact(&dir)
+                .unwrap_or_else(|e| panic!("chain verification after {site}@{nth}: {e}"));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    std::fs::remove_dir_all(&reference).ok();
+}
+
+/// Read and verify faults on a *completed* directory: a one-shot fault
+/// silently recomputes the affected stage (the recovery path IS the
+/// normal "checkpoint missing" path), an every-hit fault kills the run
+/// at the reload-after-write — and in both cases the directory
+/// converges back to the unfaulted bytes.
+#[test]
+fn read_and_verify_faults_recompute_to_byte_identical_artifacts() {
+    let _g = gate();
+    let dir = tmp("read_verify");
+    run(&dir).expect("unfaulted reference run");
+    let want = snapshot(&dir);
+
+    // One-shot read fault (hit 0 = meta, hit 1 = stage1): stage1 is
+    // treated as unreadable and recomputed; the run still succeeds and
+    // the rewritten artifact is bit-identical, so the downstream
+    // upstream-hash chain stays valid and stages 2-4 load.
+    {
+        let _armed = failpoint::arm_scoped("checkpoint.read=err@1").unwrap();
+        run(&dir).expect("a one-shot read fault must be absorbed by recompute");
+    }
+    assert_identical(&snapshot(&dir), &want, "checkpoint.read=err@1");
+
+    // One-shot verify fault: the stage-2 envelope is treated as stale,
+    // the surrogate recomputes, and the reload's verify (next hit)
+    // passes.
+    {
+        let _armed = failpoint::arm_scoped("checkpoint.verify=err@0").unwrap();
+        run(&dir).expect("a one-shot verify fault must be absorbed by recompute");
+    }
+    assert_identical(&snapshot(&dir), &want, "checkpoint.verify=err@0");
+
+    // Every-hit faults fail the reload-after-write hard; a disarmed
+    // resume converges.
+    for spec in ["checkpoint.read=err", "checkpoint.verify=err"] {
+        {
+            let _armed = failpoint::arm_scoped(spec).unwrap();
+            let err = run(&dir).expect_err("an every-hit fault must kill the run");
+            assert!(err.contains("checkpoint") || err.contains("envelope"), "{spec}: {err}");
+        }
+        run(&dir).unwrap_or_else(|e| panic!("resume after {spec} failed: {e}"));
+        assert_identical(&snapshot(&dir), &want, spec);
+    }
+
+    load_tree_artifact(&dir).expect("chain verifies after every fault scenario");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `serving.load` fault: the chain-verified serving load fails loudly
+/// (no partial bundle), and a disarmed retry loads a bundle whose
+/// fingerprint agrees with the cheap meta poll.
+#[test]
+fn serving_load_fault_fails_cleanly_then_loads() {
+    let _g = gate();
+    let dir = tmp("serving_load");
+    run(&dir).expect("unfaulted run");
+
+    {
+        let _armed = failpoint::arm_scoped("serving.load=err").unwrap();
+        let err = TreeBundle::load_checkpoint_dir(&dir)
+            .expect_err("an injected load fault must surface");
+        assert!(err.contains("injected"), "{err}");
+    }
+
+    let bundle = TreeBundle::load_checkpoint_dir(&dir).expect("disarmed load succeeds");
+    assert_eq!(
+        bundle.fingerprint().map(str::to_string),
+        Some(read_fingerprint(&dir).unwrap()),
+        "loaded bundle fingerprint must agree with the meta poll"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Probability-triggered faults with a fixed seed are deterministic:
+/// two armed runs against fresh dirs fail (or not) identically, which
+/// is what makes `MLKAPS_FAILPOINTS=...=err@0.05` reproducible in CI.
+#[test]
+fn probability_faults_are_deterministic_under_a_fixed_seed() {
+    let _g = gate();
+    let outcome = |dir: &PathBuf| -> Result<(), String> {
+        failpoint::arm_with_seed("checkpoint.write=err@0.3", 0xDECAF).unwrap();
+        let r = run(dir);
+        failpoint::disarm();
+        r
+    };
+    let a_dir = tmp("prob_a");
+    let b_dir = tmp("prob_b");
+    let a = outcome(&a_dir);
+    let b = outcome(&b_dir);
+    assert_eq!(a.is_ok(), b.is_ok(), "same seed, same spec ⇒ same fate");
+    assert_eq!(a.err(), b.err(), "and the same error text");
+    // Whatever happened, a disarmed resume always converges.
+    run(&a_dir).expect("resume a");
+    run(&b_dir).expect("resume b");
+    assert_identical(&snapshot(&a_dir), &snapshot(&b_dir), "prob resume");
+    std::fs::remove_dir_all(&a_dir).ok();
+    std::fs::remove_dir_all(&b_dir).ok();
+}

@@ -1,0 +1,465 @@
+//! Chaos suite for the `mlkaps served` daemon: adversarial peers
+//! (truncated frames, oversized length announcements, non-UTF-8 bytes,
+//! unknown verbs, slow-loris stalls), injected socket/batcher/reload
+//! faults, and queue saturation — while **well-behaved clients keep
+//! getting bit-identical decisions with zero errors** and the recovery
+//! counters (`restarts`, `sheds`, `timeouts`, `malformed_frames`,
+//! `conn_panics`) observably move.
+//!
+//! Failpoints are process-global, so every test serializes on one
+//! mutex; the suite lives in its own test binary so armed faults never
+//! leak into the integration tests.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use mlkaps::config::space::{ParamDef, ParamSpace};
+use mlkaps::dtree::DesignTrees;
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::runtime::server::daemon::{Daemon, DaemonConfig};
+use mlkaps::runtime::server::protocol::{read_frame, write_frame};
+use mlkaps::runtime::server::reload::ReloadableBundle;
+use mlkaps::runtime::server::ServedRegistry;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::util::failpoint;
+use mlkaps::util::json::{self, Value};
+use mlkaps::util::rng::Rng;
+
+/// Failpoint state is process-global: tests take this before arming.
+/// Poison-tolerant so one failed test doesn't wedge the rest.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A cheap tuning-shaped bundle (no pipeline run needed: the chaos
+/// suite tests the daemon, not the tuner).
+fn trees() -> DesignTrees {
+    let input = ParamSpace::new(vec![
+        ParamDef::float("n", 64.0, 8192.0),
+        ParamDef::float("m", 64.0, 8192.0),
+    ]);
+    let design = ParamSpace::new(vec![
+        ParamDef::int("threads", 1, 64),
+        ParamDef::categorical("variant", &["row", "col", "tile"]),
+        ParamDef::boolean("prefetch"),
+    ]);
+    let grid = input.grid(12);
+    let designs: Vec<Vec<f64>> = grid
+        .iter()
+        .map(|p| {
+            let size = p[0] * p[1];
+            vec![
+                (size.sqrt() / 128.0).round().clamp(1.0, 64.0),
+                if p[1] > 2.0 * p[0] { 2.0 } else { 1.0 },
+                if size > 1e6 { 1.0 } else { 0.0 },
+            ]
+        })
+        .collect();
+    DesignTrees::fit(&grid, &designs, &input, &design, 8)
+}
+
+/// A daemon serving `toy`, plus an identical in-process reference
+/// bundle for bit-identity assertions.
+fn boot(cfg: DaemonConfig) -> (Daemon, TreeBundle) {
+    let t = trees();
+    let reference = TreeBundle::from_trees(t.clone()).unwrap();
+    let mut reg = ServedRegistry::new(None);
+    reg.register_bundle("toy", TreeBundle::from_trees(t).unwrap()).unwrap();
+    (Daemon::start(reg, cfg).unwrap(), reference)
+}
+
+fn cfg() -> DaemonConfig {
+    DaemonConfig {
+        addr: "127.0.0.1:0".into(),
+        batch_max: 64,
+        // Wider than the 200µs production default so concurrent test
+        // clients reliably coalesce on a single-core CI runner.
+        batch_window: Duration::from_millis(1),
+        poll_interval: Duration::from_secs(3600), // nothing watched
+        threads: 1,
+        queue_capacity: 1024,
+        ..Default::default()
+    }
+}
+
+fn raw(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_nodelay(true).ok();
+    s
+}
+
+fn read_json_frame(s: &mut TcpStream) -> Value {
+    let payload = read_frame(s).unwrap().expect("daemon closed before responding");
+    json::parse(std::str::from_utf8(&payload).unwrap()).unwrap()
+}
+
+fn counter(stats: &Value, field: &str) -> u64 {
+    stats
+        .get(field)
+        .and_then(Value::as_f64)
+        .unwrap_or_else(|| panic!("STATS missing {field}")) as u64
+}
+
+/// Tentpole acceptance: five kinds of adversarial peers hammer the
+/// daemon while well-behaved clients run — the good clients see zero
+/// errors and decisions bit-identical to in-process `decide`, every
+/// adversary is answered or disconnected (never hung on), the
+/// malformed/timeout counters account for them, and the daemon drains
+/// cleanly afterwards.
+#[test]
+fn adversarial_peers_never_perturb_well_behaved_clients() {
+    let _g = gate();
+    let (mut daemon, reference) =
+        boot(DaemonConfig { read_timeout: Duration::from_millis(200), ..cfg() });
+    let addr = daemon.local_addr();
+
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 150;
+    std::thread::scope(|scope| {
+        let mut good = Vec::new();
+        for t in 0..CLIENTS {
+            let reference = &reference;
+            good.push(scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                let mut rng = Rng::new(9000 + t as u64);
+                for _ in 0..PER_CLIENT {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    let d = client.decide("toy", &q, None).unwrap();
+                    assert_eq!(
+                        d.values,
+                        reference.decide(&q),
+                        "served decision diverged under adversarial load for {q:?}"
+                    );
+                }
+            }));
+        }
+
+        // Adversary 1: a frame truncated mid-payload (announces 256
+        // bytes, sends 10, hangs up). Counted malformed, connection
+        // dropped, nobody else affected.
+        let mut s = raw(addr);
+        s.write_all(&256u32.to_be_bytes()).unwrap();
+        s.write_all(b"0123456789").unwrap();
+        drop(s);
+
+        // Adversary 2: a valid binary connection that then announces an
+        // absurd 4 GiB frame. The daemon answers with a structured
+        // error *without attempting the allocation*, then closes.
+        let mut s = raw(addr);
+        write_frame(&mut s, br#"{"op":"ping"}"#).unwrap();
+        assert_eq!(read_json_frame(&mut s).get("ok"), Some(&Value::Bool(true)));
+        s.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        let resp = read_json_frame(&mut s);
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        let err = resp.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("exceeds"), "oversized error: {err}");
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap(), 0, "connection must close");
+
+        // Adversary 3: a well-framed payload that is not UTF-8. Gets an
+        // error response and the connection *survives* — framing is
+        // still intact.
+        let mut s = raw(addr);
+        write_frame(&mut s, &[0xC3, 0x28, 0xFF]).unwrap();
+        let resp = read_json_frame(&mut s);
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        write_frame(&mut s, br#"{"op":"ping"}"#).unwrap();
+        assert_eq!(
+            read_json_frame(&mut s).get("ok"),
+            Some(&Value::Bool(true)),
+            "connection must survive a malformed-payload request"
+        );
+        drop(s);
+
+        // Adversary 4: text-mode gibberish verb, then a valid PING on
+        // the same connection.
+        let mut s = raw(addr);
+        s.write_all(b"EXPLODE\n").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        s.write_all(b"PING\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(json::parse(&line).unwrap().get("ok"), Some(&Value::Bool(true)));
+        drop(s);
+
+        // Adversary 5: a text line that never ends (1 MiB + 1 bytes, no
+        // newline). Answered with the cap error, then disconnected —
+        // the buffer never grows past the cap.
+        let mut s = raw(addr);
+        let big = vec![b'a'; (1 << 20) + 1];
+        let _ = s.write_all(&big);
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(&line).unwrap();
+        let err = resp.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("1 MiB cap"), "cap error: {err}");
+
+        // Adversary 6: slow-loris — one byte, then silence longer than
+        // the 200ms read timeout. The daemon hangs up on *it*, not on
+        // anyone else.
+        let mut s = raw(addr);
+        s.write_all(b"P").unwrap();
+        std::thread::sleep(Duration::from_millis(600));
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap(), 0, "loris must be disconnected");
+
+        for h in good {
+            h.join().unwrap();
+        }
+    });
+
+    // The books balance: every adversary is in a counter, the good
+    // clients are not.
+    let mut control = ServedClient::connect(addr).unwrap();
+    let stats = control.stats().unwrap();
+    assert!(counter(&stats, "malformed_frames") >= 5, "stats: {}", stats.to_string());
+    assert!(counter(&stats, "timeouts") >= 1, "stats: {}", stats.to_string());
+    let toy = stats.get("kernels").and_then(|k| k.get("toy")).unwrap();
+    assert_eq!(counter(toy, "errors"), 0, "well-behaved clients must see zero errors");
+    assert!(counter(toy, "requests") >= (CLIENTS * PER_CLIENT) as u64);
+
+    // And the daemon still drains cleanly after all of that.
+    control.drain().unwrap();
+    daemon.wait();
+}
+
+/// Queue saturation + a persistently panicking batcher: requests are
+/// shed with a structured `overloaded` + `retry_after_ms` response
+/// (never a blocked producer, never a hang), the supervisor restarts
+/// the batcher with backoff, and once the fault clears the daemon
+/// serves bit-identical decisions again.
+#[test]
+fn overload_sheds_with_retry_hint_and_batcher_restarts_heal() {
+    let _g = gate();
+    let (mut daemon, reference) = boot(DaemonConfig {
+        queue_capacity: 1,
+        batch_max: 1,
+        ..cfg()
+    });
+    let addr = daemon.local_addr();
+    let q = vec![1000.0, 2000.0];
+
+    let armed = failpoint::arm_scoped("batcher.flush=panic").unwrap();
+    let stop = AtomicBool::new(false);
+    let mut saw_overloaded = false;
+    std::thread::scope(|scope| {
+        // Hammers keep the 1-slot queue occupied so concurrent pushes
+        // shed. Their requests die in panicking flushes — each gets an
+        // explicit dropped/overloaded error response, never a hang.
+        let mut hammers = Vec::new();
+        for _ in 0..2 {
+            let stop = &stop;
+            hammers.push(scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = client.decide("toy", &[500.0, 600.0], None);
+                }
+            }));
+        }
+
+        // A raw text-mode observer: hammer decides until one response
+        // is the structured shed.
+        let s = raw(addr);
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut writer = s;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while Instant::now() < deadline {
+            writer.write_all(b"{\"kernel\":\"toy\",\"input\":[1000,2000]}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = json::parse(&line).unwrap();
+            assert_ne!(
+                resp.get("ok"),
+                Some(&Value::Bool(true)),
+                "no decide can succeed while every flush panics"
+            );
+            if resp.get("overloaded") == Some(&Value::Bool(true)) {
+                let hint = resp.get("retry_after_ms").and_then(Value::as_f64).unwrap();
+                assert!(hint >= 1.0, "retry_after_ms hint must be usable: {}", resp.to_string());
+                let err = resp.get("error").and_then(Value::as_str).unwrap();
+                assert!(err.contains("overloaded"), "{err}");
+                saw_overloaded = true;
+                break;
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in hammers {
+            h.join().unwrap();
+        }
+    });
+    assert!(saw_overloaded, "queue saturation never produced a structured shed");
+    drop(armed); // heal the batcher
+
+    // Recovery: within a few supervisor backoff windows the daemon
+    // answers again, bit-identical to the in-process reference.
+    let mut client = ServedClient::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let decision = loop {
+        match client.decide("toy", &q, None) {
+            Ok(d) => break d,
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50))
+            }
+            Err(e) => panic!("daemon never recovered after disarm: {e}"),
+        }
+    };
+    assert_eq!(decision.values, reference.decide(&q), "post-recovery decision diverged");
+
+    let stats = client.stats().unwrap();
+    assert!(counter(&stats, "restarts") >= 1, "stats: {}", stats.to_string());
+    assert!(counter(&stats, "sheds") >= 1, "stats: {}", stats.to_string());
+    client.shutdown().unwrap();
+    daemon.wait();
+}
+
+/// A panicking connection handler (and a transiently failing accept)
+/// kill exactly one connection each: the next client is served, and
+/// only `conn_panics` moves.
+#[test]
+fn connection_panics_and_accept_faults_stay_isolated() {
+    let _g = gate();
+    let (mut daemon, _reference) = boot(cfg());
+    let addr = daemon.local_addr();
+    ServedClient::connect(addr).unwrap().ping().unwrap();
+
+    {
+        let _armed = failpoint::arm_scoped("daemon.conn=panic@0").unwrap();
+        let mut victim = raw(addr);
+        let mut buf = Vec::new();
+        assert_eq!(
+            victim.read_to_end(&mut buf).unwrap(),
+            0,
+            "the panicking handler's connection must just close"
+        );
+    }
+    ServedClient::connect(addr).unwrap().ping().expect("daemon must survive a conn panic");
+
+    {
+        let _armed = failpoint::arm_scoped("daemon.accept=err@0").unwrap();
+        // TCP-accepted by the kernel, then dropped by the armed accept
+        // loop: the client sees an immediate close, not a hang.
+        let mut victim = ServedClient::connect(addr).unwrap();
+        assert!(victim.ping().is_err(), "the dropped connection must error out");
+    }
+
+    let mut client = ServedClient::connect(addr).unwrap();
+    client.ping().expect("daemon must survive an accept fault");
+    let stats = client.stats().unwrap();
+    assert_eq!(counter(&stats, "conn_panics"), 1, "stats: {}", stats.to_string());
+    client.shutdown().unwrap();
+    daemon.wait();
+}
+
+/// Injected read/write socket faults close only their own connection,
+/// mid-request, and the client sees an explicit error — the next
+/// connection works.
+#[test]
+fn injected_socket_faults_close_one_connection_cleanly() {
+    let _g = gate();
+    let (mut daemon, _reference) = boot(cfg());
+    let addr = daemon.local_addr();
+
+    // Read fault (one-shot): the armed connection answers its in-flight
+    // request, then observes the injected EOF and closes.
+    let mut a = ServedClient::connect(addr).unwrap();
+    a.ping().unwrap();
+    {
+        let _armed = failpoint::arm_scoped("daemon.read=eof@0").unwrap();
+        a.ping().expect("the request before the injected EOF still answers");
+        let err = a.ping().expect_err("the connection must be closed after the EOF");
+        // Clean FIN ("closed the connection") or an RST if the close
+        // races our write — explicit either way, never a hang.
+        assert!(
+            err.contains("closed the connection")
+                || err.contains("reset")
+                || err.contains("pipe"),
+            "{err}"
+        );
+    }
+    ServedClient::connect(addr).unwrap().ping().expect("next connection must work");
+
+    // Write fault (one-shot): the response is dropped and the
+    // connection closes; the client gets an explicit mid-request error.
+    let mut b = ServedClient::connect(addr).unwrap();
+    b.ping().unwrap();
+    {
+        let _armed = failpoint::arm_scoped("daemon.write=err@0").unwrap();
+        let err = b.ping().expect_err("the faulted write must drop the response");
+        assert!(
+            err.contains("closed the connection")
+                || err.contains("reset")
+                || err.contains("pipe"),
+            "{err}"
+        );
+    }
+
+    let mut client = ServedClient::connect(addr).unwrap();
+    client.ping().expect("daemon must survive socket faults");
+    client.shutdown().unwrap();
+    daemon.wait();
+}
+
+/// An injected enqueue fault surfaces as an explicit error response to
+/// exactly that request; the connection and the daemon keep working.
+#[test]
+fn injected_enqueue_fault_errors_one_request() {
+    let _g = gate();
+    let (mut daemon, reference) = boot(cfg());
+    let addr = daemon.local_addr();
+    let q = vec![4096.0, 128.0];
+
+    let mut client = ServedClient::connect(addr).unwrap();
+    {
+        let _armed = failpoint::arm_scoped("batcher.enqueue=err@0").unwrap();
+        let err = client.decide("toy", &q, None).expect_err("armed enqueue must fail");
+        assert!(err.contains("injected"), "{err}");
+    }
+    let d = client.decide("toy", &q, None).expect("the very next request succeeds");
+    assert_eq!(d.values, reference.decide(&q));
+    client.shutdown().unwrap();
+    daemon.wait();
+}
+
+/// A hot-reload poll that faults counts a reload error and keeps the
+/// old epoch serving — injected faults and real ones (missing
+/// checkpoint) take the same path.
+#[test]
+fn reload_poll_faults_keep_the_old_epoch_serving() {
+    let _g = gate();
+    let dir = std::env::temp_dir()
+        .join(format!("mlkaps_chaos_reload_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let bundle = TreeBundle::from_trees(trees()).unwrap();
+    let q = vec![777.0, 3333.0];
+    let want = bundle.decide(&q);
+    let slot = ReloadableBundle::new(bundle, Some(dir.clone()));
+
+    {
+        let _armed = failpoint::arm_scoped("reload.poll=err").unwrap();
+        let err = slot.poll().expect_err("armed poll must fail");
+        assert!(err.contains("injected"), "{err}");
+        assert_eq!(slot.reload_errors(), 1);
+        assert_eq!(slot.get().decide(&q), want, "old epoch must keep serving");
+    }
+
+    // Disarmed, the poll still fails — but now for the real reason (no
+    // checkpoint in the watched dir), through the same counter.
+    let err = slot.poll().expect_err("empty dir cannot reload");
+    assert!(!err.contains("injected"), "{err}");
+    assert_eq!(slot.reload_errors(), 2);
+    assert_eq!(slot.get().decide(&q), want);
+    std::fs::remove_dir_all(&dir).ok();
+}

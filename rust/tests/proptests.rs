@@ -374,6 +374,95 @@ fn prop_param_space_json_roundtrip() {
 }
 
 #[test]
+fn prop_protocol_parsers_never_panic_or_overallocate_on_arbitrary_bytes() {
+    // The daemon's framing auto-detection routes a connection by its
+    // first byte (0x00 = binary length-prefixed, anything else = text
+    // lines). Throw arbitrary byte soup at both parsers: they must
+    // never panic, a successful frame can never exceed the bytes
+    // actually supplied, and an absurd length announcement must be
+    // rejected as Oversized *before* any payload allocation (a 4 GiB
+    // prefix against a 10-byte stream returns instantly).
+    use mlkaps::runtime::server::protocol::{
+        read_frame, write_frame, FrameError, Request, MAX_FRAME,
+    };
+
+    let mut rng = Rng::new(0xFA11_0BAD);
+    for trial in 0..2000 {
+        let n = rng.below(64);
+        let mut bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        match rng.below(4) {
+            // Raw soup as generated.
+            0 => {}
+            // A plausible small-frame prefix (length may still exceed
+            // what follows — a truncated frame).
+            1 => {
+                let mut b = (rng.below(48) as u32).to_be_bytes().to_vec();
+                b.extend_from_slice(&bytes);
+                bytes = b;
+            }
+            // A valid frame, then an absurd length announcement: a
+            // length ≥ MAX_FRAME has a nonzero first byte, so only a
+            // mid-stream prefix can reach the binary route's Oversized
+            // rejection.
+            2 => {
+                let mut b = Vec::new();
+                write_frame(&mut b, b"{\"op\":\"ping\"}").unwrap();
+                let len = MAX_FRAME as u32 + rng.below(1 << 20) as u32;
+                b.extend_from_slice(&len.to_be_bytes());
+                b.extend_from_slice(&bytes);
+                bytes = b;
+            }
+            // Valid JSON wrapped in a valid frame, to keep the happy
+            // path in the mix.
+            _ => {
+                let mut b = Vec::new();
+                write_frame(&mut b, b"{\"kernel\":\"k\",\"input\":[1,2]}").unwrap();
+                b.extend_from_slice(&bytes);
+                bytes = b;
+            }
+        }
+
+        if bytes.first() == Some(&0x00) {
+            // Binary route: drain frames until EOF or an error.
+            let mut cursor = std::io::Cursor::new(bytes.clone());
+            loop {
+                match read_frame(&mut cursor) {
+                    Ok(Some(payload)) => {
+                        assert!(
+                            payload.len() <= bytes.len(),
+                            "trial {trial}: frame larger than the input"
+                        );
+                        if let Ok(text) = std::str::from_utf8(&payload) {
+                            let _ = json::parse(text).map(|v| Request::from_json(&v));
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(FrameError::Oversized(len)) => {
+                        assert!(len >= MAX_FRAME, "trial {trial}: premature Oversized");
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        // Text route: every line (and the lossy whole) parses or errors,
+        // never panics.
+        let text = String::from_utf8_lossy(&bytes);
+        let _ = Request::from_line(&text);
+        for line in text.lines() {
+            let _ = Request::from_line(line);
+        }
+    }
+
+    // Building an oversized frame is refused symmetrically.
+    let mut sink = Vec::new();
+    assert!(matches!(
+        write_frame(&mut sink, &vec![0u8; MAX_FRAME]),
+        Err(FrameError::Oversized(_))
+    ));
+}
+
+#[test]
 fn prop_kind_cardinality_consistent_with_decode_range() {
     let mut rng = Rng::new(0x31337);
     for _ in 0..100 {
