@@ -18,7 +18,11 @@
 //!               [--batch-max 256] [--batch-window-us 200]
 //!               [--poll-ms 500] [--threads N] [--queue-cap 4096]
 //!               [--memo exact|quantized] [--read-timeout-ms 30000]
-//!               [--write-timeout-ms 30000]
+//!               [--write-timeout-ms 30000] [--reservoir-cap 1024]
+//! mlkaps retune --checkpoint-dir DIR
+//!               (--from-daemon HOST:PORT | --from-samples FILE)
+//!               [--kernel NAME] [--limit N]
+//!               [--depth 8] [--threads N]   (must match the original tune)
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -49,6 +53,16 @@
 //! threshold-cell codes instead of exact input bits, so inputs landing
 //! in the same leaf cell of every tree share one entry (hit telemetry
 //! reports exact and quantized hits separately).
+//!
+//! `retune` closes the tuning loop: it pulls the served-input reservoir
+//! from a running daemon (the `SAMPLES` verb; or reads rows from a JSON
+//! file), importance-weights the stage-3 optimization grid toward the
+//! input shapes production actually sends, refits the decision trees,
+//! and rewrites the checkpoint chain in place under a derived
+//! fingerprint — which a daemon watching that directory hot-reloads on
+//! its next poll, prewarmed. `--depth`/`--threads` must match the
+//! original `tune` invocation so the refit is apples-to-apples. The
+//! rewrite is bit-reproducible for a fixed sample set.
 
 use std::collections::HashMap;
 
@@ -387,6 +401,12 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
     if let Some(m) = flags.get("memo") {
         reg.set_memo_mode(crate::runtime::serving::MemoMode::parse(m)?);
     }
+    if let Some(cap) = flags.get("reservoir-cap") {
+        // Per-variant served-input reservoir size (the closed loop's
+        // observation buffer; `SAMPLES` dumps it, `retune` consumes it).
+        // Must be set before any variant registers.
+        reg.set_reservoir_cap(cap.parse().map_err(|e| format!("reservoir-cap: {e}"))?);
+    }
 
     let names: Vec<String> = flags
         .get("name")
@@ -452,6 +472,130 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Extract served-input rows from a parsed samples document: either a
+/// bare JSON array of rows (`[[4500,1600],…]`) or a full `SAMPLES`
+/// response (so `SAMPLES` output piped to a file re-tunes verbatim).
+/// `kernel` filters a response document by variant or kernel name.
+fn sample_rows_from_value(
+    v: &crate::util::json::Value,
+    kernel: Option<&str>,
+) -> Result<Vec<Vec<f64>>, String> {
+    use crate::util::json::Value;
+    let row_of = |row: &Value| -> Result<Vec<f64>, String> {
+        row.as_arr()
+            .ok_or("sample row is not an array")?
+            .iter()
+            .map(|x| x.as_f64().ok_or("non-numeric sample value"))
+            .collect::<Result<Vec<f64>, &str>>()
+            .map_err(str::to_string)
+    };
+    if let Value::Arr(rows) = v {
+        return rows.iter().map(row_of).collect();
+    }
+    let Some(Value::Obj(per_variant)) = v.get("samples") else {
+        return Err(
+            "samples document is neither an array of rows nor a SAMPLES response".into()
+        );
+    };
+    let mut out = Vec::new();
+    for (name, entry) in per_variant {
+        if let Some(k) = kernel {
+            let kernel_matches =
+                entry.get("kernel").and_then(Value::as_str).is_some_and(|x| x == k);
+            if name != k && !kernel_matches {
+                continue;
+            }
+        }
+        for row in entry.get("rows").and_then(Value::as_arr).unwrap_or(&[]) {
+            out.push(row_of(row)?);
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_retune(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::server::client::ServedClient;
+    use crate::util::json::Value;
+
+    let dir = flags
+        .get("checkpoint-dir")
+        .cloned()
+        .ok_or("retune needs --checkpoint-dir DIR (the checkpoint chain to rewrite)")?;
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    // Only the tree refit runs, so only its knobs matter — but they must
+    // match the original `tune` for the refit to be apples-to-apples.
+    let cfg = MlkapsConfig {
+        tree_depth: get("depth", "8").parse().map_err(|e| format!("depth: {e}"))?,
+        threads: get("threads", "0").parse::<usize>().ok().filter(|&t| t > 0).unwrap_or_else(
+            crate::util::threadpool::default_threads,
+        ),
+        ..Default::default()
+    };
+    let run = PipelineRun::new(cfg, &dir);
+
+    let limit: Option<usize> = flags
+        .get("limit")
+        .map(|v| v.parse().map_err(|e| format!("limit: {e}")))
+        .transpose()?;
+    let kernel = flags.get("kernel").map(String::as_str);
+    let samples: Vec<Vec<f64>> = match (flags.get("from-daemon"), flags.get("from-samples"))
+    {
+        (Some(addr), None) => {
+            let mut client = ServedClient::connect(addr.as_str())
+                .map_err(|e| format!("daemon {addr}: {e}"))?;
+            let v = client.samples(kernel, limit)?;
+            sample_rows_from_value(&v, kernel)?
+        }
+        (None, Some(path)) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let v = crate::util::json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+            let mut rows = sample_rows_from_value(&v, kernel)?;
+            if let Some(n) = limit {
+                rows.truncate(n);
+            }
+            rows
+        }
+        _ => {
+            return Err(
+                "retune needs exactly one of --from-daemon HOST:PORT or --from-samples FILE"
+                    .into(),
+            )
+        }
+    };
+    if samples.is_empty() {
+        return Err(
+            "no served samples to re-tune from (drive traffic first, or check --kernel)"
+                .into(),
+        );
+    }
+
+    let outcome = run.retune(&samples)?;
+    eprintln!(
+        "retune: {} served rows boosted {} grid points in {dir}",
+        samples.len(),
+        outcome.boosted
+    );
+    eprintln!(
+        "retune: fingerprint {} -> {} (a watching daemon hot-reloads on its next poll)",
+        outcome.base_fingerprint, outcome.fingerprint
+    );
+    // Machine-readable record on stdout (CI parses the fingerprints).
+    println!(
+        "{}",
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("checkpoint_dir", Value::Str(dir)),
+            ("samples", Value::Num(samples.len() as f64)),
+            ("boosted", Value::Num(outcome.boosted as f64)),
+            ("base_fingerprint", Value::Str(outcome.base_fingerprint)),
+            ("fingerprint", Value::Str(outcome.fingerprint)),
+        ])
+        .to_pretty()
+    );
+    Ok(())
+}
+
 fn cmd_artifacts(flags: HashMap<String, String>) -> Result<(), String> {
     let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
     let manifest = crate::runtime::Manifest::load(std::path::Path::new(&dir))
@@ -487,7 +631,7 @@ pub fn main() {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: mlkaps <kernels|tune|serve|served|artifacts> [--flags]");
+            eprintln!("usage: mlkaps <kernels|tune|serve|served|retune|artifacts> [--flags]");
             eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
             std::process::exit(2);
         }
@@ -502,6 +646,7 @@ pub fn main() {
         "tune" => parse_flags(&rest).and_then(cmd_tune),
         "serve" => parse_flags(&rest).and_then(cmd_serve),
         "served" => parse_flags(&rest).and_then(cmd_served),
+        "retune" => parse_flags(&rest).and_then(cmd_retune),
         "artifacts" => parse_flags(&rest).and_then(cmd_artifacts),
         other => Err(format!("unknown command '{other}'")),
     };
@@ -565,6 +710,50 @@ mod tests {
         let mut flags = HashMap::new();
         flags.insert("dir".to_string(), "/nonexistent/ckpt".to_string());
         assert!(cmd_served(flags).is_err());
+    }
+
+    #[test]
+    fn retune_requires_a_checkpoint_and_exactly_one_source() {
+        // No checkpoint dir.
+        assert!(cmd_retune(HashMap::new()).is_err());
+        // Checkpoint dir but no source.
+        let mut flags = HashMap::new();
+        flags.insert("checkpoint-dir".to_string(), "/nonexistent/ckpt".to_string());
+        let err = cmd_retune(flags.clone()).unwrap_err();
+        assert!(err.contains("exactly one of"), "{err}");
+        // Both sources at once.
+        flags.insert("from-daemon".to_string(), "127.0.0.1:1".to_string());
+        flags.insert("from-samples".to_string(), "/nonexistent.json".to_string());
+        let err = cmd_retune(flags).unwrap_err();
+        assert!(err.contains("exactly one of"), "{err}");
+    }
+
+    #[test]
+    fn sample_rows_parse_from_bare_arrays_and_samples_responses() {
+        use crate::util::json::parse;
+        // Bare array of rows.
+        let v = parse("[[1,2],[3,4]]").unwrap();
+        assert_eq!(
+            sample_rows_from_value(&v, None).unwrap(),
+            vec![vec![1.0, 2.0], vec![3.0, 4.0]]
+        );
+        // A full SAMPLES response, filtered by variant and kernel name.
+        let v = parse(
+            r#"{"ok":true,"samples":{
+                "lu@spr":{"kernel":"lu","rows":[[5,6]]},
+                "qr":{"kernel":"qr","rows":[[7,8]]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(sample_rows_from_value(&v, None).unwrap().len(), 2);
+        assert_eq!(sample_rows_from_value(&v, Some("lu")).unwrap(), vec![vec![5.0, 6.0]]);
+        assert_eq!(
+            sample_rows_from_value(&v, Some("lu@spr")).unwrap(),
+            vec![vec![5.0, 6.0]]
+        );
+        assert!(sample_rows_from_value(&v, Some("nope")).unwrap().is_empty());
+        // Garbage shapes error instead of decaying to empty.
+        assert!(sample_rows_from_value(&parse("{\"ok\":true}").unwrap(), None).is_err());
+        assert!(sample_rows_from_value(&parse("[[1,\"x\"]]").unwrap(), None).is_err());
     }
 
     #[test]

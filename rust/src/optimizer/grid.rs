@@ -50,6 +50,14 @@ pub struct GridOptResult {
     pub designs: Vec<Vec<f64>>,
     /// Surrogate-predicted objective of each chosen configuration.
     pub predicted: Vec<f64>,
+    /// Optional per-point importance weight (same length as `inputs`),
+    /// set by `mlkaps retune` from observed serving traffic via
+    /// [`GridOptResult::weight_from_samples`]. `None` (the initial tune,
+    /// and every pre-weights checkpoint on disk) means uniform weight 1.
+    /// Weights only influence the stage-4 tree fit — they must never
+    /// reach the grid GA, whose per-point RNG streams are seeded by
+    /// global grid index and stay bit-identical across retunes.
+    pub weights: Option<Vec<f64>>,
 }
 
 /// Serialize an array of f64 rows (shared with the checkpoint shard writer).
@@ -86,9 +94,11 @@ pub(crate) fn scalars_from_json(v: &Value) -> Result<Vec<f64>, String> {
 }
 
 impl GridOptResult {
-    /// Serialize the grid result to a versioned JSON checkpoint.
+    /// Serialize the grid result to a versioned JSON checkpoint. The
+    /// weights column is emitted only when present, so unweighted grids
+    /// serialize byte-identically to the pre-weights format.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("format", Value::Str("mlkaps-grid-v1".into())),
             ("inputs", rows_to_json(&self.inputs)),
             ("designs", rows_to_json(&self.designs)),
@@ -96,10 +106,16 @@ impl GridOptResult {
                 "predicted",
                 Value::Arr(self.predicted.iter().map(|&v| Value::Num(v)).collect()),
             ),
-        ])
+        ];
+        if let Some(w) = &self.weights {
+            fields.push(("weights", Value::Arr(w.iter().map(|&v| Value::Num(v)).collect())));
+        }
+        Value::obj(fields)
     }
 
     /// Reload a grid result serialized with [`GridOptResult::to_json`].
+    /// Accepts checkpoints written before the weights column existed
+    /// (`weights` absent ⇒ `None`).
     pub fn from_json(v: &Value) -> Result<GridOptResult, String> {
         if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-grid-v1") {
             return Err("unknown grid format".into());
@@ -108,11 +124,76 @@ impl GridOptResult {
         let designs = rows_from_json(v.get("designs").ok_or("grid missing designs")?)?;
         let predicted =
             scalars_from_json(v.get("predicted").ok_or("grid missing predicted")?)?;
+        let weights = match v.get("weights") {
+            Some(w) => Some(scalars_from_json(w)?),
+            None => None,
+        };
         let n = inputs.len();
         if inputs.is_empty() || designs.len() != n || predicted.len() != n {
             return Err("grid arrays are empty or inconsistent".into());
         }
-        Ok(GridOptResult { inputs, designs, predicted })
+        if weights.as_ref().is_some_and(|w| w.len() != n) {
+            return Err("grid weights length mismatch".into());
+        }
+        Ok(GridOptResult { inputs, designs, predicted, weights })
+    }
+
+    /// Importance-weight the grid from observed serving traffic (the
+    /// **re-tune** leg of the closed loop): each sample row is assigned
+    /// to its nearest grid point by squared Euclidean distance in
+    /// per-dimension range-normalized coordinates (ties break to the
+    /// lowest index), and each point's weight becomes `1 + hits` — every
+    /// point keeps at least the baseline weight the initial tune gave
+    /// it, so unobserved regions of the input space are still modeled,
+    /// while hot regions dominate the stage-4 tree fit. Rows whose
+    /// dimension doesn't match the grid are skipped. Returns the number
+    /// of grid points that received at least one sample. Deterministic:
+    /// a pure function of the grid and the sample multiset order-free
+    /// (counts are order-independent).
+    pub fn weight_from_samples(&mut self, samples: &[Vec<f64>]) -> usize {
+        let dim = self.inputs.first().map_or(0, Vec::len);
+        // Per-dimension normalization scale from the grid's own extent,
+        // so a dimension spanning [100, 5000] doesn't drown one
+        // spanning [0, 1]. Degenerate (constant) dimensions scale by 1.
+        let mut scale = vec![1.0f64; dim];
+        for d in 0..dim {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for row in &self.inputs {
+                lo = lo.min(row[d]);
+                hi = hi.max(row[d]);
+            }
+            if hi > lo {
+                scale[d] = hi - lo;
+            }
+        }
+        let mut hits = vec![0u64; self.inputs.len()];
+        for s in samples {
+            if s.len() != dim {
+                continue;
+            }
+            let mut best = 0usize;
+            let mut best_d2 = f64::INFINITY;
+            for (g, row) in self.inputs.iter().enumerate() {
+                let mut d2 = 0.0;
+                for d in 0..dim {
+                    let t = (s[d] - row[d]) / scale[d];
+                    d2 += t * t;
+                }
+                // Strict `<` keeps the first (lowest-index) minimum, so
+                // equidistant samples assign deterministically; NaN
+                // distances compare false and never displace a real one.
+                if d2 < best_d2 {
+                    best = g;
+                    best_d2 = d2;
+                }
+            }
+            if best_d2.is_finite() {
+                hits[best] += 1;
+            }
+        }
+        let boosted = hits.iter().filter(|&&h| h > 0).count();
+        self.weights = Some(hits.iter().map(|&h| 1.0 + h as f64).collect());
+        boosted
     }
 }
 
@@ -336,7 +417,7 @@ pub fn optimize_grid(
     let inputs = input_space.grid(grid_per_dim);
     let (designs, predicted) =
         optimize_grid_shard(surrogate, design_space, &inputs, 0, ga, seeds, threads, seed);
-    GridOptResult { inputs, designs, predicted }
+    GridOptResult { inputs, designs, predicted, weights: None }
 }
 
 #[cfg(test)]
@@ -473,14 +554,68 @@ mod tests {
         let input = ParamSpace::new(vec![ParamDef::float("x", 0.0, 1.0)]);
         let design = ParamSpace::new(vec![ParamDef::int("t", 1, 8)]);
         let ga = Nsga2::new(Nsga2Params::default());
-        let res = optimize_grid(&Analytic, &input, &design, 4, &ga, &[], 1, 5);
+        let mut res = optimize_grid(&Analytic, &input, &design, 4, &ga, &[], 1, 5);
         let text = res.to_json().to_string();
+        assert!(!text.contains("weights"), "unweighted grids keep the legacy shape");
         let back =
             GridOptResult::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.inputs, res.inputs);
         assert_eq!(back.designs, res.designs);
         assert_eq!(back.predicted, res.predicted);
+        assert_eq!(back.weights, None, "absent column must load as None");
         assert!(GridOptResult::from_json(&crate::util::json::parse("{}").unwrap()).is_err());
+
+        // The weights column survives a roundtrip when present.
+        res.weight_from_samples(&[res.inputs[0].clone()]);
+        let back = GridOptResult::from_json(
+            &crate::util::json::parse(&res.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.weights, res.weights);
+        assert!(back.weights.is_some());
+
+        // A truncated weights column is rejected, not silently padded.
+        let mut v = crate::util::json::parse(&res.to_json().to_string()).unwrap();
+        if let Value::Obj(m) = &mut v {
+            m.insert("weights".to_string(), Value::Arr(vec![Value::Num(1.0)]));
+        }
+        assert!(GridOptResult::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn weight_from_samples_counts_nearest_points_and_keeps_the_floor() {
+        // A 3-point grid over [0, 100]; samples cluster near the last
+        // point, one lands exactly between the first two (tie → lowest
+        // index), wrong-dim and NaN rows are ignored.
+        let mut grid = GridOptResult {
+            inputs: vec![vec![0.0], vec![50.0], vec![100.0]],
+            designs: vec![vec![1.0], vec![2.0], vec![3.0]],
+            predicted: vec![0.1, 0.2, 0.3],
+            weights: None,
+        };
+        let samples = vec![
+            vec![99.0],
+            vec![92.0],
+            vec![80.0],
+            vec![25.0],          // equidistant from 0 and 50 → index 0
+            vec![1.0, 2.0],      // wrong dim: skipped
+            vec![f64::NAN],      // NaN distance: never assigned
+        ];
+        let boosted = grid.weight_from_samples(&samples);
+        assert_eq!(boosted, 2);
+        assert_eq!(grid.weights, Some(vec![2.0, 1.0, 4.0]));
+
+        // Determinism: same samples in another order, same weights.
+        let mut again = GridOptResult {
+            inputs: grid.inputs.clone(),
+            designs: grid.designs.clone(),
+            predicted: grid.predicted.clone(),
+            weights: None,
+        };
+        let mut rev = samples.clone();
+        rev.reverse();
+        again.weight_from_samples(&rev);
+        assert_eq!(again.weights, grid.weights);
     }
 
     #[test]

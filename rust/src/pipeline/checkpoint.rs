@@ -430,7 +430,7 @@ impl PipelineRun {
             base = end;
             shard_idx += 1;
         }
-        let grid = GridOptResult { inputs, designs, predicted };
+        let grid = GridOptResult { inputs, designs, predicted, weights: None };
         let v = envelope(Stage::GridOptimize, &up, grid.to_json());
         self.write_artifact(STAGE3_FILE, &v)?;
         let v = self.read_stage(STAGE3_FILE).ok_or("reload stage3 checkpoint")?;
@@ -574,6 +574,123 @@ impl PipelineRun {
             .iter()
             .all(|f| self.path(f).exists())
     }
+
+    /// Re-fit the stage-4 trees with the stage-3 grid importance-weighted
+    /// by observed serving traffic — the **re-tune** leg of the closed
+    /// loop (serve → observe → re-tune → redeploy). Nothing upstream of
+    /// the tree fit recomputes: the dataset, surrogate, and every grid
+    /// point's GA result (with its global-index RNG seeding) are reused
+    /// byte for byte, so a retune costs one nearest-point sweep plus one
+    /// CART fit, and retuning twice from the same samples is
+    /// bit-identical.
+    ///
+    /// The checkpoint chain is rewritten in place, front to back, under
+    /// the same atomic-write protocol as a fresh run: stage 1 takes the
+    /// derived fingerprint, each later stage re-links to the bytes just
+    /// written, stale stage-3 shard files are removed, and the meta file
+    /// goes **last** — its fingerprint flip is the serving daemon's
+    /// hot-reload commit signal, and a load racing the rewrite fails
+    /// chain verification and retries, exactly like a directory caught
+    /// mid-write.
+    ///
+    /// The new fingerprint is derived, not recomputed from the config
+    /// (which didn't change): `fnv1a("<base>|retune|<weights-digest>")`,
+    /// so identical traffic produces an identical fingerprint and
+    /// re-observing different traffic flips it again.
+    pub fn retune(&self, samples: &[Vec<f64>]) -> Result<RetuneOutcome, String> {
+        if samples.is_empty() {
+            return Err("retune needs at least one observed sample".into());
+        }
+        // Verify the whole chain (and recover the fitted spaces) before
+        // touching anything: a spliced or half-written directory must
+        // fail here, not after a partial rewrite.
+        let art = load_tree_artifact(&self.dir)?;
+        let base_fp = art.fingerprint;
+
+        let v3 = self.read_stage(STAGE3_FILE).ok_or("missing stage3 checkpoint")?;
+        let mut grid =
+            GridOptResult::from_json(v3.get("payload").ok_or("stage3 missing payload")?)?;
+        let boosted = grid.weight_from_samples(samples);
+        let bits: Vec<u64> = grid
+            .weights
+            .as_ref()
+            .expect("weight_from_samples always sets weights")
+            .iter()
+            .map(|w| w.to_bits())
+            .collect();
+        let new_fp = format!(
+            "{:016x}",
+            fnv1a(
+                format!("{base_fp}|retune|{:016x}", crate::util::hash::fnv1a_u64s(&bits))
+                    .as_bytes()
+            )
+        );
+
+        let input_space = art.trees.input_space.clone();
+        let design_space = art.trees.design_space.clone();
+        let trees = self.pipeline.tree_phase(&grid, &input_space, &design_space);
+
+        let mut v1 = self.read_stage(STAGE1_FILE).ok_or("missing stage1 checkpoint")?;
+        if let Value::Obj(m) = &mut v1 {
+            m.insert("fingerprint".to_string(), Value::Str(new_fp.clone()));
+        }
+        self.write_artifact(STAGE1_FILE, &v1)?;
+        let h1 = self.file_hash(STAGE1_FILE).ok_or("rehash stage1")?;
+
+        let mut v2 = self.read_stage(STAGE2_FILE).ok_or("missing stage2 checkpoint")?;
+        if let Value::Obj(m) = &mut v2 {
+            m.insert("upstream".to_string(), Value::Str(h1));
+        }
+        self.write_artifact(STAGE2_FILE, &v2)?;
+        let h2 = self.file_hash(STAGE2_FILE).ok_or("rehash stage2")?;
+
+        self.write_artifact(STAGE3_FILE, &envelope(Stage::GridOptimize, &h2, grid.to_json()))?;
+        let h3 = self.file_hash(STAGE3_FILE).ok_or("rehash stage3")?;
+
+        self.write_artifact(STAGE4_FILE, &envelope(Stage::Trees, &h3, trees.to_json()))?;
+
+        // The per-shard files hash-link to the pre-retune stage 2; they
+        // are stale now and would only poison a later resume.
+        let mut shard_idx = 0usize;
+        while self.path(&shard_file(shard_idx)).exists() {
+            std::fs::remove_file(self.path(&shard_file(shard_idx)))
+                .map_err(|e| format!("remove stale shard: {e}"))?;
+            shard_idx += 1;
+        }
+
+        let mut meta = self.read_stage(META_FILE).ok_or("missing checkpoint meta")?;
+        if let Value::Obj(m) = &mut meta {
+            m.insert("fingerprint".to_string(), Value::Str(new_fp.clone()));
+        }
+        self.write_artifact(META_FILE, &meta)?;
+        Ok(RetuneOutcome { base_fingerprint: base_fp, fingerprint: new_fp, boosted })
+    }
+}
+
+/// What [`PipelineRun::retune`] did: the fingerprint it started from,
+/// the derived fingerprint it committed, and how many grid points
+/// received at least one observed sample.
+#[derive(Clone, Debug)]
+pub struct RetuneOutcome {
+    pub base_fingerprint: String,
+    pub fingerprint: String,
+    pub boosted: usize,
+}
+
+/// Read just the stage-3 grid's input rows from a checkpoint directory —
+/// the serving runtime's registration-time cache-prewarm source when no
+/// live traffic has been observed yet. Deliberately unverified (like
+/// [`read_fingerprint`]): the rows only ever warm a memo cache whose
+/// entries are recomputed decisions, so a stale or mid-rewrite grid can
+/// waste a little work but never serve a wrong config.
+pub fn read_grid_inputs(dir: &Path) -> Result<Vec<Vec<f64>>, String> {
+    let text = std::fs::read_to_string(dir.join(STAGE3_FILE))
+        .map_err(|e| format!("{STAGE3_FILE}: {e}"))?;
+    let v = parse(&text).map_err(|e| format!("{STAGE3_FILE}: {e}"))?;
+    let payload = v.get("payload").ok_or_else(|| format!("{STAGE3_FILE}: missing payload"))?;
+    rows_from_json(
+        payload.get("inputs").ok_or_else(|| format!("{STAGE3_FILE}: missing inputs"))?,
+    )
 }
 
 /// A deployable tree bundle read back out of a checkpoint directory:
@@ -901,6 +1018,92 @@ mod tests {
         let run = PipelineRun::new(tiny_config(1), dir.clone());
         assert!(run.load_model().is_err());
         assert!(!run.is_complete());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retune_rewrites_a_verifiable_chain_and_flips_the_fingerprint() {
+        let dir = tmp("retune");
+        let kernel = ToySum::new(48);
+        let run = PipelineRun::new(tiny_config(48), dir.clone());
+        run.run(&kernel).unwrap();
+        let base_fp = read_fingerprint(&dir).unwrap();
+        assert!(dir.join(shard_file(0)).exists(), "tiny run leaves shard files");
+
+        // Observed traffic clustered on one corner of the input space.
+        let samples: Vec<Vec<f64>> =
+            (0..40).map(|i| vec![4000.0 + i as f64, 4000.0 - i as f64]).collect();
+        let out = run.retune(&samples).unwrap();
+        assert_eq!(out.base_fingerprint, base_fp);
+        assert_ne!(out.fingerprint, base_fp, "retune must flip the fingerprint");
+        assert!(out.boosted >= 1);
+
+        // The rewritten directory is a fully verifiable chain under the
+        // new fingerprint, loadable by the serving entry point.
+        assert_eq!(read_fingerprint(&dir).unwrap(), out.fingerprint);
+        let art = load_tree_artifact(&dir).unwrap();
+        assert_eq!(art.fingerprint, out.fingerprint);
+        assert_eq!(art.kernel.as_deref(), Some("toy-sum"), "meta kernel survives");
+        assert!(!dir.join(shard_file(0)).exists(), "stale shards must be removed");
+
+        // The weighted grid is on disk and the prewarm read still works.
+        let v3 = parse(&std::fs::read_to_string(dir.join("stage3_grid.json")).unwrap())
+            .unwrap();
+        let grid = GridOptResult::from_json(v3.get("payload").unwrap()).unwrap();
+        assert!(grid.weights.is_some());
+        assert_eq!(read_grid_inputs(&dir).unwrap(), grid.inputs);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retune_is_bit_reproducible_and_rejects_empty_samples() {
+        let dir_a = tmp("retune_a");
+        let kernel = ToySum::new(49);
+        let run_a = PipelineRun::new(tiny_config(49), dir_a.clone());
+        run_a.run(&kernel).unwrap();
+        assert!(run_a.retune(&[]).is_err(), "no samples, no retune");
+
+        // Clone the tuned directory and retune both from the same
+        // samples: every artifact must come out byte-identical.
+        let dir_b = tmp("retune_b");
+        copy_checkpoints(&dir_a, &dir_b).unwrap();
+        let run_b = PipelineRun::new(tiny_config(49), dir_b.clone());
+        let samples: Vec<Vec<f64>> =
+            (0..25).map(|i| vec![500.0 + 7.0 * i as f64, 300.0]).collect();
+        let out_a = run_a.retune(&samples).unwrap();
+        let out_b = run_b.retune(&samples).unwrap();
+        assert_eq!(out_a.fingerprint, out_b.fingerprint);
+        for f in ["checkpoint.json", "stage1_dataset.json", "stage2_surrogate.json",
+                  "stage3_grid.json", "stage4_trees.json"] {
+            assert_eq!(
+                std::fs::read(dir_a.join(f)).unwrap(),
+                std::fs::read(dir_b.join(f)).unwrap(),
+                "{f} must be bit-identical across retunes"
+            );
+        }
+
+        // Different traffic ⇒ a different derived fingerprint: retuning
+        // the already-retuned directory with new samples flips it again.
+        let out_c = run_b.retune(&[vec![100.0, 100.0]]).unwrap();
+        assert_eq!(out_c.base_fingerprint, out_b.fingerprint);
+        assert_ne!(out_c.fingerprint, out_b.fingerprint);
+        assert!(load_tree_artifact(&dir_b).is_ok(), "chained retune stays verifiable");
+
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn read_grid_inputs_is_cheap_and_errors_without_stage3() {
+        let dir = tmp("grid_inputs");
+        assert!(read_grid_inputs(&dir).is_err());
+        let kernel = ToySum::new(50);
+        let run = PipelineRun::new(tiny_config(50), dir.clone());
+        run.run(&kernel).unwrap();
+        let rows = read_grid_inputs(&dir).unwrap();
+        assert_eq!(rows.len(), 16, "4×4 opt grid over two inputs");
+        assert!(rows.iter().all(|r| r.len() == 2));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

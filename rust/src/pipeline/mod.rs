@@ -254,13 +254,40 @@ impl Mlkaps {
     }
 
     /// Phase 4 (trees): fit one depth-bounded CART per design parameter on
-    /// the grid-optimization results.
+    /// the grid-optimization results. When the grid carries retune
+    /// importance weights, each point is replicated `round(weight)` times
+    /// (weights are `1 + hit-count`, so this is exact) before the fit —
+    /// CART's split criterion then sees hot input regions in proportion
+    /// to observed traffic, without any change to the tree code itself.
+    /// Replication order is grid order, so the fit stays deterministic.
     pub fn tree_phase(
         &self,
         grid: &GridOptResult,
         input_space: &ParamSpace,
         design_space: &ParamSpace,
     ) -> DesignTrees {
+        if let Some(weights) = &grid.weights {
+            // Bound per-point replication so a corrupt weights column
+            // can't make the fit allocate unboundedly; real weights are
+            // 1 + reservoir hits, far below this.
+            const MAX_COPIES: usize = 1 << 16;
+            let mut inputs = Vec::new();
+            let mut designs = Vec::new();
+            for (i, w) in weights.iter().enumerate() {
+                let copies = (w.round().max(1.0) as usize).min(MAX_COPIES);
+                for _ in 0..copies {
+                    inputs.push(grid.inputs[i].clone());
+                    designs.push(grid.designs[i].clone());
+                }
+            }
+            return DesignTrees::fit(
+                &inputs,
+                &designs,
+                input_space,
+                design_space,
+                self.config.tree_depth,
+            );
+        }
         DesignTrees::fit(
             &grid.inputs,
             &grid.designs,
@@ -372,6 +399,46 @@ mod tests {
         let kernel2 = ToySum::new(11);
         let b = Mlkaps::new(cfg).tune(&kernel2);
         assert_eq!(a.grid.designs, b.grid.designs);
+    }
+
+    #[test]
+    fn weighted_tree_phase_equals_manual_row_replication() {
+        use crate::config::space::ParamDef;
+        let input_space = ParamSpace::new(vec![ParamDef::float("x", 0.0, 1.0)]);
+        let design_space = ParamSpace::new(vec![ParamDef::int("t", 1, 8)]);
+        let inputs: Vec<Vec<f64>> = (0..5).map(|i| vec![i as f64 / 4.0]).collect();
+        let designs: Vec<Vec<f64>> = (0..5).map(|i| vec![1.0 + i as f64]).collect();
+        let weights = vec![1.0, 3.0, 1.0, 2.0, 1.0];
+
+        let weighted = GridOptResult {
+            inputs: inputs.clone(),
+            designs: designs.clone(),
+            predicted: vec![0.0; 5],
+            weights: Some(weights.clone()),
+        };
+        let mut rep_inputs = Vec::new();
+        let mut rep_designs = Vec::new();
+        for (i, &w) in weights.iter().enumerate() {
+            for _ in 0..w as usize {
+                rep_inputs.push(inputs[i].clone());
+                rep_designs.push(designs[i].clone());
+            }
+        }
+        let manual = GridOptResult {
+            inputs: rep_inputs,
+            designs: rep_designs,
+            predicted: vec![0.0; 8],
+            weights: None,
+        };
+
+        let pipe = Mlkaps::new(quick_config(SamplerChoice::Lhs));
+        let a = pipe.tree_phase(&weighted, &input_space, &design_space);
+        let b = pipe.tree_phase(&manual, &input_space, &design_space);
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "weights must act exactly like row replication"
+        );
     }
 
     #[test]

@@ -239,6 +239,7 @@ fn flush(batch: Vec<Job>, threads: usize) {
             .map(|j| now.saturating_duration_since(j.enqueued).as_nanos() as u64)
             .sum();
         stats.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+        stats.window.record(jobs.len() as u64, 0, 0, queue_ns);
 
         // One epoch snapshot decides (and fingerprints) the whole
         // group; names and fingerprint are prebuilt shared handles on
@@ -266,9 +267,19 @@ fn flush(batch: Vec<Job>, threads: usize) {
             continue;
         }
 
+        // Observe every valid row into the variant's reservoir (the
+        // closed loop's input) while the inputs are still intact — the
+        // multi-row dispatch below moves them out. Records come only
+        // from this single batcher thread, so per-variant observation
+        // order is flush order: deterministic for sequential traffic.
+        for job in &ok_jobs {
+            variant.samples.record(&job.input);
+        }
+
         let n = ok_jobs.len();
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_rows.fetch_add(n as u64, Ordering::Relaxed);
+        stats.window.record(0, 1, n as u64, 0);
         let configs: Vec<Vec<f64>> = if n == 1 {
             // Lone rows take the memoized scalar path: identical result,
             // and repeated hot shapes hit the input cache.
@@ -317,6 +328,9 @@ mod tests {
             name: "toy".into(),
             slot: ReloadableBundle::new(TreeBundle::from_trees(trees).unwrap(), None),
             stats: VariantStats::default(),
+            samples: Arc::new(crate::runtime::server::reservoir::Reservoir::for_variant(
+                "toy", 64,
+            )),
         })
     }
 
@@ -352,6 +366,37 @@ mod tests {
         assert_eq!(v.stats.batches.load(Ordering::Relaxed), 1);
         assert_eq!(v.stats.batched_rows.load(Ordering::Relaxed), 7);
         assert!((v.stats.mean_batch() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flush_records_served_rows_into_reservoir_and_window() {
+        let v = variant();
+        let inputs: Vec<Vec<f64>> =
+            (0..5).map(|i| vec![2.0 * i as f64 + 1.0, 3.0 + i as f64]).collect();
+        let mut jobs = Vec::new();
+        let mut rxs = Vec::new();
+        for q in &inputs {
+            let (j, rx) = job(&v, q.clone());
+            jobs.push(j);
+            rxs.push(rx);
+        }
+        // A bad-dimension job must be answered but never observed.
+        let (bad, bad_rx) = job(&v, vec![1.0]);
+        jobs.push(bad);
+        flush(jobs, 1);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert!(bad_rx.recv().unwrap().is_err());
+        assert_eq!(v.samples.seen(), 5, "only valid rows are observed");
+        // Below capacity the reservoir is exactly the served stream,
+        // in flush order (inputs were recorded before the batch path
+        // took them).
+        assert_eq!(v.samples.snapshot(None).1, inputs);
+        // The window saw the same flush once; snapshotting resets it.
+        let w = v.stats.window.snapshot_and_reset();
+        assert_eq!((w.requests, w.batches, w.rows), (6, 1, 5));
+        assert_eq!(v.stats.window.snapshot_and_reset().requests, 0);
     }
 
     #[test]

@@ -211,6 +211,53 @@ impl ServedClient {
         self.roundtrip(&Request::Stats)
     }
 
+    /// Raw `SAMPLES` response, as parsed JSON: per-variant reservoir
+    /// dumps of served input rows. `kernel` filters by variant or
+    /// kernel name; `limit` caps the rows per variant.
+    pub fn samples(
+        &mut self,
+        kernel: Option<&str>,
+        limit: Option<usize>,
+    ) -> Result<Value, String> {
+        self.roundtrip(&Request::Samples {
+            kernel: kernel.map(str::to_string),
+            limit,
+        })
+    }
+
+    /// The served-input rows for one kernel, pulled from its reservoir
+    /// (the re-tune side of the closed loop). Rows from every matching
+    /// variant are concatenated in variant-name order; errors if the
+    /// daemon reports a row that is not an array of numbers.
+    pub fn sample_rows(
+        &mut self,
+        kernel: &str,
+        limit: Option<usize>,
+    ) -> Result<Vec<Vec<f64>>, String> {
+        let v = self.samples(Some(kernel), limit)?;
+        let Some(Value::Obj(per_variant)) = v.get("samples") else {
+            return Err("response missing \"samples\"".into());
+        };
+        let mut out = Vec::new();
+        for (name, entry) in per_variant {
+            let rows = entry
+                .get("rows")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| format!("variant '{name}' missing \"rows\""))?;
+            for row in rows {
+                let row = row
+                    .as_arr()
+                    .ok_or_else(|| format!("variant '{name}': row is not an array"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("non-numeric sample value"))
+                    .collect::<Result<Vec<f64>, &str>>()
+                    .map_err(str::to_string)?;
+                out.push(row);
+            }
+        }
+        Ok(out)
+    }
+
     /// Registered variant names, sorted (from the `LIST` verb).
     pub fn list_names(&mut self) -> Result<Vec<String>, String> {
         let v = self.roundtrip(&Request::List)?;

@@ -132,8 +132,43 @@ struct Shared {
     recovery: RecoveryCounters,
     /// The `retry_after_ms` hint attached to `overloaded` responses:
     /// roughly how long a full queue takes to drain at the configured
-    /// batch size and window, clamped to [1, 1000] ms.
+    /// batch size and window, clamped to [1 ms, 30 s]
+    /// ([`retry_hint_ms`]). Computed once at startup from the config —
+    /// a cold daemon has no observed drain rate yet, and the configured
+    /// window/capacity/batch-size estimate is the documented default
+    /// for that case.
     retry_after_ms: u64,
+}
+
+/// Floor for the overload retry hint: telling a client to retry in
+/// under a millisecond just converts the shed into a busy-loop.
+pub const RETRY_AFTER_MIN_MS: u64 = 1;
+
+/// Ceiling for the overload retry hint: a daemon configured with an
+/// enormous queue or a very long batch window should still tell clients
+/// to come back within 30 s, not park them for minutes — the queue
+/// almost never drains at the worst-case one-batch-per-window rate.
+pub const RETRY_AFTER_MAX_MS: u64 = 30_000;
+
+/// Drain-time estimate for the overload `retry_after_ms` hint: a full
+/// queue of `queue_capacity` jobs drains in about
+/// `queue_capacity / batch_max` windows of `batch_window` each. This is
+/// the **cold-start default** — it is derived purely from the config,
+/// so it is available from the first request, before any traffic has
+/// established an observed drain rate. The result is clamped to
+/// [[`RETRY_AFTER_MIN_MS`], [`RETRY_AFTER_MAX_MS`]]; the previous cap
+/// of 1000 ms silently under-hinted large-queue/slow-window configs,
+/// causing immediate re-shed storms on retry.
+///
+/// Pure so the cold-start case is directly unit-testable.
+fn retry_hint_ms(batch_window: Duration, queue_capacity: usize, batch_max: usize) -> u64 {
+    let drain_secs =
+        batch_window.as_secs_f64() * (queue_capacity as f64 / batch_max.max(1) as f64);
+    // NaN can't happen (both factors are finite and non-negative), and
+    // `clamp` on the f64 side keeps the cast well-defined even for
+    // absurd configs (e.g. an hours-long window).
+    (drain_secs * 1e3).ceil().clamp(RETRY_AFTER_MIN_MS as f64, RETRY_AFTER_MAX_MS as f64)
+        as u64
 }
 
 /// RAII increment of the in-flight request counter (decrements on drop,
@@ -169,11 +204,8 @@ impl Daemon {
             TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
         let queue = BatchQueue::new(cfg.queue_capacity);
-        // Drain-time estimate for the overload retry hint: a full queue
-        // of Q jobs drains in about (Q / batch_max) windows.
-        let drain_secs = cfg.batch_window.as_secs_f64()
-            * (cfg.queue_capacity as f64 / cfg.batch_max.max(1) as f64);
-        let retry_after_ms = (drain_secs * 1e3).ceil().clamp(1.0, 1000.0) as u64;
+        let retry_after_ms =
+            retry_hint_ms(cfg.batch_window, cfg.queue_capacity, cfg.batch_max);
         let shared = Arc::new(Shared {
             registry,
             queue: queue.clone(),
@@ -676,6 +708,9 @@ fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, After
             After::Continue,
         ),
         Request::Stats => (stats_json(shared), After::Continue),
+        Request::Samples { kernel, limit } => {
+            (samples_json(shared, kernel.as_deref(), limit), After::Continue)
+        }
         Request::List => (list_json(shared), After::Continue),
         Request::Reload => (reload_now(shared), After::Continue),
         Request::Drain => (
@@ -776,6 +811,11 @@ fn stats_json(shared: &Shared) -> Value {
         let bundle = v.slot.get();
         let cache = bundle.cache_counters();
         let requests = v.stats.requests.load(Ordering::Relaxed);
+        // One atomic snapshot-and-reset per STATS read: the window's
+        // counters move to this snapshot under a single lock, so a
+        // flush racing this read lands entirely in this window or
+        // entirely in the next — never double-counted, never torn.
+        let window = v.stats.window.snapshot_and_reset();
         let num = |x: u64| Value::Num(x as f64);
         kernels.insert(
             v.name.clone(),
@@ -807,6 +847,24 @@ fn stats_json(shared: &Shared) -> Value {
                 ("batches", num(v.stats.batches.load(Ordering::Relaxed))),
                 ("mean_batch", Value::Num(v.stats.mean_batch())),
                 ("mean_queue_us", Value::Num(v.stats.mean_queue_us())),
+                // Windowed ("since the previous STATS read") telemetry:
+                // the cumulative fields above answer "what happened over
+                // the daemon's lifetime", these answer "what is the
+                // load *right now*" — the cumulative rate converges to
+                // the lifetime mean and stops reflecting current
+                // traffic within minutes of uptime.
+                ("window_secs", Value::Num(window.secs)),
+                ("window_requests", num(window.requests)),
+                ("window_requests_per_sec", Value::Num(window.rate_per_sec())),
+                ("window_mean_batch", Value::Num(window.mean_batch())),
+                ("window_mean_queue_us", Value::Num(window.mean_queue_us())),
+                // Reservoir occupancy (the closed loop's observation
+                // side): `samples_seen` counts every served row ever,
+                // `samples_held` how many are retained right now
+                // (≤ `samples_cap`). Rows themselves come via `SAMPLES`.
+                ("samples_seen", num(v.samples.seen())),
+                ("samples_held", num(v.samples.len() as u64)),
+                ("samples_cap", num(v.samples.cap() as u64)),
                 ("errors", num(v.stats.errors.load(Ordering::Relaxed))),
                 ("reloads", num(v.slot.reloads())),
                 ("reload_errors", num(v.slot.reload_errors())),
@@ -848,6 +906,66 @@ fn stats_json(shared: &Shared) -> Value {
         ("decide_threads", Value::Num(shared.decide_threads as f64)),
         ("kernels", Value::Obj(kernels)),
     ])
+}
+
+/// The `SAMPLES` verb: dump each variant's reservoir of served input
+/// rows — the observation half of the closed tuning loop. `kernel`
+/// filters to variants whose variant name *or* kernel name matches
+/// (like `STATS`, unfiltered returns everything); `limit` caps the rows
+/// returned per variant (`None` = the whole reservoir). The snapshot is
+/// taken under the reservoir's lock, so a concurrent flush can't tear a
+/// row, and reading never perturbs the reservoir — `retune` pulling
+/// samples does not bias what later pulls see.
+fn samples_json(shared: &Shared, kernel: Option<&str>, limit: Option<usize>) -> Value {
+    let mut kernels = BTreeMap::new();
+    for v in shared.registry.iter() {
+        if let Some(k) = kernel {
+            if k != v.name && k != v.kernel {
+                continue;
+            }
+        }
+        let (seen, rows) = v.samples.snapshot(limit);
+        kernels.insert(
+            v.name.clone(),
+            Value::obj(vec![
+                ("kernel", Value::Str(v.kernel.clone())),
+                (
+                    "inputs",
+                    Value::Arr(
+                        v.slot
+                            .get()
+                            .input_space()
+                            .names()
+                            .iter()
+                            .map(|n| Value::Str(n.to_string()))
+                            .collect(),
+                    ),
+                ),
+                ("seen", Value::Num(seen as f64)),
+                ("cap", Value::Num(v.samples.cap() as f64)),
+                ("returned", Value::Num(rows.len() as f64)),
+                (
+                    "rows",
+                    Value::Arr(
+                        rows.iter()
+                            .map(|r| {
+                                Value::Arr(r.iter().map(|&x| Value::Num(x)).collect())
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        );
+    }
+    if kernels.is_empty() {
+        if let Some(k) = kernel {
+            return protocol::err_response(
+                &format!("no served variant matches '{k}'"),
+                None,
+            );
+        }
+    }
+    Value::obj(vec![("ok", Value::Bool(true)), ("samples", Value::Obj(kernels))])
 }
 
 fn list_json(shared: &Shared) -> Value {
@@ -916,4 +1034,54 @@ fn reload_now(shared: &Shared) -> Value {
         ("reloaded", Value::Arr(reloaded)),
         ("errors", Value::Arr(errors)),
     ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The cold-start case: the hint is computed before any request is
+    /// served, straight from the config. The stock config (200µs window,
+    /// 4096-deep queue, 256-row batches) drains a full queue in 16
+    /// windows ≈ 3.2ms, so the documented default hint is 4ms (ceil).
+    #[test]
+    fn retry_hint_cold_start_uses_the_config_estimate() {
+        let cfg = DaemonConfig::default();
+        let ms = retry_hint_ms(cfg.batch_window, cfg.queue_capacity, cfg.batch_max);
+        assert_eq!(ms, 4);
+        // And the exact arithmetic it came from, spelled out.
+        assert_eq!(ms, (0.0002f64 * (4096.0 / 256.0) * 1e3).ceil() as u64);
+    }
+
+    #[test]
+    fn retry_hint_is_floored_at_one_millisecond() {
+        // A zero window (sequential-caller tuning) or a tiny queue must
+        // not hint 0ms — that would tell a shed client to hammer the
+        // daemon in a busy loop.
+        assert_eq!(retry_hint_ms(Duration::ZERO, 4096, 256), RETRY_AFTER_MIN_MS);
+        assert_eq!(retry_hint_ms(Duration::from_nanos(1), 1, 256), RETRY_AFTER_MIN_MS);
+    }
+
+    #[test]
+    fn retry_hint_is_capped_at_thirty_seconds() {
+        // A huge queue with a slow window estimates minutes of drain;
+        // the hint still tells the client to come back within 30s. The
+        // old 1000ms cap is *not* the ceiling anymore: this config
+        // estimates 100s and used to be silently squashed to 1s.
+        let ms = retry_hint_ms(Duration::from_millis(100), 1 << 20, 1 << 10);
+        assert_eq!(ms, RETRY_AFTER_MAX_MS);
+        // Mid-range configs above the old cap now pass through: a full
+        // 4096 queue at 1ms per 2-row batch drains in ~2048ms.
+        assert_eq!(retry_hint_ms(Duration::from_millis(1), 4096, 2), 2048);
+    }
+
+    #[test]
+    fn retry_hint_guards_a_zero_batch_max() {
+        // batch_max = 0 would divide by zero (NaN → nonsense hint);
+        // it is treated as 1, matching the batcher's own `max(1)`.
+        let a = retry_hint_ms(Duration::from_micros(200), 64, 0);
+        let b = retry_hint_ms(Duration::from_micros(200), 64, 1);
+        assert_eq!(a, b);
+        assert_eq!(a, 13); // ceil(0.2ms * 64) = 12.8 → 13
+    }
 }

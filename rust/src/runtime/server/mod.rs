@@ -37,6 +37,7 @@ pub mod client;
 pub mod daemon;
 pub mod protocol;
 pub mod reload;
+pub mod reservoir;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -45,7 +46,9 @@ use std::sync::Arc;
 
 use crate::kernels::hardware::HardwareProfile;
 use crate::runtime::serving::TreeBundle;
+use crate::util::telemetry::SnapshotWindow;
 use reload::ReloadableBundle;
+use reservoir::{Reservoir, DEFAULT_RESERVOIR_CAP};
 
 /// Per-variant serving telemetry, updated by the batcher and reported by
 /// the `STATS` verb. Relaxed atomics: monitoring data, not sync.
@@ -62,6 +65,12 @@ pub struct VariantStats {
     pub queue_ns: AtomicU64,
     /// Requests answered with an error (dimension mismatch etc.).
     pub errors: AtomicU64,
+    /// Windowed view of the same traffic: everything since the previous
+    /// `STATS` read, snapshot-and-reset atomically against the batcher's
+    /// recording (shared lock), so a `STATS` racing a flush observes
+    /// each flush in exactly one window. The atomics above stay the
+    /// cumulative since-boot view.
+    pub window: SnapshotWindow,
 }
 
 impl VariantStats {
@@ -95,6 +104,10 @@ pub struct ServedVariant {
     pub name: String,
     pub slot: ReloadableBundle,
     pub stats: VariantStats,
+    /// Uniform sample of every input row served (Algorithm R) — the
+    /// observation leg of the closed tuning loop. Shared with the slot,
+    /// which replays it through the memo cache on every epoch swap.
+    pub samples: Arc<Reservoir>,
 }
 
 /// Compose the registry name of a (kernel, profile) pair.
@@ -129,6 +142,8 @@ pub struct ServedRegistry {
     /// Memo keying mode applied to every registered bundle (`--memo`
     /// flag); hot-reloads inherit it from the serving epoch.
     memo_mode: crate::runtime::serving::MemoMode,
+    /// Rows kept per variant reservoir (`--reservoir-cap` flag).
+    reservoir_cap: usize,
 }
 
 impl ServedRegistry {
@@ -140,12 +155,19 @@ impl ServedRegistry {
             variants: BTreeMap::new(),
             default_profile,
             memo_mode: crate::runtime::serving::MemoMode::Exact,
+            reservoir_cap: DEFAULT_RESERVOIR_CAP,
         }
     }
 
     /// Set the memo keying mode applied by subsequent registrations.
     pub fn set_memo_mode(&mut self, mode: crate::runtime::serving::MemoMode) {
         self.memo_mode = mode;
+    }
+
+    /// Set the per-variant reservoir capacity applied by subsequent
+    /// registrations (`--reservoir-cap`; 0 disables observation).
+    pub fn set_reservoir_cap(&mut self, cap: usize) {
+        self.reservoir_cap = cap;
     }
 
     /// Registry defaulting to the host's probed hardware profile.
@@ -170,12 +192,18 @@ impl ServedRegistry {
                  a distinct name (e.g. {kernel}@other)"
             ));
         }
+        // One reservoir per variant, seeded from its registry name so
+        // test runs are reproducible; the slot shares it to replay the
+        // observed rows through the memo cache on every epoch swap.
+        let samples = Arc::new(Reservoir::for_variant(&name, self.reservoir_cap));
+        slot.set_samples(samples.clone());
         let variant = ServedVariant {
             kernel,
             profile,
             name: name.clone(),
             slot,
             stats: VariantStats::default(),
+            samples,
         };
         self.variants.insert(name.clone(), Arc::new(variant));
         Ok(name)
@@ -193,6 +221,10 @@ impl ServedRegistry {
         let dir = dir.into();
         let bundle =
             TreeBundle::load_checkpoint_dir(&dir)?.with_memo_mode(self.memo_mode);
+        // Prewarm the memo cache from the stage-3 grid inputs (no live
+        // reservoir exists yet at registration) so the variant's first
+        // request hits a warm cache instead of paying a cold walk.
+        reload::prewarm_from_grid(&bundle, &dir);
         let (kernel, profile) = match name_spec {
             Some(spec) => parse_name_spec(spec),
             None => (
@@ -367,6 +399,21 @@ mod tests {
         assert_eq!(v.slot.poll(), Ok(false));
         assert_eq!(v.slot.reloads(), 0);
         assert!(v.slot.fingerprint().is_none());
+    }
+
+    #[test]
+    fn registered_variants_carry_a_bounded_reservoir() {
+        let mut reg = ServedRegistry::new(None);
+        reg.set_reservoir_cap(4);
+        reg.register_bundle("lu", bundle(8.0)).unwrap();
+        let v = reg.resolve("lu", None).unwrap();
+        assert_eq!(v.samples.cap(), 4);
+        assert_eq!(v.samples.seen(), 0);
+        for i in 0..6 {
+            v.samples.record(&[i as f64]);
+        }
+        assert_eq!(v.samples.seen(), 6);
+        assert_eq!(v.samples.len(), 4, "reservoir must stay bounded at its cap");
     }
 
     #[test]

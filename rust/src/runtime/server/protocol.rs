@@ -122,6 +122,10 @@ pub enum Request {
     },
     /// Telemetry snapshot (per-variant counters + daemon globals).
     Stats,
+    /// Observed-input reservoir dump: the rows `mlkaps retune` pulls.
+    /// `kernel` restricts to one variant (all when `None`); `limit`
+    /// caps the rows returned per variant (all resident when `None`).
+    Samples { kernel: Option<String>, limit: Option<usize> },
     /// Registered bundle variants with fingerprints.
     List,
     /// Liveness probe.
@@ -143,6 +147,7 @@ impl Request {
     pub fn from_verb(verb: &str) -> Option<Request> {
         match verb.to_ascii_lowercase().as_str() {
             "stats" => Some(Request::Stats),
+            "samples" => Some(Request::Samples { kernel: None, limit: None }),
             "list" => Some(Request::List),
             "ping" => Some(Request::Ping),
             "reload" => Some(Request::Reload),
@@ -155,8 +160,38 @@ impl Request {
     /// Parse a JSON request object (either framing).
     pub fn from_json(v: &Value) -> Result<Request, String> {
         if let Some(op) = v.get("op").and_then(|o| o.as_str()) {
+            // `samples` takes optional arguments, which the bare-verb
+            // table can't carry — intercept it before the generic route.
+            if op.eq_ignore_ascii_case("samples") {
+                let kernel = match v.get("kernel") {
+                    None | Some(Value::Null) => None,
+                    Some(k) => Some(
+                        k.as_str().ok_or("\"kernel\" must be a string")?.to_string(),
+                    ),
+                };
+                let limit = match v.get("limit") {
+                    None | Some(Value::Null) => None,
+                    Some(l) => {
+                        // `as_usize` saturates (-1 → 0); validate the
+                        // literal before converting.
+                        let f = l
+                            .as_f64()
+                            .ok_or("\"limit\" must be a non-negative integer")?;
+                        if !(f.is_finite() && f >= 0.0 && f.fract() == 0.0) {
+                            return Err(
+                                "\"limit\" must be a non-negative integer".into()
+                            );
+                        }
+                        Some(f as usize)
+                    }
+                };
+                return Ok(Request::Samples { kernel, limit });
+            }
             return Request::from_verb(op).ok_or_else(|| {
-                format!("unknown op '{op}' (stats, list, ping, reload, drain, shutdown)")
+                format!(
+                    "unknown op '{op}' (stats, samples, list, ping, reload, drain, \
+                     shutdown)"
+                )
             });
         }
         let kernel = v
@@ -225,6 +260,16 @@ impl Request {
                 Value::obj(pairs)
             }
             Request::Stats => Value::obj(vec![("op", Value::Str("stats".into()))]),
+            Request::Samples { kernel, limit } => {
+                let mut pairs = vec![("op", Value::Str("samples".into()))];
+                if let Some(k) = kernel {
+                    pairs.push(("kernel", Value::Str(k.clone())));
+                }
+                if let Some(l) = limit {
+                    pairs.push(("limit", Value::Num(*l as f64)));
+                }
+                Value::obj(pairs)
+            }
             Request::List => Value::obj(vec![("op", Value::Str("list".into()))]),
             Request::Ping => Value::obj(vec![("op", Value::Str("ping".into()))]),
             Request::Reload => Value::obj(vec![("op", Value::Str("reload".into()))]),
@@ -315,6 +360,36 @@ mod tests {
         assert_eq!(Request::from_line("{\"op\":\"list\"}").unwrap(), Request::List);
         assert!(Request::from_line("EXPLODE").is_err());
         assert!(Request::from_line("").is_err());
+    }
+
+    #[test]
+    fn samples_requests_parse_in_both_modes_and_roundtrip() {
+        // Bare verb: everything, every variant.
+        assert_eq!(
+            Request::from_line("SAMPLES").unwrap(),
+            Request::Samples { kernel: None, limit: None }
+        );
+        // JSON op with arguments, both framings share this parser.
+        assert_eq!(
+            Request::from_line("{\"op\":\"samples\",\"kernel\":\"toy\",\"limit\":16}")
+                .unwrap(),
+            Request::Samples { kernel: Some("toy".into()), limit: Some(16) }
+        );
+        assert_eq!(
+            Request::from_line("{\"op\":\"samples\",\"kernel\":null}").unwrap(),
+            Request::Samples { kernel: None, limit: None }
+        );
+        for req in [
+            Request::Samples { kernel: None, limit: None },
+            Request::Samples { kernel: Some("toy@spr".into()), limit: Some(3) },
+        ] {
+            assert_eq!(Request::from_line(&req.to_json().to_string()).unwrap(), req);
+        }
+        // Bad arguments are rejected, and the op list names samples.
+        assert!(Request::from_line("{\"op\":\"samples\",\"limit\":-1}").is_err());
+        assert!(Request::from_line("{\"op\":\"samples\",\"kernel\":7}").is_err());
+        let err = Request::from_line("{\"op\":\"nope\"}").unwrap_err();
+        assert!(err.contains("samples"), "{err}");
     }
 
     #[test]

@@ -19,14 +19,37 @@
 //!   actually decided it, so traffic spanning a reload is attributable:
 //!   old-epoch responses carry the old fingerprint, new-epoch responses
 //!   the new one, and nothing in between errors.
+//! * Before the swap, the new epoch's memo cache is **prewarmed**: the
+//!   variant's live reservoir (fallback: the stage-3 grid inputs) is
+//!   replayed through the memoized scalar path, so the first post-swap
+//!   request on a hot shape is a cache hit — first-hit latency matches
+//!   steady state instead of paying a cold tree walk.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::reservoir::Reservoir;
 use crate::pipeline::checkpoint;
 use crate::runtime::serving::TreeBundle;
 use crate::util::failpoint::{self, sites};
+
+/// Upper bound on rows replayed through the memo cache before an epoch
+/// goes live. Matches the cache's total entry count (512 sets × 2
+/// ways), so a full reservoir warms every entry once without redundant
+/// walks delaying the swap.
+pub const PREWARM_MAX_ROWS: usize = 1024;
+
+/// Replay a checkpoint directory's stage-3 grid inputs through a
+/// bundle's memo cache (registration-time fallback, when no traffic has
+/// been observed yet). Best-effort: an unreadable grid just skips the
+/// warmup — it can't fail a load that already chain-verified.
+pub fn prewarm_from_grid(bundle: &TreeBundle, dir: &std::path::Path) {
+    if let Ok(mut rows) = checkpoint::read_grid_inputs(dir) {
+        rows.truncate(PREWARM_MAX_ROWS);
+        bundle.prewarm(&rows);
+    }
+}
 
 /// An atomically swappable served bundle, optionally watching the
 /// checkpoint directory it was loaded from.
@@ -42,6 +65,10 @@ pub struct ReloadableBundle {
     poll_gate: Mutex<()>,
     reloads: AtomicU64,
     reload_errors: AtomicU64,
+    /// The owning variant's served-input reservoir, replayed through
+    /// the new epoch's memo cache before every swap (None until the
+    /// registry attaches one; falls back to the stage-3 grid inputs).
+    samples: Mutex<Option<Arc<Reservoir>>>,
 }
 
 impl ReloadableBundle {
@@ -54,7 +81,14 @@ impl ReloadableBundle {
             poll_gate: Mutex::new(()),
             reloads: AtomicU64::new(0),
             reload_errors: AtomicU64::new(0),
+            samples: Mutex::new(None),
         }
+    }
+
+    /// Attach the variant's reservoir as the prewarm source for future
+    /// epoch swaps (the registry calls this at registration).
+    pub fn set_samples(&self, samples: Arc<Reservoir>) {
+        *self.samples.lock().unwrap_or_else(|e| e.into_inner()) = Some(samples);
     }
 
     /// Load a checkpoint directory and watch it for fingerprint changes.
@@ -127,7 +161,31 @@ impl ReloadableBundle {
         // The new epoch inherits the serving epoch's memo keying mode —
         // `--memo quantized` must survive hot-reloads.
         let mode = self.get().memo_mode();
-        let bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(mode);
+        let mut bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(mode);
+        // The quantizer must be a function of the *new* epoch's split
+        // thresholds — a quantizer carried over from the old epoch
+        // would key the cache on stale cells and a stale-cell hit
+        // returns the wrong cached decision. Rebuild it from the trees
+        // just loaded, before any row can touch the cache; the swap
+        // below then publishes quantizer + cache + trees as one Arc.
+        bundle.rebuild_quantizer();
+        // Prewarm the new epoch's (empty) memo cache while the old
+        // epoch is still serving: replay the live reservoir — the rows
+        // traffic actually sends — else the stage-3 grid, so the first
+        // post-swap request is a hit, not a cold walk.
+        let warm = {
+            let samples = self.samples.lock().unwrap_or_else(|e| e.into_inner());
+            match samples.as_ref() {
+                Some(r) if !r.is_empty() => Some(r.snapshot(Some(PREWARM_MAX_ROWS)).1),
+                _ => None,
+            }
+        };
+        match warm {
+            Some(rows) => {
+                bundle.prewarm(&rows);
+            }
+            None => prewarm_from_grid(&bundle, dir),
+        }
         let changed = bundle.fingerprint().map(str::to_string) != current_fp;
         *self.current.lock().unwrap_or_else(|e| e.into_inner()) = Arc::new(bundle);
         if changed {

@@ -1,0 +1,261 @@
+//! Bounded per-variant reservoir of served input rows — the **observe**
+//! leg of the closed tuning loop (serve → observe → re-tune → redeploy).
+//!
+//! Every input row the daemon answers is offered to its variant's
+//! [`Reservoir`], which keeps a uniform random sample of everything it
+//! has ever seen in O(cap) memory via Vitter's Algorithm R: the first
+//! `cap` rows are kept outright; row `i` (0-based, `i >= cap`) replaces
+//! a random resident with probability `cap / (i + 1)`. The kept set is
+//! a uniform sample of the full stream at every instant, so
+//! `mlkaps retune` can importance-weight the stage-3 grid from it
+//! without any windowing logic.
+//!
+//! Determinism: the replacement draws come from [`crate::util::rng::Rng`]
+//! (xoshiro256++) seeded per variant from `MLKAPS_RESERVOIR_SEED`
+//! (default seed if unset) xor the variant name's FNV-1a hash — the same
+//! convention `util::failpoint` uses for its probability triggers. Given
+//! one observation order, the kept rows are a pure function of the seed;
+//! the integration suite replays identical traffic twice and asserts
+//! identical reservoirs.
+//!
+//! Concurrency: `record` takes one short mutex (admission decision +
+//! row clone only on admission); the `seen` counter is additionally
+//! mirrored in an atomic so the `STATS` path never touches the lock.
+//! In the daemon all records come from the single batcher thread
+//! (per-flush, while job inputs are still intact), so the lock is
+//! uncontended on the hot path and observation order is flush order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::hash::fnv1a;
+use crate::util::rng::Rng;
+
+/// Default rows kept per variant (~16 KiB per variant at 2 f64 inputs).
+pub const DEFAULT_RESERVOIR_CAP: usize = 1024;
+
+/// Environment variable overriding the reservoir seed (u64). One seed
+/// serves every variant; each variant forks its own stream by xoring in
+/// its name hash, so two variants never share replacement draws.
+pub const RESERVOIR_SEED_ENV: &str = "MLKAPS_RESERVOIR_SEED";
+
+const DEFAULT_SEED: u64 = 0x6d6c_6b61_7073; // "mlkaps" in spirit
+
+fn env_seed() -> u64 {
+    std::env::var(RESERVOIR_SEED_ENV)
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+struct Inner {
+    rng: Rng,
+    /// Total rows ever offered (authoritative; the atomic mirrors it).
+    n: u64,
+    rows: Vec<Vec<f64>>,
+}
+
+/// A bounded uniform sample of every row ever offered (Algorithm R).
+pub struct Reservoir {
+    cap: usize,
+    inner: Mutex<Inner>,
+    /// Lock-free mirror of `Inner::n` for the `STATS` read path.
+    seen: AtomicU64,
+}
+
+impl Reservoir {
+    /// Reservoir with an explicit capacity and seed (tests, tooling).
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap,
+            inner: Mutex::new(Inner {
+                rng: Rng::new(seed),
+                n: 0,
+                rows: Vec::with_capacity(cap.min(DEFAULT_RESERVOIR_CAP)),
+            }),
+            seen: AtomicU64::new(0),
+        }
+    }
+
+    /// Reservoir for a named served variant: seeded from
+    /// `MLKAPS_RESERVOIR_SEED` (default if unset) xor the variant name's
+    /// FNV-1a hash, so runs are reproducible and variants independent.
+    pub fn for_variant(name: &str, cap: usize) -> Reservoir {
+        Reservoir::new(cap, env_seed() ^ fnv1a(name.as_bytes()))
+    }
+
+    /// Capacity (maximum resident rows).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Total rows ever offered. Lock-free (one relaxed atomic load).
+    pub fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Rows currently resident (`min(seen, cap)`).
+    pub fn len(&self) -> usize {
+        self.lock().rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // Poison-tolerant like every other serving lock: a panicking
+        // recorder leaves a consistent (row-granular) reservoir.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Offer one row. Clones it only when Algorithm R admits it.
+    pub fn record(&self, row: &[f64]) {
+        let mut inner = self.lock();
+        let i = inner.n;
+        inner.n = i + 1;
+        if (i as usize) < self.cap {
+            inner.rows.push(row.to_vec());
+        } else {
+            // Admit with probability cap/(i+1): draw a slot in [0, i]
+            // and replace only when it lands inside the reservoir.
+            let j = inner.rng.below((i + 1) as usize);
+            if j < self.cap {
+                inner.rows[j] = row.to_vec();
+            }
+        }
+        // Mirror under the lock so seen() never runs ahead of a
+        // concurrent snapshot() (both orderings stay consistent).
+        self.seen.store(inner.n, Ordering::Relaxed);
+    }
+
+    /// Copy out up to `limit` resident rows (all of them when `None`)
+    /// plus the seen-count at the moment of the copy. Rows come back in
+    /// reservoir-slot order — stable between records, deterministic
+    /// given the seed and observation order.
+    pub fn snapshot(&self, limit: Option<usize>) -> (u64, Vec<Vec<f64>>) {
+        let inner = self.lock();
+        let take = limit.unwrap_or(inner.rows.len()).min(inner.rows.len());
+        (inner.n, inner.rows[..take].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Independent textbook Algorithm R over the same RNG — the oracle
+    /// the production struct must match draw for draw.
+    fn reference(cap: usize, seed: u64, stream: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        let mut kept: Vec<Vec<f64>> = Vec::new();
+        for (i, row) in stream.iter().enumerate() {
+            if i < cap {
+                kept.push(row.clone());
+            } else {
+                let j = rng.below(i + 1);
+                if j < cap {
+                    kept[j] = row.clone();
+                }
+            }
+        }
+        kept
+    }
+
+    fn stream(n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|i| vec![i as f64, (i * i) as f64]).collect()
+    }
+
+    #[test]
+    fn keeps_everything_below_capacity() {
+        let r = Reservoir::new(8, 42);
+        let rows = stream(5);
+        for row in &rows {
+            r.record(row);
+        }
+        assert_eq!(r.seen(), 5);
+        assert_eq!(r.len(), 5);
+        let (seen, kept) = r.snapshot(None);
+        assert_eq!(seen, 5);
+        assert_eq!(kept, rows, "below cap the reservoir is the stream");
+    }
+
+    #[test]
+    fn matches_reference_algorithm_r_exactly() {
+        for &(cap, n, seed) in &[(4usize, 100usize, 7u64), (16, 16, 1), (8, 1000, 99)] {
+            let rows = stream(n);
+            let r = Reservoir::new(cap, seed);
+            for row in &rows {
+                r.record(row);
+            }
+            let (seen, kept) = r.snapshot(None);
+            assert_eq!(seen, n as u64);
+            assert_eq!(kept, reference(cap, seed, &rows), "cap={cap} n={n} seed={seed}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_order() {
+        let rows = stream(500);
+        let mk = || {
+            let r = Reservoir::new(32, 1234);
+            for row in &rows {
+                r.record(row);
+            }
+            r.snapshot(None)
+        };
+        assert_eq!(mk(), mk());
+        // A different seed keeps a different sample (same size).
+        let other = Reservoir::new(32, 4321);
+        for row in &rows {
+            other.record(row);
+        }
+        assert_ne!(other.snapshot(None).1, mk().1);
+        assert_eq!(other.len(), 32);
+    }
+
+    #[test]
+    fn memory_stays_bounded_and_sample_stays_uniformish() {
+        let r = Reservoir::new(64, 3);
+        for row in stream(10_000) {
+            r.record(&row);
+        }
+        assert_eq!(r.len(), 64);
+        assert_eq!(r.seen(), 10_000);
+        // Uniformity smoke check: the kept first coordinates should
+        // span the stream, not cluster at the head (Algorithm R keeps
+        // late rows with probability cap/n, not zero).
+        let (_, kept) = r.snapshot(None);
+        let late = kept.iter().filter(|row| row[0] >= 5_000.0).count();
+        assert!(late >= 16, "only {late}/64 kept rows from the late half");
+    }
+
+    #[test]
+    fn snapshot_limit_truncates() {
+        let r = Reservoir::new(16, 5);
+        for row in stream(16) {
+            r.record(&row);
+        }
+        let (seen, kept) = r.snapshot(Some(4));
+        assert_eq!(seen, 16);
+        assert_eq!(kept.len(), 4);
+        assert!(r.snapshot(Some(0)).1.is_empty());
+        assert_eq!(r.snapshot(Some(999)).1.len(), 16);
+    }
+
+    #[test]
+    fn variant_seeding_is_stable_and_name_dependent() {
+        // Distinct names fork distinct streams from the same base seed;
+        // the same name twice is identical (the env default is fixed).
+        let rows = stream(200);
+        let sample = |name: &str| {
+            let r = Reservoir::for_variant(name, 8);
+            for row in &rows {
+                r.record(row);
+            }
+            r.snapshot(None).1
+        };
+        assert_eq!(sample("toy@spr"), sample("toy@spr"));
+        assert_ne!(sample("toy@spr"), sample("toy@knm"));
+    }
+}

@@ -541,6 +541,40 @@ impl TreeBundle {
         self.memo_mode
     }
 
+    /// Rebuild the input quantizer from the bundle's **own** compiled
+    /// trees and clear the memo cache. The quantizer's soundness proof
+    /// (equal cell codes ⇒ identical branches) only holds against the
+    /// thresholds of the trees it was built from, so any path that
+    /// replaces the trees behind a served slot (hot-reload epoch swaps)
+    /// must call this before a single row touches the cache: a quantizer
+    /// carried over from an old epoch would key the cache on stale cells
+    /// and serve a wrong cached decision. Constructors already establish
+    /// the invariant; this re-establishes it explicitly and atomically
+    /// with the cache it keys.
+    pub fn rebuild_quantizer(&mut self) {
+        let dim = self.trees.input_space.dim();
+        self.quantizer = InputQuantizer::build(&self.compiled, dim);
+        self.cache = MemoCache::new(self.cache.n_slots());
+    }
+
+    /// Replay rows through the memoized scalar [`TreeBundle::decide`]
+    /// path so they are resident before real traffic arrives (epoch-swap
+    /// and registration prewarm). Rows whose dimension doesn't match the
+    /// input space are skipped — the reservoir can outlive a retune that
+    /// changed nothing, but a warmup must never panic a reload. Returns
+    /// the number of rows actually replayed.
+    pub fn prewarm(&self, rows: &[Vec<f64>]) -> usize {
+        let dim = self.n_inputs();
+        let mut warmed = 0;
+        for row in rows {
+            if row.len() == dim {
+                self.decide(row);
+                warmed += 1;
+            }
+        }
+        warmed
+    }
+
     pub fn n_inputs(&self) -> usize {
         self.trees.input_space.dim()
     }
@@ -781,7 +815,16 @@ impl KernelRegistry {
         dir: impl AsRef<Path>,
         name: Option<&str>,
     ) -> Result<String, String> {
-        let bundle = TreeBundle::load_checkpoint_dir(dir)?.with_memo_mode(self.memo_mode);
+        let bundle =
+            TreeBundle::load_checkpoint_dir(dir.as_ref())?.with_memo_mode(self.memo_mode);
+        // Warm the fresh cache from the checkpoint's stage-3 grid (the
+        // only traffic proxy available at registration): the first real
+        // request on a grid-adjacent shape is then a hit, not a cold
+        // walk. Best-effort — a missing/unreadable grid skips it.
+        if let Ok(mut rows) = checkpoint::read_grid_inputs(dir.as_ref()) {
+            rows.truncate(crate::runtime::server::reload::PREWARM_MAX_ROWS);
+            bundle.prewarm(&rows);
+        }
         let name = match name {
             Some(n) => n.to_string(),
             None => bundle
@@ -1097,6 +1140,43 @@ mod tests {
         // The pre-switch entry was dropped with the old key space.
         assert_eq!(bundle.cache_counters().misses(), 1);
         assert_eq!(bundle.cache_counters().hits(), 0);
+    }
+
+    #[test]
+    fn prewarm_replays_rows_and_skips_dimension_mismatches() {
+        let bundle = TreeBundle::from_trees(model()).unwrap();
+        let rows = vec![
+            vec![1000.0, 2000.0],
+            vec![1.0],                  // wrong dim: skipped, not a panic
+            vec![3000.0, 4000.0, 5.0],  // wrong dim: skipped
+            vec![1500.0, 2500.0],
+        ];
+        assert_eq!(bundle.prewarm(&rows), 2);
+        assert_eq!(bundle.cache_counters().misses(), 2, "prewarm fills via misses");
+        let hits = bundle.cache_counters().hits();
+        // The first *real* decide on a prewarmed shape is a cache hit.
+        bundle.decide(&[1000.0, 2000.0]);
+        bundle.decide(&[1500.0, 2500.0]);
+        assert_eq!(bundle.cache_counters().hits(), hits + 2);
+    }
+
+    #[test]
+    fn rebuild_quantizer_rekeys_and_clears_the_cache() {
+        let mut bundle =
+            TreeBundle::from_trees(model()).unwrap().with_memo_mode(MemoMode::Quantized);
+        let q = vec![1234.5, 4321.0];
+        let cfg = bundle.decide(&q);
+        assert_eq!(bundle.decide(&q), cfg);
+        assert_eq!(bundle.cache_counters().hits(), 1);
+        bundle.rebuild_quantizer();
+        // Fresh cache (and counters): the same row misses once, then
+        // hits again, and the decision is unchanged — the rebuilt
+        // quantizer keys the same cells as the constructor's.
+        assert_eq!(bundle.decide(&q), cfg);
+        assert_eq!(bundle.cache_counters().misses(), 1);
+        assert_eq!(bundle.cache_counters().hits(), 0);
+        assert_eq!(bundle.decide(&q), cfg);
+        assert_eq!(bundle.cache_counters().hits(), 1);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!   alongside for context.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Lock-free hit/miss counters for caches on concurrent serving paths
@@ -106,6 +107,128 @@ impl RecoveryCounters {
     }
 }
 
+/// Accumulators behind one [`SnapshotWindow`] lock.
+#[derive(Debug)]
+struct WindowState {
+    since: Instant,
+    requests: u64,
+    batches: u64,
+    rows: u64,
+    queue_ns: u64,
+}
+
+/// One consistent read of a [`SnapshotWindow`]: everything recorded
+/// since the previous snapshot, plus the window's wall-clock span. All
+/// derived figures divide **as f64**, so a window with fewer requests
+/// than its divisor reports the true fraction instead of a silently
+/// truncated 0 — and guard a zero denominator explicitly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowSnapshot {
+    pub secs: f64,
+    pub requests: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub queue_ns: u64,
+}
+
+impl WindowSnapshot {
+    /// Requests per second over the window (0.0 for an instant window).
+    pub fn rate_per_sec(&self) -> f64 {
+        if self.secs <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.secs
+        }
+    }
+
+    /// Mean batch occupancy (rows per dispatched batch) in the window.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean queue latency in microseconds over the window.
+    pub fn mean_queue_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_ns as f64 / self.requests as f64 / 1e3
+        }
+    }
+}
+
+/// Windowed request telemetry with an atomic snapshot-and-reset.
+///
+/// Writers ([`record`](Self::record)) and the reader
+/// ([`snapshot_and_reset`](Self::snapshot_and_reset)) share one mutex,
+/// so a snapshot taken mid-flush observes each recorded flush exactly
+/// once: every event lands in exactly one window, and summing window
+/// counts over time equals the cumulative counters — no double-count,
+/// no loss. (The cumulative per-variant counters stay lock-free
+/// atomics; this lock is only taken once per batch flush and once per
+/// `STATS` read, both far off the per-request path.)
+#[derive(Debug)]
+pub struct SnapshotWindow {
+    state: Mutex<WindowState>,
+}
+
+impl SnapshotWindow {
+    pub fn new() -> Self {
+        SnapshotWindow {
+            state: Mutex::new(WindowState {
+                since: Instant::now(),
+                requests: 0,
+                batches: 0,
+                rows: 0,
+                queue_ns: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WindowState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one batch flush: `requests` jobs answered, `rows` of them
+    /// dispatched in one batch, with `queue_ns` total queue time.
+    pub fn record(&self, requests: u64, batches: u64, rows: u64, queue_ns: u64) {
+        let mut s = self.lock();
+        s.requests += requests;
+        s.batches += batches;
+        s.rows += rows;
+        s.queue_ns += queue_ns;
+    }
+
+    /// Read the current window and atomically start the next one.
+    pub fn snapshot_and_reset(&self) -> WindowSnapshot {
+        self.snapshot_at(Instant::now())
+    }
+
+    /// [`snapshot_and_reset`](Self::snapshot_and_reset) with an explicit
+    /// "now" so tests can pin window spans without sleeping.
+    pub fn snapshot_at(&self, now: Instant) -> WindowSnapshot {
+        let mut s = self.lock();
+        let snap = WindowSnapshot {
+            secs: now.saturating_duration_since(s.since).as_secs_f64(),
+            requests: s.requests,
+            batches: s.batches,
+            rows: s.rows,
+            queue_ns: s.queue_ns,
+        };
+        *s = WindowState { since: now, requests: 0, batches: 0, rows: 0, queue_ns: 0 };
+        snap
+    }
+}
+
+impl Default for SnapshotWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Types that can report the size of their live model state.
 pub trait ModelFootprint {
     /// Approximate heap bytes held by the model (data structures that grow
@@ -199,6 +322,83 @@ mod tests {
         c.malformed.fetch_add(4, Ordering::Relaxed);
         c.conn_panics.fetch_add(5, Ordering::Relaxed);
         assert_eq!(c.snapshot(), (1, 2, 3, 4, 5));
+    }
+
+    #[test]
+    fn window_arithmetic_is_fractional_not_integer() {
+        // Regression: a window with fewer requests than its divisor
+        // (here 1 request over 2 seconds, 3 rows over 2 batches) must
+        // report the true fraction, not an integer-division 0.
+        let w = SnapshotWindow::new();
+        let t0 = Instant::now();
+        w.record(1, 2, 3, 1500);
+        let snap = w.snapshot_at(t0 + std::time::Duration::from_secs(2));
+        assert!(snap.secs >= 2.0);
+        assert!((snap.rate_per_sec() - 1.0 / snap.secs).abs() < 1e-12);
+        assert!(snap.rate_per_sec() > 0.0, "sub-1/sec rate must not truncate to 0");
+        assert!((snap.mean_batch() - 1.5).abs() < 1e-12);
+        assert!((snap.mean_queue_us() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_window_reports_zeroes_not_nan() {
+        let w = SnapshotWindow::new();
+        let snap = w.snapshot_and_reset();
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.rate_per_sec(), 0.0);
+        assert_eq!(snap.mean_batch(), 0.0);
+        assert_eq!(snap.mean_queue_us(), 0.0);
+        // Degenerate zero-width window: rate guards the denominator.
+        let zero = WindowSnapshot { secs: 0.0, requests: 5, batches: 1, rows: 5, queue_ns: 0 };
+        assert_eq!(zero.rate_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_resets_and_never_double_counts() {
+        // Every recorded event must land in exactly one window, even
+        // with snapshots racing the recorders: total across windows ==
+        // total recorded.
+        let w = std::sync::Arc::new(SnapshotWindow::new());
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut observed = WindowSnapshot { secs: 0.0, requests: 0, batches: 0, rows: 0, queue_ns: 0 };
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let w = w.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        w.record(1, 1, 1, 10);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let (w, stop) = (w.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut acc = (0u64, 0u64, 0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    let s = w.snapshot_and_reset();
+                    acc.0 += s.requests;
+                    acc.1 += s.batches;
+                    acc.2 += s.rows;
+                    acc.3 += s.queue_ns;
+                }
+                acc
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let acc = reader.join().unwrap();
+        let last = w.snapshot_and_reset();
+        observed.requests = acc.0 + last.requests;
+        observed.batches = acc.1 + last.batches;
+        observed.rows = acc.2 + last.rows;
+        observed.queue_ns = acc.3 + last.queue_ns;
+        assert_eq!(observed.requests, 40_000);
+        assert_eq!(observed.batches, 40_000);
+        assert_eq!(observed.rows, 40_000);
+        assert_eq!(observed.queue_ns, 400_000);
     }
 
     #[test]

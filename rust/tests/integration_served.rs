@@ -399,6 +399,252 @@ fn quantized_memo_mode_survives_registration_and_reports_in_stats() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The tentpole, end to end: serve → observe (reservoir) → pull
+/// (`SAMPLES`, both framings) → re-tune (bit-reproducibly) → redeploy
+/// (hot-reload) → prewarm (first post-swap request is a cache hit).
+/// Zero requests dropped or errored across the whole loop.
+#[test]
+fn closed_loop_observe_retune_and_prewarmed_hot_reload() {
+    let staging = tmp_dir("loop_staging");
+    let watch = tmp_dir("loop_watch");
+    tune_into(&staging, 75);
+    copy_checkpoints(&staging, &watch).unwrap();
+
+    let mut reg = ServedRegistry::new(None);
+    // A small reservoir so the test exercises replacement (seen > cap).
+    reg.set_reservoir_cap(64);
+    reg.register_dir(&watch, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+    let addr = daemon.local_addr();
+
+    // Phase 1: concurrent production-shaped traffic fills the reservoir.
+    const CLIENTS: usize = 3;
+    const PER_CLIENT: usize = 60;
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            scope.spawn(move || {
+                let mut client = ServedClient::connect(addr).unwrap();
+                let mut rng = Rng::new(3000 + t as u64);
+                for _ in 0..PER_CLIENT {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    client.decide("toy-sum", &q, None).unwrap();
+                }
+            });
+        }
+    });
+
+    let mut client = ServedClient::connect(addr).unwrap();
+
+    // STATS reports reservoir occupancy plus the windowed telemetry.
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    assert_eq!(
+        k.get("samples_seen").and_then(Value::as_usize),
+        Some(CLIENTS * PER_CLIENT)
+    );
+    assert_eq!(k.get("samples_held").and_then(Value::as_usize), Some(64));
+    assert_eq!(k.get("samples_cap").and_then(Value::as_usize), Some(64));
+    assert_eq!(
+        k.get("window_requests").and_then(Value::as_usize),
+        Some(CLIENTS * PER_CLIENT)
+    );
+    assert!(k.get("window_requests_per_sec").and_then(Value::as_f64).unwrap() > 0.0);
+    assert!(k.get("window_mean_batch").and_then(Value::as_f64).unwrap() >= 1.0);
+    // The window resets on read; the cumulative counters don't.
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    assert_eq!(k.get("window_requests").and_then(Value::as_usize), Some(0));
+    assert_eq!(
+        k.get("requests").and_then(Value::as_usize),
+        Some(CLIENTS * PER_CLIENT)
+    );
+
+    // SAMPLES over the binary framing: the whole reservoir, then a
+    // limited prefix — reads never perturb the reservoir.
+    let rows = client.sample_rows("toy-sum", None).unwrap();
+    assert_eq!(rows.len(), 64);
+    assert!(rows.iter().all(|r| r.len() == 2));
+    let few = client.sample_rows("toy-sum", Some(5)).unwrap();
+    assert_eq!(few, rows[..5].to_vec());
+    let err = client.samples(Some("nope"), None).unwrap_err();
+    assert!(err.contains("nope"), "{err}");
+
+    // SAMPLES over the raw text framing: same reservoir, same rows.
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(b"SAMPLES\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = mlkaps::util::json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{line}");
+        let entry = v.get("samples").and_then(|s| s.get("toy-sum")).unwrap();
+        assert_eq!(
+            entry.get("seen").and_then(Value::as_usize),
+            Some(CLIENTS * PER_CLIENT)
+        );
+        let text_rows = entry.get("rows").and_then(Value::as_arr).unwrap();
+        assert_eq!(text_rows.len(), 64);
+        let first: Vec<f64> =
+            text_rows[0].as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect();
+        assert_eq!(first, rows[0]);
+    }
+
+    // Phase 2: re-tune from the pulled reservoir — bit-reproducible
+    // (two retunes from the same rows produce byte-identical chains).
+    let r1 = tmp_dir("loop_retune1");
+    let r2 = tmp_dir("loop_retune2");
+    copy_checkpoints(&watch, &r1).unwrap();
+    copy_checkpoints(&watch, &r2).unwrap();
+    let out1 = PipelineRun::new(config(75), r1.clone()).retune(&rows).unwrap();
+    let out2 = PipelineRun::new(config(75), r2.clone()).retune(&rows).unwrap();
+    assert_eq!(out1.fingerprint, out2.fingerprint, "retune is not reproducible");
+    assert_ne!(out1.fingerprint, out1.base_fingerprint, "retune must flip the run id");
+    assert!(out1.boosted >= 1, "served rows boosted no grid point");
+    for f in [
+        "checkpoint.json",
+        "stage1_dataset.json",
+        "stage2_surrogate.json",
+        "stage3_grid.json",
+        "stage4_trees.json",
+    ] {
+        assert_eq!(
+            std::fs::read(r1.join(f)).unwrap(),
+            std::fs::read(r2.join(f)).unwrap(),
+            "{f} differs between identical retunes"
+        );
+    }
+    // The rewritten chain still verifies and loads.
+    let retuned = TreeBundle::load_checkpoint_dir(&r1).unwrap();
+    assert_eq!(retuned.fingerprint(), Some(out1.fingerprint.as_str()));
+
+    // Phase 3: land the retuned chain in the watched directory and wait
+    // for the daemon to swap (nudging with the RELOAD verb).
+    copy_checkpoints(&r1, &watch).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let _ = client.reload();
+        let stats = client.stats().unwrap();
+        let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+        if k.get("fingerprint").and_then(Value::as_str) == Some(out1.fingerprint.as_str())
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "daemon never reloaded the retuned run");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The swap prewarmed the new epoch's memo cache from the reservoir:
+    // each of the 64 held rows was replayed as a miss, and the first
+    // real request after the swap — the last-prewarmed row, which
+    // nothing can have evicted — is answered from the cache.
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    let hits0 = k.get("cache_hits").and_then(Value::as_usize).unwrap();
+    let misses0 = k.get("cache_misses").and_then(Value::as_usize).unwrap();
+    assert_eq!(misses0, 64, "prewarm must replay every reservoir row (as misses)");
+
+    let warm = rows.last().unwrap();
+    let d = client.decide("toy-sum", warm, None).unwrap();
+    assert_eq!(d.fingerprint.as_deref(), Some(out1.fingerprint.as_str()));
+    assert_eq!(d.values, retuned.decide(warm), "post-swap decision diverged");
+
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    assert_eq!(
+        k.get("cache_hits").and_then(Value::as_usize),
+        Some(hits0 + 1),
+        "first post-swap request was not a prewarmed cache hit"
+    );
+    assert_eq!(k.get("cache_misses").and_then(Value::as_usize), Some(misses0));
+
+    // Zero dropped or errored decisions across the whole loop.
+    assert_eq!(k.get("errors").and_then(Value::as_usize), Some(0));
+    assert!(k.get("reloads").and_then(Value::as_usize).unwrap() >= 1);
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    for d in [&staging, &watch, &r1, &r2] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Satellite-2 regression: `--memo quantized` must not serve from a
+/// cache keyed by the *previous* epoch's split thresholds after a
+/// hot-reload. The quantizer is rebuilt (not merely cleared) atomically
+/// with the swap; a stale quantizer would alias inputs that share an
+/// old-epoch cell but straddle a new-epoch threshold into one cache
+/// entry, returning one input's config for the other.
+#[test]
+fn quantized_cache_rekeys_on_hot_reload_with_changed_thresholds() {
+    let staging_a = tmp_dir("rekey_a");
+    let staging_b = tmp_dir("rekey_b");
+    let watch = tmp_dir("rekey_watch");
+    tune_into(&staging_a, 76);
+    // A different seed tunes different trees → different thresholds.
+    let bundle_b = tune_into(&staging_b, 77);
+    let fp_b = bundle_b.fingerprint().unwrap().to_string();
+    copy_checkpoints(&staging_a, &watch).unwrap();
+
+    let mut reg = ServedRegistry::new(None);
+    reg.set_memo_mode(mlkaps::runtime::serving::MemoMode::Quantized);
+    reg.register_dir(&watch, None).unwrap();
+    let mut daemon = Daemon::start(reg, daemon_config()).unwrap();
+    let addr = daemon.local_addr();
+    let mut client = ServedClient::connect(addr).unwrap();
+
+    // Populate epoch A's quantized cache with a probe sweep.
+    let mut rng = Rng::new(4000);
+    let probes: Vec<Vec<f64>> = (0..50)
+        .map(|_| vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)])
+        .collect();
+    for q in &probes {
+        client.decide("toy-sum", q, None).unwrap();
+    }
+
+    // Swap epochs under the same watch directory.
+    copy_checkpoints(&staging_b, &watch).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let _ = client.reload();
+        let stats = client.stats().unwrap();
+        let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+        if k.get("fingerprint").and_then(Value::as_str) == Some(fp_b.as_str()) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "daemon never swapped to epoch B");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Every probe, decided twice so the second answer comes from the
+    // rebuilt cache, must match epoch B's trees bit-exactly. Under the
+    // stale-quantizer bug some of these return a *different* probe's
+    // config (cross-threshold aliasing) — this sweep is the regression.
+    for q in &probes {
+        let d1 = client.decide("toy-sum", q, None).unwrap();
+        let d2 = client.decide("toy-sum", q, None).unwrap();
+        assert_eq!(d1.values, bundle_b.decide(q), "post-swap quantized alias for {q:?}");
+        assert_eq!(d2.values, d1.values);
+        assert_eq!(d1.fingerprint.as_deref(), Some(fp_b.as_str()));
+    }
+    let stats = client.stats().unwrap();
+    let k = stats.get("kernels").and_then(|k| k.get("toy-sum")).unwrap();
+    assert_eq!(k.get("cache_mode").and_then(Value::as_str), Some("quantized"));
+    let hits = k.get("cache_hits").and_then(Value::as_usize).unwrap();
+    let exact = k.get("cache_hits_exact").and_then(Value::as_usize).unwrap();
+    let quant = k.get("cache_hits_quantized").and_then(Value::as_usize).unwrap();
+    assert_eq!(exact + quant, hits);
+    assert_eq!(k.get("errors").and_then(Value::as_usize), Some(0));
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    for d in [&staging_a, &staging_b, &watch] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
 #[test]
 fn profile_variants_route_and_reload_verb_works() {
     let dir_spr = tmp_dir("prof_spr");
