@@ -1,0 +1,148 @@
+//! Cluster throughput: stage-3 shards/sec through the shard-leasing
+//! coordinator at 1 vs 2 vs 4 workers. Distribution must *pay*: more
+//! workers must not be slower than one (the coordination tax — leases,
+//! heartbeats, result uploads, ledger writes — has to stay under the
+//! shard compute it parallelizes). And it must stay *exact*: every
+//! worker count produces bit-identical stage-3 bytes.
+//!
+//! Run: `cargo bench --bench cluster_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+//! CI asserts best multi-worker throughput ≥ single-worker throughput
+//! in shards/sec.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::{Duration, Instant};
+
+use bench_util::*;
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{PipelineRun, Stage, copy_checkpoints};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+use mlkaps::runtime::cluster::{Coordinator, CoordinatorConfig, spawn_workers};
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::hash::fnv1a;
+
+const SEED: u64 = 4517;
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    header(
+        "cluster_throughput",
+        "distributed stage 3: shards/sec at 1 vs 2 vs 4 shard-leasing workers",
+    );
+    let per_dim = budget3(24, 12, 8);
+    let ga_pop = budget3(32, 16, 8);
+    let ga_gen = budget3(30, 12, 6);
+    let samples = budget3(600, 240, 120);
+
+    let cfg = MlkapsConfig {
+        total_samples: samples,
+        batch_size: samples / 2,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 30, ..Default::default() },
+        ga: Nsga2Params { pop_size: ga_pop, generations: ga_gen, ..Default::default() },
+        opt_grid: per_dim,
+        tree_depth: 4,
+        threads: 1,
+        seed: SEED,
+    };
+    let n_points = per_dim * per_dim; // toy-sum has 2 input dims
+    // ~16 shards at any budget: enough lease traffic to price the
+    // coordination tax without the plan degenerating to one lease.
+    let shard_size = (n_points / 16).max(2);
+    let n_shards = n_points.div_ceil(shard_size);
+
+    let base = |name: &str| {
+        let dir = std::env::temp_dir()
+            .join(format!("mlkaps_bench_cluster_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    };
+    let make_run = |dir: &std::path::Path| {
+        let mut run = PipelineRun::new(cfg.clone(), dir.to_path_buf());
+        run.shard_size = shard_size;
+        run
+    };
+
+    // Stages 1–2 once, then cloned into each phase's directory, so the
+    // timed phases contain only shard leasing + compute + merge-ready
+    // artifacts — not repeated sampling/surrogate work.
+    let prefix_dir = base("prefix");
+    make_run(&prefix_dir).run_prefix(&ToySum::new(SEED), Stage::Surrogate).unwrap();
+    println!(
+        "{n_points} grid points in {n_shards} shards of {shard_size} (GA {ga_pop}x{ga_gen})"
+    );
+
+    let mut rows_out = Vec::new();
+    let mut rates = Vec::new();
+    let mut stage3_hashes = Vec::new();
+    for &workers in &WORKER_COUNTS {
+        let dir = base(&format!("w{workers}"));
+        copy_checkpoints(&prefix_dir, &dir).unwrap();
+        let coord = Coordinator::start(
+            make_run(&dir),
+            Box::new(ToySum::new(SEED)),
+            CoordinatorConfig {
+                addr: "127.0.0.1:0".into(),
+                lease_ttl: Duration::from_secs(10),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Timed: the shard-drain phase only (stages 1–2 were preloaded;
+        // merge + tree training are identical work at every count).
+        let t0 = Instant::now();
+        let handles = spawn_workers(&coord.local_display(), workers, 1);
+        assert!(coord.wait_complete(Duration::from_secs(600)), "shard drain timed out");
+        let secs = t0.elapsed().as_secs_f64();
+        // Join before finish: workers exit on their next lease round
+        // trip (Complete), which needs the coordinator still listening.
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        coord.finish(Duration::from_secs(60)).unwrap();
+        let stage3 = std::fs::read(dir.join("stage3_grid.json")).unwrap();
+        stage3_hashes.push(fnv1a(&stage3));
+        let rate = n_shards as f64 / secs.max(1e-12);
+        rates.push(rate);
+        rows_out.push(vec![
+            workers.to_string(),
+            n_shards.to_string(),
+            format!("{secs:.4}"),
+            format!("{rate:.2}"),
+        ]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_dir_all(&prefix_dir).ok();
+
+    println!("{}", report::table(&["workers", "shards", "secs", "shards_per_sec"], &rows_out));
+    save_csv(
+        "cluster_throughput.csv",
+        &["workers", "shards", "secs", "shards_per_sec"],
+        &rows_out,
+    );
+
+    // Exactness across worker counts: distribution changed where the
+    // shards were computed, never the merged bytes.
+    assert!(
+        stage3_hashes.iter().all(|h| *h == stage3_hashes[0]),
+        "stage-3 bytes diverged across worker counts: {stage3_hashes:016x?}"
+    );
+
+    // The acceptance gate: the best multi-worker rate must not lose to
+    // one worker — otherwise the cluster's coordination tax exceeds
+    // what it parallelizes.
+    let single = rates[0];
+    let best_multi = rates[1..].iter().cloned().fold(f64::MIN, f64::max);
+    assert!(
+        best_multi >= single,
+        "multi-worker shard throughput lost to a single worker: {best_multi:.2} < {single:.2} shards/s"
+    );
+    println!(
+        "(gate: best multi-worker x{:.2} vs 1 worker — must be >= 1)",
+        best_multi / single
+    );
+}

@@ -23,6 +23,12 @@
 //!               (--from-daemon HOST:PORT | --from-samples FILE)
 //!               [--kernel NAME] [--limit N]
 //!               [--depth 8] [--threads N]   (must match the original tune)
+//! mlkaps coordinate --checkpoint-dir DIR [--addr 127.0.0.1:0|unix:/path]
+//!                   [--lease-ttl-ms 10000] [--workers N] [--wait-secs 86400]
+//!                   (plus the tune flags: --kernel --samples --batch
+//!                    --sampler --grid --depth --seed --threads)
+//! mlkaps worker --connect HOST:PORT|unix:/path [--threads N] [--id NAME]
+//!               [--max-shards N]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -53,6 +59,18 @@
 //! threshold-cell codes instead of exact input bits, so inputs landing
 //! in the same leaf cell of every tree share one entry (hit telemetry
 //! reports exact and quantized hits separately).
+//!
+//! `coordinate` + `worker` distribute stage 3
+//! ([`crate::runtime::cluster`]): the coordinator runs stages 1–2
+//! locally, then leases stage-3 shards to any number of `worker`
+//! processes (same host or remote, TCP or unix socket) and merges their
+//! results into a chain-verified checkpoint directory that is
+//! **byte-identical** to what a single-process `tune` with the same
+//! flags would have produced — shard RNGs are seeded by global grid
+//! index, and the coordinator re-serializes worker results through the
+//! identical checkpoint write path. Workers heartbeat their leases; a
+//! killed worker's shard is reassigned when its lease TTL lapses, and
+//! the shard ledger survives coordinator restarts.
 //!
 //! `retune` closes the tuning loop: it pulls the served-input reservoir
 //! from a running daemon (the `SAMPLES` verb; or reads rows from a JSON
@@ -143,13 +161,13 @@ pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
     Ok(map)
 }
 
-fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
+/// Parse the pipeline-shaping flags shared by `tune` and `coordinate`
+/// (both must build the *same* config for the same flags, or the run
+/// fingerprints — and therefore the checkpoints — would diverge).
+fn parse_pipeline_config(flags: &HashMap<String, String>) -> Result<MlkapsConfig, String> {
     let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
-    let kernel_name = get("kernel", "toy");
     let seed: u64 = get("seed", "0").parse().map_err(|e| format!("seed: {e}"))?;
-    let kernel = make_kernel(&kernel_name, seed)?;
-
-    let cfg = MlkapsConfig {
+    Ok(MlkapsConfig {
         total_samples: get("samples", "1000").parse().map_err(|e| format!("samples: {e}"))?,
         batch_size: get("batch", "128").parse().map_err(|e| format!("batch: {e}"))?,
         sampler: parse_sampler(&get("sampler", "ga-adaptive"))?,
@@ -160,7 +178,15 @@ fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
         ),
         seed,
         ..Default::default()
-    };
+    })
+}
+
+fn cmd_tune(flags: HashMap<String, String>) -> Result<(), String> {
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let kernel_name = get("kernel", "toy");
+    let cfg = parse_pipeline_config(&flags)?;
+    let seed = cfg.seed;
+    let kernel = make_kernel(&kernel_name, seed)?;
 
     eprintln!(
         "mlkaps: tuning {} with {} ({} samples, {}^d grid, depth {})",
@@ -541,7 +567,7 @@ fn cmd_retune(flags: HashMap<String, String>) -> Result<(), String> {
     let samples: Vec<Vec<f64>> = match (flags.get("from-daemon"), flags.get("from-samples"))
     {
         (Some(addr), None) => {
-            let mut client = ServedClient::connect(addr.as_str())
+            let mut client = ServedClient::connect_str(addr.as_str())
                 .map_err(|e| format!("daemon {addr}: {e}"))?;
             let v = client.samples(kernel, limit)?;
             sample_rows_from_value(&v, kernel)?
@@ -625,13 +651,105 @@ fn cmd_artifacts(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_coordinate(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::cluster::{Coordinator, CoordinatorConfig, spawn_workers};
+    use std::time::Duration;
+
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let dir = flags
+        .get("checkpoint-dir")
+        .cloned()
+        .ok_or("coordinate needs --checkpoint-dir DIR (shared artifacts live there)")?;
+    let kernel_name = get("kernel", "toy");
+    let cfg = parse_pipeline_config(&flags)?;
+    let kernel = make_kernel(&kernel_name, cfg.seed)?;
+    let local_workers: usize =
+        get("workers", "0").parse().map_err(|e| format!("workers: {e}"))?;
+    let ttl_ms: u64 =
+        get("lease-ttl-ms", "10000").parse().map_err(|e| format!("lease-ttl-ms: {e}"))?;
+    let wait_secs: u64 =
+        get("wait-secs", "86400").parse().map_err(|e| format!("wait-secs: {e}"))?;
+
+    let ccfg = CoordinatorConfig {
+        addr: get("addr", "127.0.0.1:0"),
+        lease_ttl: Duration::from_millis(ttl_ms.max(1)),
+        ..Default::default()
+    };
+    let threads = cfg.threads;
+    let run = PipelineRun::new(cfg, &dir);
+    let coord = Coordinator::start(run, kernel, ccfg)?;
+    // Readiness line on stdout — scripts and CI wait for it before
+    // launching workers.
+    println!("mlkaps coordinate: listening on {}", coord.local_display());
+
+    let handles = if local_workers > 0 {
+        eprintln!("mlkaps coordinate: spawning {local_workers} in-process workers");
+        spawn_workers(&coord.local_display(), local_workers, threads)
+    } else {
+        Vec::new()
+    };
+
+    // Progress heartbeat on stderr while shards drain.
+    let deadline = std::time::Instant::now() + Duration::from_secs(wait_secs);
+    while !coord.wait_complete(Duration::from_secs(2)) {
+        let (p, l, d, t) = coord.progress();
+        eprintln!("mlkaps coordinate: {d}/{t} shards done ({p} pending, {l} leased)");
+        if std::time::Instant::now() >= deadline {
+            break;
+        }
+    }
+    // In-process workers exit on their next lease round trip (Complete),
+    // which needs the coordinator still listening — join them before
+    // finish() stops it. If the deadline expired with shards still open,
+    // skip straight to finish(), whose Err reports the stuck progress.
+    if coord.wait_complete(Duration::from_millis(0)) {
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+    let merged = coord.finish(Duration::from_secs(1))?;
+    for status in &merged.stages {
+        let how = if status.loaded { "resumed from checkpoint" } else { "computed + saved" };
+        eprintln!("stage {:<13} {how} in {:.2}s", status.stage.name(), status.secs);
+    }
+    println!(
+        "mlkaps coordinate: merged run complete in {dir} ({} tree nodes)",
+        merged.model.trees.total_nodes()
+    );
+    Ok(())
+}
+
+fn cmd_worker(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::cluster::{WorkerConfig, run_worker};
+
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let connect = flags
+        .get("connect")
+        .cloned()
+        .ok_or("worker needs --connect HOST:PORT or --connect unix:/path")?;
+    let mut cfg =
+        WorkerConfig::new(connect, get("id", &format!("worker-{}", std::process::id())));
+    cfg.threads = get("threads", "0").parse::<usize>().ok().filter(|&t| t > 0).unwrap_or_else(
+        crate::util::threadpool::default_threads,
+    );
+    cfg.max_shards = flags
+        .get("max-shards")
+        .map(|v| v.parse().map_err(|e| format!("max-shards: {e}")))
+        .transpose()?;
+    let report = run_worker(&cfg)?;
+    eprintln!("mlkaps worker {}: computed {} shards", cfg.name, report.shards);
+    Ok(())
+}
+
 /// CLI entry point.
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: mlkaps <kernels|tune|serve|served|retune|artifacts> [--flags]");
+            eprintln!(
+                "usage: mlkaps <kernels|tune|serve|served|retune|coordinate|worker|artifacts> [--flags]"
+            );
             eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
             std::process::exit(2);
         }
@@ -647,6 +765,8 @@ pub fn main() {
         "serve" => parse_flags(&rest).and_then(cmd_serve),
         "served" => parse_flags(&rest).and_then(cmd_served),
         "retune" => parse_flags(&rest).and_then(cmd_retune),
+        "coordinate" => parse_flags(&rest).and_then(cmd_coordinate),
+        "worker" => parse_flags(&rest).and_then(cmd_worker),
         "artifacts" => parse_flags(&rest).and_then(cmd_artifacts),
         other => Err(format!("unknown command '{other}'")),
     };

@@ -8,6 +8,7 @@
 //! (every front is a singleton rank ordering), matching the paper's use of
 //! pymoo's NSGA-II for both its sampling and optimization phases.
 
+use crate::util::json::Value;
 use crate::util::rng::Rng;
 use crate::util::threadpool::par_map;
 
@@ -36,6 +37,51 @@ impl Default for Nsga2Params {
             p_crossover: 0.9,
             p_mutation: None,
         }
+    }
+}
+
+impl Nsga2Params {
+    /// Serialize for the wire / checkpoint metadata. Every field that
+    /// shapes the deterministic GA trajectory is carried, so two
+    /// processes deserializing the same object run identical searches.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("pop_size", Value::Num(self.pop_size as f64)),
+            ("generations", Value::Num(self.generations as f64)),
+            ("eta_crossover", Value::Num(self.eta_crossover)),
+            ("eta_mutation", Value::Num(self.eta_mutation)),
+            ("p_crossover", Value::Num(self.p_crossover)),
+            (
+                "p_mutation",
+                match self.p_mutation {
+                    Some(p) => Value::Num(p),
+                    None => Value::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`Nsga2Params::to_json`].
+    pub fn from_json(v: &Value) -> Result<Nsga2Params, String> {
+        let num = |key: &str| {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("nsga2 params: missing numeric '{key}'"))
+        };
+        let p_mutation = match v.get("p_mutation") {
+            None | Some(Value::Null) => None,
+            Some(p) => {
+                Some(p.as_f64().ok_or("nsga2 params: 'p_mutation' must be a number")?)
+            }
+        };
+        Ok(Nsga2Params {
+            pop_size: num("pop_size")? as usize,
+            generations: num("generations")? as usize,
+            eta_crossover: num("eta_crossover")?,
+            eta_mutation: num("eta_mutation")?,
+            p_crossover: num("p_crossover")?,
+            p_mutation,
+        })
     }
 }
 

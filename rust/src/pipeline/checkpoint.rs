@@ -63,17 +63,17 @@ pub const FORMAT: &str = "mlkaps-checkpoint-v1";
 
 /// Stage-envelope format: wraps stage 2-4 payloads with the hash of the
 /// upstream artifact they were computed from.
-const STAGE_FORMAT: &str = "mlkaps-stage-envelope-v1";
+pub(crate) const STAGE_FORMAT: &str = "mlkaps-stage-envelope-v1";
 
 /// Default grid points per optimization shard (checkpoint granularity).
 pub const SHARD_SIZE: usize = 64;
 
-const META_FILE: &str = "checkpoint.json";
-const STAGE1_FILE: &str = "stage1_dataset.json";
-const STAGE2_FILE: &str = "stage2_surrogate.json";
-const STAGE3_FILE: &str = "stage3_grid.json";
-const STAGE4_FILE: &str = "stage4_trees.json";
-const VALIDATION_FILE: &str = "validation.json";
+pub(crate) const META_FILE: &str = "checkpoint.json";
+pub(crate) const STAGE1_FILE: &str = "stage1_dataset.json";
+pub(crate) const STAGE2_FILE: &str = "stage2_surrogate.json";
+pub(crate) const STAGE3_FILE: &str = "stage3_grid.json";
+pub(crate) const STAGE4_FILE: &str = "stage4_trees.json";
+pub(crate) const VALIDATION_FILE: &str = "validation.json";
 
 /// The four pipeline stages, in execution order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -138,12 +138,12 @@ pub fn fingerprint(config: &MlkapsConfig, kernel: &dyn Kernel) -> String {
     format!("{:016x}", fnv1a(canon.as_bytes()))
 }
 
-fn shard_file(shard: usize) -> String {
+pub(crate) fn shard_file(shard: usize) -> String {
     format!("stage3_shard_{shard:04}.json")
 }
 
 /// Wrap a stage payload with its upstream-artifact hash.
-fn envelope(stage: Stage, upstream: &str, payload: Value) -> Value {
+pub(crate) fn envelope(stage: Stage, upstream: &str, payload: Value) -> Value {
     Value::obj(vec![
         ("format", Value::Str(STAGE_FORMAT.into())),
         ("stage", Value::Str(stage.name().into())),
@@ -154,7 +154,7 @@ fn envelope(stage: Stage, upstream: &str, payload: Value) -> Value {
 
 /// Unwrap a stage envelope, validating stage identity and the upstream
 /// hash. `None` means "not a valid checkpoint for this chain state".
-fn open_envelope<'a>(v: &'a Value, stage: Stage, upstream: &str) -> Option<&'a Value> {
+pub(crate) fn open_envelope<'a>(v: &'a Value, stage: Stage, upstream: &str) -> Option<&'a Value> {
     // Injected verification failure: the envelope is treated as stale,
     // which the chain design already defines as "recompute downstream".
     failpoint::fail(sites::CHECKPOINT_VERIFY).ok()?;
@@ -170,7 +170,7 @@ fn open_envelope<'a>(v: &'a Value, stage: Stage, upstream: &str) -> Option<&'a V
     v.get("payload")
 }
 
-fn shard_to_json(base: usize, designs: &[Vec<f64>], predicted: &[f64]) -> Value {
+pub(crate) fn shard_to_json(base: usize, designs: &[Vec<f64>], predicted: &[f64]) -> Value {
     Value::obj(vec![
         ("format", Value::Str("mlkaps-stage3-shard-v1".into())),
         ("base", Value::Num(base as f64)),
@@ -182,7 +182,7 @@ fn shard_to_json(base: usize, designs: &[Vec<f64>], predicted: &[f64]) -> Value 
     ])
 }
 
-fn load_shard(v: &Value, base: usize, count: usize) -> Result<(Vec<Vec<f64>>, Vec<f64>), String> {
+pub(crate) fn load_shard(v: &Value, base: usize, count: usize) -> Result<(Vec<Vec<f64>>, Vec<f64>), String> {
     if v.get("format").and_then(|f| f.as_str()) != Some("mlkaps-stage3-shard-v1") {
         return Err("unknown shard format".into());
     }
@@ -223,11 +223,11 @@ impl PipelineRun {
         PipelineRun { pipeline: Mlkaps::new(config), dir: dir.into(), shard_size: SHARD_SIZE }
     }
 
-    fn path(&self, file: &str) -> PathBuf {
+    pub(crate) fn path(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }
 
-    fn read_stage(&self, file: &str) -> Option<Value> {
+    pub(crate) fn read_stage(&self, file: &str) -> Option<Value> {
         // An injected read fault models an unreadable artifact; `None`
         // already means "recompute this stage", so the recovery path is
         // the normal path.
@@ -238,7 +238,7 @@ impl PipelineRun {
 
     /// FNV-1a hash (hex) of a stage file's bytes on disk — the upstream
     /// link of the consistency chain. `None` when the file is unreadable.
-    fn file_hash(&self, file: &str) -> Option<String> {
+    pub(crate) fn file_hash(&self, file: &str) -> Option<String> {
         let bytes = std::fs::read(self.path(file)).ok()?;
         Some(format!("{:016x}", fnv1a(&bytes)))
     }

@@ -1,0 +1,277 @@
+//! Wire verbs for the stage-3 shard-leasing cluster.
+//!
+//! The cluster speaks the same length-prefixed JSON framing as the
+//! serving daemon ([`crate::runtime::server::protocol`]), binary frames
+//! only. Every request carries an `id` the coordinator echoes back in
+//! its response, so workers can pipeline requests on one connection
+//! (heartbeat-during-upload) and match responses out of order.
+//!
+//! Verbs (worker → coordinator):
+//!
+//! - `spec` — fetch the [`RunSpec`]: everything a worker needs to
+//!   compute any shard byte-identically to the single-process pipeline.
+//! - `lease` — acquire the next pending shard. The grant carries the
+//!   lease TTL; a worker that stops heartbeating loses the shard.
+//! - `heartbeat` — renew the lease on a shard mid-compute.
+//! - `result` — upload a computed shard (raw design rows + predicted
+//!   scalars; the coordinator re-serializes them through the exact
+//!   single-process checkpoint path, which is what makes the merged
+//!   run byte-identical by construction).
+//! - `done` — worker sign-off; releases any lease it still holds.
+//! - `status` — ledger counters, for progress displays and tests.
+
+use crate::config::space::ParamSpace;
+use crate::optimizer::nsga2::Nsga2Params;
+use crate::util::json::Value;
+
+/// Format tag of the spec payload shipped to workers.
+pub const SPEC_FORMAT: &str = "mlkaps-cluster-spec-v1";
+
+/// Everything a worker needs to compute shards byte-identically to the
+/// single-process stage 3: the stage-2 surrogate artifact (full file
+/// text, hash-checked against `upstream`), the grid geometry, the GA
+/// parameters, and the grid seed.
+pub struct RunSpec {
+    /// Run fingerprint (config + kernel identity) — lets a worker refuse
+    /// to mix shards from different runs.
+    pub fingerprint: String,
+    /// FNV-1a hex of the stage-2 file bytes: the upstream link every
+    /// shard envelope must carry.
+    pub upstream: String,
+    /// Seed for per-point RNGs (`cfg.seed ^ GRID_SEED_SALT`). Carried as
+    /// a decimal string on the wire: u64 does not survive an f64 round
+    /// trip above 2^53.
+    pub grid_seed: u64,
+    /// Optimization grid density per input dimension.
+    pub opt_grid: usize,
+    /// Grid points per shard.
+    pub shard_size: usize,
+    /// Total grid points (workers recompute the grid and cross-check).
+    pub n_points: usize,
+    pub ga: Nsga2Params,
+    pub input_space: ParamSpace,
+    pub design_space: ParamSpace,
+    /// Full text of the stage-2 checkpoint file.
+    pub stage2_text: String,
+}
+
+impl RunSpec {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str(SPEC_FORMAT.into())),
+            ("fingerprint", Value::Str(self.fingerprint.clone())),
+            ("upstream", Value::Str(self.upstream.clone())),
+            ("grid_seed", Value::Str(self.grid_seed.to_string())),
+            ("opt_grid", Value::Num(self.opt_grid as f64)),
+            ("shard_size", Value::Num(self.shard_size as f64)),
+            ("n_points", Value::Num(self.n_points as f64)),
+            ("ga", self.ga.to_json()),
+            ("input_space", self.input_space.to_json()),
+            ("design_space", self.design_space.to_json()),
+            ("stage2", Value::Str(self.stage2_text.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunSpec, String> {
+        if v.get("format").and_then(|f| f.as_str()) != Some(SPEC_FORMAT) {
+            return Err("unknown cluster spec format".into());
+        }
+        let s = |key: &str| -> Result<String, String> {
+            v.get(key)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("spec missing {key}"))
+        };
+        let n = |key: &str| -> Result<usize, String> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| format!("spec missing {key}"))
+        };
+        let grid_seed: u64 = s("grid_seed")?
+            .parse()
+            .map_err(|_| "spec grid_seed is not a u64".to_string())?;
+        Ok(RunSpec {
+            fingerprint: s("fingerprint")?,
+            upstream: s("upstream")?,
+            grid_seed,
+            opt_grid: n("opt_grid")?,
+            shard_size: n("shard_size")?,
+            n_points: n("n_points")?,
+            ga: Nsga2Params::from_json(v.get("ga").ok_or("spec missing ga")?)?,
+            input_space: ParamSpace::from_json(
+                v.get("input_space").ok_or("spec missing input_space")?,
+            )?,
+            design_space: ParamSpace::from_json(
+                v.get("design_space").ok_or("spec missing design_space")?,
+            )?,
+            stage2_text: s("stage2")?,
+        })
+    }
+}
+
+/// A parsed cluster request. The request `id` is carried separately:
+/// it is opaque to dispatch and only echoed into the response.
+pub enum ClusterRequest {
+    Spec,
+    Lease { worker: String },
+    Heartbeat { worker: String, shard: usize },
+    Result {
+        worker: String,
+        shard: usize,
+        base: usize,
+        designs: Vec<Vec<f64>>,
+        predicted: Vec<f64>,
+    },
+    Done { worker: String },
+    Status,
+}
+
+impl ClusterRequest {
+    /// Parse a request frame. Returns the verb plus the echoed `id`.
+    pub fn from_json(v: &Value) -> Result<(ClusterRequest, Option<Value>), String> {
+        let id = v.get("id").cloned();
+        let op = v
+            .get("op")
+            .and_then(|o| o.as_str())
+            .ok_or("request missing op")?;
+        let worker = || -> Result<String, String> {
+            v.get("worker")
+                .and_then(|w| w.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| "request missing worker".to_string())
+        };
+        let shard = || -> Result<usize, String> {
+            v.get("shard")
+                .and_then(|s| s.as_usize())
+                .ok_or_else(|| "request missing shard".to_string())
+        };
+        let req = match op {
+            "spec" => ClusterRequest::Spec,
+            "lease" => ClusterRequest::Lease { worker: worker()? },
+            "heartbeat" => ClusterRequest::Heartbeat { worker: worker()?, shard: shard()? },
+            "result" => {
+                let designs = crate::optimizer::grid::rows_from_json(
+                    v.get("designs").ok_or("result missing designs")?,
+                )?;
+                let predicted = crate::optimizer::grid::scalars_from_json(
+                    v.get("predicted").ok_or("result missing predicted")?,
+                )?;
+                ClusterRequest::Result {
+                    worker: worker()?,
+                    shard: shard()?,
+                    base: v
+                        .get("base")
+                        .and_then(|b| b.as_usize())
+                        .ok_or("result missing base")?,
+                    designs,
+                    predicted,
+                }
+            }
+            "done" => ClusterRequest::Done { worker: worker()? },
+            "status" => ClusterRequest::Status,
+            other => return Err(format!("unknown cluster op {other:?}")),
+        };
+        Ok((req, id))
+    }
+
+    /// Serialize a request frame (worker side).
+    pub fn to_json(&self, id: &Value) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![("id", id.clone())];
+        match self {
+            ClusterRequest::Spec => fields.push(("op", Value::Str("spec".into()))),
+            ClusterRequest::Lease { worker } => {
+                fields.push(("op", Value::Str("lease".into())));
+                fields.push(("worker", Value::Str(worker.clone())));
+            }
+            ClusterRequest::Heartbeat { worker, shard } => {
+                fields.push(("op", Value::Str("heartbeat".into())));
+                fields.push(("worker", Value::Str(worker.clone())));
+                fields.push(("shard", Value::Num(*shard as f64)));
+            }
+            ClusterRequest::Result { worker, shard, base, designs, predicted } => {
+                fields.push(("op", Value::Str("result".into())));
+                fields.push(("worker", Value::Str(worker.clone())));
+                fields.push(("shard", Value::Num(*shard as f64)));
+                fields.push(("base", Value::Num(*base as f64)));
+                fields.push(("designs", crate::optimizer::grid::rows_to_json(designs)));
+                fields.push((
+                    "predicted",
+                    Value::Arr(predicted.iter().map(|&p| Value::Num(p)).collect()),
+                ));
+            }
+            ClusterRequest::Done { worker } => {
+                fields.push(("op", Value::Str("done".into())));
+                fields.push(("worker", Value::Str(worker.clone())));
+            }
+            ClusterRequest::Status => fields.push(("op", Value::Str("status".into()))),
+        }
+        Value::obj(fields)
+    }
+}
+
+/// `{"ok": true, ...fields, "id": id}` — every response echoes the id.
+pub fn ok_response(fields: Vec<(&str, Value)>, id: Option<&Value>) -> Value {
+    let mut all = vec![("ok", Value::Bool(true))];
+    all.extend(fields);
+    if let Some(id) = id {
+        all.push(("id", id.clone()));
+    }
+    Value::obj(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips_through_json() {
+        let req = ClusterRequest::Result {
+            worker: "w1".into(),
+            shard: 3,
+            base: 192,
+            designs: vec![vec![1.0, 2.5], vec![3.0, 4.0]],
+            predicted: vec![0.5, -1.25],
+        };
+        let id = Value::Num(7.0);
+        let v = req.to_json(&id);
+        let (parsed, pid) = ClusterRequest::from_json(&v).unwrap();
+        assert_eq!(pid, Some(Value::Num(7.0)));
+        match parsed {
+            ClusterRequest::Result { worker, shard, base, designs, predicted } => {
+                assert_eq!(worker, "w1");
+                assert_eq!(shard, 3);
+                assert_eq!(base, 192);
+                assert_eq!(designs, vec![vec![1.0, 2.5], vec![3.0, 4.0]]);
+                assert_eq!(predicted, vec![0.5, -1.25]);
+            }
+            _ => panic!("wrong verb"),
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_with_u64_seed() {
+        let spec = RunSpec {
+            fingerprint: "f00d".into(),
+            upstream: "beef".into(),
+            // Above 2^53: would be corrupted by an f64 round trip.
+            grid_seed: (1u64 << 60) | 0x5EED,
+            opt_grid: 4,
+            shard_size: 64,
+            n_points: 16,
+            ga: Nsga2Params::default(),
+            input_space: ParamSpace::new(vec![crate::config::space::ParamDef::float(
+                "x", 0.0, 1.0,
+            )]),
+            design_space: ParamSpace::new(vec![crate::config::space::ParamDef::float(
+                "y", 0.0, 1.0,
+            )]),
+            stage2_text: "{\"fake\":true}".into(),
+        };
+        let text = spec.to_json().to_string();
+        let back = RunSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.grid_seed, (1u64 << 60) | 0x5EED);
+        assert_eq!(back.n_points, 16);
+        assert_eq!(back.ga.pop_size, spec.ga.pop_size);
+        assert_eq!(back.stage2_text, spec.stage2_text);
+    }
+}

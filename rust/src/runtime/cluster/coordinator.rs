@@ -1,0 +1,461 @@
+//! The cluster coordinator: owns the checkpoint directory and the shard
+//! ledger, serves lease/heartbeat/result verbs to workers, and merges
+//! the finished shards into a chain-verified run.
+//!
+//! Design invariant — **byte identity by construction**. Workers ship
+//! back raw design rows and predicted scalars; the coordinator
+//! re-serializes them through the exact same path as the single-process
+//! pipeline (`shard_to_json` → `envelope` → `write_artifact`), so a
+//! shard artifact produced by any worker is byte-for-byte the file the
+//! single process would have written. The final merge is then just
+//! [`PipelineRun::run`]: every shard loads as a valid checkpoint, stage
+//! 3 assembles, stage 4 trains, and the envelope chain verifies
+//! end-to-end. At any worker count — including zero workers, where the
+//! coordinator would simply wait forever — the finished directory is
+//! indistinguishable from `mlkaps tune`.
+//!
+//! Crash safety: the ledger (done-shard set + artifact fingerprints,
+//! keyed by the run fingerprint) is persisted through the atomic
+//! write-then-rename artifact path after every accepted result. A
+//! restarted coordinator reloads it, cross-checks every entry against
+//! the bytes actually on disk (disk is truth — the ledger is only a
+//! parse-free fast path), rescans for shards the ledger missed, and
+//! resumes leasing the remainder. The ledger file is deleted after a
+//! successful merge, so a completed distributed run leaves no extra
+//! files behind.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::kernels::Kernel;
+use crate::pipeline::GRID_SEED_SALT;
+use crate::pipeline::checkpoint::{
+    CheckpointedRun, PipelineRun, Stage, envelope, fingerprint, load_shard, load_tree_artifact,
+    open_envelope, shard_file, STAGE2_FILE,
+};
+use crate::runtime::server::protocol::{FrameError, err_response, read_frame, write_frame};
+use crate::runtime::server::transport::{BoundAddr, Listener, Stream};
+use crate::util::failpoint::{self, sites};
+use crate::util::hash::fnv1a;
+use crate::util::json::{Value, parse};
+
+use super::cluster_protocol::{ClusterRequest, RunSpec, ok_response};
+use super::lease::{LeaseGrant, LEDGER_FILE, ResultCheck, ShardLedger};
+
+/// How long a waiting worker is told to back off before re-requesting
+/// a lease when nothing is pending.
+const RETRY_AFTER_MS: u64 = 50;
+
+pub struct CoordinatorConfig {
+    /// Listen address: `host:port` or `unix:/path`.
+    pub addr: String,
+    /// Lease TTL; a worker must heartbeat within this window or its
+    /// shard is reassigned.
+    pub lease_ttl: Duration,
+    /// Per-connection socket timeouts. The read timeout must comfortably
+    /// exceed the worker heartbeat interval (TTL/3).
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            addr: "127.0.0.1:0".into(),
+            lease_ttl: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+struct ClusterShared {
+    run: PipelineRun,
+    ledger: Mutex<ShardLedger>,
+    complete: Condvar,
+    /// Pre-built spec payload (no id), cloned into every spec response.
+    spec: Value,
+    /// Stage-2 artifact hash: the upstream link of every shard envelope.
+    upstream: String,
+    run_fingerprint: String,
+    shutdown: AtomicBool,
+    bound: BoundAddr,
+}
+
+pub struct Coordinator {
+    shared: Arc<ClusterShared>,
+    kernel: Box<dyn Kernel>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Run stages 1–2 locally (resuming from checkpoints when valid),
+    /// restore the shard ledger, and start serving cluster verbs.
+    pub fn start(
+        run: PipelineRun,
+        kernel: Box<dyn Kernel>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator, String> {
+        // Stages 1–2 are cheap relative to stage 3 and must happen
+        // before any lease: the spec embeds the stage-2 artifact.
+        run.run_prefix(&*kernel, Stage::Surrogate)?;
+        let run_fingerprint = fingerprint(&run.pipeline.config, &*kernel);
+        let stage2_text = std::fs::read_to_string(run.path(STAGE2_FILE))
+            .map_err(|e| format!("read stage2 checkpoint: {e}"))?;
+        let upstream = run.file_hash(STAGE2_FILE).ok_or("stage2 checkpoint missing")?;
+
+        let pcfg = &run.pipeline.config;
+        let n_points = kernel.input_space().grid(pcfg.opt_grid).len();
+        let shard_size = run.shard_size.max(1);
+        let mut ledger = ShardLedger::new(n_points, shard_size, cfg.lease_ttl);
+        let spec = RunSpec {
+            fingerprint: run_fingerprint.clone(),
+            upstream: upstream.clone(),
+            grid_seed: pcfg.seed ^ GRID_SEED_SALT,
+            opt_grid: pcfg.opt_grid,
+            shard_size,
+            n_points,
+            ga: pcfg.ga.clone(),
+            input_space: kernel.input_space().clone(),
+            design_space: kernel.design_space().clone(),
+            stage2_text,
+        }
+        .to_json();
+
+        restore_ledger(&run, &mut ledger, &run_fingerprint, &upstream);
+
+        let listener = Listener::bind(&cfg.addr)?;
+        let bound = listener.bound();
+        let shared = Arc::new(ClusterShared {
+            run,
+            ledger: Mutex::new(ledger),
+            complete: Condvar::new(),
+            spec,
+            upstream,
+            run_fingerprint,
+            shutdown: AtomicBool::new(false),
+            bound,
+        });
+
+        let sh = shared.clone();
+        let (rt, wt) = (cfg.read_timeout, cfg.write_timeout);
+        let accept = std::thread::Builder::new()
+            .name("mlkaps-cluster-accept".into())
+            .spawn(move || accept_loop(sh, listener, rt, wt))
+            .map_err(|e| format!("spawn cluster acceptor: {e}"))?;
+
+        Ok(Coordinator { shared, kernel, accept: Some(accept) })
+    }
+
+    /// The bound TCP address (dummy wildcard for unix sockets).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.bound.tcp_addr()
+    }
+
+    /// Printable connect string (`host:port` or `unix:/path`).
+    pub fn local_display(&self) -> String {
+        self.shared.bound.display()
+    }
+
+    /// (pending, leased, done, total) shard counts, with stale leases
+    /// already expired back to pending.
+    pub fn progress(&self) -> (usize, usize, usize, usize) {
+        let mut g = self.shared.ledger.lock().unwrap();
+        g.expire(Instant::now());
+        let (p, l, d) = g.counts();
+        (p, l, d, p + l + d)
+    }
+
+    /// Block until every shard is done, or the timeout elapses.
+    pub fn wait_complete(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.ledger.lock().unwrap();
+        loop {
+            if g.is_complete() {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(100));
+            g = self.shared.complete.wait_timeout(g, wait).unwrap().0;
+        }
+    }
+
+    /// Stop serving without merging (leases evaporate; done shards and
+    /// the ledger stay on disk). A later coordinator resumes from them.
+    pub fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.bound.poke();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Wait for completion, stop serving, and merge: reassemble stage 3
+    /// from the shard artifacts, train stage 4, verify the envelope
+    /// chain end-to-end, and remove the ledger file — after which the
+    /// directory is byte-identical to a single-process `tune`.
+    pub fn finish(mut self, wait: Duration) -> Result<CheckpointedRun, String> {
+        if !self.wait_complete(wait) {
+            let (p, l, d, t) = self.progress();
+            return Err(format!(
+                "cluster incomplete after {wait:?}: {d}/{t} shards done ({p} pending, {l} leased)"
+            ));
+        }
+        // Keep serving through the merge: workers only learn Complete on
+        // their next lease round trip, and the merge is their window to
+        // hear it before the listener goes away. Late duplicate uploads
+        // are harmless — every shard is Done, so they short-circuit
+        // without touching disk.
+        //
+        // An injected merge fault leaves every shard artifact and the
+        // ledger on disk: a rerun resumes straight into the merge.
+        failpoint::fail(sites::CLUSTER_MERGE).map_err(|e| format!("cluster merge: {e}"))?;
+        let merged = self.shared.run.run(&*self.kernel)?;
+        // Independent chain verification of the published artifacts.
+        load_tree_artifact(&self.shared.run.dir)?;
+        self.stop();
+        match std::fs::remove_file(self.shared.run.path(LEDGER_FILE)) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(format!("remove cluster ledger: {e}")),
+        }
+        Ok(merged)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Restore the done set after a coordinator restart. The persisted
+/// ledger is a parse-free fast path (byte hash comparison only); any
+/// shard file it does not vouch for is parse-validated against the
+/// chain before being trusted. Disk is truth: a ledger entry whose
+/// file is missing or altered reverts to pending.
+fn restore_ledger(run: &PipelineRun, ledger: &mut ShardLedger, run_fp: &str, upstream: &str) {
+    let n_shards = ledger.plan().len();
+    let persisted: HashMap<usize, String> = run
+        .read_stage(LEDGER_FILE)
+        .and_then(|v| ShardLedger::parse_done(&v, run_fp, n_shards))
+        .map(|done| done.into_iter().collect())
+        .unwrap_or_default();
+    for shard in 0..n_shards {
+        let file = shard_file(shard);
+        let Ok(bytes) = std::fs::read(run.path(&file)) else { continue };
+        let fp = format!("{:016x}", fnv1a(&bytes));
+        if persisted.get(&shard) == Some(&fp) {
+            ledger.mark_done(shard, &fp);
+            continue;
+        }
+        let (base, count) = ledger.plan()[shard];
+        let valid = run
+            .read_stage(&file)
+            .as_ref()
+            .and_then(|v| open_envelope(v, Stage::GridOptimize, upstream))
+            .map(|p| load_shard(p, base, count).is_ok())
+            .unwrap_or(false);
+        if valid {
+            ledger.mark_done(shard, &fp);
+        }
+    }
+}
+
+fn accept_loop(shared: Arc<ClusterShared>, listener: Listener, rt: Duration, wt: Duration) {
+    loop {
+        let stream = listener.accept();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let sh = shared.clone();
+        // Detached: a panicking connection thread takes down only its
+        // own connection, never the coordinator.
+        let _ = std::thread::Builder::new().name("mlkaps-cluster-conn".into()).spawn(move || {
+            let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                handle_conn(&sh, stream, rt, wt);
+            }));
+        });
+    }
+}
+
+fn handle_conn(shared: &ClusterShared, mut stream: Stream, rt: Duration, wt: Duration) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(rt));
+    let _ = stream.set_write_timeout(Some(wt));
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean close (or shutdown poke)
+            Err(FrameError::TimedOut) => return, // idle worker; it will reconnect
+            Err(_) => return,
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let resp = match std::str::from_utf8(&payload)
+            .map_err(|e| e.to_string())
+            .and_then(|t| parse(t))
+            .and_then(|v| ClusterRequest::from_json(&v))
+        {
+            Ok((req, id)) => dispatch(shared, req, id.as_ref()),
+            Err(e) => err_response(&e, None),
+        };
+        if write_frame(&mut stream, resp.to_string().as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(shared: &ClusterShared, req: ClusterRequest, id: Option<&Value>) -> Value {
+    match req {
+        ClusterRequest::Spec => ok_response(vec![("spec", shared.spec.clone())], id),
+
+        ClusterRequest::Lease { worker } => {
+            // An injected lease fault models a coordinator that cannot
+            // grant right now; the worker backs off and retries.
+            if let Err(e) = failpoint::fail(sites::CLUSTER_LEASE) {
+                return err_response(&format!("lease: {e}"), id);
+            }
+            let mut g = shared.ledger.lock().unwrap();
+            match g.lease(&worker, Instant::now()) {
+                LeaseGrant::Granted { shard, base, count } => ok_response(
+                    vec![
+                        ("shard", Value::Num(shard as f64)),
+                        ("base", Value::Num(base as f64)),
+                        ("count", Value::Num(count as f64)),
+                        ("ttl_ms", Value::Num(g.ttl().as_millis() as f64)),
+                    ],
+                    id,
+                ),
+                LeaseGrant::Wait => ok_response(
+                    vec![
+                        ("wait", Value::Bool(true)),
+                        ("retry_after_ms", Value::Num(RETRY_AFTER_MS as f64)),
+                    ],
+                    id,
+                ),
+                LeaseGrant::Complete => ok_response(vec![("complete", Value::Bool(true))], id),
+            }
+        }
+
+        ClusterRequest::Heartbeat { worker, shard } => {
+            // An injected heartbeat fault makes the coordinator refuse
+            // renewal: the lease then expires under load, which is
+            // exactly the reassignment path the chaos suite exercises.
+            if let Err(e) = failpoint::fail(sites::CLUSTER_HEARTBEAT) {
+                return err_response(&format!("heartbeat: {e}"), id);
+            }
+            let mut g = shared.ledger.lock().unwrap();
+            let renewed = g.heartbeat(&worker, shard, Instant::now());
+            let mut fields = vec![("renewed", Value::Bool(renewed))];
+            if renewed {
+                fields.push(("ttl_ms", Value::Num(g.ttl().as_millis() as f64)));
+            }
+            ok_response(fields, id)
+        }
+
+        ClusterRequest::Result { worker: _, shard, base, designs, predicted } => {
+            if let Err(e) = failpoint::fail(sites::CLUSTER_RESULT) {
+                return err_response(&format!("result: {e}"), id);
+            }
+            handle_result(shared, shard, base, designs, predicted, id)
+        }
+
+        ClusterRequest::Done { worker } => {
+            shared.ledger.lock().unwrap().release_worker(&worker);
+            ok_response(vec![("bye", Value::Bool(true))], id)
+        }
+
+        ClusterRequest::Status => {
+            let mut g = shared.ledger.lock().unwrap();
+            g.expire(Instant::now());
+            let (p, l, d) = g.counts();
+            ok_response(
+                vec![
+                    ("pending", Value::Num(p as f64)),
+                    ("leased", Value::Num(l as f64)),
+                    ("done", Value::Num(d as f64)),
+                    ("total", Value::Num((p + l + d) as f64)),
+                    ("complete", Value::Bool(g.is_complete())),
+                ],
+                id,
+            )
+        }
+    }
+}
+
+fn handle_result(
+    shared: &ClusterShared,
+    shard: usize,
+    base: usize,
+    designs: Vec<Vec<f64>>,
+    predicted: Vec<f64>,
+    id: Option<&Value>,
+) -> Value {
+    // Re-serialize through the exact single-process checkpoint path:
+    // identical input → identical envelope bytes → identical artifact.
+    let env = envelope(
+        Stage::GridOptimize,
+        &shared.upstream,
+        crate::pipeline::checkpoint::shard_to_json(base, &designs, &predicted),
+    );
+    let fp = format!("{:016x}", fnv1a(env.to_string().as_bytes()));
+
+    let mut g = shared.ledger.lock().unwrap();
+    let Some(&(want_base, want_count)) = g.plan().get(shard) else {
+        return err_response(&format!("no such shard {shard}"), id);
+    };
+    if base != want_base || designs.len() != want_count || predicted.len() != want_count {
+        return err_response(
+            &format!(
+                "shard {shard} shape mismatch: got base {base} × {}, want base {want_base} × {want_count}",
+                designs.len()
+            ),
+            id,
+        );
+    }
+    match g.check_result(shard, &fp) {
+        ResultCheck::Duplicate => {
+            ok_response(vec![("accepted", Value::Bool(true)), ("duplicate", Value::Bool(true))], id)
+        }
+        ResultCheck::Conflict { have } => err_response(
+            &format!(
+                "shard {shard} fingerprint conflict: have {have}, got {fp} — \
+                 worker computed a different artifact for a deterministic shard"
+            ),
+            id,
+        ),
+        ResultCheck::Accept => {
+            // Commit order matters: artifact first, ledger state only
+            // after the bytes are durably on disk. The write happens
+            // under the ledger lock, serializing shard commits.
+            if let Err(e) = shared.run.write_artifact(&shard_file(shard), &env) {
+                return err_response(&format!("persist shard {shard}: {e}"), id);
+            }
+            g.mark_done(shard, &fp);
+            // Ledger persistence is best-effort: the shard file on disk
+            // is the source of truth on restart, the ledger is only a
+            // parse-free fast path.
+            let _ = shared.run.write_artifact(LEDGER_FILE, &g.to_json(&shared.run_fingerprint));
+            if g.is_complete() {
+                shared.complete.notify_all();
+            }
+            ok_response(
+                vec![("accepted", Value::Bool(true)), ("duplicate", Value::Bool(false))],
+                id,
+            )
+        }
+    }
+}

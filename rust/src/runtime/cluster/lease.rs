@@ -1,0 +1,329 @@
+//! Shard lease ledger: the coordinator's single source of truth for
+//! which stage-3 shards are pending, leased, or done.
+//!
+//! The ledger is deliberately time-injected (`now: Instant` is a
+//! parameter everywhere) so lease expiry is unit-testable without
+//! sleeping. Concurrency is the caller's problem: the coordinator
+//! holds the ledger behind one mutex and every transition happens
+//! under it.
+//!
+//! Persistence: only the `done` set (shard → artifact fingerprint) is
+//! serialized, keyed by the run fingerprint. Leases are ephemeral by
+//! design — after a coordinator restart every non-done shard is simply
+//! pending again, and the lease TTL machinery re-distributes them.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+/// On-disk ledger file inside the checkpoint directory. Written through
+/// the same atomic write-then-rename path as stage artifacts, and
+/// removed after a successful merge so a finished distributed run is
+/// file-for-file identical to a single-process one.
+pub const LEDGER_FILE: &str = "cluster_ledger.json";
+
+/// Format tag of the persisted ledger.
+pub const LEDGER_FORMAT: &str = "mlkaps-cluster-ledger-v1";
+
+#[derive(Clone, Debug, PartialEq)]
+enum ShardState {
+    Pending,
+    Leased { worker: String, expires: Instant },
+    Done { fingerprint: String },
+}
+
+/// Outcome of a lease request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LeaseGrant {
+    /// A shard was leased: compute `count` points starting at global
+    /// grid index `base`.
+    Granted { shard: usize, base: usize, count: usize },
+    /// Nothing pending right now, but leased shards may still expire
+    /// back to pending — retry shortly.
+    Wait,
+    /// Every shard is done; the worker can sign off.
+    Complete,
+}
+
+/// Outcome of checking an uploaded result against the ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResultCheck {
+    /// First result for this shard: accept and commit it.
+    Accept,
+    /// Shard already done with the *same* artifact fingerprint — the
+    /// idempotent duplicate-upload case (lease expired mid-upload, two
+    /// workers raced). Nothing to write.
+    Duplicate,
+    /// Shard already done with a *different* fingerprint. Since shard
+    /// computation is deterministic in the global index seed, this can
+    /// only mean a buggy or mismatched worker; the upload is refused.
+    Conflict { have: String },
+}
+
+pub struct ShardLedger {
+    /// (base, count) per shard, in shard order.
+    plan: Vec<(usize, usize)>,
+    states: Vec<ShardState>,
+    ttl: Duration,
+}
+
+impl ShardLedger {
+    /// Build a ledger from total grid size and shard size: the same
+    /// chunking as the single-process stage-3 loop.
+    pub fn new(n_points: usize, shard_size: usize, ttl: Duration) -> ShardLedger {
+        let shard_size = shard_size.max(1);
+        let mut plan = Vec::new();
+        let mut base = 0usize;
+        while base < n_points {
+            let end = (base + shard_size).min(n_points);
+            plan.push((base, end - base));
+            base = end;
+        }
+        let states = vec![ShardState::Pending; plan.len()];
+        ShardLedger { plan, states, ttl }
+    }
+
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    pub fn plan(&self) -> &[(usize, usize)] {
+        &self.plan
+    }
+
+    /// Move expired leases back to pending. Returns how many expired.
+    pub fn expire(&mut self, now: Instant) -> usize {
+        let mut n = 0;
+        for s in &mut self.states {
+            if let ShardState::Leased { expires, .. } = s {
+                if *expires <= now {
+                    *s = ShardState::Pending;
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Lease the lowest pending shard to `worker`.
+    pub fn lease(&mut self, worker: &str, now: Instant) -> LeaseGrant {
+        self.expire(now);
+        for (i, s) in self.states.iter_mut().enumerate() {
+            if *s == ShardState::Pending {
+                *s = ShardState::Leased { worker: worker.to_string(), expires: now + self.ttl };
+                let (base, count) = self.plan[i];
+                return LeaseGrant::Granted { shard: i, base, count };
+            }
+        }
+        if self.is_complete() { LeaseGrant::Complete } else { LeaseGrant::Wait }
+    }
+
+    /// Renew `worker`'s lease on `shard`. Returns false when the lease
+    /// is no longer theirs (expired and reassigned, or already done).
+    pub fn heartbeat(&mut self, worker: &str, shard: usize, now: Instant) -> bool {
+        self.expire(now);
+        match self.states.get_mut(shard) {
+            Some(ShardState::Leased { worker: w, expires }) if w == worker => {
+                *expires = now + self.ttl;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Check an uploaded result without committing it. The caller
+    /// writes the artifact on [`ResultCheck::Accept`] and only then
+    /// calls [`ShardLedger::mark_done`] — so a failed write leaves the
+    /// shard leasable instead of falsely recorded as done.
+    pub fn check_result(&self, shard: usize, fingerprint: &str) -> ResultCheck {
+        match self.states.get(shard) {
+            Some(ShardState::Done { fingerprint: have }) if have == fingerprint => {
+                ResultCheck::Duplicate
+            }
+            Some(ShardState::Done { fingerprint: have }) => {
+                ResultCheck::Conflict { have: have.clone() }
+            }
+            _ => ResultCheck::Accept,
+        }
+    }
+
+    /// Record a shard as done with the fingerprint of its artifact.
+    pub fn mark_done(&mut self, shard: usize, fingerprint: &str) {
+        self.states[shard] = ShardState::Done { fingerprint: fingerprint.to_string() };
+    }
+
+    /// Release every lease held by `worker` (worker sign-off or
+    /// disconnect). Returns how many were released.
+    pub fn release_worker(&mut self, worker: &str) -> usize {
+        let mut n = 0;
+        for s in &mut self.states {
+            if matches!(s, ShardState::Leased { worker: w, .. } if w == worker) {
+                *s = ShardState::Pending;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// (pending, leased, done) counts. Call [`ShardLedger::expire`]
+    /// first if stale leases should read as pending.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for s in &self.states {
+            match s {
+                ShardState::Pending => c.0 += 1,
+                ShardState::Leased { .. } => c.1 += 1,
+                ShardState::Done { .. } => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.states.iter().all(|s| matches!(s, ShardState::Done { .. }))
+    }
+
+    /// Serialize the done set, keyed by the run fingerprint.
+    pub fn to_json(&self, run_fingerprint: &str) -> Value {
+        let done: Vec<Value> = self
+            .states
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                ShardState::Done { fingerprint } => Some(Value::obj(vec![
+                    ("shard", Value::Num(i as f64)),
+                    ("fingerprint", Value::Str(fingerprint.clone())),
+                ])),
+                _ => None,
+            })
+            .collect();
+        Value::obj(vec![
+            ("format", Value::Str(LEDGER_FORMAT.into())),
+            ("fingerprint", Value::Str(run_fingerprint.into())),
+            ("shards", Value::Num(self.plan.len() as f64)),
+            ("done", Value::Arr(done)),
+        ])
+    }
+
+    /// Parse a persisted ledger into a `(shard, fingerprint)` list.
+    /// Returns `None` when the file is for a different run or shard
+    /// plan — the caller then falls back to scanning shard files.
+    pub fn parse_done(
+        v: &Value,
+        run_fingerprint: &str,
+        n_shards: usize,
+    ) -> Option<Vec<(usize, String)>> {
+        if v.get("format").and_then(|f| f.as_str()) != Some(LEDGER_FORMAT) {
+            return None;
+        }
+        if v.get("fingerprint").and_then(|f| f.as_str()) != Some(run_fingerprint) {
+            return None;
+        }
+        if v.get("shards").and_then(|s| s.as_usize()) != Some(n_shards) {
+            return None;
+        }
+        let mut out = Vec::new();
+        for e in v.get("done")?.as_arr()? {
+            let shard = e.get("shard").and_then(|s| s.as_usize())?;
+            let fp = e.get("fingerprint").and_then(|f| f.as_str())?;
+            if shard >= n_shards {
+                return None;
+            }
+            out.push((shard, fp.to_string()));
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger() -> ShardLedger {
+        // 10 points, shards of 4 → shards (0,4) (4,4) (8,2).
+        ShardLedger::new(10, 4, Duration::from_millis(100))
+    }
+
+    #[test]
+    fn plan_chunks_match_single_process_loop() {
+        let l = ledger();
+        assert_eq!(l.plan(), &[(0, 4), (4, 4), (8, 2)]);
+    }
+
+    #[test]
+    fn lease_expiry_reassigns_the_shard() {
+        let mut l = ledger();
+        let t0 = Instant::now();
+        let g = l.lease("w1", t0);
+        assert_eq!(g, LeaseGrant::Granted { shard: 0, base: 0, count: 4 });
+        // Before expiry another worker gets the *next* shard.
+        let g = l.lease("w2", t0 + Duration::from_millis(50));
+        assert_eq!(g, LeaseGrant::Granted { shard: 1, base: 4, count: 4 });
+        // w1 heartbeats in time: lease extended past the original TTL.
+        assert!(l.heartbeat("w1", 0, t0 + Duration::from_millis(90)));
+        let g = l.lease("w3", t0 + Duration::from_millis(120));
+        assert_eq!(g, LeaseGrant::Granted { shard: 2, base: 8, count: 2 });
+        // w1 stops heartbeating: shard 0 expires and is reassigned.
+        let late = t0 + Duration::from_millis(300);
+        let g = l.lease("w4", late);
+        assert_eq!(g, LeaseGrant::Granted { shard: 0, base: 0, count: 4 });
+        // w1's heartbeat now fails — the lease belongs to w4.
+        assert!(!l.heartbeat("w1", 0, late));
+    }
+
+    #[test]
+    fn duplicate_and_conflicting_results() {
+        let mut l = ledger();
+        let t0 = Instant::now();
+        l.lease("w1", t0);
+        assert_eq!(l.check_result(0, "abc"), ResultCheck::Accept);
+        l.mark_done(0, "abc");
+        assert_eq!(l.check_result(0, "abc"), ResultCheck::Duplicate);
+        assert_eq!(l.check_result(0, "def"), ResultCheck::Conflict { have: "abc".into() });
+        // A result for a shard leased to someone else is still accepted:
+        // first valid upload wins, determinism makes the bytes identical.
+        l.lease("w2", t0);
+        assert_eq!(l.check_result(1, "xyz"), ResultCheck::Accept);
+    }
+
+    #[test]
+    fn completion_and_counts() {
+        let mut l = ledger();
+        assert_eq!(l.counts(), (3, 0, 0));
+        let t0 = Instant::now();
+        l.lease("w1", t0);
+        assert_eq!(l.counts(), (2, 1, 0));
+        for s in 0..3 {
+            l.mark_done(s, "fp");
+        }
+        assert!(l.is_complete());
+        assert_eq!(l.counts(), (0, 0, 3));
+        assert_eq!(l.lease("w1", t0), LeaseGrant::Complete);
+    }
+
+    #[test]
+    fn release_worker_returns_leases_to_pending() {
+        let mut l = ledger();
+        let t0 = Instant::now();
+        l.lease("w1", t0);
+        l.lease("w1", t0);
+        l.lease("w2", t0);
+        assert_eq!(l.release_worker("w1"), 2);
+        assert_eq!(l.counts(), (2, 1, 0));
+    }
+
+    #[test]
+    fn ledger_persistence_round_trips_and_rejects_mismatches() {
+        let mut l = ledger();
+        l.mark_done(1, "fp1");
+        let v = l.to_json("run-fp");
+        let done = ShardLedger::parse_done(&v, "run-fp", 3).unwrap();
+        assert_eq!(done, vec![(1, "fp1".to_string())]);
+        // Wrong run fingerprint or shard count → unusable.
+        assert!(ShardLedger::parse_done(&v, "other", 3).is_none());
+        assert!(ShardLedger::parse_done(&v, "run-fp", 4).is_none());
+        // Round trip through text.
+        let back = crate::util::json::parse(&v.to_string()).unwrap();
+        assert_eq!(ShardLedger::parse_done(&back, "run-fp", 3).unwrap(), done);
+    }
+}

@@ -1,0 +1,31 @@
+//! Distributed stage 3: a shard-leasing coordinator/worker cluster.
+//!
+//! Stage 3 (per-grid-point NSGA-II) dominates pipeline wall-clock and
+//! is embarrassingly parallel across grid points — and already
+//! checkpointed in shards whose RNG is seeded by *global* grid index.
+//! That seeding discipline is the whole trick: a shard computes to the
+//! same bytes no matter which process computes it, so distribution
+//! changes only *where* work runs, never *what* is produced.
+//!
+//! - [`coordinator`] — owns the checkpoint directory and the shard
+//!   ledger; serves lease / heartbeat / result verbs; merges finished
+//!   shards into a chain-verified run byte-identical to `mlkaps tune`.
+//! - [`worker`] — pulls leases, computes shards with the single-process
+//!   kernel, streams results back over the multiplexed client.
+//! - [`lease`] — the time-injected shard ledger (pending / leased /
+//!   done, TTL expiry, duplicate-fingerprint resolution, persistence).
+//! - [`cluster_protocol`] — the wire verbs and the worker [`RunSpec`],
+//!   carried over the same length-prefixed JSON framing (TCP or unix)
+//!   as the serving daemon.
+//!
+//! [`RunSpec`]: cluster_protocol::RunSpec
+
+pub mod cluster_protocol;
+pub mod coordinator;
+pub mod lease;
+pub mod worker;
+
+pub use cluster_protocol::RunSpec;
+pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use lease::{LeaseGrant, ShardLedger};
+pub use worker::{WorkerConfig, WorkerReport, run_worker, spawn_workers};

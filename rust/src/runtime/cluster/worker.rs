@@ -1,0 +1,383 @@
+//! The cluster worker: pulls shard leases from a coordinator, computes
+//! them with the exact single-process stage-3 kernel
+//! ([`optimize_grid_shard`] seeded by global grid index), and streams
+//! the results back.
+//!
+//! A worker is stateless between shards: everything it needs arrives in
+//! the [`RunSpec`] (stage-2 surrogate text, spaces, GA params, grid
+//! seed), and the grid itself is recomputed locally — grid generation
+//! is deterministic, so worker and coordinator agree on every point
+//! without shipping the coordinates.
+//!
+//! Liveness has two layers. A background heartbeater thread (its own
+//! connection) renews the current lease at TTL/3 so long computes
+//! survive. Separately, the upload path pipelines a heartbeat ahead of
+//! the (potentially large) result frame on the *main* connection — the
+//! multiplexed client matches the two responses by id — so a slow
+//! upload cannot silently outlive the lease it is uploading for.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::optimizer::grid::optimize_grid_shard;
+use crate::optimizer::nsga2::Nsga2;
+use crate::pipeline::checkpoint::{Stage, STAGE_FORMAT};
+use crate::runtime::server::client::ServedClient;
+use crate::surrogate::LogSurrogate;
+use crate::surrogate::gbdt::Gbdt;
+use crate::util::failpoint::{self, sites};
+use crate::util::hash::fnv1a;
+use crate::util::json::{Value, parse};
+
+use super::cluster_protocol::{ClusterRequest, RunSpec};
+
+/// How long a worker keeps retrying the initial (and any re-) connect.
+const CONNECT_WINDOW: Duration = Duration::from_secs(10);
+/// Upload retries per shard before abandoning it to lease expiry.
+const UPLOAD_RETRIES: usize = 3;
+/// Consecutive failed lease round trips before a worker concludes the
+/// coordinator is gone for good. Each transport-level failure already
+/// burns a full [`CONNECT_WINDOW`] of reconnect attempts, so this
+/// bounds a vanished coordinator to a finite wait instead of a spin.
+const MAX_LEASE_FAILURES: usize = 5;
+
+pub struct WorkerConfig {
+    /// Coordinator address: `host:port` or `unix:/path`.
+    pub connect: String,
+    /// Threads for the shard compute itself.
+    pub threads: usize,
+    /// Worker name, echoed into leases (diagnostics + lease ownership).
+    pub name: String,
+    /// Stop after this many accepted shards (tests); `None` = run until
+    /// the coordinator reports completion.
+    pub max_shards: Option<usize>,
+}
+
+impl WorkerConfig {
+    pub fn new(connect: impl Into<String>, name: impl Into<String>) -> WorkerConfig {
+        WorkerConfig { connect: connect.into(), threads: 1, name: name.into(), max_shards: None }
+    }
+}
+
+pub struct WorkerReport {
+    /// Shards computed and accepted (duplicates count: the work was done).
+    pub shards: usize,
+}
+
+/// Run a worker to completion: fetch the spec, then lease → compute →
+/// upload until the coordinator says every shard is done.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
+    let mut client = ServedClient::connect_str_with_retry(&cfg.connect, CONNECT_WINDOW)?;
+    let mut seq = 0u64;
+
+    let spec_resp = rpc(&mut client, &cfg.connect, &ClusterRequest::Spec, &mut seq)?;
+    let spec = RunSpec::from_json(spec_resp.get("spec").ok_or("spec response missing spec")?)?;
+
+    // The spec's stage-2 text is hash-checked against the upstream link
+    // every shard envelope will carry: a worker can never compute
+    // against a surrogate other than the one the chain records.
+    let got = format!("{:016x}", fnv1a(spec.stage2_text.as_bytes()));
+    if got != spec.upstream {
+        return Err(format!(
+            "stage2 text hash {got} does not match spec upstream {}",
+            spec.upstream
+        ));
+    }
+    let surrogate = parse_stage2(&spec.stage2_text)?;
+    let inputs = spec.input_space.grid(spec.opt_grid);
+    if inputs.len() != spec.n_points {
+        return Err(format!(
+            "local grid has {} points, spec says {} — space or density mismatch",
+            inputs.len(),
+            spec.n_points
+        ));
+    }
+    let ga = Nsga2::new(spec.ga.clone());
+
+    let hb = Heartbeater::spawn(&cfg.connect, &cfg.name);
+    let result = work_loop(&mut client, cfg, &mut seq, &spec, &surrogate, &inputs, &ga, &hb);
+    hb.stop();
+    // Best-effort sign-off so the coordinator releases any lease early
+    // instead of waiting out the TTL. No reconnect-retry here: a
+    // coordinator that is already gone doesn't need the courtesy.
+    let done = ClusterRequest::Done { worker: cfg.name.clone() };
+    let id = next_id(&mut seq);
+    let _ = client.send_json(&done.to_json(&id)).and_then(|()| client.recv_json(Some(&id)));
+    result
+}
+
+/// Spawn `n` in-process workers against one coordinator — the
+/// `--workers N` convenience and the test harness.
+pub fn spawn_workers(
+    connect: &str,
+    n: usize,
+    threads: usize,
+) -> Vec<JoinHandle<Result<WorkerReport, String>>> {
+    (0..n)
+        .map(|i| {
+            let mut cfg = WorkerConfig::new(connect, format!("local-{i}"));
+            cfg.threads = threads;
+            std::thread::Builder::new()
+                .name(format!("mlkaps-worker-{i}"))
+                .spawn(move || run_worker(&cfg))
+                .expect("spawn worker thread")
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn work_loop(
+    client: &mut ServedClient,
+    cfg: &WorkerConfig,
+    seq: &mut u64,
+    spec: &RunSpec,
+    surrogate: &LogSurrogate<Gbdt>,
+    inputs: &[Vec<f64>],
+    ga: &Nsga2,
+    hb: &Heartbeater,
+) -> Result<WorkerReport, String> {
+    let mut shards = 0usize;
+    let mut lease_failures = 0usize;
+    loop {
+        if cfg.max_shards.is_some_and(|m| shards >= m) {
+            return Ok(WorkerReport { shards });
+        }
+        let lease = ClusterRequest::Lease { worker: cfg.name.clone() };
+        let resp = match rpc(client, &cfg.connect, &lease, seq) {
+            Ok(r) => r,
+            Err(e) => {
+                // Coordinator refused (injected lease fault) or briefly
+                // unreachable: back off and retry — but only so long.
+                lease_failures += 1;
+                if lease_failures >= MAX_LEASE_FAILURES {
+                    return Err(format!(
+                        "coordinator unreachable after {lease_failures} lease attempts: {e}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        lease_failures = 0;
+        if resp.get("complete").and_then(|c| c.as_bool()) == Some(true) {
+            return Ok(WorkerReport { shards });
+        }
+        if resp.get("wait").and_then(|w| w.as_bool()) == Some(true) {
+            let ms = resp.get("retry_after_ms").and_then(|r| r.as_usize()).unwrap_or(50);
+            std::thread::sleep(Duration::from_millis(ms as u64));
+            continue;
+        }
+        let shard = resp.get("shard").and_then(|s| s.as_usize()).ok_or("lease missing shard")?;
+        let base = resp.get("base").and_then(|b| b.as_usize()).ok_or("lease missing base")?;
+        let count = resp.get("count").and_then(|c| c.as_usize()).ok_or("lease missing count")?;
+        let ttl_ms = resp.get("ttl_ms").and_then(|t| t.as_usize()).unwrap_or(10_000);
+        if base + count > inputs.len() {
+            return Err(format!("lease {shard} spans past the grid ({base}+{count})"));
+        }
+
+        // A panic fault here models a worker dying mid-shard: the lease
+        // expires and the coordinator reassigns the shard.
+        failpoint::fail(sites::CLUSTER_WORKER_SHARD)
+            .map_err(|e| format!("worker shard: {e}"))?;
+
+        hb.begin(shard, Duration::from_millis((ttl_ms / 3).max(10) as u64));
+        let (designs, predicted) = optimize_grid_shard(
+            surrogate,
+            &spec.design_space,
+            &inputs[base..base + count],
+            base,
+            ga,
+            &[],
+            cfg.threads.max(1),
+            spec.grid_seed,
+        );
+        let uploaded = upload(client, cfg, seq, shard, base, designs, predicted)?;
+        hb.end();
+        if uploaded {
+            shards += 1;
+        }
+    }
+}
+
+/// Upload one shard, pipelining a heartbeat ahead of the result frame
+/// on the same connection. Returns whether the result was accepted
+/// (`false` = abandoned after retries; the lease will expire and the
+/// shard be recomputed elsewhere).
+fn upload(
+    client: &mut ServedClient,
+    cfg: &WorkerConfig,
+    seq: &mut u64,
+    shard: usize,
+    base: usize,
+    designs: Vec<Vec<f64>>,
+    predicted: Vec<f64>,
+) -> Result<bool, String> {
+    let result = ClusterRequest::Result {
+        worker: cfg.name.clone(),
+        shard,
+        base,
+        designs,
+        predicted,
+    };
+    for _ in 0..UPLOAD_RETRIES {
+        let hb_id = next_id(seq);
+        let res_id = next_id(seq);
+        let beat = ClusterRequest::Heartbeat { worker: cfg.name.clone(), shard };
+        // Pipelined: both frames go out before either response is read;
+        // the responses may arrive in either order and are matched by id.
+        let sent = client
+            .send_json(&beat.to_json(&hb_id))
+            .and_then(|()| client.send_json(&result.to_json(&res_id)));
+        if sent.is_err() {
+            *client = ServedClient::connect_str_with_retry(&cfg.connect, CONNECT_WINDOW)?;
+            continue;
+        }
+        // Heartbeat refusal is advisory; the result response decides.
+        let _ = client.recv_json(Some(&hb_id));
+        match client.recv_json(Some(&res_id)) {
+            Ok(v) if v.get("ok").and_then(|o| o.as_bool()) == Some(true) => {
+                return Ok(true);
+            }
+            Ok(_) => {
+                // Coordinator refused (injected result fault, or a
+                // fingerprint conflict): brief pause, then retry.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => {
+                *client = ServedClient::connect_str_with_retry(&cfg.connect, CONNECT_WINDOW)?;
+            }
+        }
+    }
+    Ok(false)
+}
+
+/// One request/response round trip with a single reconnect-and-retry on
+/// transport errors (a restarting coordinator looks like a dropped
+/// connection; the ledger makes the retry safe).
+fn rpc(
+    client: &mut ServedClient,
+    connect: &str,
+    req: &ClusterRequest,
+    seq: &mut u64,
+) -> Result<Value, String> {
+    for attempt in 0..2 {
+        let id = next_id(seq);
+        let frame = req.to_json(&id);
+        let sent = client.send_json(&frame).and_then(|()| client.recv_json(Some(&id)));
+        match sent {
+            Ok(v) => {
+                return if v.get("ok").and_then(|o| o.as_bool()) == Some(true) {
+                    Ok(v)
+                } else {
+                    Err(v
+                        .get("error")
+                        .and_then(|e| e.as_str())
+                        .unwrap_or("coordinator error")
+                        .to_string())
+                };
+            }
+            Err(e) if attempt == 0 => {
+                match ServedClient::connect_str_with_retry(connect, CONNECT_WINDOW) {
+                    Ok(c) => *client = c,
+                    Err(_) => return Err(e),
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    unreachable!("rpc loop returns on both attempts")
+}
+
+fn next_id(seq: &mut u64) -> Value {
+    *seq += 1;
+    Value::Num(*seq as f64)
+}
+
+/// Reconstruct the stage-2 surrogate from the spec's artifact text.
+fn parse_stage2(text: &str) -> Result<LogSurrogate<Gbdt>, String> {
+    let v = parse(text).map_err(|e| format!("stage2 parse: {e}"))?;
+    if v.get("format").and_then(|f| f.as_str()) != Some(STAGE_FORMAT)
+        || v.get("stage").and_then(|s| s.as_str()) != Some(Stage::Surrogate.name())
+    {
+        return Err("spec stage2 text is not a surrogate stage envelope".into());
+    }
+    let payload = v.get("payload").ok_or("stage2 envelope missing payload")?;
+    Ok(LogSurrogate::new(Gbdt::from_json(payload)?))
+}
+
+/// Background lease renewal on a dedicated connection, so a compute
+/// that outlasts the TTL keeps its lease. Heartbeat failures are
+/// swallowed: the worst case is lease expiry, which the duplicate
+/// resolution on upload already handles.
+struct Heartbeater {
+    stop: Arc<AtomicBool>,
+    current: Arc<Mutex<Option<(usize, Duration)>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Heartbeater {
+    fn spawn(connect: &str, worker: &str) -> Heartbeater {
+        let stop = Arc::new(AtomicBool::new(false));
+        let current: Arc<Mutex<Option<(usize, Duration)>>> = Arc::new(Mutex::new(None));
+        let (st, cur) = (stop.clone(), current.clone());
+        let (addr, name) = (connect.to_string(), worker.to_string());
+        let handle = std::thread::Builder::new()
+            .name("mlkaps-heartbeat".into())
+            .spawn(move || {
+                let mut client: Option<ServedClient> = None;
+                let mut seq = 0u64;
+                let mut since_beat = Duration::ZERO;
+                let tick = Duration::from_millis(5);
+                while !st.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    since_beat += tick;
+                    let Some((shard, interval)) = *cur.lock().unwrap() else {
+                        since_beat = Duration::ZERO;
+                        continue;
+                    };
+                    if since_beat < interval {
+                        continue;
+                    }
+                    since_beat = Duration::ZERO;
+                    if client.is_none() {
+                        client = ServedClient::connect_str(&addr).ok();
+                    }
+                    let Some(c) = client.as_mut() else { continue };
+                    let id = next_id(&mut seq);
+                    let beat = ClusterRequest::Heartbeat { worker: name.clone(), shard };
+                    let ok = c
+                        .send_json(&beat.to_json(&id))
+                        .and_then(|()| c.recv_json(Some(&id)))
+                        .is_ok();
+                    if !ok {
+                        client = None; // reconnect lazily next beat
+                    }
+                }
+            })
+            .ok();
+        Heartbeater { stop, current, handle }
+    }
+
+    fn begin(&self, shard: usize, interval: Duration) {
+        *self.current.lock().unwrap() = Some((shard, interval));
+    }
+
+    fn end(&self) {
+        *self.current.lock().unwrap() = None;
+    }
+
+    fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for Heartbeater {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -19,6 +19,7 @@
 //! examples) degrades to a clear "rebuild with --features pjrt" message
 //! instead of a link failure. [`Manifest`] parsing works in both builds.
 
+pub mod cluster;
 pub mod server;
 pub mod serving;
 

@@ -3,15 +3,26 @@
 //! This is the reference protocol implementation the integration tests
 //! and the served-throughput bench drive the daemon with; a C or
 //! Fortran shim implements the same few dozen lines against the format
-//! in `docs/protocol.md`. One client owns one connection; it is
-//! deliberately synchronous (one request in flight) — concurrency comes
-//! from opening more clients, which is exactly what lets the daemon's
-//! micro-batcher coalesce them.
+//! in `docs/protocol.md`. One client owns one connection (TCP or, via
+//! [`ServedClient::connect_str`] with a `unix:/path` address, a
+//! Unix-domain socket).
+//!
+//! The convenience verbs are synchronous — one request, one response —
+//! and throughput concurrency still comes from opening more clients
+//! (that is what lets the daemon's micro-batcher coalesce them). For
+//! callers that need **pipelining on one connection** (the cluster
+//! worker heartbeating during a result upload), requests can also be
+//! sent and received independently: [`ServedClient::send_json`] writes
+//! a frame without waiting, and [`ServedClient::recv_json`] matches
+//! responses to requests by their opaque `"id"`, parking out-of-order
+//! arrivals until their turn — so responses may be awaited in any
+//! order.
 
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use super::protocol::{read_frame, write_frame, Request};
+use super::transport::{self, Stream};
 use crate::util::hash::fnv1a;
 use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
@@ -33,10 +44,19 @@ pub struct Decision {
     pub batch: usize,
 }
 
-/// A synchronous connection to a serving daemon.
+/// A connection to a serving daemon (or any peer speaking the binary
+/// framing, e.g. the cluster coordinator).
 pub struct ServedClient {
-    stream: TcpStream,
+    stream: Stream,
+    /// Responses read off the wire while waiting for a different
+    /// request id (pipelining): parked here until their id is awaited.
+    pending: Vec<Value>,
 }
+
+/// Cap on parked out-of-order responses: a peer echoing ids we never
+/// asked for (or a caller that sends and never receives) fails loudly
+/// instead of growing the buffer without bound.
+const MAX_PENDING: usize = 256;
 
 /// Resolve to a non-empty address list (required because
 /// `TcpStream::connect_timeout` takes a single already-resolved
@@ -80,12 +100,60 @@ impl ServedClient {
             match TcpStream::connect_timeout(a, timeout) {
                 Ok(stream) => {
                     stream.set_nodelay(true).ok();
-                    return Ok(ServedClient { stream });
+                    return Ok(ServedClient {
+                        stream: Stream::from_tcp(stream),
+                        pending: Vec::new(),
+                    });
                 }
                 Err(e) => last = format!("connect {a}: {e}"),
             }
         }
         Err(last)
+    }
+
+    /// Connect to an address string of either transport: `host:port`
+    /// (TCP) or `unix:/path` (Unix-domain socket).
+    pub fn connect_str(addr: &str) -> Result<ServedClient, String> {
+        let stream = transport::connect(addr, CONNECT_TIMEOUT)?;
+        Ok(ServedClient { stream, pending: Vec::new() })
+    }
+
+    /// [`ServedClient::connect_str`] with jittered exponential-backoff
+    /// retries under an overall deadline (the string-address sibling of
+    /// [`ServedClient::connect_with_retry`]).
+    pub fn connect_str_with_retry(
+        addr: &str,
+        overall: Duration,
+    ) -> Result<ServedClient, String> {
+        let deadline = Instant::now() + overall;
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0xc0_ffee)
+            ^ fnv1a(addr.as_bytes());
+        let mut rng = Rng::new(seed);
+        let mut backoff = RETRY_BACKOFF_START;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(format!(
+                    "connect {addr}: gave up after {:.1}s of retries",
+                    overall.as_secs_f64()
+                ));
+            }
+            match transport::connect(addr, CONNECT_TIMEOUT.min(remaining)) {
+                Ok(stream) => return Ok(ServedClient { stream, pending: Vec::new() }),
+                Err(e) => {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        return Err(e);
+                    }
+                    let jittered = backoff.mul_f64(0.5 + 0.5 * rng.f64());
+                    std::thread::sleep(jittered.min(remaining));
+                    backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+                }
+            }
+        }
     }
 
     /// Connect with jittered exponential-backoff retries under an
@@ -135,24 +203,49 @@ impl ServedClient {
         }
     }
 
-    /// Send one request, read one response, check `"ok"`.
-    fn roundtrip(&mut self, req: &Request) -> Result<Value, String> {
-        write_frame(&mut self.stream, req.to_json().to_string().as_bytes())
-            .map_err(|e| e.to_string())?;
-        let payload = read_frame(&mut self.stream)
-            .map_err(|e| e.to_string())?
-            .ok_or("daemon closed the connection mid-request")?;
-        let text = std::str::from_utf8(&payload)
-            .map_err(|e| format!("response is not UTF-8: {e}"))?;
-        let v = json::parse(text).map_err(|e| format!("response parse: {e}"))?;
-        match v.get("ok").and_then(Value::as_bool) {
-            Some(true) => Ok(v),
-            _ => Err(v
-                .get("error")
-                .and_then(Value::as_str)
-                .unwrap_or("daemon returned a malformed response")
-                .to_string()),
+    /// Write one JSON request frame without waiting for its response
+    /// (the pipelining half; pair with [`ServedClient::recv_json`]).
+    pub fn send_json(&mut self, req: &Value) -> Result<(), String> {
+        write_frame(&mut self.stream, req.to_string().as_bytes())
+            .map_err(|e| e.to_string())
+    }
+
+    /// Read the response whose `"id"` matches `id` (`None` matches a
+    /// response carrying no id). Responses for *other* in-flight
+    /// requests that arrive first are parked and returned when their
+    /// own id is awaited — so pipelined responses may be awaited in any
+    /// order.
+    pub fn recv_json(&mut self, id: Option<&Value>) -> Result<Value, String> {
+        let matches = |v: &Value| v.get("id") == id;
+        if let Some(pos) = self.pending.iter().position(&matches) {
+            return Ok(self.pending.remove(pos));
         }
+        loop {
+            let payload = read_frame(&mut self.stream)
+                .map_err(|e| e.to_string())?
+                .ok_or("daemon closed the connection mid-request")?;
+            let text = std::str::from_utf8(&payload)
+                .map_err(|e| format!("response is not UTF-8: {e}"))?;
+            let v = json::parse(text).map_err(|e| format!("response parse: {e}"))?;
+            if matches(&v) {
+                return Ok(v);
+            }
+            if self.pending.len() >= MAX_PENDING {
+                return Err(format!(
+                    "{MAX_PENDING} unmatched responses parked while waiting for id \
+                     {id:?}; peer and client disagree about request ids"
+                ));
+            }
+            self.pending.push(v);
+        }
+    }
+
+    /// Send one request, read its response, check `"ok"`.
+    fn roundtrip(&mut self, req: &Request) -> Result<Value, String> {
+        let v = req.to_json();
+        self.send_json(&v)?;
+        let resp = self.recv_json(v.get("id"))?;
+        check_ok(resp)
     }
 
     /// Which config for this input? `profile` overrides the daemon's
@@ -169,41 +262,33 @@ impl ServedClient {
             profile: profile.map(str::to_string),
             id: None,
         };
-        let v = self.roundtrip(&req)?;
-        let values = v
-            .get("values")
-            .and_then(Value::as_arr)
-            .ok_or("response missing \"values\"")?
-            .iter()
-            .map(|x| x.as_f64().ok_or("non-numeric value in \"values\""))
-            .collect::<Result<Vec<f64>, &str>>()
-            .map_err(str::to_string)?;
-        let config = match v.get("config") {
-            Some(Value::Obj(m)) => m
-                .iter()
-                .map(|(k, x)| {
-                    Ok((
-                        k.clone(),
-                        x.as_f64().ok_or_else(|| format!("config entry '{k}' not a number"))?,
-                    ))
-                })
-                .collect::<Result<Vec<(String, f64)>, String>>()?,
-            _ => return Err("response missing \"config\"".into()),
+        parse_decision(self.roundtrip(&req)?)
+    }
+
+    /// Pipelined decide, send half: writes the request tagged with `id`
+    /// and returns immediately. Await it later with
+    /// [`ServedClient::decide_recv`] — in any order relative to other
+    /// in-flight ids on this connection.
+    pub fn decide_send(
+        &mut self,
+        kernel: &str,
+        input: &[f64],
+        profile: Option<&str>,
+        id: Value,
+    ) -> Result<(), String> {
+        let req = Request::Decide {
+            kernel: kernel.to_string(),
+            input: input.to_vec(),
+            profile: profile.map(str::to_string),
+            id: Some(id),
         };
-        Ok(Decision {
-            values,
-            config,
-            variant: v
-                .get("variant")
-                .and_then(Value::as_str)
-                .unwrap_or_default()
-                .to_string(),
-            fingerprint: v
-                .get("fingerprint")
-                .and_then(Value::as_str)
-                .map(str::to_string),
-            batch: v.get("batch").and_then(Value::as_usize).unwrap_or(1),
-        })
+        self.send_json(&req.to_json())
+    }
+
+    /// Pipelined decide, receive half: the response for `id`.
+    pub fn decide_recv(&mut self, id: &Value) -> Result<Decision, String> {
+        let resp = self.recv_json(Some(id))?;
+        parse_decision(check_ok(resp)?)
     }
 
     /// Full telemetry snapshot (the `STATS` verb), as parsed JSON.
@@ -297,5 +382,158 @@ impl ServedClient {
     /// stops).
     pub fn shutdown(&mut self) -> Result<(), String> {
         self.roundtrip(&Request::Shutdown).map(|_| ())
+    }
+}
+
+/// Turn a response into `Ok(body)` / `Err(error message)` on `"ok"`.
+fn check_ok(v: Value) -> Result<Value, String> {
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(true) => Ok(v),
+        _ => Err(v
+            .get("error")
+            .and_then(Value::as_str)
+            .unwrap_or("daemon returned a malformed response")
+            .to_string()),
+    }
+}
+
+/// Parse a decide response body into a [`Decision`].
+fn parse_decision(v: Value) -> Result<Decision, String> {
+    let values = v
+        .get("values")
+        .and_then(Value::as_arr)
+        .ok_or("response missing \"values\"")?
+        .iter()
+        .map(|x| x.as_f64().ok_or("non-numeric value in \"values\""))
+        .collect::<Result<Vec<f64>, &str>>()
+        .map_err(str::to_string)?;
+    let config = match v.get("config") {
+        Some(Value::Obj(m)) => m
+            .iter()
+            .map(|(k, x)| {
+                Ok((
+                    k.clone(),
+                    x.as_f64().ok_or_else(|| format!("config entry '{k}' not a number"))?,
+                ))
+            })
+            .collect::<Result<Vec<(String, f64)>, String>>()?,
+        _ => return Err("response missing \"config\"".into()),
+    };
+    Ok(Decision {
+        values,
+        config,
+        variant: v
+            .get("variant")
+            .and_then(Value::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        fingerprint: v
+            .get("fingerprint")
+            .and_then(Value::as_str)
+            .map(str::to_string),
+        batch: v.get("batch").and_then(Value::as_usize).unwrap_or(1),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    /// The multiplexing contract: two requests pipelined on one
+    /// connection, the peer answers them **in reverse order**, and each
+    /// `recv_json(id)` still gets its own response — the early
+    /// out-of-order arrival is parked, not misdelivered or dropped.
+    #[test]
+    fn pipelined_responses_match_by_id_out_of_order() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Read both request frames first, then answer in reverse.
+            let mut reqs = Vec::new();
+            for _ in 0..2 {
+                let payload = read_frame(&mut s).unwrap().unwrap();
+                reqs.push(json::parse(std::str::from_utf8(&payload).unwrap()).unwrap());
+            }
+            for req in reqs.iter().rev() {
+                let resp = Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("echo", req.get("n").cloned().unwrap()),
+                    ("id", req.get("id").cloned().unwrap()),
+                ]);
+                write_frame(&mut s, resp.to_string().as_bytes()).unwrap();
+            }
+        });
+
+        let mut client = ServedClient::connect(addr).unwrap();
+        let id_a = Value::Str("a".into());
+        let id_b = Value::Str("b".into());
+        for (id, n) in [(&id_a, 1.0), (&id_b, 2.0)] {
+            client
+                .send_json(&Value::obj(vec![
+                    ("n", Value::Num(n)),
+                    ("id", id.clone()),
+                ]))
+                .unwrap();
+        }
+        // Await in send order even though arrivals are reversed: the
+        // response for `a` arrives second, the one for `b` is parked
+        // while waiting for it and then served from the pending buffer.
+        let ra = client.recv_json(Some(&id_a)).unwrap();
+        assert_eq!(ra.get("echo").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(client.pending.len(), 1, "b's early response is parked");
+        let rb = client.recv_json(Some(&id_b)).unwrap();
+        assert_eq!(rb.get("echo").and_then(Value::as_f64), Some(2.0));
+        assert!(client.pending.is_empty());
+        server.join().unwrap();
+    }
+
+    /// Interleaving: sends and receives can alternate freely — a
+    /// send while another request's response is already parked must
+    /// neither flush nor reorder the pending buffer.
+    #[test]
+    fn interleaved_send_recv_preserves_parked_responses() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Answer req 1 and req 2 after reading both (reversed), then
+            // req 3 immediately when it arrives.
+            let mut reqs = Vec::new();
+            for _ in 0..2 {
+                let payload = read_frame(&mut s).unwrap().unwrap();
+                reqs.push(json::parse(std::str::from_utf8(&payload).unwrap()).unwrap());
+            }
+            for req in reqs.iter().rev() {
+                let resp = Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("id", req.get("id").cloned().unwrap()),
+                ]);
+                write_frame(&mut s, resp.to_string().as_bytes()).unwrap();
+            }
+            let payload = read_frame(&mut s).unwrap().unwrap();
+            let req = json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+            let resp = Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("id", req.get("id").cloned().unwrap()),
+            ]);
+            write_frame(&mut s, resp.to_string().as_bytes()).unwrap();
+        });
+
+        let mut client = ServedClient::connect(addr).unwrap();
+        let ids: Vec<Value> =
+            (1..=3).map(|n| Value::Str(format!("req-{n}"))).collect();
+        client.send_json(&Value::obj(vec![("id", ids[0].clone())])).unwrap();
+        client.send_json(&Value::obj(vec![("id", ids[1].clone())])).unwrap();
+        // Awaiting id 1 parks id 2's (earlier-arriving) response.
+        client.recv_json(Some(&ids[0])).unwrap();
+        // Interleave a third send, then await 3 before 2.
+        client.send_json(&Value::obj(vec![("id", ids[2].clone())])).unwrap();
+        let r3 = client.recv_json(Some(&ids[2])).unwrap();
+        assert_eq!(r3.get("id"), Some(&ids[2]));
+        let r2 = client.recv_json(Some(&ids[1])).unwrap();
+        assert_eq!(r2.get("id"), Some(&ids[1]));
+        server.join().unwrap();
     }
 }

@@ -1,9 +1,11 @@
-//! The `mlkaps served` TCP daemon: accept loop, per-connection protocol
+//! The `mlkaps served` daemon: accept loop, per-connection protocol
 //! handling, telemetry verbs, and lifecycle (start / shutdown / wait).
+//! Listens on TCP (`host:port`) or a Unix-domain socket (`unix:/path`)
+//! via [`super::transport`]; the protocol is identical on both.
 //!
 //! Thread model:
 //!
-//! * one **accept** thread (`std::net::TcpListener`),
+//! * one **accept** thread ([`super::transport::Listener`]),
 //! * one detached thread per live connection (parsing + response
 //!   formatting happen here; the decide itself is delegated to the
 //!   batcher, so a slow client never stalls another connection's
@@ -44,7 +46,7 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
@@ -54,6 +56,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchQueue, DecideOk, Job, PushError};
 use super::protocol::{self, FrameError, Request};
+use super::transport::{BoundAddr, Listener, Stream};
 use super::{ServedRegistry, ServedVariant};
 use crate::util::failpoint::{self, sites, Fault};
 use crate::util::json::Value;
@@ -62,7 +65,8 @@ use crate::util::telemetry::RecoveryCounters;
 /// Daemon tuning knobs (all have serving-shaped defaults).
 #[derive(Clone, Debug)]
 pub struct DaemonConfig {
-    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    /// Bind address: TCP `host:port` (port 0 picks an ephemeral port —
+    /// tests, benches) or a Unix-domain socket `unix:/path`.
     pub addr: String,
     /// Flush a batch at this many pending requests…
     pub batch_max: usize,
@@ -121,7 +125,7 @@ struct Shared {
     /// batcher already produced on a detached connection thread.
     in_flight: AtomicU64,
     started: Instant,
-    local_addr: SocketAddr,
+    bound: BoundAddr,
     decide_threads: usize,
     /// Per-connection request read timeout (None = disabled).
     read_timeout: Option<Duration>,
@@ -200,9 +204,8 @@ impl Daemon {
         if registry.is_empty() {
             return Err("refusing to serve an empty registry".into());
         }
-        let listener =
-            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
-        let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let listener = Listener::bind(&cfg.addr)?;
+        let bound = listener.bound();
         let queue = BatchQueue::new(cfg.queue_capacity);
         let retry_after_ms =
             retry_hint_ms(cfg.batch_window, cfg.queue_capacity, cfg.batch_max);
@@ -215,7 +218,7 @@ impl Daemon {
             connections: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             started: Instant::now(),
-            local_addr,
+            bound,
             decide_threads: cfg.threads,
             read_timeout: (cfg.read_timeout > Duration::ZERO).then_some(cfg.read_timeout),
             write_timeout: (cfg.write_timeout > Duration::ZERO)
@@ -264,9 +267,17 @@ impl Daemon {
         Ok(Daemon { shared, handles })
     }
 
-    /// The bound address (resolves port 0 to the actual ephemeral port).
+    /// The bound TCP address (resolves port 0 to the actual ephemeral
+    /// port). For a Unix-domain bind this is a wildcard dummy — use
+    /// [`Daemon::local_display`], which is correct for both transports.
     pub fn local_addr(&self) -> SocketAddr {
-        self.shared.local_addr
+        self.shared.bound.tcp_addr()
+    }
+
+    /// The bound address as a client-dialable string (`host:port` or
+    /// `unix:/path`).
+    pub fn local_display(&self) -> String {
+        self.shared.bound.display()
     }
 
     pub fn registry(&self) -> &ServedRegistry {
@@ -345,19 +356,10 @@ fn trigger_shutdown(shared: &Shared) {
 }
 
 /// Unblock the accept loop with a throwaway self-connection so it
-/// re-checks its stop flags. A wildcard bind (0.0.0.0 / ::) is not
-/// connectable on every platform, so poke the matching loopback
-/// instead; the timeout keeps stopping from hanging even if the poke
-/// is filtered.
+/// re-checks its stop flags (see [`BoundAddr::poke`] for the wildcard
+/// and Unix-socket cases).
 fn poke_accept(shared: &Shared) {
-    let mut poke = shared.local_addr;
-    if poke.ip().is_unspecified() {
-        poke.set_ip(match poke.ip() {
-            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-        });
-    }
-    let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
+    shared.bound.poke();
 }
 
 /// The `DRAIN` verb: stop accepting, let every already-read request
@@ -440,8 +442,9 @@ fn reload_loop(shared: &Shared, interval: Duration) {
     }
 }
 
-fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
-    for stream in listener.incoming() {
+fn accept_loop(shared: Arc<Shared>, listener: Listener) {
+    loop {
+        let stream = listener.accept();
         if shared.shutdown.load(Ordering::SeqCst) || shared.draining.load(Ordering::SeqCst)
         {
             return;
@@ -476,7 +479,7 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
 /// vs newline text) is auto-detected from the first byte: binary frames
 /// always begin 0x00 (lengths are capped below 2^24), which no text
 /// request can start with.
-fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+fn handle_conn(shared: &Arc<Shared>, mut stream: Stream) -> Result<(), String> {
     // `panic` fault here exercises the per-connection catch_unwind in
     // the accept loop; `err`/`eof` model a peer lost before the peek.
     failpoint::fail(sites::DAEMON_CONN)?;
@@ -491,9 +494,8 @@ fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
     if let Some(t) = shared.write_timeout {
         stream.set_write_timeout(Some(t)).ok();
     }
-    let mut first = [0u8; 1];
-    let n = match stream.peek(&mut first) {
-        Ok(n) => n,
+    let first = match stream.peek_first() {
+        Ok(first) => first,
         Err(e) => {
             if is_timeout(&e) {
                 shared.recovery.timeouts.fetch_add(1, Ordering::Relaxed);
@@ -501,13 +503,10 @@ fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
             return Err(format!("peek: {e}"));
         }
     };
-    if n == 0 {
-        return Ok(()); // peer connected and left (e.g. the shutdown poke)
-    }
-    if first[0] == 0x00 {
-        binary_loop(shared, stream)
-    } else {
-        text_loop(shared, stream)
+    match first {
+        None => Ok(()), // peer connected and left (e.g. the shutdown poke)
+        Some(0x00) => binary_loop(shared, stream),
+        Some(_) => text_loop(shared, stream),
     }
 }
 
@@ -517,7 +516,7 @@ fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
-fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String> {
+fn binary_loop(shared: &Arc<Shared>, mut stream: Stream) -> Result<(), String> {
     loop {
         if let Some(f) = failpoint::check(sites::DAEMON_READ) {
             match f {
@@ -591,7 +590,7 @@ fn binary_loop(shared: &Arc<Shared>, mut stream: TcpStream) -> Result<(), String
 /// connection thread's buffer without bound.
 const MAX_TEXT_LINE: usize = 1 << 20;
 
-fn text_loop(shared: &Arc<Shared>, stream: TcpStream) -> Result<(), String> {
+fn text_loop(shared: &Arc<Shared>, stream: Stream) -> Result<(), String> {
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
     let mut writer = stream;
     let mut buf: Vec<u8> = Vec::new();

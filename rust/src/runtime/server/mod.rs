@@ -38,6 +38,7 @@ pub mod daemon;
 pub mod protocol;
 pub mod reload;
 pub mod reservoir;
+pub mod transport;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;

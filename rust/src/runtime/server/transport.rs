@@ -1,0 +1,391 @@
+//! Transport abstraction for the wire protocol: one [`Listener`] /
+//! [`Stream`] pair that speaks either TCP or Unix-domain sockets, so
+//! the daemon, the cluster coordinator, and every client share the same
+//! framing code over both.
+//!
+//! Address syntax: anything starting with `unix:` is the filesystem
+//! path of a Unix-domain socket (`unix:/run/mlkaps.sock`); everything
+//! else is a TCP `host:port`. Same-host callers get the Unix transport's
+//! lower latency and filesystem permissions without a reserved port;
+//! the protocol on top is byte-for-byte identical.
+//!
+//! Framing detection needs one byte of lookahead (binary frames start
+//! 0x00, text requests never do). `TcpStream::peek` exists but
+//! `UnixStream` has no portable equivalent, so [`Stream`] implements
+//! the lookahead itself: [`Stream::peek_first`] reads one byte and
+//! parks it in an internal pushback slot that the next `read` drains
+//! first. [`Stream::try_clone`] copies the pushback slot into the clone
+//! — the split-reader/writer pattern (clone for reading, original for
+//! writing) stays correct because only the reading half ever reads.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Address prefix selecting the Unix-domain transport.
+pub const UNIX_PREFIX: &str = "unix:";
+
+/// The socket path of a `unix:`-prefixed address (`None` for TCP).
+pub fn unix_path(addr: &str) -> Option<&str> {
+    addr.strip_prefix(UNIX_PREFIX).map(str::trim).filter(|p| !p.is_empty())
+}
+
+/// A bound server socket (TCP or Unix).
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    /// The listener plus the path it is bound to (kept for unlink on
+    /// drop — a Unix socket file outlives its listener otherwise).
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind `addr` (`host:port`, port 0 for ephemeral, or
+    /// `unix:/path`). A **stale** Unix socket file — left behind by a
+    /// killed process, with no live listener answering — is removed and
+    /// rebound; a path someone is actually listening on stays an error.
+    pub fn bind(addr: &str) -> Result<Listener, String> {
+        match unix_path(addr) {
+            None => TcpListener::bind(addr)
+                .map(Listener::Tcp)
+                .map_err(|e| format!("bind {addr}: {e}")),
+            #[cfg(unix)]
+            Some(path) => {
+                let path = PathBuf::from(path);
+                match UnixListener::bind(&path) {
+                    Ok(l) => Ok(Listener::Unix(l, path)),
+                    Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                        if UnixStream::connect(&path).is_ok() {
+                            return Err(format!("bind {addr}: a listener is already live"));
+                        }
+                        std::fs::remove_file(&path)
+                            .map_err(|e| format!("remove stale socket {addr}: {e}"))?;
+                        UnixListener::bind(&path)
+                            .map(|l| Listener::Unix(l, path))
+                            .map_err(|e| format!("bind {addr}: {e}"))
+                    }
+                    Err(e) => Err(format!("bind {addr}: {e}")),
+                }
+            }
+            #[cfg(not(unix))]
+            Some(_) => {
+                Err(format!("bind {addr}: unix-domain sockets need a unix platform"))
+            }
+        }
+    }
+
+    /// Block for the next connection.
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::from_tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::from_unix(s)),
+        }
+    }
+
+    /// The bound address, with ephemeral TCP ports resolved.
+    pub fn bound(&self) -> BoundAddr {
+        match self {
+            Listener::Tcp(l) => BoundAddr::Tcp(
+                l.local_addr().unwrap_or_else(|_| ([0, 0, 0, 0], 0).into()),
+            ),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => BoundAddr::Unix(path.clone()),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Where a [`Listener`] ended up bound — printable, pokeable, and (for
+/// TCP) convertible back to a [`SocketAddr`] for legacy callers.
+#[derive(Clone, Debug)]
+pub enum BoundAddr {
+    Tcp(SocketAddr),
+    Unix(PathBuf),
+}
+
+impl BoundAddr {
+    /// Client-dialable address string (`host:port` or `unix:/path`).
+    pub fn display(&self) -> String {
+        match self {
+            BoundAddr::Tcp(a) => a.to_string(),
+            BoundAddr::Unix(p) => format!("{UNIX_PREFIX}{}", p.display()),
+        }
+    }
+
+    /// The TCP socket address (a wildcard dummy for Unix binds; callers
+    /// that need the real address of a Unix bind use [`BoundAddr::display`]).
+    pub fn tcp_addr(&self) -> SocketAddr {
+        match self {
+            BoundAddr::Tcp(a) => *a,
+            BoundAddr::Unix(_) => ([0, 0, 0, 0], 0).into(),
+        }
+    }
+
+    /// Throwaway self-connection to unblock a blocking `accept` so it
+    /// re-checks its stop flags. A wildcard TCP bind (0.0.0.0 / ::) is
+    /// not connectable on every platform, so poke the matching loopback.
+    pub fn poke(&self) {
+        match self {
+            BoundAddr::Tcp(addr) => {
+                let mut poke = *addr;
+                if poke.ip().is_unspecified() {
+                    poke.set_ip(match poke.ip() {
+                        std::net::IpAddr::V4(_) => {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        }
+                        std::net::IpAddr::V6(_) => {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        }
+                    });
+                }
+                let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(1));
+            }
+            #[cfg(unix)]
+            BoundAddr::Unix(path) => {
+                let _ = UnixStream::connect(path);
+            }
+            #[cfg(not(unix))]
+            BoundAddr::Unix(_) => {}
+        }
+    }
+}
+
+impl std::fmt::Display for BoundAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.display())
+    }
+}
+
+enum StreamKind {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+/// One connected socket (either transport) with a one-byte pushback
+/// slot for framing detection.
+pub struct Stream {
+    inner: StreamKind,
+    /// A byte read by [`Stream::peek_first`] that the next `read`
+    /// returns before touching the socket.
+    unread: Option<u8>,
+}
+
+impl Stream {
+    pub fn from_tcp(s: TcpStream) -> Stream {
+        Stream { inner: StreamKind::Tcp(s), unread: None }
+    }
+
+    #[cfg(unix)]
+    pub fn from_unix(s: UnixStream) -> Stream {
+        Stream { inner: StreamKind::Unix(s), unread: None }
+    }
+
+    /// Read the connection's first byte without consuming it (it is
+    /// parked in the pushback slot). `None` means the peer connected
+    /// and hung up without sending anything (e.g. a shutdown poke).
+    pub fn peek_first(&mut self) -> std::io::Result<Option<u8>> {
+        if let Some(b) = self.unread {
+            return Ok(Some(b));
+        }
+        let mut first = [0u8; 1];
+        loop {
+            match self.raw_read(&mut first) {
+                Ok(0) => return Ok(None),
+                Ok(_) => {
+                    self.unread = Some(first[0]);
+                    return Ok(Some(first[0]));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn raw_read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match &mut self.inner {
+            StreamKind::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => s.read(buf),
+        }
+    }
+
+    /// No-op on Unix sockets (no Nagle to disable).
+    pub fn set_nodelay(&self, on: bool) -> std::io::Result<()> {
+        match &self.inner {
+            StreamKind::Tcp(s) => s.set_nodelay(on),
+            #[cfg(unix)]
+            StreamKind::Unix(_) => Ok(()),
+        }
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match &self.inner {
+            StreamKind::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    pub fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match &self.inner {
+            StreamKind::Tcp(s) => s.set_write_timeout(t),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => s.set_write_timeout(t),
+        }
+    }
+
+    /// Clone the socket handle (shared file description, like
+    /// `TcpStream::try_clone`). The pushback byte is **copied** into
+    /// the clone: in the split pattern the clone becomes the dedicated
+    /// reader while the original only writes, so exactly one side ever
+    /// drains it.
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        let inner = match &self.inner {
+            StreamKind::Tcp(s) => StreamKind::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => StreamKind::Unix(s.try_clone()?),
+        };
+        Ok(Stream { inner, unread: self.unread })
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(b) = self.unread.take() {
+            if buf.is_empty() {
+                self.unread = Some(b);
+                return Ok(0);
+            }
+            buf[0] = b;
+            return Ok(1);
+        }
+        self.raw_read(buf)
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match &mut self.inner {
+            StreamKind::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match &mut self.inner {
+            StreamKind::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            StreamKind::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Connect to `addr` (either transport). For TCP every resolved address
+/// is tried in order with the per-address `timeout`; Unix connections
+/// complete (or fail) immediately, so the timeout is moot there.
+pub fn connect(addr: &str, timeout: Duration) -> Result<Stream, String> {
+    match unix_path(addr) {
+        #[cfg(unix)]
+        Some(path) => UnixStream::connect(path)
+            .map(Stream::from_unix)
+            .map_err(|e| format!("connect {addr}: {e}")),
+        #[cfg(not(unix))]
+        Some(_) => Err(format!("connect {addr}: unix-domain sockets need a unix platform")),
+        None => {
+            let addrs: Vec<SocketAddr> = addr
+                .to_socket_addrs()
+                .map_err(|e| format!("resolve {addr}: {e}"))?
+                .collect();
+            if addrs.is_empty() {
+                return Err(format!("resolve {addr}: address list is empty"));
+            }
+            let mut last = String::new();
+            for a in &addrs {
+                match TcpStream::connect_timeout(a, timeout) {
+                    Ok(s) => {
+                        s.set_nodelay(true).ok();
+                        return Ok(Stream::from_tcp(s));
+                    }
+                    Err(e) => last = format!("connect {a}: {e}"),
+                }
+            }
+            Err(last)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unix_prefix_parses() {
+        assert_eq!(unix_path("unix:/tmp/x.sock"), Some("/tmp/x.sock"));
+        assert_eq!(unix_path("unix: /tmp/x.sock"), Some("/tmp/x.sock"));
+        assert_eq!(unix_path("unix:"), None);
+        assert_eq!(unix_path("127.0.0.1:4517"), None);
+        assert_eq!(unix_path("host:80"), None);
+    }
+
+    #[test]
+    fn pushback_byte_is_read_first() {
+        // A loopback TCP pair: the client sends two bytes, the server
+        // peeks (pushback) and then reads both in order.
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.bound().display();
+        let t = std::thread::spawn(move || {
+            let mut c = connect(&addr, Duration::from_secs(5)).unwrap();
+            c.write_all(&[0xAB, 0xCD]).unwrap();
+        });
+        let mut s = listener.accept().unwrap();
+        assert_eq!(s.peek_first().unwrap(), Some(0xAB));
+        assert_eq!(s.peek_first().unwrap(), Some(0xAB), "peek is idempotent");
+        let mut buf = [0u8; 2];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(buf, [0xAB, 0xCD]);
+        t.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_listener_binds_accepts_and_unlinks() {
+        let dir = std::env::temp_dir().join(format!("mlkaps-transport-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sock");
+        let addr = format!("unix:{}", path.display());
+        let listener = Listener::bind(&addr).unwrap();
+        assert_eq!(listener.bound().display(), addr);
+        let addr2 = addr.clone();
+        let t = std::thread::spawn(move || {
+            let mut c = connect(&addr2, Duration::from_secs(5)).unwrap();
+            c.write_all(b"hi").unwrap();
+        });
+        let mut s = listener.accept().unwrap();
+        let mut buf = [0u8; 2];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+        t.join().unwrap();
+        drop(listener);
+        assert!(!path.exists(), "socket file must be unlinked on drop");
+        // A stale socket file (no listener alive behind it) is removed
+        // and rebound instead of failing with AddrInUse.
+        std::fs::write(&path, b"").unwrap();
+        let l2 = Listener::bind(&addr).unwrap();
+        drop(l2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

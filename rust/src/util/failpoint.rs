@@ -70,6 +70,20 @@ pub mod sites {
     pub const BATCHER_FLUSH: &str = "batcher.flush";
     /// A hot-reload poll of a watched checkpoint directory.
     pub const RELOAD_POLL: &str = "reload.poll";
+    /// Granting a stage-3 shard lease to a cluster worker
+    /// (`runtime/cluster/coordinator.rs`).
+    pub const CLUSTER_LEASE: &str = "cluster.lease";
+    /// Renewing a worker's lease on heartbeat (err here makes the
+    /// coordinator refuse renewal, so the lease expires under load).
+    pub const CLUSTER_HEARTBEAT: &str = "cluster.heartbeat";
+    /// Accepting a worker's shard result upload.
+    pub const CLUSTER_RESULT: &str = "cluster.result";
+    /// The coordinator's final merge of shard artifacts into the
+    /// chain-verified run.
+    pub const CLUSTER_MERGE: &str = "cluster.merge";
+    /// Inside a worker, between taking a lease and uploading its result
+    /// (panic here models a worker dying mid-shard).
+    pub const CLUSTER_WORKER_SHARD: &str = "cluster.worker_shard";
     /// Reserved for unit tests (never evaluated by production code).
     pub const TEST_PROBE: &str = "test.probe";
 
@@ -87,6 +101,11 @@ pub mod sites {
         BATCHER_ENQUEUE,
         BATCHER_FLUSH,
         RELOAD_POLL,
+        CLUSTER_LEASE,
+        CLUSTER_HEARTBEAT,
+        CLUSTER_RESULT,
+        CLUSTER_MERGE,
+        CLUSTER_WORKER_SHARD,
         TEST_PROBE,
     ];
 }

@@ -1,0 +1,334 @@
+//! Chaos suite for the distributed stage-3 cluster: every fault the
+//! coordinator/worker protocol is designed to absorb — a worker killed
+//! mid-shard, a lease expiring under a refused heartbeat, the same
+//! shard uploaded twice, a coordinator killed and restarted, a merge
+//! fault — must leave the merged checkpoint directory **byte-for-byte
+//! identical** to a single-process `tune` that never faulted.
+//!
+//! Failpoints are process-global, so every test serializes on one
+//! mutex; the suite lives in its own test binary so it never races the
+//! other integration tests.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::grid::optimize_grid_shard;
+use mlkaps::optimizer::nsga2::{Nsga2, Nsga2Params};
+use mlkaps::pipeline::checkpoint::PipelineRun;
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::cluster::cluster_protocol::ClusterRequest;
+use mlkaps::runtime::cluster::{
+    Coordinator, CoordinatorConfig, RunSpec, WorkerConfig, run_worker, spawn_workers,
+};
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::surrogate::LogSurrogate;
+use mlkaps::surrogate::gbdt::{Gbdt, GbdtParams};
+use mlkaps::util::failpoint;
+use mlkaps::util::json::Value;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const SEED: u64 = 91;
+/// Small shards so the 16-point grid splits into 4 shards: enough for
+/// real lease traffic without slowing the suite down.
+const SHARD: usize = 4;
+
+fn config() -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 120,
+        batch_size: 60,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed: SEED,
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mlkaps_chaos_cluster_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn pipeline_run(dir: &PathBuf) -> PipelineRun {
+    let mut run = PipelineRun::new(config(), dir.clone());
+    run.shard_size = SHARD;
+    run
+}
+
+/// The unfaulted single-process reference this whole suite compares to.
+fn reference(name: &str) -> BTreeMap<String, Vec<u8>> {
+    let dir = tmp(name);
+    pipeline_run(&dir).run(&ToySum::new(SEED)).expect("reference tune");
+    snapshot(&dir)
+}
+
+fn start_coordinator(dir: &PathBuf, addr: &str, ttl: Duration) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        addr: addr.to_string(),
+        lease_ttl: ttl,
+        ..Default::default()
+    };
+    Coordinator::start(pipeline_run(dir), Box::new(ToySum::new(SEED)), cfg)
+        .expect("coordinator start")
+}
+
+fn snapshot(dir: &PathBuf) -> BTreeMap<String, Vec<u8>> {
+    let mut files = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).expect("checkpoint dir readable").flatten() {
+        if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            files.insert(
+                entry.file_name().to_string_lossy().into_owned(),
+                std::fs::read(entry.path()).expect("checkpoint file readable"),
+            );
+        }
+    }
+    files
+}
+
+fn assert_identical(
+    got: &BTreeMap<String, Vec<u8>>,
+    want: &BTreeMap<String, Vec<u8>>,
+    ctx: &str,
+) {
+    let got_names: Vec<_> = got.keys().collect();
+    let want_names: Vec<_> = want.keys().collect();
+    assert_eq!(got_names, want_names, "{ctx}: file sets differ");
+    for (name, bytes) in want {
+        assert_eq!(&got[name], bytes, "{ctx}: {name} differs from the single-process bytes");
+    }
+}
+
+/// Raw protocol round trip against a coordinator (the tests' hand-
+/// rolled worker: it can misbehave in ways the real one refuses to).
+fn rpc(client: &mut ServedClient, req: &ClusterRequest, seq: &mut u64) -> Value {
+    *seq += 1;
+    let id = Value::Num(*seq as f64);
+    client.send_json(&req.to_json(&id)).expect("send");
+    client.recv_json(Some(&id)).expect("recv")
+}
+
+#[test]
+fn cluster_is_byte_identical_to_single_process_at_1_2_4_workers() {
+    let _g = gate();
+    let want = reference("ref_counts");
+    for workers in [1usize, 2, 4] {
+        let dir = tmp(&format!("w{workers}"));
+        let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+        let handles = spawn_workers(&coord.local_display(), workers, 1);
+        // Join before finish: workers exit on their next lease round
+        // trip (Complete), which needs the coordinator still listening.
+        assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+        for h in handles {
+            h.join().expect("worker thread").expect("worker ok");
+        }
+        coord.finish(Duration::from_secs(10)).expect("merge");
+        assert_identical(&snapshot(&dir), &want, &format!("{workers} workers"));
+    }
+}
+
+#[test]
+fn cluster_over_unix_socket_is_byte_identical() {
+    let _g = gate();
+    let want = reference("ref_unix");
+    let dir = tmp("unix");
+    let sock = std::env::temp_dir()
+        .join(format!("mlkaps_cluster_{}.sock", std::process::id()));
+    std::fs::remove_file(&sock).ok();
+    let addr = format!("unix:{}", sock.display());
+    let coord = start_coordinator(&dir, &addr, Duration::from_secs(5));
+    assert_eq!(coord.local_display(), addr);
+    let handles = spawn_workers(&coord.local_display(), 2, 1);
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker ok");
+    }
+    coord.finish(Duration::from_secs(10)).expect("merge");
+    assert_identical(&snapshot(&dir), &want, "unix-socket cluster");
+    assert!(!sock.exists(), "coordinator should unlink its socket on shutdown");
+}
+
+#[test]
+fn killed_worker_mid_shard_is_reassigned_and_bytes_match() {
+    let _g = gate();
+    let want = reference("ref_kill");
+    let dir = tmp("kill");
+    // Short TTL so the dead worker's lease is reassigned quickly.
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_millis(300));
+    // The first worker to take a lease panics between lease and
+    // compute — the distributed analogue of `kill -9` mid-shard.
+    let fp = failpoint::arm_scoped("cluster.worker_shard=panic@0").unwrap();
+    let handles = spawn_workers(&coord.local_display(), 2, 1);
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    drop(fp);
+    let mut panicked = 0;
+    for h in handles {
+        if h.join().is_err() {
+            panicked += 1;
+        }
+    }
+    coord.finish(Duration::from_secs(10)).expect("merge despite a dead worker");
+    assert_eq!(panicked, 1, "exactly one worker should have died to the injected panic");
+    assert_identical(&snapshot(&dir), &want, "worker killed mid-shard");
+}
+
+#[test]
+fn lease_expiry_and_duplicate_upload_resolve_idempotently() {
+    let _g = gate();
+    let want = reference("ref_dup");
+    let dir = tmp("dup");
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_millis(100));
+    let addr = coord.local_display();
+    let mut seq = 0u64;
+
+    // Worker "a" leases shard 0 and computes it, but never heartbeats.
+    let mut a = ServedClient::connect_str(&addr).expect("connect a");
+    let spec_resp = rpc(&mut a, &ClusterRequest::Spec, &mut seq);
+    let spec = RunSpec::from_json(spec_resp.get("spec").expect("spec")).expect("spec parse");
+    let lease = rpc(&mut a, &ClusterRequest::Lease { worker: "a".into() }, &mut seq);
+    let shard = lease.get("shard").unwrap().as_usize().unwrap();
+    let base = lease.get("base").unwrap().as_usize().unwrap();
+    let count = lease.get("count").unwrap().as_usize().unwrap();
+    assert_eq!((shard, base, count), (0, 0, SHARD));
+
+    let stage2 = mlkaps::util::json::parse(&spec.stage2_text).expect("stage2 parse");
+    let surrogate =
+        LogSurrogate::new(Gbdt::from_json(stage2.get("payload").expect("payload")).unwrap());
+    let inputs = spec.input_space.grid(spec.opt_grid);
+    let ga = Nsga2::new(spec.ga.clone());
+    let (designs, predicted) = optimize_grid_shard(
+        &surrogate,
+        &spec.design_space,
+        &inputs[base..base + count],
+        base,
+        &ga,
+        &[],
+        1,
+        spec.grid_seed,
+    );
+
+    // An armed heartbeat failpoint makes the coordinator refuse
+    // renewal — exactly how a lease dies "under load".
+    {
+        let _hb = failpoint::arm_scoped("cluster.heartbeat=err").unwrap();
+        let refused =
+            rpc(&mut a, &ClusterRequest::Heartbeat { worker: "a".into(), shard }, &mut seq);
+        assert_eq!(refused.get("ok").and_then(|o| o.as_bool()), Some(false));
+    }
+    std::thread::sleep(Duration::from_millis(250)); // TTL lapses
+
+    // With the lease expired, worker "b" is handed the *same* shard.
+    let mut b = ServedClient::connect_str(&addr).expect("connect b");
+    let heartbeat =
+        rpc(&mut a, &ClusterRequest::Heartbeat { worker: "a".into(), shard }, &mut seq);
+    assert_eq!(heartbeat.get("renewed").and_then(|r| r.as_bool()), Some(false));
+    let lease_b = rpc(&mut b, &ClusterRequest::Lease { worker: "b".into() }, &mut seq);
+    assert_eq!(lease_b.get("shard").and_then(|s| s.as_usize()), Some(0));
+
+    // Both workers upload the shard: first accepted, second an
+    // idempotent duplicate (identical artifact fingerprint).
+    let result = ClusterRequest::Result {
+        worker: "b".into(),
+        shard,
+        base,
+        designs: designs.clone(),
+        predicted: predicted.clone(),
+    };
+    let first = rpc(&mut b, &result, &mut seq);
+    assert_eq!(first.get("accepted").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(first.get("duplicate").and_then(|x| x.as_bool()), Some(false));
+    let result_a = ClusterRequest::Result {
+        worker: "a".into(),
+        shard,
+        base,
+        designs,
+        predicted,
+    };
+    let second = rpc(&mut a, &result_a, &mut seq);
+    assert_eq!(second.get("accepted").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(second.get("duplicate").and_then(|x| x.as_bool()), Some(true));
+
+    // A real worker finishes the remaining shards; the merged
+    // directory still matches the unfaulted single-process bytes.
+    let handles = spawn_workers(&addr, 1, 1);
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker ok");
+    }
+    coord.finish(Duration::from_secs(10)).expect("merge");
+    assert_identical(&snapshot(&dir), &want, "expired lease + duplicate upload");
+}
+
+#[test]
+fn coordinator_restart_resumes_from_the_persisted_ledger() {
+    let _g = gate();
+    let want = reference("ref_restart");
+    let dir = tmp("restart");
+
+    // First coordinator: one worker computes exactly 2 of 4 shards,
+    // then the coordinator is stopped (a kill, minus the SIGKILL).
+    let mut first = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+    let mut wcfg = WorkerConfig::new(first.local_display(), "partial");
+    wcfg.max_shards = Some(2);
+    let report = run_worker(&wcfg).expect("partial worker");
+    assert_eq!(report.shards, 2);
+    first.stop();
+    drop(first);
+    assert!(dir.join("cluster_ledger.json").exists(), "ledger persisted across restart");
+
+    // Second coordinator: the ledger (cross-checked against the shard
+    // bytes on disk) restores both finished shards — nothing is
+    // re-leased or recomputed.
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+    let (pending, leased, done, total) = coord.progress();
+    assert_eq!(
+        (pending, leased, done, total),
+        (2, 0, 2, 4),
+        "restart must resume leasing, not re-run completed shards"
+    );
+    let handles = spawn_workers(&coord.local_display(), 1, 1);
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker ok");
+    }
+    coord.finish(Duration::from_secs(10)).expect("merge after restart");
+    assert!(!dir.join("cluster_ledger.json").exists(), "merge removes the ledger");
+    assert_identical(&snapshot(&dir), &want, "coordinator restart");
+}
+
+#[test]
+fn merge_fault_leaves_a_resumable_directory() {
+    let _g = gate();
+    let want = reference("ref_merge");
+    let dir = tmp("merge");
+
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+    let handles = spawn_workers(&coord.local_display(), 1, 1);
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    for h in handles {
+        h.join().expect("worker thread").expect("worker ok");
+    }
+    let fp = failpoint::arm_scoped("cluster.merge=err").unwrap();
+    let err = coord.finish(Duration::from_secs(10)).expect_err("injected merge fault");
+    assert!(err.contains("merge"), "unexpected error: {err}");
+    drop(fp);
+    assert!(dir.join("cluster_ledger.json").exists(), "faulted merge keeps the ledger");
+
+    // A fresh coordinator finds every shard done and merges cleanly.
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+    let (.., done, total) = coord.progress();
+    assert_eq!((done, total), (4, 4));
+    coord.finish(Duration::from_secs(10)).expect("clean merge on retry");
+    assert_identical(&snapshot(&dir), &want, "merge retry");
+}

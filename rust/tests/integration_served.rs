@@ -679,3 +679,54 @@ fn profile_variants_route_and_reload_verb_works() {
     std::fs::remove_dir_all(&dir_spr).ok();
     std::fs::remove_dir_all(&dir_knm).ok();
 }
+
+#[test]
+#[cfg(unix)]
+fn unix_socket_daemon_serves_bit_identical_decisions() {
+    let dir = tmp_dir("unix");
+    let reference = tune_into(&dir, 76);
+    let sock =
+        std::env::temp_dir().join(format!("mlkaps_served_it_{}.sock", std::process::id()));
+    std::fs::remove_file(&sock).ok();
+
+    let mut reg = ServedRegistry::new(None);
+    reg.register_dir(&dir, None).unwrap();
+    let cfg = DaemonConfig {
+        addr: format!("unix:{}", sock.display()),
+        ..daemon_config()
+    };
+    let mut daemon = Daemon::start(reg, cfg).unwrap();
+    let addr = daemon.local_display();
+    assert_eq!(addr, format!("unix:{}", sock.display()));
+    assert!(sock.exists(), "daemon should have bound the unix socket");
+
+    // Binary framing over the unix transport: decisions bit-identical
+    // to the in-process bundle, same as the TCP tests.
+    let mut client = ServedClient::connect_str(&addr).unwrap();
+    client.ping().unwrap();
+    let mut rng = Rng::new(7600);
+    for _ in 0..50 {
+        let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+        let d = client.decide("toy-sum", &q, None).unwrap();
+        assert_eq!(
+            d.values,
+            reference.decide(&q),
+            "unix-socket decision diverged from in-process decide for {q:?}"
+        );
+    }
+
+    // Newline-text framing is auto-detected on the same listener.
+    {
+        use std::os::unix::net::UnixStream;
+        let mut raw = UnixStream::connect(&sock).unwrap();
+        raw.write_all(b"PING\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\": true") || line.contains("\"ok\":true"), "{line}");
+    }
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    assert!(!sock.exists(), "daemon should unlink its socket on shutdown");
+    std::fs::remove_dir_all(&dir).ok();
+}

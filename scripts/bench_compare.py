@@ -50,6 +50,7 @@ SPECS = {
         "gate": ["decisions_per_sec", "speedup_vs_walk"],
     },
     "served_throughput.csv": {"key": ["phase"], "gate": ["decisions_per_sec"]},
+    "cluster_throughput.csv": {"key": ["workers"], "gate": ["shards_per_sec"]},
 }
 
 
