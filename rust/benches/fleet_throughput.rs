@@ -1,0 +1,188 @@
+//! Fleet throughput: decisions/sec through 1 vs 2 vs 4 `mlkaps served`
+//! child *processes* sharing one listen address via `SO_REUSEPORT`
+//! under the `mlkaps fleet` supervisor. Each child is pinned to one
+//! decide thread (`--threads 1`), so process count is the parallelism
+//! axis: the fleet must scale decision throughput across processes the
+//! way the in-process pool scales it across threads — that is what
+//! pays for the supervisor's process-level blast-radius isolation.
+//!
+//! Run: `cargo bench --bench fleet_throughput [-- --full | -- --smoke]`
+//! (`--smoke` is the CI wiring mode: tiny budgets, same CSV trail.)
+//! At fast/full budgets the bench asserts 4-process throughput ≥ 2×
+//! single-process; at smoke budgets (seconds-long, shared CI cores) the
+//! ratio is reported in the CSV trail but not asserted — scaling across
+//! processes needs cores the smoke runner may not have.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use bench_util::*;
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::PipelineRun;
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::report;
+use mlkaps::runtime::fleet::{Fleet, FleetConfig};
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::json::Value;
+use mlkaps::util::rng::Rng;
+
+const SEED: u64 = 4518;
+const PROCESS_COUNTS: [usize; 3] = [1, 2, 4];
+const CLIENTS: usize = 8;
+/// Pipelined requests in flight per client (well under the client's
+/// MAX_PENDING), so the children stay busy instead of ping-ponging.
+const WINDOW: usize = 32;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mlkaps_bench_fleet_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn main() {
+    header(
+        "fleet_throughput",
+        "serving fleet: decisions/sec at 1 vs 2 vs 4 SO_REUSEPORT child processes",
+    );
+    let n_query = budget3(200_000, 40_000, 4_000);
+    let n_query = (n_query / (CLIENTS * WINDOW)) * CLIENTS * WINDOW;
+
+    // One quick toy-sum tune the children all serve.
+    let ckpt = tmp("ckpt");
+    let cfg = MlkapsConfig {
+        total_samples: 120,
+        batch_size: 60,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed: SEED,
+    };
+    PipelineRun::new(cfg, ckpt.clone()).run(&ToySum::new(SEED)).unwrap();
+    let reference = TreeBundle::load_checkpoint_dir(&ckpt).unwrap();
+
+    let mut rng = Rng::new(9292);
+    let pool: Vec<Vec<f64>> = (0..4096)
+        .map(|_| vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)])
+        .collect();
+    println!("{CLIENTS} clients x {WINDOW} pipelined, {n_query} decisions per process count");
+
+    let mut rows_out = Vec::new();
+    let mut rates = Vec::new();
+    for &children in &PROCESS_COUNTS {
+        // A fresh ephemeral port per fleet size (bind :0, read, release).
+        let port = std::net::TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port();
+        let mut fcfg = FleetConfig::new(format!("127.0.0.1:{port}"), children);
+        fcfg.binary = PathBuf::from(env!("CARGO_BIN_EXE_mlkaps"));
+        fcfg.control_dir = tmp(&format!("ctl{children}"));
+        // One decide thread per child: process count is the axis.
+        fcfg.child_args = vec![
+            "--dir".into(),
+            ckpt.display().to_string(),
+            "--threads".into(),
+            "1".into(),
+        ];
+        let fleet = Fleet::start(fcfg).unwrap();
+        fleet.wait_ready(Duration::from_secs(60)).unwrap();
+        let addr = fleet.addr().to_string();
+
+        // Warmup + correctness trail: fleet answers == in-process, bit
+        // for bit, whichever child the kernel routed to.
+        {
+            let mut client =
+                ServedClient::connect_str_with_retry(&addr, Duration::from_secs(10)).unwrap();
+            for q in pool.iter().take(64) {
+                assert_eq!(
+                    client.decide("toy-sum", q, None).unwrap().values,
+                    reference.decide(q),
+                    "fleet decision diverged from in-process decide"
+                );
+            }
+        }
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..CLIENTS {
+                let (pool, addr) = (&pool, &addr);
+                handles.push(scope.spawn(move || {
+                    let mut client =
+                        ServedClient::connect_str_with_retry(addr, Duration::from_secs(10))
+                            .unwrap();
+                    let per_thread = n_query / CLIENTS;
+                    let mut issued = 0usize;
+                    while issued < per_thread {
+                        // Pipelined window: WINDOW requests on the wire
+                        // before the first response is read.
+                        let ids: Vec<Value> = (0..WINDOW)
+                            .map(|k| Value::Num((t * 1_000_000 + issued + k) as f64))
+                            .collect();
+                        for (k, id) in ids.iter().enumerate() {
+                            let q = &pool[(t * 7919 + issued + k) % pool.len()];
+                            client.decide_send("toy-sum", q, None, id.clone()).unwrap();
+                        }
+                        for id in &ids {
+                            std::hint::black_box(client.decide_recv(id).unwrap());
+                        }
+                        issued += WINDOW;
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        drop(fleet);
+
+        let rate = n_query as f64 / secs.max(1e-12);
+        rates.push(rate);
+        rows_out.push(vec![
+            children.to_string(),
+            n_query.to_string(),
+            format!("{secs:.4}"),
+            format!("{rate:.0}"),
+        ]);
+    }
+    std::fs::remove_dir_all(&ckpt).ok();
+
+    println!(
+        "{}",
+        report::table(&["processes", "rows", "secs", "decisions_per_sec"], &rows_out)
+    );
+    save_csv(
+        "fleet_throughput.csv",
+        &["processes", "rows", "secs", "decisions_per_sec"],
+        &rows_out,
+    );
+
+    // The acceptance gate: 4 single-threaded processes must at least
+    // double 1 single-threaded process. Asserted at fast/full budgets;
+    // smoke runs on whatever cores CI spares and only records the trail.
+    let ratio = rates[2] / rates[0].max(1e-12);
+    println!(
+        "(gate: 4 processes x{ratio:.2} vs 1 process — must be >= 2 at fast/full budgets)"
+    );
+    if !smoke_mode() {
+        assert!(
+            ratio >= 2.0,
+            "4-process fleet did not double single-process throughput: \
+             {:.0} vs {:.0} dec/s (x{ratio:.2})",
+            rates[2],
+            rates[0]
+        );
+    }
+}

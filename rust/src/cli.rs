@@ -19,6 +19,18 @@
 //!               [--poll-ms 500] [--threads N] [--queue-cap 4096]
 //!               [--memo exact|quantized] [--read-timeout-ms 30000]
 //!               [--write-timeout-ms 30000] [--reservoir-cap 1024]
+//!               [--control-addr unix:/path] [--reuseport 1]
+//! mlkaps fleet --dir runs/spr [--addr 127.0.0.1:4517] [--children 3]
+//!              [--no-reuseport 1] [--run-secs 0] [--binary PATH]
+//!              [--control-dir DIR] [--probe-ms 200] [--probe-timeout-ms 1000]
+//!              [--hung-after 3] [--boot-grace-ms 30000]
+//!              [--backoff-start-ms 100] [--backoff-cap-ms 5000]
+//!              [--crash-k 5] [--crash-window-ms 30000]
+//!              [--redeploy-poll-ms 500] [--drain-timeout-ms 10000]
+//!              (plus the served flags forwarded to every child:
+//!               --name --model --model-name --profile --threads
+//!               --batch-max --batch-window-us --queue-cap --memo
+//!               --reservoir-cap --read-timeout-ms --write-timeout-ms)
 //! mlkaps retune --checkpoint-dir DIR
 //!               (--from-daemon HOST:PORT | --from-samples FILE)
 //!               [--kernel NAME] [--limit N]
@@ -28,7 +40,7 @@
 //!                   (plus the tune flags: --kernel --samples --batch
 //!                    --sampler --grid --depth --seed --threads)
 //! mlkaps worker --connect HOST:PORT|unix:/path [--threads N] [--id NAME]
-//!               [--max-shards N]
+//!               [--max-shards N] [--spool-dir DIR]
 //! mlkaps artifacts [--dir artifacts]     inspect the AOT manifest
 //! ```
 //!
@@ -54,6 +66,16 @@
 //! `mlkaps served: listening on HOST:PORT` line to stdout, then serves
 //! until a `SHUTDOWN` (stop now) or `DRAIN` (stop accepting, finish
 //! in-flight, exit 0 — rolling restarts) request arrives.
+//!
+//! `fleet` runs N `served` children under a process-level supervisor
+//! ([`crate::runtime::fleet`]): the children share one TCP listen
+//! address via `SO_REUSEPORT` (or bind `port + slot` each under
+//! `--no-reuseport 1`), are health-probed over the PING verb on
+//! per-child control sockets, restart with exponential backoff behind a
+//! crash-loop circuit breaker, and roll one at a time onto new
+//! checkpoint fingerprints (DRAIN old, verify replacement) with zero
+//! downtime. `--run-secs N` bounds the run for scripts; SIGINT/SIGTERM
+//! shut the whole fleet down gracefully.
 //!
 //! `--memo quantized` keys both commands' input memo caches on
 //! threshold-cell codes instead of exact input bits, so inputs landing
@@ -481,6 +503,13 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
         // 0 disables the per-connection request read/write timeouts.
         read_timeout: Duration::from_millis(parse_num("read-timeout-ms", 30_000)?),
         write_timeout: Duration::from_millis(parse_num("write-timeout-ms", 30_000)?),
+        // A fleet supervisor probes each child on a dedicated control
+        // address and has every child share the data address.
+        control_addr: flags.get("control-addr").cloned(),
+        reuseport: matches!(
+            flags.get("reuseport").map(String::as_str),
+            Some("1") | Some("true")
+        ),
     };
 
     let variants = reg.names().join(", ");
@@ -492,6 +521,9 @@ fn cmd_served(flags: HashMap<String, String>) -> Result<(), String> {
     // The parseable readiness line (tests and scripts wait for it).
     println!("mlkaps served: listening on {}", daemon.local_addr());
     std::io::stdout().flush().ok();
+    if let Some(ctrl) = daemon.control_display() {
+        eprintln!("served: control address {ctrl}");
+    }
     eprintln!("served: variants: {variants}{profile_note}; SHUTDOWN verb stops the daemon");
     daemon.wait();
     eprintln!("served: daemon stopped");
@@ -736,8 +768,147 @@ fn cmd_worker(flags: HashMap<String, String>) -> Result<(), String> {
         .get("max-shards")
         .map(|v| v.parse().map_err(|e| format!("max-shards: {e}")))
         .transpose()?;
+    // Spool computed-but-unacknowledged shard results here; they
+    // survive coordinator restarts and are re-offered on reconnect.
+    cfg.spool_dir = flags.get("spool-dir").map(std::path::PathBuf::from);
     let report = run_worker(&cfg)?;
-    eprintln!("mlkaps worker {}: computed {} shards", cfg.name, report.shards);
+    eprintln!(
+        "mlkaps worker {}: computed {} shards ({} re-offered from spool)",
+        cfg.name, report.shards, report.respooled
+    );
+    Ok(())
+}
+
+/// Graceful-stop flag for `mlkaps fleet`: SIGINT/SIGTERM set it, the
+/// supervisor loop polls it and shuts every child down. Hand-declared
+/// `signal(2)` — the store is async-signal-safe, and the zero-dependency
+/// rule rules out a signal crate.
+#[cfg(unix)]
+mod fleet_stop {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static STOP: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod fleet_stop {
+    pub fn install() {}
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+fn cmd_fleet(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::runtime::fleet::{supervisor, Fleet, FleetConfig};
+    use std::io::Write as _;
+    use std::time::{Duration, Instant};
+
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let children: usize =
+        get("children", "3").parse().map_err(|e| format!("children: {e}"))?;
+    let mut cfg = FleetConfig::new(get("addr", "127.0.0.1:4517"), children);
+    if let Some(bin) = flags.get("binary") {
+        cfg.binary = bin.into();
+    }
+    supervisor::check_binary(&cfg.binary)?;
+    if matches!(flags.get("no-reuseport").map(String::as_str), Some("1") | Some("true")) {
+        cfg.reuseport = false;
+    }
+    if let Some(dir) = flags.get("control-dir") {
+        cfg.control_dir = dir.into();
+    }
+
+    let ms = |key: &str, d: Duration| -> Result<Duration, String> {
+        flags
+            .get(key)
+            .map(|v| v.parse().map(Duration::from_millis).map_err(|e| format!("{key}: {e}")))
+            .unwrap_or(Ok(d))
+    };
+    cfg.probe_interval = ms("probe-ms", cfg.probe_interval)?;
+    cfg.probe_timeout = ms("probe-timeout-ms", cfg.probe_timeout)?;
+    cfg.boot_grace = ms("boot-grace-ms", cfg.boot_grace)?;
+    cfg.backoff_start = ms("backoff-start-ms", cfg.backoff_start)?;
+    cfg.backoff_cap = ms("backoff-cap-ms", cfg.backoff_cap)?;
+    cfg.crash_window = ms("crash-window-ms", cfg.crash_window)?;
+    cfg.redeploy_poll = ms("redeploy-poll-ms", cfg.redeploy_poll)?;
+    cfg.drain_timeout = ms("drain-timeout-ms", cfg.drain_timeout)?;
+    if let Some(v) = flags.get("hung-after") {
+        cfg.hung_after = v.parse().map_err(|e| format!("hung-after: {e}"))?;
+    }
+    if let Some(v) = flags.get("crash-k") {
+        cfg.crash_k = v.parse().map_err(|e| format!("crash-k: {e}"))?;
+    }
+
+    // Serving flags forwarded verbatim to every child's `served`
+    // invocation; the supervisor itself loads nothing.
+    const CHILD_FLAGS: &[&str] = &[
+        "dir",
+        "name",
+        "model",
+        "model-name",
+        "profile",
+        "threads",
+        "batch-max",
+        "batch-window-us",
+        "queue-cap",
+        "memo",
+        "reservoir-cap",
+        "read-timeout-ms",
+        "write-timeout-ms",
+    ];
+    for key in CHILD_FLAGS {
+        if let Some(v) = flags.get(*key) {
+            cfg.child_args.push(format!("--{key}"));
+            cfg.child_args.push(v.clone());
+        }
+    }
+    if !flags.contains_key("dir") && !flags.contains_key("model") {
+        return Err("fleet needs --dir CKPT_DIR[,...] and/or --model FILE".into());
+    }
+    // Watched checkpoint dirs drive rolling redeploys.
+    if let Some(dirs) = flags.get("dir") {
+        cfg.watch_dirs = dirs.split(',').map(|d| d.trim().into()).collect();
+    }
+
+    let run_secs: u64 = get("run-secs", "0").parse().map_err(|e| format!("run-secs: {e}"))?;
+    let ready_budget = cfg.boot_grace + Duration::from_secs(10);
+
+    fleet_stop::install();
+    let mut fleet = Fleet::start(cfg)?;
+    fleet.wait_ready(ready_budget)?;
+    // The parseable readiness line (tests and scripts wait for it).
+    println!("mlkaps fleet: {children} children listening on {}", fleet.addr());
+    std::io::stdout().flush().ok();
+
+    let deadline =
+        (run_secs > 0).then(|| Instant::now() + Duration::from_secs(run_secs));
+    while !fleet_stop::requested() && deadline.map_or(true, |d| Instant::now() < d) {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("mlkaps fleet: shutting down");
+    fleet.shutdown();
+    eprintln!("mlkaps fleet: stopped");
     Ok(())
 }
 
@@ -748,7 +919,7 @@ pub fn main() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: mlkaps <kernels|tune|serve|served|retune|coordinate|worker|artifacts> [--flags]"
+                "usage: mlkaps <kernels|tune|serve|served|fleet|retune|coordinate|worker|artifacts> [--flags]"
             );
             eprintln!("see rust/src/cli.rs docs; kernels: {}", KERNELS.join(", "));
             std::process::exit(2);
@@ -764,6 +935,7 @@ pub fn main() {
         "tune" => parse_flags(&rest).and_then(cmd_tune),
         "serve" => parse_flags(&rest).and_then(cmd_serve),
         "served" => parse_flags(&rest).and_then(cmd_served),
+        "fleet" => parse_flags(&rest).and_then(cmd_fleet),
         "retune" => parse_flags(&rest).and_then(cmd_retune),
         "coordinate" => parse_flags(&rest).and_then(cmd_coordinate),
         "worker" => parse_flags(&rest).and_then(cmd_worker),

@@ -15,7 +15,16 @@
 //! the (potentially large) result frame on the *main* connection — the
 //! multiplexed client matches the two responses by id — so a slow
 //! upload cannot silently outlive the lease it is uploading for.
+//!
+//! With `--spool-dir`, a computed shard whose upload fails outright
+//! (coordinator down past the reconnect window, or an injected
+//! `cluster.upload` fault) is persisted as a spool file instead of
+//! being thrown away, and re-offered on the next run's reconnect —
+//! shard results are idempotent on the coordinator side, so re-offering
+//! after a coordinator restart is always safe, and the minutes of
+//! compute behind a lost shard survive both ends dying.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -50,20 +59,34 @@ pub struct WorkerConfig {
     pub threads: usize,
     /// Worker name, echoed into leases (diagnostics + lease ownership).
     pub name: String,
-    /// Stop after this many accepted shards (tests); `None` = run until
-    /// the coordinator reports completion.
+    /// Stop after this many computed shards — accepted *or* spooled
+    /// (tests); `None` = run until the coordinator reports completion.
     pub max_shards: Option<usize>,
+    /// Persist computed-but-unacknowledged shard results here and
+    /// re-offer them on the next run's reconnect. `None` = results that
+    /// fail to upload are dropped (the lease expires and the shard is
+    /// recomputed somewhere).
+    pub spool_dir: Option<PathBuf>,
 }
 
 impl WorkerConfig {
     pub fn new(connect: impl Into<String>, name: impl Into<String>) -> WorkerConfig {
-        WorkerConfig { connect: connect.into(), threads: 1, name: name.into(), max_shards: None }
+        WorkerConfig {
+            connect: connect.into(),
+            threads: 1,
+            name: name.into(),
+            max_shards: None,
+            spool_dir: None,
+        }
     }
 }
 
 pub struct WorkerReport {
-    /// Shards computed and accepted (duplicates count: the work was done).
+    /// Shards computed: accepted by the coordinator (duplicates count —
+    /// the work was done) or spooled for a later run.
     pub shards: usize,
+    /// Spool files from a previous run re-offered and accepted this run.
+    pub respooled: usize,
 }
 
 /// Run a worker to completion: fetch the spec, then lease → compute →
@@ -96,8 +119,51 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
     }
     let ga = Nsga2::new(spec.ga.clone());
 
+    // Re-offer any spooled shard results from a previous run before
+    // taking new leases: the coordinator accepts them idempotently, so
+    // work computed while it was down lands first.
+    let mut respooled = 0usize;
+    if let Some(dir) = &cfg.spool_dir {
+        for entry in spool_load(dir, &spec.fingerprint) {
+            match upload(
+                &mut client,
+                cfg,
+                &mut seq,
+                entry.shard,
+                entry.base,
+                &entry.designs,
+                &entry.predicted,
+            ) {
+                Ok(true) => {
+                    let _ = std::fs::remove_file(&entry.path);
+                    respooled += 1;
+                    eprintln!(
+                        "worker {}: re-offered spooled shard {} (accepted)",
+                        cfg.name, entry.shard
+                    );
+                }
+                Ok(false) => eprintln!(
+                    "worker {}: coordinator refused spooled shard {}; keeping {}",
+                    cfg.name,
+                    entry.shard,
+                    entry.path.display()
+                ),
+                Err(e) => eprintln!(
+                    "worker {}: re-offer of spooled shard {} failed ({e}); keeping {}",
+                    cfg.name,
+                    entry.shard,
+                    entry.path.display()
+                ),
+            }
+        }
+    }
+
     let hb = Heartbeater::spawn(&cfg.connect, &cfg.name);
-    let result = work_loop(&mut client, cfg, &mut seq, &spec, &surrogate, &inputs, &ga, &hb);
+    let mut result =
+        work_loop(&mut client, cfg, &mut seq, &spec, &surrogate, &inputs, &ga, &hb);
+    if let Ok(report) = &mut result {
+        report.respooled = respooled;
+    }
     hb.stop();
     // Best-effort sign-off so the coordinator releases any lease early
     // instead of waiting out the TTL. No reconnect-retry here: a
@@ -142,7 +208,7 @@ fn work_loop(
     let mut lease_failures = 0usize;
     loop {
         if cfg.max_shards.is_some_and(|m| shards >= m) {
-            return Ok(WorkerReport { shards });
+            return Ok(WorkerReport { shards, respooled: 0 });
         }
         let lease = ClusterRequest::Lease { worker: cfg.name.clone() };
         let resp = match rpc(client, &cfg.connect, &lease, seq) {
@@ -162,7 +228,7 @@ fn work_loop(
         };
         lease_failures = 0;
         if resp.get("complete").and_then(|c| c.as_bool()) == Some(true) {
-            return Ok(WorkerReport { shards });
+            return Ok(WorkerReport { shards, respooled: 0 });
         }
         if resp.get("wait").and_then(|w| w.as_bool()) == Some(true) {
             let ms = resp.get("retry_after_ms").and_then(|r| r.as_usize()).unwrap_or(50);
@@ -193,7 +259,24 @@ fn work_loop(
             cfg.threads.max(1),
             spec.grid_seed,
         );
-        let uploaded = upload(client, cfg, seq, shard, base, designs, predicted)?;
+        let uploaded = match upload(client, cfg, seq, shard, base, &designs, &predicted) {
+            Ok(accepted) => accepted,
+            Err(e) => {
+                // Transport-level upload failure (coordinator gone past
+                // the reconnect window, or an injected cluster.upload
+                // fault): the compute is done — spool it rather than
+                // throw it away, if a spool dir is configured.
+                let Some(dir) = &cfg.spool_dir else { return Err(e) };
+                let path =
+                    spool_write(dir, &spec.fingerprint, shard, base, &designs, &predicted)?;
+                eprintln!(
+                    "worker {}: upload of shard {shard} failed ({e}); spooled to {}",
+                    cfg.name,
+                    path.display()
+                );
+                true // computed: counts toward max_shards
+            }
+        };
         hb.end();
         if uploaded {
             shards += 1;
@@ -201,25 +284,113 @@ fn work_loop(
     }
 }
 
+/// Spool file format marker (versioned, like every on-disk artifact).
+const SPOOL_FORMAT: &str = "mlkaps-worker-spool-v1";
+
+struct SpoolEntry {
+    path: PathBuf,
+    shard: usize,
+    base: usize,
+    designs: Vec<Vec<f64>>,
+    predicted: Vec<f64>,
+}
+
+/// Persist one computed shard result. Write-then-rename, so a worker
+/// killed mid-spool leaves a `.tmp` that loading ignores, never a
+/// torn spool file.
+fn spool_write(
+    dir: &Path,
+    fingerprint: &str,
+    shard: usize,
+    base: usize,
+    designs: &[Vec<f64>],
+    predicted: &[f64],
+) -> Result<PathBuf, String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("create spool dir: {e}"))?;
+    let doc = Value::obj(vec![
+        ("format", Value::Str(SPOOL_FORMAT.into())),
+        ("fingerprint", Value::Str(fingerprint.into())),
+        ("shard", Value::Num(shard as f64)),
+        ("base", Value::Num(base as f64)),
+        ("designs", crate::optimizer::grid::rows_to_json(designs)),
+        (
+            "predicted",
+            Value::Arr(predicted.iter().map(|&x| Value::Num(x)).collect()),
+        ),
+    ]);
+    let path = dir.join(format!("shard-{fingerprint}-{shard:04}.json"));
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, doc.to_string()).map_err(|e| format!("write spool: {e}"))?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("commit spool: {e}"))?;
+    Ok(path)
+}
+
+/// Load every intact spool file for this run fingerprint. Files for
+/// other runs stay untouched; unreadable or torn files are skipped
+/// with a note (the shard they held will simply be recomputed).
+fn spool_load(dir: &Path, fingerprint: &str) -> Vec<SpoolEntry> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out = Vec::new();
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        match spool_parse(&path, fingerprint) {
+            Ok(Some(e)) => out.push(e),
+            Ok(None) => {} // another run's spool, or not a spool file
+            Err(e) => eprintln!("worker spool: skipping {}: {e}", path.display()),
+        }
+    }
+    // Deterministic offer order (read_dir order is not).
+    out.sort_by_key(|e| e.shard);
+    out
+}
+
+fn spool_parse(path: &Path, fingerprint: &str) -> Result<Option<SpoolEntry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let v = parse(&text).map_err(|e| format!("parse: {e}"))?;
+    if v.get("format").and_then(|f| f.as_str()) != Some(SPOOL_FORMAT) {
+        return Ok(None);
+    }
+    if v.get("fingerprint").and_then(|f| f.as_str()) != Some(fingerprint) {
+        return Ok(None);
+    }
+    let shard = v.get("shard").and_then(|s| s.as_usize()).ok_or("missing shard")?;
+    let base = v.get("base").and_then(|b| b.as_usize()).ok_or("missing base")?;
+    let designs =
+        crate::optimizer::grid::rows_from_json(v.get("designs").ok_or("missing designs")?)?;
+    let predicted =
+        crate::optimizer::grid::scalars_from_json(v.get("predicted").ok_or("missing predicted")?)?;
+    if designs.len() != predicted.len() {
+        return Err(format!("{} designs vs {} predictions", designs.len(), predicted.len()));
+    }
+    Ok(Some(SpoolEntry { path: path.to_path_buf(), shard, base, designs, predicted }))
+}
+
 /// Upload one shard, pipelining a heartbeat ahead of the result frame
 /// on the same connection. Returns whether the result was accepted
 /// (`false` = abandoned after retries; the lease will expire and the
-/// shard be recomputed elsewhere).
+/// shard be recomputed elsewhere). An `Err` is a transport-level
+/// failure — the caller spools the result if it can.
 fn upload(
     client: &mut ServedClient,
     cfg: &WorkerConfig,
     seq: &mut u64,
     shard: usize,
     base: usize,
-    designs: Vec<Vec<f64>>,
-    predicted: Vec<f64>,
+    designs: &[Vec<f64>],
+    predicted: &[f64],
 ) -> Result<bool, String> {
+    // An injected fault here models the upload path itself dying
+    // (chaos tests drive the spool satellite through it).
+    failpoint::fail(sites::CLUSTER_UPLOAD).map_err(|e| format!("cluster.upload: {e}"))?;
     let result = ClusterRequest::Result {
         worker: cfg.name.clone(),
         shard,
         base,
-        designs,
-        predicted,
+        designs: designs.to_vec(),
+        predicted: predicted.to_vec(),
     };
     for _ in 0..UPLOAD_RETRIES {
         let hb_id = next_id(seq);

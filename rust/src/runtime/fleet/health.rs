@@ -1,0 +1,174 @@
+//! Fleet health probing and STATS aggregation.
+//!
+//! A probe is one PING round trip on a child's dedicated control
+//! address under a hard socket timeout: a child that answers is alive
+//! (and reports which checkpoint fingerprint each of its variants is
+//! serving — the rolling-redeploy completion signal); a child that
+//! accepts the connection but never answers is **hung**, which a
+//! process-exit check alone would never notice.
+
+use std::time::Duration;
+
+use crate::runtime::server::client::ServedClient;
+use crate::util::failpoint::{self, sites};
+use crate::util::json::Value;
+
+/// One successful probe: the per-variant fingerprints the child
+/// reported (`None` for bare-model bundles).
+pub type ProbeReport = Vec<(String, Option<String>)>;
+
+/// PING a child over its control address. Every phase — connect, send,
+/// receive — is bounded by `timeout`, so a hung child fails the probe
+/// instead of pinning the supervisor's monitor thread.
+pub fn probe(control_addr: &str, timeout: Duration) -> Result<ProbeReport, String> {
+    failpoint::fail(sites::FLEET_HEALTH).map_err(|e| format!("fleet.health: {e}"))?;
+    let client = ServedClient::connect_str_with_retry(control_addr, timeout)?;
+    client.set_io_timeout(Some(timeout))?;
+    let mut client = client;
+    client.ping_fingerprints()
+}
+
+/// Pull one child's full STATS snapshot over its control address.
+pub fn child_stats(control_addr: &str, timeout: Duration) -> Result<Value, String> {
+    let client = ServedClient::connect_str_with_retry(control_addr, timeout)?;
+    client.set_io_timeout(Some(timeout))?;
+    let mut client = client;
+    client.stats()
+}
+
+/// Top-level daemon counters that sum meaningfully across a fleet.
+const FLEET_SUM_COUNTERS: &[&str] =
+    &["connections", "restarts", "sheds", "timeouts", "malformed_frames", "conn_panics"];
+
+/// Aggregate per-child STATS snapshots into one fleet view:
+///
+/// ```text
+/// {"ok": true,
+///  "children": [{"slot": 0, "pid": …, "state": "running",
+///                "restarts": …, "stats": {…full child STATS…}}, …],
+///  "fleet": {"children": …, "running": …, "degraded": …,
+///            "connections": …, "restarts": …, …,
+///            "kernels": {"<variant>": {"requests": …, "errors": …}}}}
+/// ```
+///
+/// The `fleet` object sums the recovery counters and the per-variant
+/// request/error counts across every child that answered; unreachable
+/// children contribute an entry with `"stats": null` so a degraded or
+/// restarting child is visible, not silently missing.
+pub fn aggregate(children: Vec<(usize, Option<u32>, &'static str, u64, Option<Value>)>) -> Value {
+    let mut total_running = 0u64;
+    let mut total_degraded = 0u64;
+    let mut sums: Vec<(&str, f64)> = FLEET_SUM_COUNTERS.iter().map(|&k| (k, 0.0)).collect();
+    let mut supervisor_restarts = 0u64;
+    let mut kernels: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    let mut rows = Vec::new();
+    for (slot, pid, state, restarts, stats) in children {
+        if state == "running" {
+            total_running += 1;
+        }
+        if state == "degraded" {
+            total_degraded += 1;
+        }
+        supervisor_restarts += restarts;
+        if let Some(stats) = &stats {
+            for (key, sum) in sums.iter_mut() {
+                if let Some(x) = stats.get(key).and_then(Value::as_f64) {
+                    *sum += x;
+                }
+            }
+            if let Some(Value::Obj(per_variant)) = stats.get("kernels") {
+                for (name, v) in per_variant {
+                    let entry = kernels.entry(name.clone()).or_insert((0.0, 0.0));
+                    entry.0 += v.get("requests").and_then(Value::as_f64).unwrap_or(0.0);
+                    entry.1 += v.get("errors").and_then(Value::as_f64).unwrap_or(0.0);
+                }
+            }
+        }
+        rows.push(Value::obj(vec![
+            ("slot", Value::Num(slot as f64)),
+            ("pid", pid.map(|p| Value::Num(p as f64)).unwrap_or(Value::Null)),
+            ("state", Value::Str(state.into())),
+            ("restarts", Value::Num(restarts as f64)),
+            ("stats", stats.unwrap_or(Value::Null)),
+        ]));
+    }
+    let kernels: std::collections::BTreeMap<String, Value> = kernels
+        .into_iter()
+        .map(|(name, (requests, errors))| {
+            (
+                name,
+                Value::obj(vec![
+                    ("requests", Value::Num(requests)),
+                    ("errors", Value::Num(errors)),
+                ]),
+            )
+        })
+        .collect();
+    let mut fleet = vec![
+        ("children", Value::Num(rows.len() as f64)),
+        ("running", Value::Num(total_running as f64)),
+        ("degraded", Value::Num(total_degraded as f64)),
+        ("child_restarts", Value::Num(supervisor_restarts as f64)),
+    ];
+    for (key, sum) in sums {
+        fleet.push((key, Value::Num(sum)));
+    }
+    fleet.push(("kernels", Value::Obj(kernels)));
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("children", Value::Arr(rows)),
+        ("fleet", Value::obj(fleet)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn child_stats_json(connections: f64, requests: f64) -> Value {
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("connections", Value::Num(connections)),
+            ("restarts", Value::Num(0.0)),
+            ("sheds", Value::Num(1.0)),
+            ("timeouts", Value::Num(0.0)),
+            ("malformed_frames", Value::Num(0.0)),
+            ("conn_panics", Value::Num(0.0)),
+            (
+                "kernels",
+                Value::obj(vec![(
+                    "toy-sum",
+                    Value::obj(vec![
+                        ("requests", Value::Num(requests)),
+                        ("errors", Value::Num(0.0)),
+                    ]),
+                )]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_keeps_unreachable_children_visible() {
+        let v = aggregate(vec![
+            (0, Some(100), "running", 0, Some(child_stats_json(5.0, 40.0))),
+            (1, Some(101), "running", 2, Some(child_stats_json(3.0, 60.0))),
+            (2, None, "degraded", 5, None),
+        ]);
+        let fleet = v.get("fleet").unwrap();
+        assert_eq!(fleet.get("children").and_then(Value::as_f64), Some(3.0));
+        assert_eq!(fleet.get("running").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(fleet.get("degraded").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(fleet.get("child_restarts").and_then(Value::as_f64), Some(7.0));
+        assert_eq!(fleet.get("connections").and_then(Value::as_f64), Some(8.0));
+        assert_eq!(fleet.get("sheds").and_then(Value::as_f64), Some(2.0));
+        let toy = fleet.get("kernels").unwrap().get("toy-sum").unwrap();
+        assert_eq!(toy.get("requests").and_then(Value::as_f64), Some(100.0));
+        let rows = v.get("children").and_then(Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2].get("stats"), Some(&Value::Null));
+        assert_eq!(
+            rows[2].get("state").and_then(Value::as_str),
+            Some("degraded")
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! The serving fleet: a zero-dependency **process-level** supervisor
+//! over N `mlkaps served` children.
+//!
+//! PR 7's `supervise()` restarts *threads* inside one daemon; anything
+//! that kills the process — a panic outside the supervised loops, an
+//! OOM kill, a wedged allocator — still takes out all serving. The
+//! fleet moves the blast radius one level up: the supervisor fork/execs
+//! N child daemons that share one TCP listen address via `SO_REUSEPORT`
+//! ([`crate::runtime::server::transport::Listener::bind_reuseport`]),
+//! so the kernel balances connections across processes and the death of
+//! one child costs 1/N of capacity for the restart window instead of
+//! 100% of it.
+//!
+//! Layout:
+//!
+//! * [`supervisor`] — child lifecycle: spawn, crash/hang detection,
+//!   exponential-backoff restarts, the crash-loop circuit breaker
+//!   (a child that dies K times inside a window is parked as
+//!   `degraded` while its siblings keep serving), and rolling
+//!   redeploys.
+//! * [`health`] — the probe (the wire protocol's PING verb, which
+//!   reports per-variant fingerprints) and fleet-wide STATS
+//!   aggregation.
+//!
+//! Every child gets a **dedicated control address** (a unix socket
+//! under [`FleetConfig::control_dir`]) speaking the identical protocol:
+//! the shared data address is kernel-balanced, so probing it would land
+//! on an arbitrary sibling — only the control address can ask *this*
+//! child "are you alive, and which fingerprint are you serving?".
+//!
+//! Children run with their in-process hot-reload watcher disabled
+//! (`--poll-ms 0`): redeploys are owned by the supervisor, which polls
+//! the watched checkpoint fingerprints itself and rolls the fleet one
+//! child at a time — DRAIN the old process, wait for it to exit, spawn
+//! the replacement, and only move on once the replacement answers PING
+//! with the new fingerprint. Zero-downtime redeploy composed entirely
+//! from verbs that already exist.
+//!
+//! Failure injection: the `fleet.spawn`, `fleet.health`, and
+//! `fleet.drain` failpoints ([`crate::util::failpoint::sites`]) make
+//! every failure mode deterministically reproducible in
+//! `tests/chaos_fleet.rs`.
+
+pub mod health;
+pub mod supervisor;
+
+pub use supervisor::{ChildInfo, ChildState, Fleet};
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Fleet tuning knobs. The defaults are production-shaped; tests dial
+/// the probe / backoff / crash-window timings way down.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// The `mlkaps` binary to exec for each child (defaults to the
+    /// supervisor's own executable).
+    pub binary: PathBuf,
+    /// Shared TCP data address every child binds (`host:port`; the
+    /// port must be explicit — the kernel can only balance one port).
+    pub addr: String,
+    /// Number of child daemons.
+    pub children: usize,
+    /// Share `addr` across children via `SO_REUSEPORT` (the default).
+    /// Off, each child binds `port + slot` instead — the fallback for
+    /// platforms without `SO_REUSEPORT`.
+    pub reuseport: bool,
+    /// Serving flags forwarded verbatim to every child's `served`
+    /// invocation (`--dir`/`--name`/`--model`/`--profile`/...).
+    pub child_args: Vec<String>,
+    /// Directory for per-child control sockets (created if missing).
+    pub control_dir: PathBuf,
+    /// Checkpoint directories watched for rolling redeploys (typically
+    /// the `--dir` flags echoed out of `child_args`). Empty = no
+    /// redeploy watcher.
+    pub watch_dirs: Vec<PathBuf>,
+    /// Health-probe cadence per child.
+    pub probe_interval: Duration,
+    /// Socket timeout on one probe: a child that accepts but never
+    /// answers is hung, not slow.
+    pub probe_timeout: Duration,
+    /// Consecutive failed probes of a *running* child before the
+    /// supervisor declares it hung and kills it.
+    pub hung_after: u32,
+    /// How long a freshly spawned child may take to answer its first
+    /// probe (checkpoint loading) before it is treated as hung.
+    pub boot_grace: Duration,
+    /// First restart delay after a child death; doubles per consecutive
+    /// death up to `backoff_cap`, resets once the child probes healthy.
+    pub backoff_start: Duration,
+    pub backoff_cap: Duration,
+    /// Crash-loop circuit breaker: `crash_k` deaths inside
+    /// `crash_window` parks the slot as degraded (no further restarts)
+    /// while the remaining children keep serving.
+    pub crash_k: u32,
+    pub crash_window: Duration,
+    /// Cadence of the watched-fingerprint poll driving redeploys.
+    pub redeploy_poll: Duration,
+    /// How long a DRAIN'd child gets to exit before being killed.
+    pub drain_timeout: Duration,
+    /// How long a redeploy replacement gets to come up serving the new
+    /// fingerprint before the roll logs a failure and moves on (the
+    /// monitor keeps restarting the slot either way).
+    pub redeploy_timeout: Duration,
+}
+
+impl FleetConfig {
+    pub fn new(addr: impl Into<String>, children: usize) -> FleetConfig {
+        let binary = std::env::current_exe().unwrap_or_else(|_| PathBuf::from("mlkaps"));
+        let control_dir =
+            std::env::temp_dir().join(format!("mlkaps-fleet-{}", std::process::id()));
+        FleetConfig {
+            binary,
+            addr: addr.into(),
+            children,
+            reuseport: true,
+            child_args: Vec::new(),
+            control_dir,
+            watch_dirs: Vec::new(),
+            probe_interval: Duration::from_millis(200),
+            probe_timeout: Duration::from_secs(1),
+            hung_after: 3,
+            boot_grace: Duration::from_secs(30),
+            backoff_start: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(5),
+            crash_k: 5,
+            crash_window: Duration::from_secs(30),
+            redeploy_poll: Duration::from_millis(500),
+            drain_timeout: Duration::from_secs(10),
+            redeploy_timeout: Duration::from_secs(60),
+        }
+    }
+
+    /// The data address child `slot` serves: the shared address under
+    /// `SO_REUSEPORT`, or `port + slot` in the per-port fallback.
+    pub fn child_addr(&self, slot: usize) -> Result<String, String> {
+        if self.reuseport {
+            return Ok(self.addr.clone());
+        }
+        let (host, port) = self
+            .addr
+            .rsplit_once(':')
+            .ok_or_else(|| format!("fleet addr '{}' is not host:port", self.addr))?;
+        let port: u16 = port
+            .parse()
+            .map_err(|_| format!("fleet addr '{}' has a non-numeric port", self.addr))?;
+        if port == 0 {
+            return Err("per-port fallback needs an explicit base port (not 0)".into());
+        }
+        let port = port
+            .checked_add(slot as u16)
+            .ok_or_else(|| format!("per-port fallback overflows past port {port}"))?;
+        Ok(format!("{host}:{port}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn child_addr_shares_or_offsets_the_port() {
+        let mut cfg = FleetConfig::new("127.0.0.1:4517", 3);
+        assert_eq!(cfg.child_addr(2).unwrap(), "127.0.0.1:4517");
+        cfg.reuseport = false;
+        assert_eq!(cfg.child_addr(0).unwrap(), "127.0.0.1:4517");
+        assert_eq!(cfg.child_addr(2).unwrap(), "127.0.0.1:4519");
+        cfg.addr = "127.0.0.1:0".into();
+        assert!(cfg.child_addr(0).unwrap_err().contains("explicit base port"));
+        cfg.addr = "no-port".into();
+        assert!(cfg.child_addr(0).is_err());
+        cfg.addr = "127.0.0.1:65535".into();
+        assert!(cfg.child_addr(1).unwrap_err().contains("overflows"));
+    }
+}

@@ -1,0 +1,669 @@
+//! The fleet supervisor: child process lifecycle, crash/hang recovery,
+//! the crash-loop circuit breaker, and rolling redeploys.
+//!
+//! One **monitor thread** owns all lifecycle decisions; the public API
+//! ([`Fleet::stats`], [`Fleet::kill_child`], …) only snapshots or pokes
+//! the slot table under its mutex, so there is exactly one writer of
+//! process state. The monitor's duties, in order, every tick:
+//!
+//! 1. **Exit detection** — `try_wait` on every child; an exited child
+//!    is a *death* (reaped immediately, no zombies).
+//! 2. **Hang detection** — PING each child's control address on the
+//!    probe cadence; [`FleetConfig::hung_after`] consecutive failures
+//!    on a running child (or a boot that exceeds
+//!    [`FleetConfig::boot_grace`]) kills it — a death.
+//! 3. **Restart** — each death schedules a respawn after the slot's
+//!    exponential backoff, unless the slot has died
+//!    [`FleetConfig::crash_k`] times inside
+//!    [`FleetConfig::crash_window`] — then the circuit breaker parks
+//!    it as [`ChildState::Degraded`] and the remaining children keep
+//!    serving (degradation beats a fleet-wide crash loop).
+//! 4. **Redeploy watch** — poll the watched checkpoint directories'
+//!    fingerprints; a change triggers a rolling redeploy: one child at
+//!    a time, DRAIN the old process (it answers its in-flight requests
+//!    and exits 0), spawn the replacement, and only move to the next
+//!    child once the replacement answers PING with the new
+//!    fingerprint. Capacity never drops by more than one child.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::pipeline::checkpoint;
+use crate::runtime::server::client::ServedClient;
+use crate::util::failpoint::{self, sites};
+use crate::util::json::Value;
+
+use super::health::{self, ProbeReport};
+use super::FleetConfig;
+
+/// Lifecycle state of one child slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChildState {
+    /// Spawned, not yet answering its control PING (boot grace applies).
+    Starting,
+    /// Probing healthy.
+    Running,
+    /// Dead; a respawn is scheduled after the slot's backoff.
+    Backoff,
+    /// Crash-loop circuit breaker tripped: parked, no further restarts.
+    Degraded,
+}
+
+impl ChildState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChildState::Starting => "starting",
+            ChildState::Running => "running",
+            ChildState::Backoff => "backoff",
+            ChildState::Degraded => "degraded",
+        }
+    }
+}
+
+/// Public snapshot of one slot ([`Fleet::children`]).
+#[derive(Clone, Debug)]
+pub struct ChildInfo {
+    pub slot: usize,
+    pub pid: Option<u32>,
+    pub state: ChildState,
+    /// Respawns after the initial spawn.
+    pub restarts: u64,
+    pub control_addr: String,
+    pub data_addr: String,
+    /// Per-variant fingerprints from the last successful probe.
+    pub fingerprints: ProbeReport,
+}
+
+struct Slot {
+    idx: usize,
+    child: Option<Child>,
+    state: ChildState,
+    control: String,
+    data_addr: String,
+    /// Bumped per spawn; the control socket path embeds it so a
+    /// replacement never fights its predecessor's stale socket.
+    incarnation: u64,
+    consecutive_failures: u32,
+    spawned_at: Instant,
+    last_probe: Instant,
+    /// Recent death instants inside the crash window (circuit breaker).
+    deaths: VecDeque<Instant>,
+    backoff: Duration,
+    backoff_until: Instant,
+    restarts: u64,
+    fingerprints: ProbeReport,
+}
+
+struct Inner {
+    cfg: FleetConfig,
+    slots: Mutex<Vec<Slot>>,
+    stop: AtomicBool,
+}
+
+/// A running fleet. Dropping it shuts every child down and joins the
+/// monitor thread.
+pub struct Fleet {
+    inner: Arc<Inner>,
+    monitor: Option<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Spawn every child and start the monitor thread. Children boot
+    /// asynchronously — use [`Fleet::wait_ready`] to block until the
+    /// whole fleet answers its control PING.
+    pub fn start(cfg: FleetConfig) -> Result<Fleet, String> {
+        if cfg.children == 0 {
+            return Err("a fleet needs at least one child".into());
+        }
+        if !cfg.reuseport {
+            // Fail early on an unusable base port instead of per-child.
+            cfg.child_addr(cfg.children - 1)?;
+        }
+        std::fs::create_dir_all(&cfg.control_dir)
+            .map_err(|e| format!("create control dir {}: {e}", cfg.control_dir.display()))?;
+        let now = Instant::now();
+        let mut slots = Vec::with_capacity(cfg.children);
+        for idx in 0..cfg.children {
+            let mut slot = Slot {
+                idx,
+                child: None,
+                state: ChildState::Backoff,
+                control: String::new(),
+                data_addr: String::new(),
+                incarnation: 0,
+                consecutive_failures: 0,
+                spawned_at: now,
+                last_probe: now,
+                deaths: VecDeque::new(),
+                backoff: cfg.backoff_start,
+                backoff_until: now,
+                restarts: 0,
+                fingerprints: Vec::new(),
+            };
+            try_spawn(&cfg, &mut slot);
+            slots.push(slot);
+        }
+        let inner = Arc::new(Inner {
+            cfg,
+            slots: Mutex::new(slots),
+            stop: AtomicBool::new(false),
+        });
+        let monitor_inner = inner.clone();
+        let monitor = std::thread::Builder::new()
+            .name("mlkaps-fleet".into())
+            .spawn(move || monitor(monitor_inner))
+            .map_err(|e| format!("spawn fleet monitor: {e}"))?;
+        Ok(Fleet { inner, monitor: Some(monitor) })
+    }
+
+    /// The shared data address clients dial.
+    pub fn addr(&self) -> &str {
+        &self.inner.cfg.addr
+    }
+
+    /// Snapshot of every slot.
+    pub fn children(&self) -> Vec<ChildInfo> {
+        let slots = self.inner.slots.lock().unwrap();
+        slots
+            .iter()
+            .map(|s| ChildInfo {
+                slot: s.idx,
+                pid: s.child.as_ref().map(|c| c.id()),
+                state: s.state,
+                restarts: s.restarts,
+                control_addr: s.control.clone(),
+                data_addr: s.data_addr.clone(),
+                fingerprints: s.fingerprints.clone(),
+            })
+            .collect()
+    }
+
+    /// Block until every non-degraded child probes healthy. Errors if
+    /// the deadline passes or the whole fleet has been parked.
+    pub fn wait_ready(&self, timeout: Duration) -> Result<(), String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let (running, degraded, total) = {
+                let slots = self.inner.slots.lock().unwrap();
+                let running =
+                    slots.iter().filter(|s| s.state == ChildState::Running).count();
+                let degraded =
+                    slots.iter().filter(|s| s.state == ChildState::Degraded).count();
+                (running, degraded, slots.len())
+            };
+            if degraded == total {
+                return Err("every fleet child is parked as degraded".into());
+            }
+            if running + degraded == total {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "fleet not ready after {:.1}s ({running}/{total} running)",
+                    timeout.as_secs_f64()
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Block until every non-degraded child reports `fingerprint` among
+    /// its served variants (rolling-redeploy completion, from the
+    /// outside). Returns whether that happened before the deadline.
+    pub fn wait_fingerprint(&self, fingerprint: &str, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let slots = self.inner.slots.lock().unwrap();
+                let done = slots.iter().all(|s| {
+                    s.state == ChildState::Degraded
+                        || (s.state == ChildState::Running
+                            && s.fingerprints
+                                .iter()
+                                .any(|(_, fp)| fp.as_deref() == Some(fingerprint)))
+                });
+                if done && slots.iter().any(|s| s.state == ChildState::Running) {
+                    return true;
+                }
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Aggregated fleet STATS: every child's snapshot plus fleet-wide
+    /// sums (see [`health::aggregate`]).
+    pub fn stats(&self) -> Value {
+        let snapshot: Vec<(usize, Option<u32>, &'static str, u64, String)> = {
+            let slots = self.inner.slots.lock().unwrap();
+            slots
+                .iter()
+                .map(|s| {
+                    (
+                        s.idx,
+                        s.child.as_ref().map(|c| c.id()),
+                        s.state.name(),
+                        s.restarts,
+                        s.control.clone(),
+                    )
+                })
+                .collect()
+        };
+        // Probe outside the lock: a slow child must not block
+        // kill_child or the monitor.
+        let rows = snapshot
+            .into_iter()
+            .map(|(idx, pid, state, restarts, control)| {
+                let stats = (state == "running")
+                    .then(|| health::child_stats(&control, self.inner.cfg.probe_timeout).ok())
+                    .flatten();
+                (idx, pid, state, restarts, stats)
+            })
+            .collect();
+        health::aggregate(rows)
+    }
+
+    /// Test hook: SIGKILL a child outright (what `Child::kill` sends on
+    /// unix), as an OOM killer would. Returns the killed pid.
+    pub fn kill_child(&self, slot: usize) -> Result<u32, String> {
+        let mut slots = self.inner.slots.lock().unwrap();
+        let s = slots.get_mut(slot).ok_or_else(|| format!("no slot {slot}"))?;
+        let child = s.child.as_mut().ok_or_else(|| format!("slot {slot} has no child"))?;
+        let pid = child.id();
+        child.kill().map_err(|e| format!("kill slot {slot}: {e}"))?;
+        Ok(pid)
+    }
+
+    /// Stop the monitor and shut every child down (graceful SHUTDOWN
+    /// over the control address, then a bounded wait, then SIGKILL).
+    pub fn shutdown(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        let mut slots = self.inner.slots.lock().unwrap();
+        for s in slots.iter_mut() {
+            let Some(mut child) = s.child.take() else { continue };
+            let _ = ServedClient::connect_str(&s.control).and_then(|mut c| {
+                c.set_io_timeout(Some(Duration::from_millis(500)))?;
+                c.shutdown()
+            });
+            let deadline = Instant::now() + Duration::from_secs(2);
+            while Instant::now() < deadline {
+                if matches!(child.try_wait(), Ok(Some(_))) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            if !matches!(child.try_wait(), Ok(Some(_))) {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Spawn (or respawn) the slot's child process. A failure — including
+/// an injected `fleet.spawn` fault — is recorded as a death, so a
+/// persistently unspawnable child trips the same circuit breaker as a
+/// persistently crashing one.
+fn try_spawn(cfg: &FleetConfig, slot: &mut Slot) {
+    slot.incarnation += 1;
+    let spawned = spawn_child(cfg, slot.idx, slot.incarnation);
+    match spawned {
+        Ok((child, control, data_addr)) => {
+            eprintln!(
+                "mlkaps fleet: child {} pid {} serving {} (control {})",
+                slot.idx,
+                child.id(),
+                data_addr,
+                control
+            );
+            if slot.incarnation > 1 {
+                slot.restarts += 1;
+            }
+            slot.child = Some(child);
+            slot.control = control;
+            slot.data_addr = data_addr;
+            slot.state = ChildState::Starting;
+            slot.spawned_at = Instant::now();
+            slot.consecutive_failures = 0;
+            // Probe as soon as the monitor next looks at this slot.
+            slot.last_probe = slot.spawned_at - cfg.probe_interval;
+        }
+        Err(e) => {
+            eprintln!("mlkaps fleet: child {} spawn failed: {e}", slot.idx);
+            record_death(cfg, slot);
+        }
+    }
+}
+
+fn spawn_child(
+    cfg: &FleetConfig,
+    idx: usize,
+    incarnation: u64,
+) -> Result<(Child, String, String), String> {
+    failpoint::fail(sites::FLEET_SPAWN).map_err(|e| format!("fleet.spawn: {e}"))?;
+    let data_addr = cfg.child_addr(idx)?;
+    let control_path = cfg.control_dir.join(format!("child-{idx}-{incarnation}.sock"));
+    let control = format!("unix:{}", control_path.display());
+    let mut cmd = Command::new(&cfg.binary);
+    cmd.arg("served")
+        .args(["--addr", &data_addr])
+        .args(["--control-addr", &control])
+        // The supervisor owns redeploys; in-process hot-reload off.
+        .args(["--poll-ms", "0"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .stdin(Stdio::null());
+    if cfg.reuseport {
+        cmd.args(["--reuseport", "1"]);
+    }
+    cmd.args(&cfg.child_args);
+    let child = cmd.spawn().map_err(|e| format!("spawn {}: {e}", cfg.binary.display()))?;
+    Ok((child, control, data_addr))
+}
+
+/// Register one death of the slot's child: reap it, either park the
+/// slot (circuit breaker) or schedule a backoff respawn.
+fn record_death(cfg: &FleetConfig, slot: &mut Slot) {
+    if let Some(mut child) = slot.child.take() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    slot.consecutive_failures = 0;
+    slot.fingerprints.clear();
+    let now = Instant::now();
+    slot.deaths.push_back(now);
+    while slot
+        .deaths
+        .front()
+        .is_some_and(|&t| now.duration_since(t) > cfg.crash_window)
+    {
+        slot.deaths.pop_front();
+    }
+    if slot.deaths.len() as u32 >= cfg.crash_k {
+        slot.state = ChildState::Degraded;
+        eprintln!(
+            "mlkaps fleet: parked child {} as degraded ({} deaths in {:.1}s); \
+             siblings keep serving",
+            slot.idx,
+            slot.deaths.len(),
+            cfg.crash_window.as_secs_f64()
+        );
+        return;
+    }
+    slot.state = ChildState::Backoff;
+    slot.backoff_until = now + slot.backoff;
+    eprintln!(
+        "mlkaps fleet: restarting child {} in {}ms",
+        slot.idx,
+        slot.backoff.as_millis()
+    );
+    slot.backoff = (slot.backoff * 2).min(cfg.backoff_cap);
+}
+
+/// The monitor thread: lifecycle pass + redeploy watch, forever.
+fn monitor(inner: Arc<Inner>) {
+    let cfg = &inner.cfg;
+    let tick = (cfg.probe_interval / 4).clamp(Duration::from_millis(5), Duration::from_millis(100));
+    let mut watch_fps: Vec<Option<String>> =
+        cfg.watch_dirs.iter().map(|d| checkpoint::read_fingerprint(d).ok()).collect();
+    let mut last_watch_poll = Instant::now();
+    while !inner.stop.load(Ordering::SeqCst) {
+        lifecycle_pass(&inner);
+
+        // Redeploy watch: a changed fingerprint on any watched
+        // checkpoint directory rolls the fleet.
+        if !cfg.watch_dirs.is_empty() && last_watch_poll.elapsed() >= cfg.redeploy_poll {
+            last_watch_poll = Instant::now();
+            let mut changed = false;
+            for (dir, known) in cfg.watch_dirs.iter().zip(watch_fps.iter_mut()) {
+                // Only a *successful* read counts: a directory caught
+                // mid-rewrite fails verification in the replacement
+                // child anyway, so wait for a clean fingerprint.
+                if let Ok(fp) = checkpoint::read_fingerprint(dir) {
+                    if known.as_deref() != Some(&fp) {
+                        *known = Some(fp);
+                        changed = true;
+                    }
+                }
+            }
+            if changed {
+                let targets: Vec<String> = watch_fps.iter().flatten().cloned().collect();
+                rolling_redeploy(&inner, &targets);
+            }
+        }
+        std::thread::sleep(tick);
+    }
+}
+
+/// One pass over every slot: exit detection, hang detection, scheduled
+/// respawns.
+fn lifecycle_pass(inner: &Arc<Inner>) {
+    let cfg = &inner.cfg;
+    let n = { inner.slots.lock().unwrap().len() };
+    for idx in 0..n {
+        // Decide on a probe while holding the lock, run it without:
+        // a probe blocks up to probe_timeout and must not stall
+        // kill_child / stats / shutdown.
+        let probe_target: Option<String> = {
+            let mut slots = inner.slots.lock().unwrap();
+            let slot = &mut slots[idx];
+            match slot.state {
+                ChildState::Degraded => None,
+                ChildState::Backoff => {
+                    if Instant::now() >= slot.backoff_until {
+                        try_spawn(cfg, slot);
+                    }
+                    None
+                }
+                ChildState::Starting | ChildState::Running => {
+                    let exited = match slot.child.as_mut() {
+                        Some(child) => !matches!(child.try_wait(), Ok(None)),
+                        None => true,
+                    };
+                    if exited {
+                        eprintln!("mlkaps fleet: child {} exited", slot.idx);
+                        record_death(cfg, slot);
+                        None
+                    } else if slot.last_probe.elapsed() >= cfg.probe_interval {
+                        slot.last_probe = Instant::now();
+                        Some(slot.control.clone())
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+        let Some(control) = probe_target else { continue };
+        let probed = health::probe(&control, cfg.probe_timeout);
+        let mut slots = inner.slots.lock().unwrap();
+        let slot = &mut slots[idx];
+        // The slot may have moved on while the probe ran (killed by a
+        // test hook, a redeploy, …): only apply the result if it still
+        // describes the same incarnation.
+        if slot.control != control {
+            continue;
+        }
+        match probed {
+            Ok(fps) => {
+                slot.fingerprints = fps;
+                slot.consecutive_failures = 0;
+                slot.backoff = cfg.backoff_start;
+                if slot.state == ChildState::Starting {
+                    slot.state = ChildState::Running;
+                    eprintln!("mlkaps fleet: child {} ready", slot.idx);
+                }
+            }
+            Err(e) => {
+                slot.consecutive_failures += 1;
+                let hung = match slot.state {
+                    ChildState::Starting => slot.spawned_at.elapsed() > cfg.boot_grace,
+                    _ => slot.consecutive_failures >= cfg.hung_after,
+                };
+                if hung {
+                    eprintln!(
+                        "mlkaps fleet: child {} is hung ({} failed probes: {e}); killing",
+                        slot.idx, slot.consecutive_failures
+                    );
+                    record_death(cfg, slot);
+                }
+            }
+        }
+    }
+}
+
+/// Roll the fleet onto a new checkpoint epoch, one child at a time:
+/// DRAIN the old process, wait for it to exit (kill on timeout), spawn
+/// the replacement, and wait until it answers PING with every target
+/// fingerprint before touching the next child. Degraded slots are
+/// skipped; slots already mid-restart just respawn into the new epoch
+/// naturally (their replacement loads the updated directory).
+fn rolling_redeploy(inner: &Arc<Inner>, targets: &[String]) {
+    let cfg = &inner.cfg;
+    eprintln!(
+        "mlkaps fleet: rolling redeploy to fingerprint(s) [{}]",
+        targets.join(", ")
+    );
+    let n = { inner.slots.lock().unwrap().len() };
+    for idx in 0..n {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let control = {
+            let slots = inner.slots.lock().unwrap();
+            let slot = &slots[idx];
+            match slot.state {
+                ChildState::Starting | ChildState::Running => slot.control.clone(),
+                // Backoff slots respawn into the new epoch on their
+                // own; degraded slots stay parked.
+                ChildState::Backoff | ChildState::Degraded => continue,
+            }
+        };
+
+        // DRAIN the old child: it answers its in-flight requests and
+        // exits 0. A drain failure (hung child, injected fleet.drain
+        // fault) degrades to a kill — the roll must finish either way.
+        let drained = failpoint::fail(sites::FLEET_DRAIN)
+            .map_err(|e| format!("fleet.drain: {e}"))
+            .and_then(|()| {
+                let mut c = ServedClient::connect_str_with_retry(&control, cfg.probe_timeout)?;
+                c.set_io_timeout(Some(cfg.probe_timeout))?;
+                c.drain()
+            });
+        if let Err(e) = &drained {
+            eprintln!("mlkaps fleet: drain of child {idx} failed ({e}); killing instead");
+        }
+
+        // Wait for the old process to exit (the DRAIN settle), bounded.
+        let deadline = Instant::now() + cfg.drain_timeout;
+        loop {
+            let mut slots = inner.slots.lock().unwrap();
+            let slot = &mut slots[idx];
+            if slot.control != control {
+                break; // something else already recycled this slot
+            }
+            let gone = match slot.child.as_mut() {
+                Some(child) => !matches!(child.try_wait(), Ok(None)),
+                None => true,
+            };
+            if gone || drained.is_err() || Instant::now() >= deadline {
+                if let Some(mut child) = slot.child.take() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                // A drained exit is deliberate, not a crash: the
+                // replacement spawns immediately and the circuit
+                // breaker does not hear about it.
+                try_spawn(cfg, slot);
+                break;
+            }
+            drop(slots);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Wait for the replacement to serve the new epoch before
+        // touching the next child — this is what makes the roll
+        // zero-downtime: at most one child is ever out of rotation.
+        let deadline = Instant::now() + cfg.redeploy_timeout;
+        loop {
+            let (state, control_now) = {
+                let slots = inner.slots.lock().unwrap();
+                (slots[idx].state, slots[idx].control.clone())
+            };
+            if state == ChildState::Degraded {
+                eprintln!("mlkaps fleet: child {idx} degraded mid-redeploy; moving on");
+                break;
+            }
+            if state == ChildState::Starting || state == ChildState::Running {
+                if let Ok(fps) = health::probe(&control_now, cfg.probe_timeout) {
+                    let served: Vec<&str> =
+                        fps.iter().filter_map(|(_, fp)| fp.as_deref()).collect();
+                    let caught_up = targets.iter().all(|t| served.contains(&t.as_str()));
+                    let mut slots = inner.slots.lock().unwrap();
+                    let slot = &mut slots[idx];
+                    if slot.control == control_now {
+                        slot.fingerprints = fps.clone();
+                        slot.consecutive_failures = 0;
+                        if slot.state == ChildState::Starting {
+                            slot.state = ChildState::Running;
+                        }
+                    }
+                    if caught_up {
+                        eprintln!(
+                            "mlkaps fleet: child {idx} redeployed (serving new fingerprint)"
+                        );
+                        break;
+                    }
+                }
+            } else {
+                // Backoff: the monitor's lifecycle pass is paused while
+                // we roll, so respawn it here once its delay elapses.
+                let mut slots = inner.slots.lock().unwrap();
+                let slot = &mut slots[idx];
+                if slot.state == ChildState::Backoff && Instant::now() >= slot.backoff_until
+                {
+                    try_spawn(cfg, slot);
+                }
+            }
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "mlkaps fleet: child {idx} did not reach the new fingerprint within \
+                     {:.1}s; continuing the roll (monitor keeps restarting it)",
+                    cfg.redeploy_timeout.as_secs_f64()
+                );
+                break;
+            }
+            if inner.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    eprintln!("mlkaps fleet: rolling redeploy complete");
+}
+
+/// Check a path looks like an executable we can exec (early, friendly
+/// error for `--binary` typos instead of N spawn failures).
+pub fn check_binary(path: &Path) -> Result<(), String> {
+    let meta = std::fs::metadata(path)
+        .map_err(|e| format!("fleet binary {}: {e}", path.display()))?;
+    if !meta.is_file() {
+        return Err(format!("fleet binary {} is not a file", path.display()));
+    }
+    Ok(())
+}

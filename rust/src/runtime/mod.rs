@@ -20,6 +20,7 @@
 //! instead of a link failure. [`Manifest`] parsing works in both builds.
 
 pub mod cluster;
+pub mod fleet;
 pub mod server;
 pub mod serving;
 

@@ -359,6 +359,29 @@ impl ServedClient {
         self.roundtrip(&Request::Ping).map(|_| ())
     }
 
+    /// Liveness probe returning the per-variant checkpoint fingerprints
+    /// the peer is serving (`None` for bare-model bundles). This is the
+    /// fleet supervisor's health *and* redeploy probe: it confirms not
+    /// just that the process answers but which epoch it answers with.
+    pub fn ping_fingerprints(&mut self) -> Result<Vec<(String, Option<String>)>, String> {
+        let v = self.roundtrip(&Request::Ping)?;
+        let mut out = Vec::new();
+        if let Some(Value::Obj(m)) = v.get("fingerprints") {
+            for (name, fp) in m {
+                out.push((name.clone(), fp.as_str().map(str::to_string)));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Bound every subsequent read/write on this connection. A health
+    /// probe of a hung peer must fail the probe instead of pinning the
+    /// prober: `recv_json` surfaces the timeout as an error.
+    pub fn set_io_timeout(&self, t: Option<Duration>) -> Result<(), String> {
+        self.stream.set_read_timeout(t).map_err(|e| format!("set read timeout: {e}"))?;
+        self.stream.set_write_timeout(t).map_err(|e| format!("set write timeout: {e}"))
+    }
+
     /// Force an immediate hot-reload poll of every watched directory;
     /// returns the variant names that swapped epochs.
     pub fn reload(&mut self) -> Result<Vec<String>, String> {

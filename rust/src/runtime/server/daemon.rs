@@ -91,6 +91,16 @@ pub struct DaemonConfig {
     /// deliver is disconnected once this window elapses mid-write.
     /// `Duration::ZERO` disables the timeout.
     pub write_timeout: Duration,
+    /// Optional second listen address speaking the identical protocol.
+    /// The fleet supervisor health-probes each child here: the shared
+    /// `SO_REUSEPORT` data address is kernel-balanced, so a connection
+    /// to it lands on an arbitrary sibling — only a dedicated per-child
+    /// address can ask *this* process "are you alive, and which
+    /// fingerprint are you serving?".
+    pub control_addr: Option<String>,
+    /// Bind the data address with `SO_REUSEPORT` so sibling processes
+    /// can share it (fleet children; TCP only).
+    pub reuseport: bool,
 }
 
 impl Default for DaemonConfig {
@@ -104,6 +114,8 @@ impl Default for DaemonConfig {
             queue_capacity: 4096,
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
+            control_addr: None,
+            reuseport: false,
         }
     }
 }
@@ -126,6 +138,9 @@ struct Shared {
     in_flight: AtomicU64,
     started: Instant,
     bound: BoundAddr,
+    /// Where the optional control listener ended up (poked on shutdown
+    /// alongside the data listener).
+    control_bound: Option<BoundAddr>,
     decide_threads: usize,
     /// Per-connection request read timeout (None = disabled).
     read_timeout: Option<Duration>,
@@ -204,8 +219,17 @@ impl Daemon {
         if registry.is_empty() {
             return Err("refusing to serve an empty registry".into());
         }
-        let listener = Listener::bind(&cfg.addr)?;
+        let listener = if cfg.reuseport {
+            Listener::bind_reuseport(&cfg.addr)?
+        } else {
+            Listener::bind(&cfg.addr)?
+        };
         let bound = listener.bound();
+        let control_listener = match &cfg.control_addr {
+            Some(addr) => Some(Listener::bind(addr)?),
+            None => None,
+        };
+        let control_bound = control_listener.as_ref().map(|l| l.bound());
         let queue = BatchQueue::new(cfg.queue_capacity);
         let retry_after_ms =
             retry_hint_ms(cfg.batch_window, cfg.queue_capacity, cfg.batch_max);
@@ -219,6 +243,7 @@ impl Daemon {
             in_flight: AtomicU64::new(0),
             started: Instant::now(),
             bound,
+            control_bound,
             decide_threads: cfg.threads,
             read_timeout: (cfg.read_timeout > Duration::ZERO).then_some(cfg.read_timeout),
             write_timeout: (cfg.write_timeout > Duration::ZERO)
@@ -242,7 +267,13 @@ impl Daemon {
                 .map_err(|e| format!("spawn batcher: {e}"))?,
         );
 
-        if shared.registry.iter().any(|v| v.slot.dir().is_some()) {
+        // `poll_interval == 0` disables the in-process hot-reload
+        // watcher entirely (fleet children: the supervisor owns
+        // redeploys at the process level, and a zero interval would
+        // busy-loop the wait below anyway).
+        if cfg.poll_interval > Duration::ZERO
+            && shared.registry.iter().any(|v| v.slot.dir().is_some())
+        {
             let sh = shared.clone();
             let interval = cfg.poll_interval;
             handles.push(
@@ -264,6 +295,16 @@ impl Daemon {
                 .map_err(|e| format!("spawn acceptor: {e}"))?,
         );
 
+        if let Some(cl) = control_listener {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("mlkaps-control".into())
+                    .spawn(move || accept_loop(sh, cl))
+                    .map_err(|e| format!("spawn control acceptor: {e}"))?,
+            );
+        }
+
         Ok(Daemon { shared, handles })
     }
 
@@ -278,6 +319,12 @@ impl Daemon {
     /// `unix:/path`).
     pub fn local_display(&self) -> String {
         self.shared.bound.display()
+    }
+
+    /// The control listener's address, if one was configured
+    /// ([`DaemonConfig::control_addr`]).
+    pub fn control_display(&self) -> Option<String> {
+        self.shared.control_bound.as_ref().map(|b| b.display())
     }
 
     pub fn registry(&self) -> &ServedRegistry {
@@ -360,6 +407,9 @@ fn trigger_shutdown(shared: &Shared) {
 /// and Unix-socket cases).
 fn poke_accept(shared: &Shared) {
     shared.bound.poke();
+    if let Some(cb) = &shared.control_bound {
+        cb.poke();
+    }
 }
 
 /// The `DRAIN` verb: stop accepting, let every already-read request
@@ -702,10 +752,29 @@ fn dispatch(shared: &Arc<Shared>, req: Result<Request, String>) -> (Value, After
         }
     };
     match req {
-        Request::Ping => (
-            Value::obj(vec![("ok", Value::Bool(true)), ("pong", Value::Bool(true))]),
-            After::Continue,
-        ),
+        Request::Ping => {
+            // PING doubles as the fleet's health + redeploy probe: the
+            // per-variant fingerprints let a supervisor confirm not
+            // just liveness but *which epoch* this process serves.
+            let fingerprints: BTreeMap<String, Value> = shared
+                .registry
+                .iter()
+                .map(|v| {
+                    (
+                        v.name.clone(),
+                        v.slot.fingerprint().map(Value::Str).unwrap_or(Value::Null),
+                    )
+                })
+                .collect();
+            (
+                Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("pong", Value::Bool(true)),
+                    ("fingerprints", Value::Obj(fingerprints)),
+                ]),
+                After::Continue,
+            )
+        }
         Request::Stats => (stats_json(shared), After::Continue),
         Request::Samples { kernel, limit } => {
             (samples_json(shared, kernel.as_deref(), limit), After::Continue)

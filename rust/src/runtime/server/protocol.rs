@@ -22,6 +22,12 @@
 //! named object (`"config"`) and as the raw value-space array
 //! (`"values"`, the bit-exact payload in design-space order).
 //!
+//! `PING` doubles as the health probe: its response carries a
+//! `"fingerprints"` object mapping every registered variant to the run
+//! fingerprint it currently serves, which is how the `mlkaps fleet`
+//! supervisor distinguishes "alive" from "alive *and* serving the new
+//! epoch" during a rolling redeploy (see `docs/protocol.md`).
+//!
 //! JSON numbers are f64 and the serializer emits shortest
 //! round-tripping decimal forms, so finite values survive the wire
 //! bit-exactly. NaN/Inf are **not** representable in a request input

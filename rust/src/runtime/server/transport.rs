@@ -28,6 +28,162 @@ use std::time::Duration;
 /// Address prefix selecting the Unix-domain transport.
 pub const UNIX_PREFIX: &str = "unix:";
 
+/// Hand-declared syscalls for the two capabilities std does not expose:
+/// `SO_REUSEPORT` (must be set *before* bind, so the socket cannot come
+/// from `TcpListener::bind`) and `flock` (the unix-socket bind lock).
+/// The repo is zero-dependency, so these are raw `extern "C"` decls
+/// with the constants spelled per platform.
+#[cfg(unix)]
+mod sys {
+    pub const LOCK_EX: i32 = 2;
+    pub const LOCK_NB: i32 = 4;
+
+    pub const SOCK_STREAM: i32 = 1;
+    pub const AF_INET: i32 = 2;
+    #[cfg(target_os = "linux")]
+    pub const AF_INET6: i32 = 10;
+    #[cfg(not(target_os = "linux"))]
+    pub const AF_INET6: i32 = 30;
+
+    #[cfg(target_os = "linux")]
+    pub const SOL_SOCKET: i32 = 1;
+    #[cfg(target_os = "linux")]
+    pub const SO_REUSEADDR: i32 = 2;
+    #[cfg(target_os = "linux")]
+    pub const SO_REUSEPORT: i32 = 15;
+    #[cfg(not(target_os = "linux"))]
+    pub const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(not(target_os = "linux"))]
+    pub const SO_REUSEADDR: i32 = 0x0004;
+    #[cfg(not(target_os = "linux"))]
+    pub const SO_REUSEPORT: i32 = 0x0200;
+
+    extern "C" {
+        pub fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        pub fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const std::ffi::c_void,
+            len: u32,
+        ) -> i32;
+        pub fn bind(fd: i32, addr: *const u8, len: u32) -> i32;
+        pub fn listen(fd: i32, backlog: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn flock(fd: i32, operation: i32) -> i32;
+    }
+}
+
+/// Serialize a [`SocketAddr`] into raw `sockaddr_in`/`sockaddr_in6`
+/// bytes: `(buffer, length, address family)`. Linux lays the struct out
+/// as a native-endian u16 family; the BSDs put a length byte first.
+#[cfg(unix)]
+fn sockaddr_bytes(addr: &SocketAddr) -> ([u8; 28], u32, i32) {
+    let mut buf = [0u8; 28];
+    match addr {
+        SocketAddr::V4(a) => {
+            #[cfg(target_os = "linux")]
+            buf[0..2].copy_from_slice(&(sys::AF_INET as u16).to_ne_bytes());
+            #[cfg(not(target_os = "linux"))]
+            {
+                buf[0] = 16; // sin_len
+                buf[1] = sys::AF_INET as u8;
+            }
+            buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+            buf[4..8].copy_from_slice(&a.ip().octets());
+            (buf, 16, sys::AF_INET)
+        }
+        SocketAddr::V6(a) => {
+            #[cfg(target_os = "linux")]
+            buf[0..2].copy_from_slice(&(sys::AF_INET6 as u16).to_ne_bytes());
+            #[cfg(not(target_os = "linux"))]
+            {
+                buf[0] = 28; // sin6_len
+                buf[1] = sys::AF_INET6 as u8;
+            }
+            buf[2..4].copy_from_slice(&a.port().to_be_bytes());
+            // flowinfo (buf[4..8]) and scope_id (buf[24..28]) stay zero.
+            buf[8..24].copy_from_slice(&a.ip().octets());
+            (buf, 28, sys::AF_INET6)
+        }
+    }
+}
+
+/// Create, configure, bind, and listen a TCP socket with
+/// `SO_REUSEPORT` set **before** bind (std binds eagerly, so the option
+/// cannot be retrofitted onto a `TcpListener` — by bind time the
+/// kernel has already claimed the port exclusively).
+#[cfg(unix)]
+fn bind_tcp_reuseport(addr: &str) -> Result<TcpListener, String> {
+    use std::os::unix::io::FromRawFd;
+    let addrs: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .collect();
+    if addrs.is_empty() {
+        return Err(format!("resolve {addr}: address list is empty"));
+    }
+    let mut last = String::new();
+    for a in &addrs {
+        let (buf, len, family) = sockaddr_bytes(a);
+        // SAFETY: plain syscalls on a freshly created fd; the fd is
+        // closed on every error path and ownership passes to the
+        // TcpListener on success.
+        unsafe {
+            let fd = sys::socket(family, sys::SOCK_STREAM, 0);
+            if fd < 0 {
+                last = format!("socket {a}: {}", std::io::Error::last_os_error());
+                continue;
+            }
+            let one: i32 = 1;
+            let onep = &one as *const i32 as *const std::ffi::c_void;
+            let ok = sys::setsockopt(fd, sys::SOL_SOCKET, sys::SO_REUSEADDR, onep, 4) == 0
+                && sys::setsockopt(fd, sys::SOL_SOCKET, sys::SO_REUSEPORT, onep, 4) == 0
+                && sys::bind(fd, buf.as_ptr(), len) == 0
+                && sys::listen(fd, 1024) == 0;
+            if !ok {
+                last = format!("bind {a} (reuseport): {}", std::io::Error::last_os_error());
+                sys::close(fd);
+                continue;
+            }
+            return Ok(TcpListener::from_raw_fd(fd));
+        }
+    }
+    Err(last)
+}
+
+/// The flock'd sibling lockfile guarding a unix-socket path. Two
+/// processes that both find a stale socket file would otherwise both
+/// unlink-then-bind and the second would silently steal the address;
+/// the winner of this lock is the only one allowed to touch the path.
+/// The lockfile itself is **never unlinked** (unlinking it would
+/// recreate the race one level up) — flock releases automatically when
+/// the holder exits or drops the listener.
+#[cfg(unix)]
+fn lock_unix_bind(path: &std::path::Path, addr: &str) -> Result<std::fs::File, String> {
+    use std::os::unix::io::AsRawFd;
+    let lock_path = {
+        let mut p = path.as_os_str().to_owned();
+        p.push(".lock");
+        PathBuf::from(p)
+    };
+    let lock = std::fs::OpenOptions::new()
+        .create(true)
+        .truncate(false)
+        .write(true)
+        .open(&lock_path)
+        .map_err(|e| format!("open bind lock {}: {e}", lock_path.display()))?;
+    // SAFETY: flock on an fd this function owns.
+    let rc = unsafe { sys::flock(lock.as_raw_fd(), sys::LOCK_EX | sys::LOCK_NB) };
+    if rc != 0 {
+        return Err(format!(
+            "bind {addr}: address in use (bind lock {} is held by a live process)",
+            lock_path.display()
+        ));
+    }
+    Ok(lock)
+}
+
 /// The socket path of a `unix:`-prefixed address (`None` for TCP).
 pub fn unix_path(addr: &str) -> Option<&str> {
     addr.strip_prefix(UNIX_PREFIX).map(str::trim).filter(|p| !p.is_empty())
@@ -37,9 +193,10 @@ pub fn unix_path(addr: &str) -> Option<&str> {
 pub enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
-    /// The listener plus the path it is bound to (kept for unlink on
-    /// drop — a Unix socket file outlives its listener otherwise).
-    Unix(UnixListener, PathBuf),
+    /// The listener, the path it is bound to (kept for unlink on drop —
+    /// a Unix socket file outlives its listener otherwise), and the
+    /// held bind lock (its flock releases when this drops).
+    Unix(UnixListener, PathBuf, std::fs::File),
 }
 
 impl Listener {
@@ -47,6 +204,10 @@ impl Listener {
     /// `unix:/path`). A **stale** Unix socket file — left behind by a
     /// killed process, with no live listener answering — is removed and
     /// rebound; a path someone is actually listening on stays an error.
+    /// All staleness handling happens under a flock'd `<path>.lock`
+    /// sibling, so two concurrent binders racing on the same stale
+    /// socket cannot both unlink-then-bind: the loser gets a structured
+    /// "address in use" error instead of silently stealing the address.
     pub fn bind(addr: &str) -> Result<Listener, String> {
         match unix_path(addr) {
             None => TcpListener::bind(addr)
@@ -55,16 +216,23 @@ impl Listener {
             #[cfg(unix)]
             Some(path) => {
                 let path = PathBuf::from(path);
+                let lock = lock_unix_bind(&path, addr)?;
                 match UnixListener::bind(&path) {
-                    Ok(l) => Ok(Listener::Unix(l, path)),
+                    Ok(l) => Ok(Listener::Unix(l, path, lock)),
                     Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                        // We hold the bind lock, so any socket file here
+                        // is either stale or belongs to a legacy binder
+                        // that never took the lock — keep the liveness
+                        // probe for the latter.
                         if UnixStream::connect(&path).is_ok() {
-                            return Err(format!("bind {addr}: a listener is already live"));
+                            return Err(format!(
+                                "bind {addr}: address in use (a listener is already live)"
+                            ));
                         }
                         std::fs::remove_file(&path)
                             .map_err(|e| format!("remove stale socket {addr}: {e}"))?;
                         UnixListener::bind(&path)
-                            .map(|l| Listener::Unix(l, path))
+                            .map(|l| Listener::Unix(l, path, lock))
                             .map_err(|e| format!("bind {addr}: {e}"))
                     }
                     Err(e) => Err(format!("bind {addr}: {e}")),
@@ -77,12 +245,33 @@ impl Listener {
         }
     }
 
+    /// Bind a TCP address with `SO_REUSEPORT`, so several processes can
+    /// share one listen address and the kernel load-balances accepted
+    /// connections across them — the serving-fleet data path. Unix
+    /// addresses and non-unix platforms error; the fleet falls back to
+    /// per-child ports there (`--no-reuseport`).
+    pub fn bind_reuseport(addr: &str) -> Result<Listener, String> {
+        if unix_path(addr).is_some() {
+            return Err(format!(
+                "bind {addr}: SO_REUSEPORT applies to TCP addresses only"
+            ));
+        }
+        #[cfg(unix)]
+        {
+            bind_tcp_reuseport(addr).map(Listener::Tcp)
+        }
+        #[cfg(not(unix))]
+        {
+            Err(format!("bind {addr}: SO_REUSEPORT needs a unix platform"))
+        }
+    }
+
     /// Block for the next connection.
     pub fn accept(&self) -> std::io::Result<Stream> {
         match self {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::from_tcp(s)),
             #[cfg(unix)]
-            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::from_unix(s)),
+            Listener::Unix(l, _, _) => l.accept().map(|(s, _)| Stream::from_unix(s)),
         }
     }
 
@@ -93,15 +282,19 @@ impl Listener {
                 l.local_addr().unwrap_or_else(|_| ([0, 0, 0, 0], 0).into()),
             ),
             #[cfg(unix)]
-            Listener::Unix(_, path) => BoundAddr::Unix(path.clone()),
+            Listener::Unix(_, path, _) => BoundAddr::Unix(path.clone()),
         }
     }
 }
 
 impl Drop for Listener {
     fn drop(&mut self) {
+        // Unlink the socket file but never the `.lock` sibling: the
+        // flock releases with the file handle, and a persistent
+        // lockfile is what keeps the unlink race closed for the next
+        // pair of binders.
         #[cfg(unix)]
-        if let Listener::Unix(_, path) = self {
+        if let Listener::Unix(_, path, _) = self {
             let _ = std::fs::remove_file(path);
         }
     }
@@ -382,10 +575,109 @@ mod tests {
         drop(listener);
         assert!(!path.exists(), "socket file must be unlinked on drop");
         // A stale socket file (no listener alive behind it) is removed
-        // and rebound instead of failing with AddrInUse.
+        // and rebound instead of failing with AddrInUse — even with the
+        // lockfile from the previous bind still on disk.
         std::fs::write(&path, b"").unwrap();
         let l2 = Listener::bind(&addr).unwrap();
         drop(l2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression for the stale-socket unlink race: binder A has passed
+    /// the staleness check but not yet bound when binder B arrives; B
+    /// must not unlink the path out from under A. The lock models A's
+    /// in-flight bind — with it held, B's bind fails with a structured
+    /// "address in use" error even though no one answers the socket.
+    #[cfg(unix)]
+    #[test]
+    fn unix_bind_lock_refuses_concurrent_binder() {
+        use std::os::unix::io::AsRawFd;
+        let dir = std::env::temp_dir().join(format!("mlkaps-bindlock-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.sock");
+        let addr = format!("unix:{}", path.display());
+
+        // Simulate binder A: hold the flock exactly as bind() takes it.
+        let lock_path = dir.join("r.sock.lock");
+        let held = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(false)
+            .write(true)
+            .open(&lock_path)
+            .unwrap();
+        let rc = unsafe { sys::flock(held.as_raw_fd(), sys::LOCK_EX | sys::LOCK_NB) };
+        assert_eq!(rc, 0, "test setup: taking the free lock must succeed");
+
+        let err = Listener::bind(&addr).unwrap_err();
+        assert!(
+            err.contains("address in use"),
+            "expected a structured address-in-use error, got: {err}"
+        );
+        assert!(!path.exists(), "the losing binder must not create the socket");
+
+        // A releases (process exit / listener drop): B's retry wins.
+        drop(held);
+        let l = Listener::bind(&addr).unwrap();
+        drop(l);
+
+        // And while a listener actually holds the address, a second
+        // bind fails the same way instead of stealing it.
+        let l1 = Listener::bind(&addr).unwrap();
+        let err = Listener::bind(&addr).unwrap_err();
+        assert!(err.contains("address in use"), "got: {err}");
+        drop(l1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Two SO_REUSEPORT listeners share one TCP address: every sprayed
+    /// connection lands on exactly one of the two accept queues (the
+    /// kernel decides which — the test only asserts conservation).
+    #[cfg(unix)]
+    #[test]
+    fn reuseport_listeners_share_one_address() {
+        let l1 = Listener::bind_reuseport("127.0.0.1:0").unwrap();
+        let port = l1.bound().tcp_addr().port();
+        let addr = format!("127.0.0.1:{port}");
+        let l2 = Listener::bind_reuseport(&addr).unwrap();
+
+        const SPRAY: usize = 32;
+        let conns: Vec<Stream> = (0..SPRAY)
+            .map(|_| connect(&addr, Duration::from_secs(5)).unwrap())
+            .collect();
+
+        // Drain both accept queues nonblocking until every connection
+        // is accounted for (completed handshakes sit in the kernel
+        // queue whether or not accept() has run yet).
+        for l in [&l1, &l2] {
+            let Listener::Tcp(t) = l else { unreachable!("reuseport binds are TCP") };
+            t.set_nonblocking(true).unwrap();
+        }
+        let mut total = 0usize;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while total < SPRAY {
+            let mut progressed = false;
+            for l in [&l1, &l2] {
+                match l.accept() {
+                    Ok(_) => {
+                        total += 1;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) => panic!("accept: {e}"),
+                }
+            }
+            if !progressed {
+                assert!(std::time::Instant::now() < deadline, "accepted {total}/{SPRAY}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        assert_eq!(total, SPRAY);
+        drop(conns);
+    }
+
+    #[test]
+    fn reuseport_rejects_unix_addresses() {
+        let err = Listener::bind_reuseport("unix:/tmp/nope.sock").unwrap_err();
+        assert!(err.contains("TCP addresses only"), "got: {err}");
     }
 }

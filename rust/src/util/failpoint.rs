@@ -84,6 +84,16 @@ pub mod sites {
     /// Inside a worker, between taking a lease and uploading its result
     /// (panic here models a worker dying mid-shard).
     pub const CLUSTER_WORKER_SHARD: &str = "cluster.worker_shard";
+    /// A worker's result upload attempt (`runtime/cluster/worker.rs`;
+    /// err here makes every upload fail, exercising the spool path).
+    pub const CLUSTER_UPLOAD: &str = "cluster.upload";
+    /// Spawning a fleet child process (`runtime/fleet/supervisor.rs`).
+    pub const FLEET_SPAWN: &str = "fleet.spawn";
+    /// A supervisor health probe of a fleet child (err ⇒ the probe
+    /// fails as if the child were hung).
+    pub const FLEET_HEALTH: &str = "fleet.health";
+    /// Sending DRAIN to an old child during a rolling redeploy.
+    pub const FLEET_DRAIN: &str = "fleet.drain";
     /// Reserved for unit tests (never evaluated by production code).
     pub const TEST_PROBE: &str = "test.probe";
 
@@ -106,6 +116,10 @@ pub mod sites {
         CLUSTER_RESULT,
         CLUSTER_MERGE,
         CLUSTER_WORKER_SHARD,
+        CLUSTER_UPLOAD,
+        FLEET_SPAWN,
+        FLEET_HEALTH,
+        FLEET_DRAIN,
         TEST_PROBE,
     ];
 }

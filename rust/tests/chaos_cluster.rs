@@ -332,3 +332,49 @@ fn merge_fault_leaves_a_resumable_directory() {
     coord.finish(Duration::from_secs(10)).expect("clean merge on retry");
     assert_identical(&snapshot(&dir), &want, "merge retry");
 }
+
+#[test]
+fn spooled_shard_survives_upload_faults_and_is_reoffered_on_reconnect() {
+    let _g = gate();
+    let want = reference("ref_spool");
+    let dir = tmp("spool");
+    let spool = tmp("spool_files");
+
+    let coord = start_coordinator(&dir, "127.0.0.1:0", Duration::from_secs(5));
+    let addr = coord.local_display();
+
+    // Worker 1 computes one shard, but every upload attempt dies to the
+    // injected cluster.upload fault (the coordinator might as well be
+    // down): the result is spooled instead of thrown away, and the
+    // shard still counts as computed.
+    {
+        let _fp = failpoint::arm_scoped("cluster.upload=err").unwrap();
+        let mut wcfg = WorkerConfig::new(&addr, "spooler");
+        wcfg.max_shards = Some(1);
+        wcfg.spool_dir = Some(spool.clone());
+        let report = run_worker(&wcfg).expect("spooling worker");
+        assert_eq!(report.shards, 1, "the computed-but-unacknowledged shard counts");
+        assert_eq!(report.respooled, 0);
+    }
+    let spooled = std::fs::read_dir(&spool).unwrap().flatten().count();
+    assert_eq!(spooled, 1, "exactly one spool file persisted");
+
+    // Worker 2, faults cleared, same spool dir: it re-offers the
+    // spooled shard on reconnect (before taking any lease), then
+    // finishes the remaining shards.
+    let mut wcfg = WorkerConfig::new(&addr, "reofferer");
+    wcfg.spool_dir = Some(spool.clone());
+    let report = run_worker(&wcfg).expect("re-offering worker");
+    assert_eq!(report.respooled, 1, "the spooled shard was re-offered and accepted");
+    assert_eq!(report.shards, 3, "only the three never-computed shards were leased");
+    assert_eq!(
+        std::fs::read_dir(&spool).unwrap().flatten().count(),
+        0,
+        "an accepted re-offer must delete its spool file"
+    );
+
+    assert!(coord.wait_complete(Duration::from_secs(120)), "shard drain timed out");
+    coord.finish(Duration::from_secs(10)).expect("merge");
+    assert_identical(&snapshot(&dir), &want, "spooled shard re-offer");
+    std::fs::remove_dir_all(&spool).ok();
+}

@@ -1,0 +1,407 @@
+//! Chaos tests for the serving fleet (`mlkaps fleet`): real child
+//! processes (the compiled `mlkaps` binary), real sockets, deterministic
+//! faults.
+//!
+//! What must hold:
+//!
+//! * SIGKILL of a child under live traffic produces **zero wrong
+//!   answers** — clients may see a dropped connection (they reconnect
+//!   and retry), but every answer that arrives is bit-identical to the
+//!   in-process reference — and the supervisor restarts the child
+//!   within its backoff budget.
+//! * A crash-looping child trips the circuit breaker and is parked as
+//!   `degraded` while its siblings keep serving correct answers.
+//! * A rolling redeploy under live traffic serves both checkpoint
+//!   epochs (old fingerprint, then new) with zero requests answered
+//!   wrongly and the whole fleet converging on the new fingerprint.
+//! * Injected `fleet.spawn` / `fleet.health` faults produce the
+//!   designed degradations (parked fleet; kill-and-restart), not hangs.
+//!
+//! Failpoints are process-global, so every test here serializes on one
+//! gate mutex (the children are separate processes and never see the
+//! test process's failpoints — only the supervisor does).
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mlkaps::kernels::toy_sum::ToySum;
+use mlkaps::optimizer::nsga2::Nsga2Params;
+use mlkaps::pipeline::checkpoint::{copy_checkpoints, PipelineRun};
+use mlkaps::pipeline::{MlkapsConfig, SamplerChoice};
+use mlkaps::runtime::fleet::{ChildState, Fleet, FleetConfig};
+use mlkaps::runtime::server::client::ServedClient;
+use mlkaps::runtime::serving::TreeBundle;
+use mlkaps::surrogate::gbdt::GbdtParams;
+use mlkaps::util::failpoint;
+use mlkaps::util::rng::Rng;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn config(seed: u64) -> MlkapsConfig {
+    MlkapsConfig {
+        total_samples: 120,
+        batch_size: 60,
+        sampler: SamplerChoice::Lhs,
+        gbdt: GbdtParams { n_trees: 20, ..Default::default() },
+        ga: Nsga2Params { pop_size: 8, generations: 5, ..Default::default() },
+        opt_grid: 4,
+        tree_depth: 4,
+        threads: 1,
+        seed,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mlkaps_fleet_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Tune toy-sum with `seed` into `dir`, returning the serving bundle.
+fn tune_into(dir: &PathBuf, seed: u64) -> TreeBundle {
+    PipelineRun::new(config(seed), dir.clone()).run(&ToySum::new(seed)).unwrap();
+    TreeBundle::load_checkpoint_dir(dir).unwrap()
+}
+
+/// Reserve an ephemeral port for the shared fleet address: bind :0,
+/// read the port, release it. (The fleet children must all be told one
+/// concrete port — `SO_REUSEPORT` can't balance port 0.)
+fn free_port() -> u16 {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().port()
+}
+
+/// Test-sized fleet over a tuned checkpoint dir: fast probes, fast
+/// backoff, the compiled `mlkaps` binary as the child image.
+fn fleet_config(addr: &str, children: usize, dir: &PathBuf, tag: &str) -> FleetConfig {
+    let mut cfg = FleetConfig::new(addr, children);
+    cfg.binary = PathBuf::from(env!("CARGO_BIN_EXE_mlkaps"));
+    cfg.control_dir = tmp_dir(&format!("{tag}_ctl"));
+    cfg.child_args =
+        vec!["--dir".into(), dir.display().to_string(), "--batch-window-us".into(), "1000".into()];
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.probe_timeout = Duration::from_millis(500);
+    cfg.backoff_start = Duration::from_millis(50);
+    cfg.backoff_cap = Duration::from_millis(500);
+    cfg.redeploy_poll = Duration::from_millis(100);
+    cfg.drain_timeout = Duration::from_secs(5);
+    cfg
+}
+
+/// Decide `q` against the fleet, reconnecting and retrying on transport
+/// errors (a killed or draining child drops its connections; the
+/// reconnect lands on a live sibling). Panics if retries never land —
+/// a request must not be droppable outright.
+fn decide_with_retry(
+    client: &mut ServedClient,
+    addr: &str,
+    q: &[f64],
+) -> mlkaps::runtime::server::client::Decision {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match client.decide("toy-sum", q, None) {
+            Ok(d) => return d,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "request {q:?} unanswerable for 30s: {e}"
+                );
+                *client = ServedClient::connect_str_with_retry(addr, Duration::from_secs(10))
+                    .expect("reconnect to fleet");
+            }
+        }
+    }
+}
+
+fn wait_for<F: FnMut() -> bool>(what: &str, timeout: Duration, mut f: F) {
+    let deadline = Instant::now() + timeout;
+    while !f() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn sigkill_under_load_serves_zero_wrong_answers_and_restarts_in_budget() {
+    let _g = gate();
+    let dir = tmp_dir("sigkill");
+    let reference = Arc::new(tune_into(&dir, 70));
+
+    let addr = format!("127.0.0.1:{}", free_port());
+    let fleet = Fleet::start(fleet_config(&addr, 3, &dir, "sigkill")).unwrap();
+    fleet.wait_ready(Duration::from_secs(60)).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            let (stop, reference, addr) = (stop.clone(), reference.clone(), addr.clone());
+            handles.push(scope.spawn(move || {
+                let mut client =
+                    ServedClient::connect_str_with_retry(&addr, Duration::from_secs(10))
+                        .unwrap();
+                let mut rng = Rng::new(3000 + t as u64);
+                let mut answered = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    let d = decide_with_retry(&mut client, &addr, &q);
+                    // The invariant: an answer may be delayed by the
+                    // kill, never wrong.
+                    assert_eq!(d.values, reference.decide(&q), "wrong answer for {q:?}");
+                    answered += 1;
+                }
+                answered
+            }));
+        }
+
+        // Let traffic flow, then SIGKILL one child mid-stream.
+        std::thread::sleep(Duration::from_millis(300));
+        let victim = fleet.kill_child(1).expect("kill child 1");
+
+        // Restart budget: first backoff is 50ms; boot is a checkpoint
+        // load. Well under 15s even on a loaded CI runner.
+        wait_for("child 1 restart", Duration::from_secs(15), || {
+            fleet.children().iter().any(|c| {
+                c.slot == 1
+                    && c.state == ChildState::Running
+                    && c.pid.is_some_and(|p| p != victim)
+            })
+        });
+        std::thread::sleep(Duration::from_millis(200));
+        stop.store(true, Ordering::Relaxed);
+
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0, "no traffic was served");
+    });
+
+    let restarted = fleet.children().iter().find(|c| c.slot == 1).unwrap().restarts;
+    assert!(restarted >= 1, "supervisor never counted the restart");
+    drop(fleet);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crash_looping_child_is_parked_while_siblings_keep_serving() {
+    let _g = gate();
+    let dir = tmp_dir("crashloop");
+    let reference = tune_into(&dir, 71);
+
+    let addr = format!("127.0.0.1:{}", free_port());
+    let mut cfg = fleet_config(&addr, 3, &dir, "crashloop");
+    cfg.crash_k = 3;
+    cfg.crash_window = Duration::from_secs(60);
+    let fleet = Fleet::start(cfg).unwrap();
+    fleet.wait_ready(Duration::from_secs(60)).unwrap();
+
+    // Kill slot 0 every time it comes back: three deaths inside the
+    // window trip the breaker.
+    for round in 0..3 {
+        let pid = loop {
+            match fleet.kill_child(0) {
+                Ok(pid) => break pid,
+                // Between death and respawn there is no child to kill.
+                Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        };
+        wait_for(
+            &format!("death {round} of pid {pid} to register"),
+            Duration::from_secs(15),
+            || {
+                fleet.children().iter().any(|c| {
+                    c.slot == 0
+                        && (c.state == ChildState::Degraded
+                            || c.pid.map_or(true, |p| p != pid))
+                })
+            },
+        );
+    }
+    wait_for("slot 0 to be parked as degraded", Duration::from_secs(15), || {
+        fleet.children().iter().any(|c| c.slot == 0 && c.state == ChildState::Degraded)
+    });
+
+    // Siblings answer, correctly, with slot 0 parked.
+    let mut client =
+        ServedClient::connect_str_with_retry(&addr, Duration::from_secs(10)).unwrap();
+    let mut rng = Rng::new(4000);
+    for _ in 0..50 {
+        let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+        let d = decide_with_retry(&mut client, &addr, &q);
+        assert_eq!(d.values, reference.decide(&q), "degraded sibling poisoned {q:?}");
+    }
+    let children = fleet.children();
+    assert_eq!(
+        children.iter().filter(|c| c.state == ChildState::Running).count(),
+        2,
+        "{children:?}"
+    );
+
+    // The aggregated fleet STATS reflects the parked child.
+    let stats = fleet.stats();
+    let agg = stats.get("fleet").unwrap();
+    use mlkaps::util::json::Value;
+    assert_eq!(agg.get("degraded").and_then(Value::as_f64), Some(1.0));
+    assert_eq!(agg.get("running").and_then(Value::as_f64), Some(2.0));
+    assert!(
+        agg.get("kernels")
+            .and_then(|k| k.get("toy-sum"))
+            .and_then(|k| k.get("requests"))
+            .and_then(Value::as_f64)
+            .unwrap_or(0.0)
+            >= 50.0
+    );
+
+    drop(fleet);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn rolling_redeploy_under_traffic_serves_both_epochs_with_no_wrong_answers() {
+    let _g = gate();
+    let staging_a = tmp_dir("roll_a");
+    let staging_b = tmp_dir("roll_b");
+    let watch = tmp_dir("roll_watch");
+
+    let bundle_a = Arc::new(tune_into(&staging_a, 80));
+    let bundle_b = Arc::new(tune_into(&staging_b, 81));
+    let fp_a = bundle_a.fingerprint().unwrap().to_string();
+    let fp_b = bundle_b.fingerprint().unwrap().to_string();
+    assert_ne!(fp_a, fp_b);
+    copy_checkpoints(&staging_a, &watch).unwrap();
+
+    let addr = format!("127.0.0.1:{}", free_port());
+    let mut cfg = fleet_config(&addr, 2, &watch, "roll");
+    cfg.watch_dirs = vec![watch.clone()];
+    let fleet = Fleet::start(cfg).unwrap();
+    fleet.wait_ready(Duration::from_secs(60)).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..3usize {
+            let (stop, addr) = (stop.clone(), addr.clone());
+            let (bundle_a, bundle_b) = (bundle_a.clone(), bundle_b.clone());
+            let (fp_a, fp_b) = (fp_a.clone(), fp_b.clone());
+            handles.push(scope.spawn(move || {
+                let mut client =
+                    ServedClient::connect_str_with_retry(&addr, Duration::from_secs(10))
+                        .unwrap();
+                let mut rng = Rng::new(5000 + t as u64);
+                let (mut saw_a, mut saw_b) = (false, false);
+                while !stop.load(Ordering::Relaxed) {
+                    let q = vec![rng.uniform(64.0, 8192.0), rng.uniform(64.0, 8192.0)];
+                    let d = decide_with_retry(&mut client, &addr, &q);
+                    let fp = d.fingerprint.expect("checkpoint bundles carry fingerprints");
+                    if fp == fp_a {
+                        assert_eq!(d.values, bundle_a.decide(&q), "epoch-A mismatch {q:?}");
+                        saw_a = true;
+                    } else if fp == fp_b {
+                        assert_eq!(d.values, bundle_b.decide(&q), "epoch-B mismatch {q:?}");
+                        saw_b = true;
+                    } else {
+                        panic!("unknown fingerprint {fp}");
+                    }
+                }
+                (saw_a, saw_b)
+            }));
+        }
+
+        // Epoch A traffic first, then land epoch B in the watched dir —
+        // the supervisor must roll the children one at a time.
+        std::thread::sleep(Duration::from_millis(300));
+        copy_checkpoints(&staging_b, &watch).unwrap();
+
+        let rolled = fleet.wait_fingerprint(&fp_b, Duration::from_secs(120));
+        if rolled {
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(rolled, "fleet never converged on the new fingerprint");
+
+        let (mut saw_a_any, mut saw_b_any) = (false, false);
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            saw_a_any |= a;
+            saw_b_any |= b;
+        }
+        assert!(saw_a_any, "no traffic was served by the pre-redeploy epoch");
+        assert!(saw_b_any, "no traffic was served by the post-redeploy epoch");
+    });
+
+    // Redeploys are drains, not crashes: no restart counted, nothing
+    // degraded.
+    let children = fleet.children();
+    assert!(
+        children.iter().all(|c| c.state == ChildState::Running),
+        "{children:?}"
+    );
+    drop(fleet);
+    for d in [&staging_a, &staging_b, &watch] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn injected_spawn_and_health_faults_degrade_and_recover_as_designed() {
+    let _g = gate();
+    let dir = tmp_dir("faults");
+    let reference = tune_into(&dir, 72);
+
+    // fleet.spawn=err: no child can ever be exec'd. Spawn failures are
+    // deaths, so the circuit breaker parks the (only) slot and
+    // wait_ready reports a fully-degraded fleet instead of hanging.
+    {
+        let fp = failpoint::arm_scoped("fleet.spawn=err").unwrap();
+        let addr = format!("127.0.0.1:{}", free_port());
+        let mut cfg = fleet_config(&addr, 1, &dir, "faults_spawn");
+        cfg.crash_k = 2;
+        cfg.crash_window = Duration::from_secs(60);
+        let fleet = Fleet::start(cfg).unwrap();
+        let err = fleet.wait_ready(Duration::from_secs(60)).unwrap_err();
+        assert!(err.contains("degraded"), "unexpected readiness error: {err}");
+        assert!(failpoint::hits("fleet.spawn") >= 2);
+        drop(fleet);
+        drop(fp);
+    }
+
+    // fleet.health=err: a healthy child whose probes all fail looks
+    // hung; the supervisor kills and restarts it. Disarm, and the
+    // replacement probes healthy again — full recovery.
+    {
+        let addr = format!("127.0.0.1:{}", free_port());
+        let mut cfg = fleet_config(&addr, 1, &dir, "faults_health");
+        cfg.hung_after = 2;
+        cfg.crash_k = 50; // keep the breaker out of this test's way
+        let fleet = Fleet::start(cfg).unwrap();
+        fleet.wait_ready(Duration::from_secs(60)).unwrap();
+        let pid = fleet.children()[0].pid.unwrap();
+
+        let fp = failpoint::arm_scoped("fleet.health=err").unwrap();
+        wait_for("hung child to be killed", Duration::from_secs(15), || {
+            fleet.children()[0].pid.map_or(true, |p| p != pid)
+        });
+        drop(fp);
+
+        wait_for("replacement to probe healthy", Duration::from_secs(30), || {
+            let c = &fleet.children()[0];
+            c.state == ChildState::Running && c.pid.is_some_and(|p| p != pid)
+        });
+        assert!(fleet.children()[0].restarts >= 1);
+
+        // And it serves, correctly.
+        let mut client =
+            ServedClient::connect_str_with_retry(&addr, Duration::from_secs(10)).unwrap();
+        let q = vec![1500.0, 2500.0];
+        let d = decide_with_retry(&mut client, &addr, &q);
+        assert_eq!(d.values, reference.decide(&q));
+        drop(fleet);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -51,6 +51,7 @@ SPECS = {
     },
     "served_throughput.csv": {"key": ["phase"], "gate": ["decisions_per_sec"]},
     "cluster_throughput.csv": {"key": ["workers"], "gate": ["shards_per_sec"]},
+    "fleet_throughput.csv": {"key": ["processes"], "gate": ["decisions_per_sec"]},
 }
 
 
